@@ -1,0 +1,103 @@
+//! Figures 1c + 4 — time-to-accuracy learning curves for SyncFL, FedBuff
+//! and TimelyFL on all three workloads.
+//!
+//! Emits one CSV per (dataset, strategy) under `results/` with the
+//! (sim_hours, metric) series, and prints a coarse text plot per dataset.
+//! Paper shape: TimelyFL's curve dominates FedBuff's, which dominates
+//! SyncFL's over simulated time; FedBuff converges fast early but plateaus
+//! lower (Fig. 1c).
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::metrics::RunReport;
+
+const STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl];
+
+/// Coarse terminal plot: metric vs sim-hours, one letter per strategy.
+fn text_plot(reports: &[RunReport], higher_better: bool) -> String {
+    const W: usize = 72;
+    const H: usize = 16;
+    let mut grid = vec![vec![' '; W + 1]; H + 1];
+    let max_h = reports
+        .iter()
+        .flat_map(|r| r.eval_points.iter().map(|p| p.sim_secs / 3600.0))
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let (lo, hi) = reports
+        .iter()
+        .flat_map(|r| r.eval_points.iter().map(|p| p.metric))
+        .fold((f64::MAX, f64::MIN), |(lo, hi), m| (lo.min(m), hi.max(m)));
+    let span = (hi - lo).max(1e-9);
+    for r in reports {
+        let ch = r.strategy.chars().next().unwrap(); // T / F / S
+        for p in &r.eval_points {
+            let x = ((p.sim_secs / 3600.0) / max_h * W as f64).round() as usize;
+            let ynorm = (p.metric - lo) / span;
+            let y = if higher_better { 1.0 - ynorm } else { ynorm };
+            let y = (y * H as f64).round() as usize;
+            grid[y.min(H)][x.min(W)] = ch;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{hi:8.3} ")
+        } else if i == H {
+            format!("{lo:8.3} ")
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9}0{:>width$.1} sim hours\n", "", max_h, width = W));
+    out
+}
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "fig4_time_to_accuracy_curves",
+        "Figs. 1c + 4 (learning curves over simulated time, 3 datasets)",
+    );
+    let bench = Bench::new()?;
+
+    for (label, preset, rounds, higher_better) in [
+        ("cifar10", "cifar_fedopt", 180, true),
+        ("google_speech", "speech_fedopt", 120, true),
+        ("reddit", "reddit_fedopt", 80, false),
+    ] {
+        println!("--- {label} ({preset}) ---");
+        let mut reports = Vec::new();
+        for strat in STRATEGIES {
+            let mut cfg = RunConfig::preset(preset)?;
+            cfg.strategy = strat;
+            cfg.rounds = bench.scale.rounds(rounds);
+            cfg.eval_every = 10;
+            eprintln!("  {} (rounds={}) ...", strat.name(), cfg.rounds);
+            let report = bench.run(cfg)?;
+            benchkit::write_result(
+                &format!("fig4_curve_{label}_{}.csv", strat.name().to_lowercase()),
+                &report.curve_csv(),
+            );
+            reports.push(report);
+        }
+        print!("{}", text_plot(&reports, higher_better));
+        println!("  (T = TimelyFL, F = FedBuff, S = SyncFL)\n");
+        for r in &reports {
+            println!(
+                "  {:9} final={:.3} best={:.3} rounds={} sim_h={:.2}",
+                r.strategy,
+                r.final_metric().unwrap_or(f64::NAN),
+                r.best_metric(higher_better).unwrap_or(f64::NAN),
+                r.total_rounds,
+                r.sim_secs / 3600.0
+            );
+        }
+        println!();
+    }
+    println!("paper shape: TimelyFL dominates; FedBuff fast early, plateaus below.");
+    Ok(())
+}

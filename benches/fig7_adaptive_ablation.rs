@@ -1,0 +1,75 @@
+//! Figure 7 — adaptive vs non-adaptive workload scheduling (ablation).
+//!
+//! Paper: with adaptive per-round re-scheduling, TimelyFL reaches 50%
+//! accuracy 4.09x faster and ends 10.89% higher than a variant whose
+//! workload assignment is frozen after the first round (concurrency 64).
+//! `cfg.adaptive = false` reproduces exactly that ablation: T_k and every
+//! client's (E, alpha) stay at their round-0 values while device
+//! conditions keep drifting (Eq. 2 disturbance + per-round bandwidth).
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::config::RunConfig;
+use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
+
+const TARGET: f64 = 0.40;
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "fig7_adaptive_ablation",
+        "Fig. 7 (adaptive workload scheduling ablation: 4.09x to-target, +10.9% final)",
+    );
+    let bench = Bench::new()?;
+
+    let mut reports = Vec::new();
+    for adaptive in [true, false] {
+        let mut cfg = RunConfig::preset("cifar_fedavg")?;
+        cfg.adaptive = adaptive;
+        cfg.concurrency = 32; // paper uses 64 of 128; we scale 32 of 64
+        cfg.rounds = bench.scale.rounds(180);
+        cfg.eval_every = 10;
+        eprintln!("  adaptive={adaptive} (rounds={}) ...", cfg.rounds);
+        let r = bench.run(cfg)?;
+        benchkit::write_result(
+            &format!(
+                "fig7_curve_{}.csv",
+                if adaptive { "adaptive" } else { "frozen" }
+            ),
+            &r.curve_csv(),
+        );
+        reports.push(r);
+    }
+    let [adaptive, frozen] = &reports[..] else { unreachable!() };
+
+    let ta = adaptive.time_to_target(TARGET, true);
+    let tf = frozen.time_to_target(TARGET, true);
+    let fa = adaptive.best_metric(true).unwrap_or(0.0);
+    let ff = frozen.best_metric(true).unwrap_or(0.0);
+
+    let mut t = Table::new(&[
+        "schedule",
+        "time to 40%",
+        "final acc",
+        "mean participation",
+        "rounds",
+    ]);
+    t.row(vec![
+        "adaptive (TimelyFL)".into(),
+        fmt_hours(ta),
+        format!("{fa:.3}"),
+        format!("{:.3}", adaptive.mean_participation()),
+        adaptive.total_rounds.to_string(),
+    ]);
+    t.row(vec![
+        "frozen after round 0".into(),
+        format!("{} {}", fmt_hours(tf), fmt_speedup(ta, tf)),
+        format!("{ff:.3} ({:+.3})", ff - fa),
+        format!("{:.3}", frozen.mean_participation()),
+        frozen.total_rounds.to_string(),
+    ]);
+    let rendered = t.render();
+    println!("{rendered}");
+    println!("paper shape: adaptive is ~4x faster to target and ~0.11 higher at the end.");
+    benchkit::write_result("fig7_adaptive_ablation.txt", &rendered);
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Figure 8 — heterogeneous system utility across simulated clients.
+//!
+//! Paper (Appendix A.1.2): AI-Benchmark compute times span ~13.3x between
+//! the slowest and fastest device (Fig. 8a); MobiPerf bandwidths span ~200x
+//! (Fig. 8b). This bench generates a 1000-client fleet from our calibrated
+//! log-normal substitutes and prints both distributions (histogram +
+//! percentiles) plus the max/min spread — the paper's summary statistic.
+
+use timelyfl::benchkit::{self, Scale};
+use timelyfl::devices::{Fleet, FleetConfig};
+use timelyfl::metrics::report::Table;
+use timelyfl::util::rng::Rng;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+fn ascii_hist(values: &[f64], buckets: usize) -> String {
+    // log-scaled buckets: both paper distributions are heavy-tailed
+    let lo = values.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = values.iter().cloned().fold(f64::MIN, f64::max);
+    let (alo, ahi) = (lo.ln(), hi.ln());
+    let mut counts = vec![0usize; buckets];
+    for &v in values {
+        let t = ((v.ln() - alo) / (ahi - alo) * buckets as f64) as usize;
+        counts[t.min(buckets - 1)] += 1;
+    }
+    let max = *counts.iter().max().unwrap();
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let left = (alo + (ahi - alo) * i as f64 / buckets as f64).exp();
+        let bar = "#".repeat((c as f64 / max as f64 * 48.0).round() as usize);
+        out.push_str(&format!("{left:>10.2}  {bar} {c}\n"));
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    benchkit::banner(
+        "fig8_heterogeneity_dist",
+        "Figure 8 (a: compute spread ~13.3x, b: bandwidth spread ~200x)",
+    );
+    let scale = Scale::from_env();
+    let n = scale.iters(1000);
+
+    let mut rng = Rng::seed_from(0xF18);
+    let fleet = Fleet::generate(n, FleetConfig::default(), &mut rng);
+
+    // --- Fig. 8a analogue: per-client base compute time -------------------
+    let mut cmp: Vec<f64> = fleet.devices.iter().map(|d| d.base_epoch_secs).collect();
+    cmp.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cmp_spread = cmp.last().unwrap() / cmp.first().unwrap();
+
+    println!("--- (a) compute: seconds per local epoch, {n} clients ---");
+    print!("{}", ascii_hist(&cmp, 12));
+
+    // --- Fig. 8b analogue: per-round bandwidth draws -----------------------
+    let draws = scale.iters(5000);
+    let mut bw: Vec<f64> = (0..draws)
+        .map(|_| fleet.round_conditions(&mut rng).bandwidth / 1e6)
+        .collect();
+    bw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let bw_spread = bw.last().unwrap() / bw.first().unwrap();
+
+    println!("--- (b) bandwidth: MB/s per round draw, {draws} draws ---");
+    print!("{}", ascii_hist(&bw, 12));
+
+    let mut t = Table::new(&["distribution", "p1", "p50", "p99", "max/min", "paper max/min"]);
+    t.row(vec![
+        "compute (s/epoch)".into(),
+        format!("{:.1}", percentile(&cmp, 0.01)),
+        format!("{:.1}", percentile(&cmp, 0.50)),
+        format!("{:.1}", percentile(&cmp, 0.99)),
+        format!("{cmp_spread:.1}x"),
+        "~13.3x".into(),
+    ]);
+    t.row(vec![
+        "bandwidth (MB/s)".into(),
+        format!("{:.3}", percentile(&bw, 0.01)),
+        format!("{:.3}", percentile(&bw, 0.50)),
+        format!("{:.3}", percentile(&bw, 0.99)),
+        format!("{bw_spread:.0}x"),
+        "~200x".into(),
+    ]);
+    let rendered = t.render();
+    println!("{rendered}");
+    benchkit::write_result("fig8_heterogeneity.txt", &rendered);
+
+    anyhow::ensure!(cmp_spread <= 13.3 + 1e-6, "compute spread blew past calibration");
+    anyhow::ensure!(bw_spread <= 200.0 + 1e-6, "bandwidth spread blew past calibration");
+    Ok(())
+}

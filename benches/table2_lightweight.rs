@@ -1,0 +1,81 @@
+//! Table 2 — wall-clock time-to-accuracy on the LIGHTWEIGHT keyword-spotting
+//! model (paper §4.3 "TimelyFL is effective on the lightweight model";
+//! conv+GRU net, 79k params, Google Speech, concurrency 106).
+//!
+//! With a tiny model, communication is cheap and the system is compute-
+//! dominated; the paper still reports TimelyFL first to every target
+//! (1.47-3.46x vs FedBuff, 6.6-9.6x vs SyncFL). Same shape target here.
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
+use timelyfl::metrics::RunReport;
+
+const TARGETS: [(&str, f64); 2] = [("50%", 0.50), ("65%", 0.65)];
+const STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl];
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "table2_lightweight",
+        "Table 2 (lightweight KWS model, FedAvg + FedOpt, 3 strategies)",
+    );
+    let bench = Bench::new()?;
+    let mut out = Table::new(&[
+        "agg",
+        "target",
+        "TimelyFL",
+        "FedBuff",
+        "SyncFL",
+        "best T/F/S",
+    ]);
+    let mut csv = String::from("agg,target,timelyfl_hr,fedbuff_hr,syncfl_hr\n");
+
+    for preset in ["kws_fedavg", "kws_fedopt"] {
+        let agg = preset.rsplit('_').next().unwrap();
+        let reports: Vec<RunReport> = STRATEGIES
+            .iter()
+            .map(|&s| {
+                let mut cfg = RunConfig::preset(preset)?;
+                cfg.strategy = s;
+                cfg.rounds = bench.scale.rounds(220);
+                cfg.eval_every = 10;
+                cfg.target_metric = Some(TARGETS[1].1);
+                eprintln!("  {preset} / {} (rounds<={}) ...", s.name(), cfg.rounds);
+                bench.run(cfg)
+            })
+            .collect::<Result<_>>()?;
+
+        for (tname, tval) in TARGETS {
+            let times: Vec<Option<f64>> =
+                reports.iter().map(|r| r.time_to_target(tval, true)).collect();
+            out.row(vec![
+                agg.into(),
+                tname.into(),
+                fmt_hours(times[0]),
+                format!("{} {}", fmt_hours(times[1]), fmt_speedup(times[0], times[1])),
+                format!("{} {}", fmt_hours(times[2]), fmt_speedup(times[0], times[2])),
+                reports
+                    .iter()
+                    .map(|r| r.best_metric(true).map(|m| format!("{m:.3}")).unwrap_or_default())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]);
+            let h = |t: Option<f64>| t.map(|v| format!("{v:.3}")).unwrap_or_else(|| ">budget".into());
+            csv.push_str(&format!(
+                "{agg},{tname},{},{},{}\n",
+                h(times[0]),
+                h(times[1]),
+                h(times[2])
+            ));
+        }
+    }
+
+    let rendered = out.render();
+    println!("{rendered}");
+    println!("paper shape: TimelyFL first everywhere; FedBuff 1.47-3.46x, SyncFL 6.61-9.60x.");
+    benchkit::write_result("table2_lightweight.txt", &rendered);
+    benchkit::write_result("table2_lightweight.csv", &csv);
+    Ok(())
+}

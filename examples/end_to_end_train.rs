@@ -1,0 +1,98 @@
+//! End-to-end driver — federated training of the largest zoo model
+//! (`e2e_lm`: 6-layer causal transformer, d=256, vocab 4096, ~6.9M params)
+//! for a few hundred aggregation rounds, proving all three layers compose:
+//!
+//!   Pallas kernel (L1, inside the lowered HLO) →
+//!   JAX train-step graphs AOT'd per partial ratio (L2) →
+//!   rust coordinator scheduling real PJRT executions (L3).
+//!
+//! Logs the loss/perplexity curve to stdout and results/e2e_loss_curve.csv.
+//! Default budget (20 rounds, concurrency 6) fits a single-core CPU
+//! testbed in a few minutes (~500 real PJRT train steps on the 6.9M-param
+//! model); scale up with --rounds on bigger hardware. Flags:
+//! --rounds N --strategy timelyfl|fedbuff|sync --out FILE.
+
+use anyhow::Result;
+use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::coordinator::Simulation;
+use timelyfl::simtime::hours;
+
+fn main() -> Result<()> {
+    let mut rounds = 20usize;
+    let mut strategy = StrategyKind::TimelyFl;
+    let mut out = String::from("results/e2e_loss_curve.csv");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--rounds" => rounds = args.next().expect("--rounds N").parse()?,
+            "--strategy" => strategy = StrategyKind::parse(&args.next().expect("--strategy S"))?,
+            "--out" => out = args.next().expect("--out FILE"),
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+    }
+
+    let mut cfg = RunConfig::default();
+    cfg.model = "e2e_lm".into();
+    cfg.strategy = strategy;
+    cfg.population = 24;
+    cfg.concurrency = 6;
+    cfg.rounds = rounds;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 1;
+    cfg.client_lr = 0.25; // plain SGD on a small transformer needs a hot lr
+    cfg.steps_per_epoch = 2;
+    cfg.max_local_epochs = 2;
+    cfg.sim_model_bytes = 27.4e6; // 6.86M params * 4B
+    cfg.fleet.median_epoch_secs = 120.0;
+    cfg.dirichlet_alpha = 0.3;
+
+    eprintln!(
+        "end-to-end: {} on e2e_lm ({} rounds, population {}, concurrency {})",
+        cfg.strategy.name(),
+        cfg.rounds,
+        cfg.population,
+        cfg.concurrency
+    );
+    let sim = Simulation::new(cfg, "artifacts")?;
+    eprintln!(
+        "model: {} params across {} tensors; chunk={} fused steps/execution",
+        sim.runtime.meta.total_params,
+        sim.runtime.meta.params.len(),
+        sim.runtime.meta.chunk
+    );
+
+    let report = sim.run()?;
+
+    println!("round  sim_h    nll     ppl");
+    for p in &report.eval_points {
+        println!(
+            "{:>5}  {:>6.2}  {:.4}  {:.2}",
+            p.round,
+            hours(p.sim_secs),
+            p.mean_loss,
+            p.metric
+        );
+    }
+    let first = report.eval_points.first().expect("no evals");
+    let last = report.eval_points.last().expect("no evals");
+    println!(
+        "\nppl {:.1} -> {:.1} over {} rounds ({:.2} sim hours, {:.0}s wall, {} train steps)",
+        first.metric,
+        last.metric,
+        report.total_rounds,
+        hours(report.sim_secs),
+        report.wall_secs,
+        report.real_train_steps
+    );
+    anyhow::ensure!(
+        report.eval_points.len() < 2 || last.metric < first.metric,
+        "perplexity did not improve — the stack is miswired"
+    );
+
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, report.curve_csv())?;
+    eprintln!("wrote {out}");
+    Ok(())
+}

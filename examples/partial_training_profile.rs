@@ -1,0 +1,109 @@
+//! Partial-training profile — what a single slow client actually does.
+//!
+//! Walks one device through Algorithm 2 (local time update) and
+//! Algorithm 3 (workload scheduling) for progressively tighter aggregation
+//! intervals, then REALLY runs the scheduled partial workload through the
+//! compiled PJRT executables, reporting the assigned (E, alpha), the
+//! quantized compiled ratio, uploaded bytes, and the measured wall time.
+//!
+//! This is the paper §3.2.2 story in one binary: tighter interval -> lower
+//! alpha -> fewer trainable suffix layers -> smaller upload, lower compute.
+//!
+//! ```bash
+//! cargo run --release --example partial_training_profile
+//! ```
+
+use anyhow::Result;
+use timelyfl::benchkit::Bench;
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::local_time::TimeEstimate;
+use timelyfl::coordinator::scheduler::schedule;
+use timelyfl::coordinator::trainer::train_client;
+use timelyfl::metrics::report::Table;
+use timelyfl::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let bench = Bench::new()?;
+    let mut cfg = RunConfig::preset("cifar_fedavg")?;
+    cfg.population = 4;
+    cfg.concurrency = 2;
+    let sim = bench.simulation(cfg)?;
+    let rt = &sim.runtime;
+    let meta = &rt.meta;
+    let global = rt.init_params(0)?;
+    let mut rng = Rng::seed_from(42);
+
+    // A slow device: 400s compute + 100s upload per unit epoch (estimated).
+    let est = TimeEstimate {
+        t_cmp: 400.0,
+        t_com: 100.0,
+    };
+    println!(
+        "device unit times: t_cmp={}s t_com={}s (total {}s) — model {} ({} params)\n",
+        est.t_cmp,
+        est.t_com,
+        est.t_total(),
+        meta.name,
+        meta.total_params
+    );
+
+    let mut t = Table::new(&[
+        "T_k (s)",
+        "E",
+        "alpha",
+        "compiled ratio",
+        "trainable tensors",
+        "upload KB",
+        "sched. time (s)",
+        "measured wall (ms)",
+        "mean loss",
+    ]);
+
+    for t_k in [1500.0, 1000.0, 500.0, 300.0, 150.0, 75.0] {
+        let w = schedule(t_k, &est, cfg_max_epochs());
+        let ratio = meta.quantize_ratio(w.alpha);
+        // Scheduled (simulated) round time under the paper's linear model.
+        let sched = if w.alpha < 1.0 {
+            (est.t_cmp + est.t_com) * ratio.ratio
+        } else {
+            est.t_cmp * w.epochs as f64 + est.t_com
+        };
+
+        let t0 = std::time::Instant::now();
+        let outcome = train_client(
+            rt,
+            &sim.dataset,
+            0,
+            &global,
+            ratio,
+            w.epochs,
+            2, // steps per epoch
+            0.05,
+            &mut rng,
+        )?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        t.row(vec![
+            format!("{t_k}"),
+            w.epochs.to_string(),
+            format!("{:.3}", w.alpha),
+            format!("{}", ratio.ratio),
+            format!("{}/{}", meta.params.len() - ratio.boundary, meta.params.len()),
+            format!("{:.1}", outcome.update.bytes() as f64 / 1024.0),
+            format!("{sched:.0}"),
+            format!("{wall_ms:.1}"),
+            format!("{:.3}", outcome.mean_loss),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "reading: once T_k < the device's unit total time (500s), alpha drops below 1 —\n\
+         the client trains a shrinking output-side suffix and uploads proportionally\n\
+         fewer bytes, but always lands inside the interval instead of going stale."
+    );
+    Ok(())
+}
+
+fn cfg_max_epochs() -> usize {
+    4
+}

@@ -1,0 +1,133 @@
+"""AOT compile path: lower every model-zoo graph to HLO text + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per model:
+    <out>/<model>/train_r{ratio}.hlo.txt   one per partial-training ratio
+    <out>/<model>/eval.hlo.txt
+    <out>/<model>/init.hlo.txt
+and a single ``<out>/manifest.json`` describing parameter layout, shapes and
+the ratio -> trainable-boundary mapping consumed by the rust runtime
+(``rust/src/runtime/manifest.rs``).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True`` —
+the rust side unwraps with ``to_tuple()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def ratio_tag(r: float) -> str:
+    """0.125 -> 'r0125', 1.0 -> 'r1000' (stable filenames)."""
+    return f"r{int(round(r * 1000)):04d}"
+
+
+def lower_model(m: zoo.ModelDef, out_dir: str, *, quiet: bool = False) -> dict:
+    os.makedirs(os.path.join(out_dir, m.name), exist_ok=True)
+    params, x, y, lr = zoo.example_args(m)
+    entry = {
+        "task": m.task,
+        "batch": m.batch,
+        "eval_batch": m.eval_batch,
+        "x_shape": list(m.x_shape),
+        "x_dtype": m.x_dtype,
+        "num_classes": m.num_classes,
+        "seq_len": m.seq_len,
+        "total_params": m.total_params,
+        "chunk": zoo.CHUNK,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "size": s.size} for s in m.specs
+        ],
+        "ratios": [],
+        "eval_artifact": f"{m.name}/eval.hlo.txt",
+        "init_artifact": f"{m.name}/init.hlo.txt",
+    }
+
+    del x, y, lr  # single-step shapes unused: the train artifact is chunked
+    cparams, xs, ys, clr, n_steps = zoo.chunk_example_args(m)
+    assert cparams == params
+    for r in zoo.RATIOS:
+        t0 = time.time()
+        step = zoo.make_train_chunk(m, r)
+        lowered = jax.jit(step).lower(*cparams, xs, ys, clr, n_steps)
+        rel = f"{m.name}/train_{ratio_tag(r)}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["ratios"].append(
+            {
+                "ratio": r,
+                "boundary": m.ratio_boundary(r),
+                "trainable_fraction": m.trainable_fraction(r),
+                "artifact": rel,
+            }
+        )
+        if not quiet:
+            print(f"  {rel} ({time.time() - t0:.1f}s)")
+
+    eparams, ex, ey, _ = zoo.example_args(m, for_eval=True)
+    lowered = jax.jit(zoo.make_eval_step(m)).lower(*eparams, ex, ey)
+    with open(os.path.join(out_dir, entry["eval_artifact"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    seed = jax.ShapeDtypeStruct((), jax.numpy.int32)
+    lowered = jax.jit(zoo.make_init(m)).lower(seed)
+    with open(os.path.join(out_dir, entry["init_artifact"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    if not quiet:
+        print(f"  {m.name}: eval + init done ({m.total_params} params)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(zoo.MODELS),
+        help="comma-separated subset of the model zoo",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"ratios": list(zoo.RATIOS), "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in zoo.MODELS:
+            raise SystemExit(f"unknown model {name!r}; have {list(zoo.MODELS)}")
+        print(f"lowering {name} ...")
+        manifest["models"][name] = lower_model(zoo.MODELS[name], args.out, quiet=args.quiet)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

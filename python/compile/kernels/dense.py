@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernel: fused dense layer ``act(x @ W + b)``.
+
+This is the compute hot-spot of every train-step in the model zoo (all
+models are built from dense blocks; see ``model.py``). The kernel is written
+TPU-idiomatically — MXU-shaped tiles expressed through ``BlockSpec`` and the
+contraction (K) axis as the innermost grid dimension so each (i, j) output
+tile stays resident while it is revisited ``nk`` times as an accumulator.
+
+It is executed with ``interpret=True`` everywhere: the CPU PJRT plugin used
+by the rust runtime cannot run Mosaic custom-calls, and interpret-mode
+lowers the kernel to plain HLO ops that any backend executes. Correctness is
+pinned against the pure-jnp oracle in ``ref.py`` (pytest + hypothesis).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's clients
+are mobile SoCs running MNN; the per-client training hot loop is GEMM-bound
+there as well. We tile for VMEM (scratchpad) rather than CUDA shared memory
+and target the MXU systolic array shape (128x128) rather than WMMA tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles. 128 is the systolic-array edge; the second-minor
+# tiling constraint (8 sublanes x 128 lanes for f32) is satisfied by any
+# multiple of 8 in the M dimension.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+ACTIVATIONS = ("none", "relu", "gelu", "tanh")
+
+
+def apply_activation(x: jax.Array, activation: str) -> jax.Array:
+    """Epilogue activation shared by the kernel and the jnp oracle."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Grid = (M/bm, N/bn, K/bk); K innermost, o_ref doubles as accumulator.
+
+    All model weights are f32, so the output tile itself is a valid f32
+    accumulator — this keeps the kernel portable between the Mosaic and
+    interpret paths without a VMEM scratch allocation.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU matmul on the current (bm, bk) x (bk, bn) tile pair; accumulate at
+    # f32 (preferred_element_type pins the MXU accumulator precision).
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fused_dense_raw(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """The pallas_call itself (no autodiff rule).
+
+    Arbitrary (M, K) x (K, N) shapes are supported by zero-padding up to the
+    tile grid and slicing the result back; zero padding is exact because the
+    padded rows/cols are discarded before any downstream op sees them and a
+    zero K-extension contributes nothing to the contraction.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation must be one of {ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # Clamp tiles to the (padded) problem so tiny layers do not blow up to a
+    # full 128x128 grid cell per element of work.
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bk = min(block_k, _ceil_to(k, 128))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_dense_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain tiled matmul through the same Pallas kernel (zero bias)."""
+    return _fused_dense_raw(a, b, jnp.zeros((b.shape[1],), a.dtype), "none")
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: jax cannot JVP through a pallas_call that uses program_id, so the
+# backward pass is supplied explicitly — and itself runs on the Pallas matmul
+# kernel, keeping the whole train-step GEMM-bound on the L1 kernel.
+#
+#   u  = x @ w + b            (pre-activation, recomputed in bwd: remat)
+#   dy_pre = dy * act'(u)     (exact, via jax.vjp of the epilogue)
+#   dx = dy_pre @ w.T ;  dw = x.T @ dy_pre ;  db = sum(dy_pre)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_dense(x, w, b, activation):
+    return _fused_dense_raw(x, w, b, activation)
+
+
+def _fused_dense_fwd(x, w, b, activation):
+    return _fused_dense_raw(x, w, b, activation), (x, w, b)
+
+
+def _fused_dense_bwd(activation, res, dy):
+    x, w, b = res
+    if activation == "none":
+        dy_pre = dy
+    else:
+        u = _fused_dense_raw(x, w, b, "none")  # remat the pre-activation
+        _, epilogue_vjp = jax.vjp(lambda t: apply_activation(t, activation), u)
+        (dy_pre,) = epilogue_vjp(dy)
+    dx = matmul(dy_pre, w.T)
+    dw = matmul(x.T, dy_pre)
+    db = jnp.sum(dy_pre, axis=0)
+    return dx, dw, db
+
+
+_fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def fused_dense(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "none"
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` as a Pallas kernel, differentiable.
+
+    Public entry point used by every dense block in ``model.py``. Forward and
+    backward both execute on the tiled Pallas kernel; the activation
+    derivative is exact (``jax.vjp`` of the same epilogue function).
+    """
+    return _fused_dense(x, w, b, activation)

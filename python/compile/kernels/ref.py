@@ -1,0 +1,20 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with an identical signature;
+``python/tests/test_kernel.py`` sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle (forward AND gradients).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dense import apply_activation
+
+
+def fused_dense_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "none"
+) -> jax.Array:
+    """Oracle for ``dense.fused_dense``: plain ``act(x @ w + b)`` in jnp."""
+    return apply_activation(jnp.dot(x, w) + b, activation)

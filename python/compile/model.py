@@ -1,0 +1,442 @@
+"""Layer-2: the model zoo — JAX forward/backward train-step graphs.
+
+Paper mapping (DESIGN.md §3: every real dataset/model is substituted by a
+synthetic equivalent exercising the same code path):
+
+================  ===========================  ==============================
+zoo name          paper model / dataset         ours
+================  ===========================  ==============================
+``vision``        ResNet-20 on CIFAR-10         PatchCNN on 24x24x3 synthetic
+                                                10-class Gaussian clusters
+``speech``        VGG11 on Google Speech        frame-dense + temporal pool on
+                                                32x40 synthetic spectrograms,
+                                                35 classes
+``text``          ALBERT on Reddit (next word)  2-layer causal transformer LM,
+                                                vocab 512, seq 32
+``kws_lite``      lightweight KWS net [33]      ~80k-param dense KWS net
+``e2e_lm``        (end-to-end driver)           6-layer transformer LM,
+                                                d=256, vocab 4096, seq 64
+================  ===========================  ==============================
+
+Each model exposes fixed-shape jittable functions that ``aot.py`` lowers to
+HLO text, one artifact per partial-training ratio:
+
+- ``train_step(*params, x, y, lr) -> (*new_params, loss)`` — one SGD step.
+  For ratio r < 1 the parameter *prefix* (input-side layers) is frozen: it
+  still runs the forward pass but ``stop_gradient`` + identity pass-through
+  means XLA dead-code-eliminates its backward graph, mirroring the paper's
+  partial model training (§3.2.2: only a suffix of consecutive output-side
+  layers is trained).
+- ``eval_step(*params, x, y) -> (loss_sum, correct)`` (classification) or
+  ``-> (nll_sum, token_count)`` (LM; perplexity = exp(nll_sum/token_count)).
+- ``init(seed) -> (*params,)``.
+
+Parameters are a flat, positionally-ordered list (see ``nn.py``): the rust
+runtime addresses them by index using ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .nn import Cursor, ParamSpec
+
+# Partial-training ratios compiled AOT. The scheduler (rust) rounds its
+# continuous alpha down to the nearest entry, guaranteeing the client still
+# finishes within the aggregation interval.
+RATIOS = (0.125, 0.25, 0.5, 0.75, 1.0)
+
+# SGD steps fused into ONE PJRT call (lax.scan over stacked batches).
+# Padding slots beyond the dynamic ``n_steps`` operand are masked out, so
+# the rust trainer issues ceil(total_steps / CHUNK) executions per client
+# round instead of one per minibatch — the L2 perf optimisation recorded in
+# EXPERIMENTS.md §Perf (the per-execute host<->device roundtrip dominates on
+# CPU-PJRT).
+CHUNK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything aot.py / the manifest needs to know about one model."""
+
+    name: str
+    task: str  # "classify" | "lm"
+    specs: Tuple[ParamSpec, ...]
+    forward: Callable[[Sequence[jax.Array], jax.Array], jax.Array]
+    batch: int
+    eval_batch: int
+    x_shape: Tuple[int, ...]  # per-example feature shape (flattened f32) or (T,) int32
+    x_dtype: str  # "f32" | "i32"
+    num_classes: int  # classes (classify) or vocab (lm)
+    seq_len: int = 0  # lm only
+
+    @property
+    def total_params(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def ratio_boundary(self, ratio: float) -> int:
+        """First trainable param index for a partial ratio.
+
+        Largest suffix of consecutive output-side tensors whose parameter
+        count is <= ratio * total, but never empty (the classifier head is
+        always trainable) — paper §3.2.2.
+        """
+        total = self.total_params
+        budget = ratio * total
+        acc = 0
+        boundary = len(self.specs)  # exclusive start; move left while it fits
+        for i in range(len(self.specs) - 1, -1, -1):
+            if acc + self.specs[i].size > budget and boundary < len(self.specs):
+                break
+            acc += self.specs[i].size
+            boundary = i
+        return min(boundary, len(self.specs) - 2 if len(self.specs) >= 2 else 0)
+
+    def trainable_fraction(self, ratio: float) -> float:
+        b = self.ratio_boundary(ratio)
+        return sum(s.size for s in self.specs[b:]) / self.total_params
+
+
+# ---------------------------------------------------------------------------
+# vision — PatchCNN (ResNet-20 / CIFAR-10 stand-in)
+# ---------------------------------------------------------------------------
+
+VISION_IMG = 24  # 24x24x3 synthetic images, 4x4 grid of 6x6 patches
+VISION_PATCH = 6
+VISION_DIM = VISION_IMG * VISION_IMG * 3
+
+
+def _vision_specs() -> List[ParamSpec]:
+    p = VISION_PATCH * VISION_PATCH * 3  # 108
+    specs = nn.dense_specs("patch", p, 64)
+    # Binary-tree patch merging: 16 -> 8 -> 4 -> 2 -> 1 tokens, each stage a
+    # shared dense(128 -> 64). Conv-like receptive-field growth with layers
+    # of near-uniform parameter count, so partial-training ratios map to
+    # distinct trainable suffixes (paper §3.2.2 needs layer granularity).
+    for i in range(4):
+        specs += nn.dense_specs(f"merge{i}", 128, 64)
+    specs += nn.dense_specs("trunk", 64, 128)
+    specs += nn.dense_specs("head", 128, 10)
+    return specs
+
+
+def _vision_forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, 1728) f32 -> logits (B, 10)."""
+    cur = Cursor(params)
+    b = x.shape[0]
+    g = VISION_IMG // VISION_PATCH
+    img = x.reshape(b, g, VISION_PATCH, g, VISION_PATCH, 3)
+    patches = img.transpose(0, 1, 3, 2, 4, 5).reshape(b * g * g, -1)  # (B*16,108)
+    h = nn.dense(cur, patches, activation="relu").reshape(b, g * g, 64)
+    for _ in range(4):  # 16 -> 8 -> 4 -> 2 -> 1
+        t = h.shape[1]
+        pairs = h.reshape(b * (t // 2), 2 * 64)
+        h = nn.dense(cur, pairs, activation="relu").reshape(b, t // 2, 64)
+    h = nn.dense(cur, h.reshape(b, 64), activation="relu")
+    logits = nn.dense(cur, h)
+    cur.done()
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# speech — frame-dense + temporal pooling (VGG11 / Google Speech stand-in)
+# ---------------------------------------------------------------------------
+
+SPEECH_FRAMES = 32
+SPEECH_MELS = 40
+SPEECH_DIM = SPEECH_FRAMES * SPEECH_MELS
+
+
+def _speech_specs() -> List[ParamSpec]:
+    specs = nn.dense_specs("frame", SPEECH_MELS, 64)
+    # Binary-tree temporal merging: 32 -> 16 -> 8 -> 4 -> 2 -> 1 frames (a
+    # dilated-conv / pooling-pyramid analogue of VGG11's conv stack) with
+    # near-uniform per-stage parameter counts for partial-ratio granularity.
+    for i in range(5):
+        specs += nn.dense_specs(f"merge{i}", 128, 64)
+    specs += nn.dense_specs("trunk", 64, 128)
+    specs += nn.dense_specs("head", 128, 35)
+    return specs
+
+
+def _speech_forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, 1280) f32 spectrogram -> logits (B, 35)."""
+    cur = Cursor(params)
+    b = x.shape[0]
+    frames = x.reshape(b * SPEECH_FRAMES, SPEECH_MELS)
+    h = nn.dense(cur, frames, activation="relu").reshape(b, SPEECH_FRAMES, 64)
+    for _ in range(5):  # 32 -> 16 -> 8 -> 4 -> 2 -> 1
+        t = h.shape[1]
+        pairs = h.reshape(b * (t // 2), 2 * 64)
+        h = nn.dense(cur, pairs, activation="relu").reshape(b, t // 2, 64)
+    h = nn.dense(cur, h.reshape(b, 64), activation="relu")
+    logits = nn.dense(cur, h)
+    cur.done()
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# kws_lite — ~80k-param keyword-spotting net (paper §4.3 lightweight model)
+# ---------------------------------------------------------------------------
+
+
+def _kws_specs() -> List[ParamSpec]:
+    return (
+        nn.dense_specs("frame", SPEECH_MELS, 80)
+        + nn.dense_specs("mix", 80, 320)
+        + nn.dense_specs("trunk", 320, 144)
+        + nn.dense_specs("head", 144, 35)
+    )
+
+
+def _kws_forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    cur = Cursor(params)
+    b = x.shape[0]
+    frames = x.reshape(b * SPEECH_FRAMES, SPEECH_MELS)
+    h = nn.dense(cur, frames, activation="relu").reshape(b, SPEECH_FRAMES, 80)
+    h = h.mean(axis=1)
+    h = nn.dense(cur, h, activation="relu")
+    h = nn.dense(cur, h, activation="relu")
+    logits = nn.dense(cur, h)
+    cur.done()
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Transformer LMs — text (ALBERT/Reddit stand-in) and e2e_lm (driver model)
+# ---------------------------------------------------------------------------
+
+
+def _lm_specs(vocab: int, seq: int, d: int, d_ff: int, layers: int) -> List[ParamSpec]:
+    specs = [ParamSpec("tok_emb", (vocab, d)), ParamSpec("pos_emb", (seq, d))]
+    for i in range(layers):
+        specs += nn.block_specs(f"blk{i}", d, d_ff)
+    specs += nn.layernorm_specs("lnf", d)
+    specs += nn.dense_specs("head", d, vocab)
+    return specs
+
+
+def _lm_forward_factory(
+    vocab: int, seq: int, d: int, layers: int, heads: int
+) -> Callable[[Sequence[jax.Array], jax.Array], jax.Array]:
+    def forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        """x: (B, T) int32 tokens -> logits (B, T, vocab)."""
+        cur = Cursor(params)
+        tok_emb, pos_emb = cur.take(2)
+        b, t = x.shape
+        h = tok_emb[x] + pos_emb[None, :t]
+        for _ in range(layers):
+            h = nn.transformer_block(cur, h, n_heads=heads)
+        h = nn.layernorm(cur, h)
+        logits = nn.dense(cur, h.reshape(b * t, d)).reshape(b, t, vocab)
+        cur.done()
+        return logits
+
+    return forward
+
+
+TEXT_VOCAB, TEXT_SEQ, TEXT_D, TEXT_LAYERS, TEXT_HEADS = 512, 32, 64, 2, 4
+E2E_VOCAB, E2E_SEQ, E2E_D, E2E_LAYERS, E2E_HEADS = 4096, 64, 256, 6, 8
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def _registry() -> Dict[str, ModelDef]:
+    models = {
+        "vision": ModelDef(
+            name="vision",
+            task="classify",
+            specs=tuple(_vision_specs()),
+            forward=_vision_forward,
+            batch=8,
+            eval_batch=64,
+            x_shape=(VISION_DIM,),
+            x_dtype="f32",
+            num_classes=10,
+        ),
+        "speech": ModelDef(
+            name="speech",
+            task="classify",
+            specs=tuple(_speech_specs()),
+            forward=_speech_forward,
+            batch=16,
+            eval_batch=64,
+            x_shape=(SPEECH_DIM,),
+            x_dtype="f32",
+            num_classes=35,
+        ),
+        "kws_lite": ModelDef(
+            name="kws_lite",
+            task="classify",
+            specs=tuple(_kws_specs()),
+            forward=_kws_forward,
+            batch=16,
+            eval_batch=64,
+            x_shape=(SPEECH_DIM,),
+            x_dtype="f32",
+            num_classes=35,
+        ),
+        "text": ModelDef(
+            name="text",
+            task="lm",
+            specs=tuple(_lm_specs(TEXT_VOCAB, TEXT_SEQ, TEXT_D, 4 * TEXT_D, TEXT_LAYERS)),
+            forward=_lm_forward_factory(TEXT_VOCAB, TEXT_SEQ, TEXT_D, TEXT_LAYERS, TEXT_HEADS),
+            batch=8,
+            eval_batch=32,
+            x_shape=(TEXT_SEQ,),
+            x_dtype="i32",
+            num_classes=TEXT_VOCAB,
+            seq_len=TEXT_SEQ,
+        ),
+        "e2e_lm": ModelDef(
+            name="e2e_lm",
+            task="lm",
+            specs=tuple(_lm_specs(E2E_VOCAB, E2E_SEQ, E2E_D, 4 * E2E_D, E2E_LAYERS)),
+            forward=_lm_forward_factory(E2E_VOCAB, E2E_SEQ, E2E_D, E2E_LAYERS, E2E_HEADS),
+            batch=8,
+            eval_batch=16,
+            x_shape=(E2E_SEQ,),
+            x_dtype="i32",
+            num_classes=E2E_VOCAB,
+            seq_len=E2E_SEQ,
+        ),
+    }
+    return models
+
+
+MODELS = _registry()
+
+
+# ---------------------------------------------------------------------------
+# Train / eval / init graph builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(model: ModelDef, params: Sequence[jax.Array], x: jax.Array, y: jax.Array) -> jax.Array:
+    logits = model.forward(params, x)
+    if model.task == "classify":
+        return nn.softmax_xent(logits, y)
+    return nn.softmax_xent(logits.reshape(-1, model.num_classes), y.reshape(-1))
+
+
+def make_train_step(model: ModelDef, ratio: float):
+    """SGD train-step with the prefix [0, boundary) frozen."""
+    boundary = model.ratio_boundary(ratio)
+
+    def train_step(*args):
+        n = len(model.specs)
+        params, x, y, lr = list(args[:n]), args[n], args[n + 1], args[n + 2]
+        frozen, trainable = params[:boundary], params[boundary:]
+
+        def partial_loss(trainable_params):
+            full = [jax.lax.stop_gradient(p) for p in frozen] + list(trainable_params)
+            return loss_fn(model, full, x, y)
+
+        loss, grads = jax.value_and_grad(partial_loss)(trainable)
+        new_trainable = [p - lr * g for p, g in zip(trainable, grads)]
+        return tuple(frozen) + tuple(new_trainable) + (loss,)
+
+    return train_step
+
+
+def make_train_chunk(model: ModelDef, ratio: float, chunk: int = CHUNK):
+    """Fused multi-step SGD train graph (the AOT'd hot path).
+
+    Signature::
+
+        (*params, xs[S, B, ...], ys[S, ...], lr, n_steps:i32)
+            -> (*new_params, loss_sum)
+
+    Runs ``lax.scan`` over ``S = chunk`` stacked minibatches; slots with
+    index >= ``n_steps`` are masked (zero effective learning rate, zero loss
+    contribution), so callers pad the tail of the stack with any valid batch.
+    ``loss_sum`` is the sum of the executed steps' (pre-update) losses —
+    divide by ``n_steps`` host-side for the mean.
+
+    Numerically identical to ``n_steps`` sequential ``make_train_step``
+    executions (asserted by ``tests/test_model.py``).
+    """
+    boundary = model.ratio_boundary(ratio)
+
+    def train_chunk(*args):
+        n = len(model.specs)
+        params = list(args[:n])
+        xs, ys, lr, n_steps = args[n], args[n + 1], args[n + 2], args[n + 3]
+        frozen = [jax.lax.stop_gradient(p) for p in params[:boundary]]
+        trainable = list(params[boundary:])
+
+        def body(carry, inp):
+            cur, loss_sum = carry
+            i, x, y = inp
+
+            def partial_loss(tp):
+                return loss_fn(model, frozen + list(tp), x, y)
+
+            loss, grads = jax.value_and_grad(partial_loss)(tuple(cur))
+            active = jnp.where(i < n_steps, jnp.float32(1), jnp.float32(0))
+            new_cur = [p - lr * active * g for p, g in zip(cur, grads)]
+            return (new_cur, loss_sum + active * loss), None
+
+        idx = jnp.arange(chunk, dtype=jnp.int32)
+        (new_trainable, loss_sum), _ = jax.lax.scan(
+            body, (trainable, jnp.float32(0)), (idx, xs, ys)
+        )
+        return tuple(params[:boundary]) + tuple(new_trainable) + (loss_sum,)
+
+    return train_chunk
+
+
+def make_eval_step(model: ModelDef):
+    def eval_step(*args):
+        n = len(model.specs)
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        logits = model.forward(params, x)
+        if model.task == "classify":
+            return nn.xent_sum_and_correct(logits, y)
+        nll_sum, _ = nn.xent_sum_and_correct(
+            logits.reshape(-1, model.num_classes), y.reshape(-1)
+        )
+        count = jnp.float32(y.size)
+        return nll_sum, count
+
+    return eval_step
+
+
+def make_init(model: ModelDef):
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return tuple(nn.init_params(model.specs, key))
+
+    return init
+
+
+def example_args(model: ModelDef, *, for_eval: bool = False):
+    """ShapeDtypeStructs for jax.jit(...).lower()."""
+    b = model.eval_batch if for_eval else model.batch
+    params = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.specs]
+    xd = jnp.float32 if model.x_dtype == "f32" else jnp.int32
+    x = jax.ShapeDtypeStruct((b, *model.x_shape), xd)
+    if model.task == "classify":
+        y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    else:
+        y = jax.ShapeDtypeStruct((b, model.seq_len), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return params, x, y, lr
+
+
+def chunk_example_args(model: ModelDef, chunk: int = CHUNK):
+    """ShapeDtypeStructs for jax.jit(make_train_chunk(...)).lower()."""
+    params, x, y, lr = example_args(model)
+    xs = jax.ShapeDtypeStruct((chunk, *x.shape), x.dtype)
+    ys = jax.ShapeDtypeStruct((chunk, *y.shape), y.dtype)
+    n_steps = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, xs, ys, lr, n_steps

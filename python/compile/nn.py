@@ -1,0 +1,172 @@
+"""Minimal functional NN library over flat parameter lists.
+
+The rust runtime feeds parameters positionally (one PJRT buffer per tensor),
+so models are expressed over a *flat list* of arrays with a canonical order,
+not a pytree. Each layer helper consumes a slice of the list via ``Cursor``.
+
+All dense compute routes through the Layer-1 Pallas kernel
+(``kernels.dense.fused_dense``); attention score/context matmuls use jnp
+einsum (they are small relative to the projections at our scales).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import fused_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/name metadata for one parameter tensor (manifest + init)."""
+
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+class Cursor:
+    """Walks a flat param list in declaration order during forward()."""
+
+    def __init__(self, params: Sequence[jax.Array]):
+        self._params = list(params)
+        self._i = 0
+
+    def take(self, n: int) -> List[jax.Array]:
+        out = self._params[self._i : self._i + n]
+        if len(out) != n:
+            raise ValueError("parameter list exhausted")
+        self._i += n
+        return out
+
+    def done(self) -> None:
+        if self._i != len(self._params):
+            raise ValueError(
+                f"forward consumed {self._i} of {len(self._params)} params"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def init_params(specs: Sequence[ParamSpec], key: jax.Array) -> List[jax.Array]:
+    """He/Glorot-style init driven purely by the spec names.
+
+    ``*_w`` dense kernels get LeCun-normal scaled by fan-in; ``*_b`` biases
+    and layernorm ``*_beta`` start at zero; layernorm ``*_gamma`` at one;
+    ``*_emb`` embeddings at N(0, 0.02).
+    """
+    out: List[jax.Array] = []
+    keys = jax.random.split(key, max(len(specs), 2))
+    for spec, k in zip(specs, keys):
+        n = spec.name
+        if n.endswith("_gamma"):
+            out.append(jnp.ones(spec.shape, jnp.float32))
+        elif n.endswith("_b") or n.endswith("_beta"):
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+        elif n.endswith("_emb"):
+            out.append(0.02 * jax.random.normal(k, spec.shape, jnp.float32))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append(scale * jax.random.normal(k, spec.shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def dense_specs(name: str, d_in: int, d_out: int) -> List[ParamSpec]:
+    return [ParamSpec(f"{name}_w", (d_in, d_out)), ParamSpec(f"{name}_b", (d_out,))]
+
+
+def dense(cur: Cursor, x: jax.Array, activation: str = "none") -> jax.Array:
+    w, b = cur.take(2)
+    return fused_dense(x, w, b, activation=activation)
+
+
+def layernorm_specs(name: str, d: int) -> List[ParamSpec]:
+    return [ParamSpec(f"{name}_gamma", (d,)), ParamSpec(f"{name}_beta", (d,))]
+
+
+def layernorm(cur: Cursor, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    gamma, beta = cur.take(2)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (pre-LN, causal)
+# ---------------------------------------------------------------------------
+
+
+def block_specs(name: str, d: int, d_ff: int) -> List[ParamSpec]:
+    return (
+        layernorm_specs(f"{name}_ln1", d)
+        + dense_specs(f"{name}_qkv", d, 3 * d)
+        + dense_specs(f"{name}_attnout", d, d)
+        + layernorm_specs(f"{name}_ln2", d)
+        + dense_specs(f"{name}_ff1", d, d_ff)
+        + dense_specs(f"{name}_ff2", d_ff, d)
+    )
+
+
+def transformer_block(
+    cur: Cursor, x: jax.Array, *, n_heads: int
+) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D), causal self-attention + GELU MLP."""
+    batch, seq, d = x.shape
+    dh = d // n_heads
+
+    h = layernorm(cur, x)
+    qkv = dense(cur, h.reshape(batch * seq, d)).reshape(batch, seq, 3, n_heads, dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, T, H, dh)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((seq, seq), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(batch * seq, d)
+    attn = dense(cur, ctx).reshape(batch, seq, d)
+    x = x + attn
+
+    h = layernorm(cur, x)
+    h = dense(cur, h.reshape(batch * seq, d), activation="gelu")
+    h = dense(cur, h).reshape(batch, seq, d)
+    return x + h
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy; labels are int class ids, logits (..., C)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def xent_sum_and_correct(
+    logits: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(summed NLL, count of correct argmax predictions) for eval."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    )
+    return jnp.sum(nll), correct

@@ -1,0 +1,66 @@
+"""Compile-path checks: HLO text emission + manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_ratio_tag_stable():
+    assert aot.ratio_tag(0.125) == "r0125"
+    assert aot.ratio_tag(0.5) == "r0500"
+    assert aot.ratio_tag(1.0) == "r1000"
+
+
+def test_hlo_text_emission_smoke(tmp_path):
+    # Lower the smallest model's eval graph only (fast) and sanity-check the
+    # HLO text: ENTRY, tuple root, parameters.
+    m = zoo.MODELS["kws_lite"]
+    params, x, y, _ = zoo.example_args(m, for_eval=True)
+    lowered = jax.jit(zoo.make_eval_step(m)).lower(*params, x, y)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    # eval returns 2-tuple
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_lower_model_writes_all_artifacts(tmp_path):
+    m = zoo.MODELS["kws_lite"]
+    entry = aot.lower_model(m, str(tmp_path), quiet=True)
+    for r in entry["ratios"]:
+        assert (tmp_path / r["artifact"]).exists()
+        assert r["boundary"] == m.ratio_boundary(r["ratio"])
+    assert (tmp_path / entry["eval_artifact"]).exists()
+    assert (tmp_path / entry["init_artifact"]).exists()
+    sizes = [p["size"] for p in entry["params"]]
+    assert sum(sizes) == m.total_params
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_existing_manifest_consistent_with_zoo():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert set(manifest["ratios"]) == set(zoo.RATIOS)
+    for name, entry in manifest["models"].items():
+        m = zoo.MODELS[name]
+        assert entry["total_params"] == m.total_params, name
+        assert len(entry["params"]) == len(m.specs), name
+        for spec, p in zip(m.specs, entry["params"]):
+            assert p["name"] == spec.name
+            assert tuple(p["shape"]) == spec.shape
+        for r in entry["ratios"]:
+            assert r["boundary"] == m.ratio_boundary(r["ratio"]), (name, r)

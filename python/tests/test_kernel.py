@@ -1,0 +1,127 @@
+"""Layer-1 correctness: the Pallas fused-dense kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and activations; forward AND backward must agree.
+This is the core correctness signal of the compile path — everything the
+rust runtime executes flows through this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dense import ACTIVATIONS, fused_dense, matmul
+from compile.kernels.ref import fused_dense_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 108, 64),      # vision patch layer
+        (128, 128, 128),   # exactly one MXU tile
+        (256, 256, 128),   # multi-tile M and K
+        (5, 7, 3),         # tiny, fully padded
+        (33, 200, 35),     # ragged everything
+        (1, 1, 1),         # degenerate
+    ],
+)
+def test_forward_matches_ref(m, k, n, activation):
+    x, w, b = _rand(1, m, k), _rand(2, k, n) * 0.2, _rand(3, n)
+    got = fused_dense(x, w, b, activation=activation)
+    ref = fused_dense_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_gradients_match_ref(activation):
+    m, k, n = 16, 96, 40
+    x, w, b = _rand(4, m, k), _rand(5, k, n) * 0.2, _rand(6, n)
+
+    def loss_kernel(x, w, b):
+        return (fused_dense(x, w, b, activation=activation) ** 2).sum()
+
+    def loss_ref(x, w, b):
+        return (fused_dense_ref(x, w, b, activation=activation) ** 2).sum()
+
+    g1 = jax.grad(loss_kernel, (0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, (0, 1, 2))(x, w, b)
+    for a, r in zip(g1, g2):
+        np.testing.assert_allclose(a, r, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 160),
+    n=st.integers(1, 80),
+    activation=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(m, k, n, activation, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.3
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    got = fused_dense(x, w, b, activation=activation)
+    ref = fused_dense_ref(x, w, b, activation=activation)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gradient_sweep(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb, kc = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.3
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    cot = jax.random.normal(kc, (m, n), jnp.float32)
+
+    def f(fn):
+        def loss(x, w, b):
+            return (fn(x, w, b, activation="relu") * cot).sum()
+
+        return jax.grad(loss, (0, 1, 2))(x, w, b)
+
+    for a, r in zip(f(fused_dense), f(fused_dense_ref)):
+        np.testing.assert_allclose(a, r, rtol=5e-4, atol=5e-4)
+
+
+def test_matmul_helper():
+    a, b = _rand(7, 30, 50), _rand(8, 50, 20)
+    np.testing.assert_allclose(matmul(a, b), a @ b, rtol=2e-5, atol=2e-5)
+
+
+def test_bad_shapes_raise():
+    with pytest.raises(ValueError):
+        fused_dense(_rand(1, 4, 5), _rand(2, 6, 3), _rand(3, 3))
+    with pytest.raises(ValueError):
+        fused_dense(_rand(1, 4, 5), _rand(2, 5, 3), _rand(3, 7))
+    with pytest.raises(ValueError):
+        fused_dense(_rand(1, 4, 5), _rand(2, 5, 3), _rand(3, 3), activation="swish")
+
+
+def test_f32_accumulation_precision():
+    # Large-K contraction: naive f16-style accumulation would drift; the
+    # kernel accumulates at f32 and must stay close to the f64 ground truth.
+    m, k, n = 8, 1024, 8
+    x, w = _rand(9, m, k), _rand(10, k, n)
+    b = jnp.zeros((n,), jnp.float32)
+    got = np.asarray(fused_dense(x, w, b), np.float64)
+    truth = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    np.testing.assert_allclose(got, truth, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,187 @@
+"""Layer-2 correctness: model zoo shapes, partial-training semantics, and
+train-step behaviour (pre-AOT — the same functions aot.py lowers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as zoo
+from compile import nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL_MODELS = ["vision", "speech", "kws_lite", "text"]  # e2e_lm is slow; covered by aot
+
+
+def _init(m, seed=0):
+    return list(zoo.make_init(m)(jnp.int32(seed)))
+
+
+def _batch(m, rng, batch=None):
+    b = batch or m.batch
+    if m.x_dtype == "f32":
+        x = rng.standard_normal((b, *m.x_shape), np.float32)
+        y = rng.integers(0, m.num_classes, (b,), np.int32)
+    else:
+        x = rng.integers(0, m.num_classes, (b, *m.x_shape), np.int32)
+        y = rng.integers(0, m.num_classes, (b, m.seq_len), np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_init_matches_specs(name):
+    m = zoo.MODELS[name]
+    params = _init(m)
+    assert len(params) == len(m.specs)
+    for p, s in zip(params, m.specs):
+        assert p.shape == s.shape, s.name
+        assert bool(jnp.all(jnp.isfinite(p)))
+    assert sum(int(np.prod(p.shape)) for p in params) == m.total_params
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_forward_shapes(name):
+    m = zoo.MODELS[name]
+    params = _init(m)
+    rng = np.random.default_rng(0)
+    x, _ = _batch(m, rng)
+    logits = m.forward(params, x)
+    if m.task == "classify":
+        assert logits.shape == (m.batch, m.num_classes)
+    else:
+        assert logits.shape == (m.batch, m.seq_len, m.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_full_train_step_reduces_loss(name):
+    m = zoo.MODELS[name]
+    step = jax.jit(zoo.make_train_step(m, 1.0))
+    params = _init(m)
+    rng = np.random.default_rng(1)
+    x, y = _batch(m, rng)  # overfit one fixed batch
+    first = last = None
+    for _ in range(25):
+        out = step(*params, x, y, jnp.float32(0.1))
+        params, loss = list(out[:-1]), float(out[-1])
+        first = loss if first is None else first
+        last = loss
+    assert last < 0.7 * first, f"{name}: {first} -> {last}"
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+@pytest.mark.parametrize("ratio", [0.25, 0.5])
+def test_partial_step_freezes_prefix(name, ratio):
+    m = zoo.MODELS[name]
+    boundary = m.ratio_boundary(ratio)
+    assert 0 < boundary < len(m.specs)
+    step = jax.jit(zoo.make_train_step(m, ratio))
+    params = _init(m)
+    rng = np.random.default_rng(2)
+    x, y = _batch(m, rng)
+    out = step(*params, x, y, jnp.float32(0.1))
+    new_params = list(out[:-1])
+    for i in range(boundary):
+        np.testing.assert_array_equal(params[i], new_params[i]), m.specs[i].name
+    moved = any(
+        not np.array_equal(params[i], new_params[i])
+        for i in range(boundary, len(params))
+    )
+    assert moved, "no trainable tensor moved"
+
+
+def test_ratio_boundaries_monotone():
+    for m in zoo.MODELS.values():
+        bounds = [m.ratio_boundary(r) for r in zoo.RATIOS]
+        assert bounds == sorted(bounds, reverse=True), (m.name, bounds)
+        assert m.ratio_boundary(1.0) == 0
+        # trainable fraction never exceeds requested ratio (rounded down to
+        # a layer boundary), except that the classifier head (the minimal
+        # mandatory suffix) is always trainable even when it alone exceeds
+        # the ratio budget.
+        n = len(m.specs)
+        min_boundary = min(n - 2 if n >= 2 else 0, n - 1)
+        min_fraction = sum(s.size for s in m.specs[min_boundary:]) / m.total_params
+        for r in zoo.RATIOS:
+            assert m.trainable_fraction(r) <= max(r, min_fraction) + 1e-9
+            assert m.trainable_fraction(r) > 0
+
+
+@pytest.mark.parametrize("name", ["vision", "kws_lite"])
+@pytest.mark.parametrize("ratio", [0.5, 1.0])
+def test_chunk_matches_sequential_steps(name, ratio):
+    """The fused scan train-chunk is numerically identical to repeated
+    single train-steps (the §Perf optimisation must not change semantics)."""
+    m = zoo.MODELS[name]
+    chunk = 4
+    n_steps = 3  # exercise tail-slot masking too
+    step = jax.jit(zoo.make_train_step(m, ratio))
+    fused = jax.jit(zoo.make_train_chunk(m, ratio, chunk))
+    params = _init(m, seed=5)
+    rng = np.random.default_rng(7)
+    batches = [_batch(m, rng) for _ in range(chunk)]
+    lr = jnp.float32(0.05)
+
+    seq = list(params)
+    losses = []
+    for i in range(n_steps):
+        out = step(*seq, batches[i][0], batches[i][1], lr)
+        seq, losses = list(out[:-1]), losses + [float(out[-1])]
+
+    xs = jnp.stack([b[0] for b in batches])
+    ys = jnp.stack([b[1] for b in batches])
+    out = fused(*params, xs, ys, lr, jnp.int32(n_steps))
+    fused_params, loss_sum = list(out[:-1]), float(out[-1])
+
+    np.testing.assert_allclose(loss_sum, sum(losses), rtol=1e-5)
+    for a, b, spec in zip(seq, fused_params, m.specs):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6, err_msg=spec.name)
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_eval_step_counts(name):
+    m = zoo.MODELS[name]
+    ev = jax.jit(zoo.make_eval_step(m))
+    params = _init(m)
+    rng = np.random.default_rng(3)
+    x, y = _batch(m, rng, batch=m.eval_batch)
+    loss_sum, second = ev(*params, x, y)
+    n = m.eval_batch if m.task == "classify" else m.eval_batch * m.seq_len
+    # untrained mean loss should be near ln(num_classes)
+    mean = float(loss_sum) / n
+    assert abs(mean - np.log(m.num_classes)) < 1.0
+    if m.task == "classify":
+        assert 0 <= float(second) <= m.eval_batch
+    else:
+        assert float(second) == n
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+    labels = jnp.asarray([0, 2])
+    got = float(nn.softmax_xent(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    manual = (-np.log(p0) - np.log(1 / 3)) / 2
+    assert abs(got - manual) < 1e-5
+
+
+def test_layernorm_normalizes():
+    cur = nn.Cursor([jnp.ones((8,)), jnp.zeros((8,))])
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((4, 8)) * 5 + 3, jnp.float32)
+    out = nn.layernorm(cur, x)
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-3)
+
+
+def test_transformer_block_causal():
+    # Changing a future token must not change past positions' outputs.
+    d, heads, seq = 32, 4, 8
+    specs = nn.block_specs("b", d, 2 * d)
+    params = nn.init_params(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, seq, d))
+    out1 = nn.transformer_block(nn.Cursor(params), x, n_heads=heads)
+    x2 = x.at[0, -1].set(99.0)
+    out2 = nn.transformer_block(nn.Cursor(params), x2, n_heads=heads)
+    np.testing.assert_allclose(out1[0, :-1], out2[0, :-1], atol=1e-5)
+    assert not np.allclose(out1[0, -1], out2[0, -1])

@@ -1,0 +1,213 @@
+//! Server-side aggregation: FedAvg and FedOpt (paper §4 uses both), with
+//! staleness-discounted weighting (FedBuff) and partial-update merging
+//! (TimelyFL §3.2.2).
+//!
+//! Contributions arrive as suffix deltas (`model::Update`). The aggregate
+//! delta is a **per-tensor** weighted mean: a tensor's weight normalizer
+//! only includes the clients that actually trained it, so partially-trained
+//! clients neither dilute nor drag the layers they froze. (A naive global
+//! normalizer would shrink deep-layer updates whenever any client trained
+//! partially — ablated in `benches/hotpath_criterion.rs` and unit tests.)
+
+pub mod server_opt;
+
+pub use server_opt::{ServerOpt, ServerOptKind};
+
+use crate::model::{ParamVec, Update};
+
+/// One client's contribution to a global aggregation.
+#[derive(Clone, Debug)]
+pub struct Contribution {
+    pub client_id: usize,
+    pub update: Update,
+    /// Aggregation weight before staleness discount (e.g. #examples; we use
+    /// 1.0 — uniform — matching the paper's FedBuff comparison).
+    pub weight: f64,
+    /// Rounds elapsed since the client pulled its base model (0 = fresh).
+    pub staleness: u64,
+}
+
+/// FedBuff's staleness discount: s(tau) = 1 / sqrt(1 + tau).
+pub fn staleness_discount(staleness: u64) -> f64 {
+    1.0 / (1.0 + staleness as f64).sqrt()
+}
+
+/// Reduce contributions to a full-shape average delta.
+///
+/// Returns the per-tensor weighted mean of the suffix deltas, as a
+/// full-model `Update` with `boundary = 0` (frozen-by-everyone tensors come
+/// out as exact zeros).
+///
+/// `discount_staleness` selects the published FedBuff rule
+/// (Nguyen et al. 2021, Alg. 1): `Δ̄ = (1/K) Σ s(τ_k) Δ_k` — the
+/// normaliser is the BUFFER SIZE (sum of base weights), not the sum of
+/// discounted weights, so a buffer full of stale updates takes a
+/// proportionally smaller server step instead of being silently
+/// renormalised back to full magnitude. (Renormalising would erase the
+/// staleness penalty and flatter the baseline — ablated in the aggregation
+/// unit tests.)
+pub fn average_delta(
+    template: &ParamVec,
+    contributions: &[Contribution],
+    discount_staleness: bool,
+) -> Update {
+    let n_tensors = template.tensors.len();
+    let mut sum: Vec<Vec<f32>> = template
+        .tensors
+        .iter()
+        .map(|t| vec![0.0f32; t.len()])
+        .collect();
+    let mut weight_per_tensor = vec![0.0f64; n_tensors];
+
+    for c in contributions {
+        let w = if discount_staleness {
+            c.weight * staleness_discount(c.staleness)
+        } else {
+            c.weight
+        };
+        if w <= 0.0 {
+            continue;
+        }
+        for (i, u) in c.update.tensors.iter().enumerate() {
+            let j = c.update.boundary + i;
+            // FedBuff normalises by the undiscounted weight (buffer size);
+            // the fresh-update path normalises by what was accumulated.
+            weight_per_tensor[j] += if discount_staleness { c.weight } else { w };
+            let dst = &mut sum[j];
+            debug_assert_eq!(dst.len(), u.len());
+            let wf = w as f32;
+            for (a, b) in dst.iter_mut().zip(u) {
+                *a += wf * b;
+            }
+        }
+    }
+
+    for (t, &w) in sum.iter_mut().zip(&weight_per_tensor) {
+        if w > 0.0 {
+            let inv = (1.0 / w) as f32;
+            for v in t.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    Update {
+        boundary: 0,
+        tensors: sum,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(tensors: Vec<Vec<f32>>) -> ParamVec {
+        ParamVec { tensors }
+    }
+
+    fn contrib(boundary: usize, tensors: Vec<Vec<f32>>, weight: f64, staleness: u64) -> Contribution {
+        Contribution {
+            client_id: 0,
+            update: Update { boundary, tensors },
+            weight,
+            staleness,
+        }
+    }
+
+    #[test]
+    fn uniform_full_updates_average() {
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = vec![
+            contrib(0, vec![vec![2.0, 0.0], vec![4.0]], 1.0, 0),
+            contrib(0, vec![vec![0.0, 2.0], vec![0.0]], 1.0, 0),
+        ];
+        let avg = average_delta(&template, &cs, false);
+        assert_eq!(avg.tensors, vec![vec![1.0, 1.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn partial_updates_use_per_tensor_normalizer() {
+        let template = pv(vec![vec![0.0], vec![0.0]]);
+        // Client A trained everything; client B only the last tensor.
+        let cs = vec![
+            contrib(0, vec![vec![2.0], vec![2.0]], 1.0, 0),
+            contrib(1, vec![vec![6.0]], 1.0, 0),
+        ];
+        let avg = average_delta(&template, &cs, false);
+        // tensor 0: only A contributed -> mean = 2.0 (NOT 1.0)
+        assert_eq!(avg.tensors[0], vec![2.0]);
+        // tensor 1: both -> mean = 4.0
+        assert_eq!(avg.tensors[1], vec![4.0]);
+    }
+
+    #[test]
+    fn untouched_tensor_stays_zero() {
+        let template = pv(vec![vec![0.0], vec![0.0]]);
+        let cs = vec![contrib(1, vec![vec![3.0]], 1.0, 0)];
+        let avg = average_delta(&template, &cs, false);
+        assert_eq!(avg.tensors[0], vec![0.0]);
+        assert_eq!(avg.tensors[1], vec![3.0]);
+    }
+
+    #[test]
+    fn staleness_discount_monotone() {
+        assert_eq!(staleness_discount(0), 1.0);
+        assert!(staleness_discount(1) < 1.0);
+        assert!(staleness_discount(8) < staleness_discount(3));
+        assert!((staleness_discount(3) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_weighting_applied() {
+        let template = pv(vec![vec![0.0]]);
+        // fresh says +1, stale (tau=3, discount 0.5) says -1
+        let cs = vec![
+            contrib(0, vec![vec![1.0]], 1.0, 0),
+            contrib(0, vec![vec![-1.0]], 1.0, 3),
+        ];
+        let avg = average_delta(&template, &cs, true);
+        // FedBuff rule: (1*1 + 0.5*(-1)) / K=2 = 0.25 — NOT renormalised
+        // by the discounted weight sum (which would give 1/3).
+        assert!((avg.tensors[0][0] - 0.25).abs() < 1e-6);
+        let no = average_delta(&template, &cs, false);
+        assert_eq!(no.tensors[0], vec![0.0]);
+    }
+
+    #[test]
+    fn stale_buffer_takes_smaller_step() {
+        // The magnitude penalty the renormalising variant would erase: an
+        // all-stale buffer moves the model less than an all-fresh one.
+        let template = pv(vec![vec![0.0]]);
+        let fresh = vec![
+            contrib(0, vec![vec![1.0]], 1.0, 0),
+            contrib(0, vec![vec![1.0]], 1.0, 0),
+        ];
+        let stale = vec![
+            contrib(0, vec![vec![1.0]], 1.0, 8),
+            contrib(0, vec![vec![1.0]], 1.0, 8),
+        ];
+        let f = average_delta(&template, &fresh, true);
+        let s = average_delta(&template, &stale, true);
+        assert!((f.tensors[0][0] - 1.0).abs() < 1e-6);
+        assert!((s.tensors[0][0] - 1.0 / 3.0).abs() < 1e-6); // s(8) = 1/3
+        assert!(s.tensors[0][0] < f.tensors[0][0]);
+    }
+
+    #[test]
+    fn empty_contributions_give_zero_delta() {
+        let template = pv(vec![vec![0.0, 0.0]]);
+        let avg = average_delta(&template, &[], false);
+        assert_eq!(avg.tensors, vec![vec![0.0, 0.0]]);
+    }
+
+    #[test]
+    fn weights_scale_contributions() {
+        let template = pv(vec![vec![0.0]]);
+        let cs = vec![
+            contrib(0, vec![vec![1.0]], 3.0, 0),
+            contrib(0, vec![vec![5.0]], 1.0, 0),
+        ];
+        let avg = average_delta(&template, &cs, false);
+        assert!((avg.tensors[0][0] - 2.0).abs() < 1e-6);
+    }
+}

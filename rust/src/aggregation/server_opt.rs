@@ -1,0 +1,224 @@
+//! Server optimizers (FedOpt family, Reddi et al. 2021).
+//!
+//! The averaged client delta is treated as a pseudo-gradient
+//! `g = -avg_delta`; the server then takes one optimizer step on the global
+//! model. `FedAvg` is the identity server optimizer (apply the delta as-is,
+//! server lr 1.0). The paper evaluates FedAvg and FedOpt-with-Adam; Yogi
+//! and SGD-with-momentum are included for completeness (same family).
+
+use crate::model::{ParamVec, Update};
+
+/// Which server optimizer to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerOptKind {
+    /// global += avg_delta (server lr fixed at 1.0): plain FedAvg.
+    FedAvg,
+    /// Adam on the pseudo-gradient (the paper's "FedOpt" configuration).
+    Adam,
+    /// Yogi variant (sign-based second-moment update).
+    Yogi,
+    /// SGD with momentum on the pseudo-gradient.
+    SgdM,
+}
+
+impl ServerOptKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fedavg" | "avg" => ServerOptKind::FedAvg,
+            "adam" | "fedopt" => ServerOptKind::Adam,
+            "yogi" => ServerOptKind::Yogi,
+            "sgdm" => ServerOptKind::SgdM,
+            other => anyhow::bail!("unknown server optimizer {other:?}"),
+        })
+    }
+}
+
+/// Server optimizer state (first/second moments, allocated lazily to the
+/// model's shape on the first step).
+#[derive(Clone, Debug)]
+pub struct ServerOpt {
+    pub kind: ServerOptKind,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    step: u64,
+    m: Option<Vec<Vec<f32>>>,
+    v: Option<Vec<Vec<f32>>>,
+}
+
+impl ServerOpt {
+    pub fn new(kind: ServerOptKind, lr: f64) -> ServerOpt {
+        ServerOpt {
+            kind,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            step: 0,
+            m: None,
+            v: None,
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step
+    }
+
+    /// Apply one aggregated (full-shape, boundary=0) delta to the global
+    /// model in place.
+    pub fn apply(&mut self, global: &mut ParamVec, avg_delta: &Update) {
+        assert_eq!(avg_delta.boundary, 0, "server opt needs full-shape delta");
+        match self.kind {
+            ServerOptKind::FedAvg => {
+                global.apply(avg_delta, 1.0);
+                self.step += 1;
+            }
+            ServerOptKind::SgdM => self.sgdm(global, avg_delta),
+            ServerOptKind::Adam | ServerOptKind::Yogi => self.adam_like(global, avg_delta),
+        }
+    }
+
+    fn ensure_state(&mut self, like: &Update) {
+        if self.m.is_none() {
+            self.m = Some(like.tensors.iter().map(|t| vec![0.0; t.len()]).collect());
+            self.v = Some(like.tensors.iter().map(|t| vec![0.0; t.len()]).collect());
+        }
+    }
+
+    fn sgdm(&mut self, global: &mut ParamVec, delta: &Update) {
+        self.ensure_state(delta);
+        self.step += 1;
+        let m = self.m.as_mut().unwrap();
+        let beta = self.beta1 as f32;
+        let lr = self.lr as f32;
+        for (j, d) in delta.tensors.iter().enumerate() {
+            let mj = &mut m[j];
+            let gj = &mut global.tensors[j];
+            for i in 0..d.len() {
+                let g = -d[i]; // pseudo-gradient
+                mj[i] = beta * mj[i] + g;
+                gj[i] -= lr * mj[i];
+            }
+        }
+    }
+
+    fn adam_like(&mut self, global: &mut ParamVec, delta: &Update) {
+        self.ensure_state(delta);
+        self.step += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bias1 = 1.0 - b1.powi(self.step as i32);
+        let bias2 = 1.0 - b2.powi(self.step as i32);
+        let lr = self.lr;
+        let eps = self.eps;
+        let yogi = self.kind == ServerOptKind::Yogi;
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+
+        for (j, d) in delta.tensors.iter().enumerate() {
+            let mj = &mut m[j];
+            let vj = &mut v[j];
+            let gj = &mut global.tensors[j];
+            for i in 0..d.len() {
+                let g = -(d[i] as f64); // pseudo-gradient
+                let g2 = g * g;
+                mj[i] = (b1 * mj[i] as f64 + (1.0 - b1) * g) as f32;
+                if yogi {
+                    let vv = vj[i] as f64;
+                    vj[i] = (vv - (1.0 - b2) * g2 * (vv - g2).signum()) as f32;
+                } else {
+                    vj[i] = (b2 * vj[i] as f64 + (1.0 - b2) * g2) as f32;
+                }
+                let mhat = mj[i] as f64 / bias1;
+                let vhat = (vj[i] as f64 / bias2).max(0.0);
+                gj[i] -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(tensors: Vec<Vec<f32>>) -> Update {
+        Update {
+            boundary: 0,
+            tensors,
+        }
+    }
+
+    fn global() -> ParamVec {
+        ParamVec {
+            tensors: vec![vec![1.0, 1.0], vec![0.0]],
+        }
+    }
+
+    #[test]
+    fn fedavg_is_identity_application() {
+        let mut g = global();
+        let mut opt = ServerOpt::new(ServerOptKind::FedAvg, 1.0);
+        opt.apply(&mut g, &delta(vec![vec![0.5, -0.5], vec![1.0]]));
+        assert_eq!(g.tensors, vec![vec![1.5, 0.5], vec![1.0]]);
+    }
+
+    #[test]
+    fn adam_moves_against_pseudo_gradient() {
+        let mut g = global();
+        let before = g.tensors[0][0];
+        let mut opt = ServerOpt::new(ServerOptKind::Adam, 0.01);
+        // positive delta => negative pseudo-gradient => param increases
+        opt.apply(&mut g, &delta(vec![vec![1.0, 1.0], vec![1.0]]));
+        assert!(g.tensors[0][0] > before);
+        // first Adam step size is ~lr regardless of gradient magnitude
+        assert!((g.tensors[0][0] - before - 0.01).abs() < 1e-3);
+    }
+
+    #[test]
+    fn adam_steps_bounded_by_lr_scale() {
+        let mut g = global();
+        let mut opt = ServerOpt::new(ServerOptKind::Adam, 0.1);
+        for _ in 0..10 {
+            opt.apply(&mut g, &delta(vec![vec![100.0, -100.0], vec![0.1]]));
+        }
+        // Adam normalizes: ten steps can move at most ~10 * lr * O(1).
+        assert!((g.tensors[0][0] - 1.0).abs() < 1.5);
+        assert_eq!(opt.steps_taken(), 10);
+    }
+
+    #[test]
+    fn yogi_differs_from_adam_but_same_direction() {
+        let mut ga = global();
+        let mut gy = global();
+        let mut a = ServerOpt::new(ServerOptKind::Adam, 0.05);
+        let mut y = ServerOpt::new(ServerOptKind::Yogi, 0.05);
+        for i in 0..5 {
+            let d = delta(vec![vec![1.0 + i as f32, -1.0], vec![0.5]]);
+            a.apply(&mut ga, &d);
+            y.apply(&mut gy, &d);
+        }
+        assert!(ga.tensors[0][0] > 1.0 && gy.tensors[0][0] > 1.0);
+        assert_ne!(ga.tensors[0][0], gy.tensors[0][0]);
+    }
+
+    #[test]
+    fn sgdm_accumulates_momentum() {
+        let mut g = ParamVec {
+            tensors: vec![vec![0.0]],
+        };
+        let mut opt = ServerOpt::new(ServerOptKind::SgdM, 1.0);
+        opt.apply(&mut g, &delta(vec![vec![1.0]]));
+        let first = g.tensors[0][0];
+        opt.apply(&mut g, &delta(vec![vec![1.0]]));
+        let second_step = g.tensors[0][0] - first;
+        assert!(second_step > first, "momentum should amplify");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(ServerOptKind::parse("fedavg").unwrap(), ServerOptKind::FedAvg);
+        assert_eq!(ServerOptKind::parse("FedOpt").unwrap(), ServerOptKind::Adam);
+        assert_eq!(ServerOptKind::parse("yogi").unwrap(), ServerOptKind::Yogi);
+        assert!(ServerOptKind::parse("nope").is_err());
+    }
+}

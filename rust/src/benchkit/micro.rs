@@ -1,0 +1,108 @@
+//! In-tree micro-benchmark timer (criterion replacement for the offline
+//! vendor set): warmup, N timed iterations, robust summary statistics.
+
+use std::time::Instant;
+
+/// Summary of one micro-bench.
+#[derive(Clone, Copy, Debug)]
+pub struct MicroStats {
+    pub iters: usize,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl MicroStats {
+    fn from_samples(mut ns: Vec<f64>) -> MicroStats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let iters = ns.len();
+        let idx = |q: f64| ns[((iters - 1) as f64 * q).round() as usize];
+        MicroStats {
+            iters,
+            min_ns: ns[0],
+            mean_ns: ns.iter().sum::<f64>() / iters as f64,
+            p50_ns: idx(0.5),
+            p95_ns: idx(0.95),
+        }
+    }
+
+    /// Human-scaled time (ns/us/ms/s).
+    pub fn fmt(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} us", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    }
+
+    pub fn row(&self, name: &str) -> Vec<String> {
+        vec![
+            name.to_string(),
+            self.iters.to_string(),
+            Self::fmt(self.min_ns),
+            Self::fmt(self.p50_ns),
+            Self::fmt(self.mean_ns),
+            Self::fmt(self.p95_ns),
+        ]
+    }
+
+    pub const HEADERS: [&'static str; 6] = ["bench", "iters", "min", "p50", "mean", "p95"];
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones. The closure
+/// must do its own work-holding (return values are dropped); use
+/// `std::hint::black_box` inside to defeat DCE.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> MicroStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_nanos() as f64
+        })
+        .collect();
+    MicroStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_holds() {
+        let s = bench(2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns > 0.0);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(MicroStats::fmt(500.0), "500 ns");
+        assert_eq!(MicroStats::fmt(2_500.0), "2.50 us");
+        assert_eq!(MicroStats::fmt(3_000_000.0), "3.00 ms");
+        assert_eq!(MicroStats::fmt(1.5e9), "1.50 s");
+    }
+
+    #[test]
+    fn from_samples_percentiles() {
+        let s = MicroStats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.min_ns, 1.0);
+        // nearest-rank on 100 samples: p50 -> index round(49.5) = 50
+        assert_eq!(s.p50_ns, 51.0);
+        assert_eq!(s.p95_ns, 95.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Bench-harness support shared by every `benches/` binary (criterion is
+//! not in the offline vendor set, so micro-benching is in-tree too).
+//!
+//! Each paper table/figure has one bench binary (`cargo bench` runs all,
+//! `cargo bench --bench table1_time_to_accuracy` one). They share:
+//!
+//! - [`Scale`] — `TIMELYFL_BENCH_FAST=1` shrinks round budgets ~4x for
+//!   smoke runs; default budgets reproduce the paper's *shape* on this
+//!   testbed (absolute numbers differ; see EXPERIMENTS.md).
+//! - [`Bench`] — one shared PJRT client + manifest across all runs of a
+//!   bench (compiling executables once per model, like the coordinator).
+//! - [`micro`] — min/mean/p50/p95 micro-timing for the §Perf hot paths.
+//! - [`results_dir`]/[`write_result`] — benches drop their tables + CSV
+//!   series under `results/` so EXPERIMENTS.md can reference them.
+
+pub mod micro;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+use crate::config::RunConfig;
+use crate::coordinator::Simulation;
+use crate::metrics::RunReport;
+use crate::runtime::Manifest;
+
+/// Round-budget scaling for smoke runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub fast: bool,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        Scale {
+            fast: std::env::var("TIMELYFL_BENCH_FAST").is_ok_and(|v| v != "0" && !v.is_empty()),
+        }
+    }
+
+    /// Shrink a round budget ~4x in fast mode (never below 20).
+    pub fn rounds(&self, full: usize) -> usize {
+        if self.fast {
+            (full / 4).max(20)
+        } else {
+            full
+        }
+    }
+
+    /// Shrink an iteration count ~4x in fast mode (never below 10).
+    pub fn iters(&self, full: usize) -> usize {
+        if self.fast {
+            (full / 4).max(10)
+        } else {
+            full
+        }
+    }
+}
+
+/// Shared state for one bench binary: a single PJRT client + manifest so
+/// model executables compile once per (bench, model) instead of per run.
+pub struct Bench {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub scale: Scale,
+}
+
+impl Bench {
+    /// Locate `artifacts/` relative to the workspace root (benches run from
+    /// the workspace directory; `TIMELYFL_ARTIFACTS` overrides).
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("TIMELYFL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn new() -> Result<Bench> {
+        let manifest = Manifest::load(Self::artifacts_dir())?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Bench {
+            client,
+            manifest,
+            scale: Scale::from_env(),
+        })
+    }
+
+    /// Build + run one simulation on the shared client.
+    pub fn run(&self, cfg: RunConfig) -> Result<RunReport> {
+        let sim = Simulation::with_client(cfg, &self.manifest, &self.client)?;
+        sim.run()
+    }
+
+    /// Build a simulation (callers that need the `Simulation` itself, e.g.
+    /// to reach the runtime for micro-benches).
+    pub fn simulation(&self, cfg: RunConfig) -> Result<Simulation> {
+        Simulation::with_client(cfg, &self.manifest, &self.client)
+    }
+}
+
+/// `results/` directory (created on first use).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("TIMELYFL_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Drop a bench output file under `results/` (best-effort; benches must not
+/// fail on a read-only checkout).
+pub fn write_result(name: &str, content: &str) {
+    let path = results_dir().join(name);
+    match std::fs::write(&path, content) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+    }
+}
+
+/// Banner printed at the top of every bench binary.
+pub fn banner(id: &str, paper: &str) {
+    println!("=== {id} — reproduces {paper} ===");
+    let scale = Scale::from_env();
+    if scale.fast {
+        println!("(TIMELYFL_BENCH_FAST set: ~4x reduced budgets — shapes only)");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_full_is_identity() {
+        let s = Scale { fast: false };
+        assert_eq!(s.rounds(400), 400);
+        assert_eq!(s.iters(100), 100);
+    }
+
+    #[test]
+    fn scale_fast_shrinks_with_floor() {
+        let s = Scale { fast: true };
+        assert_eq!(s.rounds(400), 100);
+        assert_eq!(s.rounds(40), 20);
+        assert_eq!(s.iters(8), 10);
+    }
+
+    #[test]
+    fn results_dir_creates() {
+        let d = results_dir();
+        assert!(d.exists());
+    }
+}

@@ -1,0 +1,133 @@
+//! `key = value` config overrides (TOML subset) for files and `--set`
+//! CLI flags. Comments (`#`), blank lines, strings with or without quotes,
+//! numbers and booleans.
+
+use anyhow::{Context, Result};
+
+use super::{RunConfig, StrategyKind};
+use crate::aggregation::ServerOptKind;
+
+/// Parse one `key = value` line into an override on `cfg`.
+pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
+    let v = value.trim().trim_matches('"');
+    match key.trim() {
+        "model" => cfg.model = v.to_string(),
+        "strategy" => cfg.strategy = StrategyKind::parse(v)?,
+        "population" => cfg.population = v.parse()?,
+        "concurrency" => cfg.concurrency = v.parse()?,
+        "k_fraction" => cfg.k_fraction = v.parse()?,
+        "rounds" => cfg.rounds = v.parse()?,
+        "sim_time_budget" => cfg.sim_time_budget = v.parse()?,
+        "client_lr" => cfg.client_lr = v.parse()?,
+        "server_opt" => cfg.server_opt = ServerOptKind::parse(v)?,
+        "server_lr" => cfg.server_lr = v.parse()?,
+        "steps_per_epoch" => cfg.steps_per_epoch = v.parse()?,
+        "max_local_epochs" => cfg.max_local_epochs = v.parse()?,
+        "fedbuff_local_epochs" => cfg.fedbuff_local_epochs = v.parse()?,
+        "max_staleness" => {
+            cfg.max_staleness = if v.eq_ignore_ascii_case("none") {
+                None
+            } else {
+                Some(v.parse()?)
+            }
+        }
+        "adaptive" => cfg.adaptive = parse_bool(v)?,
+        "deadline_grace" => cfg.deadline_grace = v.parse()?,
+        "estimate_noise" => cfg.estimate_noise = v.parse()?,
+        "dropout_prob" => cfg.dropout_prob = v.parse()?,
+        "dirichlet_alpha" => cfg.dirichlet_alpha = v.parse()?,
+        "data_seed" => cfg.data_seed = v.parse()?,
+        "template_scale" => cfg.template_scale = v.parse()?,
+        "lm_noise" => cfg.lm_noise = v.parse()?,
+        "median_epoch_secs" => cfg.fleet.median_epoch_secs = v.parse()?,
+        "compute_spread" => cfg.fleet.compute_spread = v.parse()?,
+        "median_bandwidth" => cfg.fleet.median_bandwidth = v.parse()?,
+        "bandwidth_spread" => cfg.fleet.bandwidth_spread = v.parse()?,
+        "sim_model_bytes" => cfg.sim_model_bytes = v.parse()?,
+        "eval_every" => cfg.eval_every = v.parse()?,
+        "eval_batches" => cfg.eval_batches = v.parse()?,
+        "target_metric" => {
+            cfg.target_metric = if v.eq_ignore_ascii_case("none") {
+                None
+            } else {
+                Some(v.parse()?)
+            }
+        }
+        "seed" => cfg.seed = v.parse()?,
+        "init_seed" => cfg.init_seed = v.parse()?,
+        other => anyhow::bail!("unknown config key {other:?}"),
+    }
+    Ok(())
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => anyhow::bail!("expected bool, got {other:?}"),
+    }
+}
+
+/// Parse a whole config file of `key = value` lines on top of `cfg`.
+pub fn apply_file(cfg: &mut RunConfig, text: &str) -> Result<()> {
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        apply_override(cfg, k, v).with_context(|| format!("line {}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+/// Parse a `--set key=value` CLI argument.
+pub fn apply_cli(cfg: &mut RunConfig, kv: &str) -> Result<()> {
+    let (k, v) = kv
+        .split_once('=')
+        .with_context(|| format!("--set {kv:?}: expected key=value"))?;
+    apply_override(cfg, k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "# comment\n\
+             strategy = fedbuff\n\
+             rounds = 42   # trailing comment\n\
+             client_lr = 0.5\n\
+             adaptive = false\n\
+             max_staleness = 10\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.strategy, StrategyKind::FedBuff);
+        assert_eq!(cfg.rounds, 42);
+        assert_eq!(cfg.client_lr, 0.5);
+        assert!(!cfg.adaptive);
+        assert_eq!(cfg.max_staleness, Some(10));
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut cfg = RunConfig::default();
+        apply_cli(&mut cfg, "model=text").unwrap();
+        assert_eq!(cfg.model, "text");
+        assert!(apply_cli(&mut cfg, "no_equals").is_err());
+        assert!(apply_cli(&mut cfg, "bogus_key=1").is_err());
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let mut cfg = RunConfig::default();
+        let err = apply_file(&mut cfg, "rounds = 5\nbad line\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+}

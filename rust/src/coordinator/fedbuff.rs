@@ -1,0 +1,163 @@
+//! FedBuff baseline (Nguyen et al. 2021 / PAPAYA) — buffered asynchronous
+//! FL, event-driven.
+//!
+//! `n` clients (the training concurrency) are always training, each on the
+//! global model version it pulled at dispatch time. Finished updates land
+//! in a buffer; when the buffer holds `K` updates (the *aggregation goal*)
+//! the server takes one global step with staleness-discounted weights
+//! (1/sqrt(1+tau)) and the version counter advances. The finishing client
+//! immediately re-dispatches on the fresh model.
+//!
+//! This is the behaviour the paper criticizes: fast devices cycle many
+//! times per aggregation round, slow devices contribute rarely and stale —
+//! the participation-rate gap of Figs. 1/5.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::local_time::truth;
+use super::trainer::train_client;
+use super::{Recorder, Simulation};
+use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::metrics::RunReport;
+use crate::model::{Update, VersionedParams};
+use crate::simtime::EventQueue;
+use crate::util::rng::Rng;
+
+/// A client finishing local training (update computed eagerly at dispatch —
+/// it only depends on the base snapshot, so this is equivalent and keeps
+/// the event payload self-contained).
+struct Finish {
+    client: usize,
+    base_version: u64,
+    update: Update,
+    mean_loss: f64,
+}
+
+pub fn run(sim: &Simulation) -> Result<RunReport> {
+    let cfg = &sim.cfg;
+    let rt = &sim.runtime;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut client_rngs: Vec<Rng> = (0..cfg.population)
+        .map(|i| rng.fork(i as u64))
+        .collect();
+
+    let mut global = Arc::new(VersionedParams {
+        version: 0,
+        params: rt.init_params(cfg.init_seed)?,
+    });
+    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
+    let mut rec = Recorder::new(cfg.population);
+    let mut events: EventQueue<Finish> = EventQueue::new();
+    let k_goal = cfg.k_target();
+
+    let mut busy = vec![false; cfg.population];
+
+    // Dispatch one client: train eagerly on the current global, schedule
+    // the finish event at the simulated completion time.
+    let dispatch = |client: usize,
+                        global: &Arc<VersionedParams>,
+                        events: &mut EventQueue<Finish>,
+                        rng: &mut Rng,
+                        client_rngs: &mut [Rng],
+                        busy: &mut [bool]|
+     -> Result<()> {
+        busy[client] = true;
+        let cond = sim.fleet.round_conditions(rng);
+        let t = truth(&sim.fleet.devices[client], &cond, cfg.sim_model_bytes);
+        let duration = t.round_secs(cfg.fedbuff_local_epochs as f64, 1.0, 1.0);
+        let full = rt
+            .meta
+            .ratio_exact(1.0)
+            .expect("full ratio always compiled");
+        let outcome = train_client(
+            rt,
+            &sim.dataset,
+            client,
+            &global.params,
+            full,
+            cfg.fedbuff_local_epochs,
+            cfg.steps_per_epoch,
+            cfg.client_lr,
+            &mut client_rngs[client],
+        )?;
+        events.schedule_in(
+            duration,
+            Finish {
+                client,
+                base_version: global.version,
+                update: outcome.update,
+                mean_loss: outcome.mean_loss,
+            },
+        );
+        Ok(())
+    };
+
+    // Start: n distinct clients training.
+    for &c in &rng
+        .clone()
+        .sample_without_replacement(cfg.population, cfg.concurrency)
+    {
+        dispatch(c, &global, &mut events, &mut rng, &mut client_rngs, &mut busy)?;
+    }
+
+    let mut buffer: Vec<Contribution> = Vec::new();
+    let mut buffer_losses: Vec<f64> = Vec::new();
+    let mut completed_rounds = 0usize;
+
+    while completed_rounds < cfg.rounds {
+        let Some((now, fin)) = events.pop() else {
+            anyhow::bail!("event queue drained with {completed_rounds} rounds done");
+        };
+        busy[fin.client] = false;
+
+        let staleness = global.version - fin.base_version;
+        // Failure injection: finished but the upload never arrived.
+        let lost = cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob;
+        let dropped_stale = cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost;
+        if !dropped_stale {
+            buffer.push(Contribution {
+                client_id: fin.client,
+                update: fin.update,
+                weight: 1.0,
+                staleness,
+            });
+            buffer_losses.push(fin.mean_loss);
+        }
+
+        // The finished client immediately starts again on the fresh model.
+        // (Uniform re-sampling over idle clients keeps concurrency at n,
+        // matching FedBuff's "training concurrency" definition.)
+        let idle: Vec<usize> = (0..cfg.population).filter(|&i| !busy[i]).collect();
+        let next = idle[rng.usize_below(idle.len())];
+        dispatch(next, &global, &mut events, &mut rng, &mut client_rngs, &mut busy)?;
+
+        if buffer.len() >= k_goal {
+            let round = completed_rounds;
+            let participant_ids: Vec<usize> = buffer.iter().map(|c| c.client_id).collect();
+            let avg = average_delta(&global.params, &buffer, true);
+            let mut params = global.params.clone();
+            server_opt.apply(&mut params, &avg);
+            global = Arc::new(VersionedParams {
+                version: global.version + 1,
+                params,
+            });
+
+            let mean_loss =
+                buffer_losses.iter().sum::<f64>() / buffer_losses.len().max(1) as f64;
+            let dropped = if dropped_stale { 1 } else { 0 };
+            rec.record_round(round, now, &participant_ids, dropped, mean_loss);
+            rec.maybe_eval(sim, round, now, &global.params)?;
+            buffer.clear();
+            buffer_losses.clear();
+            completed_rounds += 1;
+            if rec.should_stop(sim, now) {
+                break;
+            }
+        }
+    }
+
+    let sim_secs = events.now();
+    Ok(rec.finish(sim, sim_secs, completed_rounds))
+}

@@ -1,0 +1,135 @@
+//! Algorithm 2 — Local Time Update.
+//!
+//! Each sampled client estimates its *unit* times for this round: the
+//! compute time of ONE local epoch of FULL-model training (extrapolated
+//! from a one-data-batch probe, `t_cmp = t_batch / beta`) and the
+//! communication time of a full-model upload (`t_com = M / Bw`).
+//!
+//! In simulation the true values come from the device model; the probe's
+//! extrapolation error is modeled as multiplicative noise with configurable
+//! relative std-dev (`estimate_noise`). The *actual* round times later use
+//! the exact values, so the scheduler can be wrong in the same way a real
+//! probe is.
+
+use crate::devices::{DeviceProfile, RoundConditions};
+use crate::util::rng::Rng;
+
+/// Unit-time estimates reported to the server (Alg. 2 outputs).
+#[derive(Clone, Copy, Debug)]
+pub struct TimeEstimate {
+    /// Estimated seconds per local epoch of full-model training.
+    pub t_cmp: f64,
+    /// Estimated seconds to upload one full model.
+    pub t_com: f64,
+}
+
+impl TimeEstimate {
+    /// Alg. 2 line 4: unit total time.
+    pub fn t_total(&self) -> f64 {
+        self.t_cmp + self.t_com
+    }
+}
+
+/// Ground-truth unit times for the same round (used for the actual
+/// completion-time check after training).
+#[derive(Clone, Copy, Debug)]
+pub struct TimeTruth {
+    pub t_cmp: f64,
+    pub t_com: f64,
+}
+
+impl TimeTruth {
+    /// Wall time of a round with `epochs` local epochs at partial ratio
+    /// `compute_ratio`, uploading `comm_fraction` of the model. Linear in
+    /// ratio per the paper's measurement (Fig. 9 / Appendix A.2.1).
+    pub fn round_secs(&self, epochs: f64, compute_ratio: f64, comm_fraction: f64) -> f64 {
+        self.t_cmp * epochs * compute_ratio + self.t_com * comm_fraction
+    }
+}
+
+/// Compute the true unit times for (device, round conditions, model size).
+pub fn truth(device: &DeviceProfile, cond: &RoundConditions, model_bytes: f64) -> TimeTruth {
+    TimeTruth {
+        t_cmp: device.compute_secs(cond, 1.0, 1.0),
+        t_com: device.upload_secs(cond, model_bytes),
+    }
+}
+
+/// Run Algorithm 2: probe + extrapolate, with estimation noise.
+pub fn local_time_update(
+    device: &DeviceProfile,
+    cond: &RoundConditions,
+    model_bytes: f64,
+    estimate_noise: f64,
+    rng: &mut Rng,
+) -> TimeEstimate {
+    let t = truth(device, cond, model_bytes);
+    let noisy = |v: f64, rng: &mut Rng| {
+        if estimate_noise <= 0.0 {
+            v
+        } else {
+            // multiplicative, clamped so an estimate is never <= 0
+            v * (1.0 + estimate_noise * rng.normal()).max(0.05)
+        }
+    };
+    TimeEstimate {
+        t_cmp: noisy(t.t_cmp, rng),
+        t_com: noisy(t.t_com, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceProfile {
+        DeviceProfile {
+            id: 0,
+            base_epoch_secs: 100.0,
+        }
+    }
+
+    fn cond() -> RoundConditions {
+        RoundConditions {
+            disturbance: 1.1,
+            bandwidth: 1e6,
+        }
+    }
+
+    #[test]
+    fn truth_matches_device_model() {
+        let t = truth(&dev(), &cond(), 2e6);
+        assert!((t.t_cmp - 110.0).abs() < 1e-9);
+        assert!((t.t_com - 2.0).abs() < 1e-9);
+        assert!((t.round_secs(2.0, 0.5, 0.4) - (110.0 * 2.0 * 0.5 + 2.0 * 0.4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_noise_estimate_is_exact() {
+        let mut rng = Rng::seed_from(1);
+        let e = local_time_update(&dev(), &cond(), 2e6, 0.0, &mut rng);
+        assert!((e.t_cmp - 110.0).abs() < 1e-9);
+        assert!((e.t_com - 2.0).abs() < 1e-9);
+        assert!((e.t_total() - 112.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_estimates_center_on_truth() {
+        let mut rng = Rng::seed_from(2);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| local_time_update(&dev(), &cond(), 2e6, 0.1, &mut rng).t_cmp)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 110.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn estimates_always_positive() {
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..10_000 {
+            let e = local_time_update(&dev(), &cond(), 2e6, 0.5, &mut rng);
+            assert!(e.t_cmp > 0.0 && e.t_com > 0.0);
+        }
+    }
+}

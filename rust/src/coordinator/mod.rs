@@ -1,0 +1,186 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! `Simulation` wires the compiled model runtime, the synthetic federated
+//! dataset, and the heterogeneous device fleet together; the three strategy
+//! drivers (TimelyFL / FedBuff / SyncFL) share that context. Client
+//! *training* is real (PJRT executions of the AOT artifacts); client
+//! *timing* is simulated from the device model — the same emulation
+//! methodology as the paper (§4.1).
+
+pub mod fedbuff;
+pub mod local_time;
+pub mod scheduler;
+pub mod syncfl;
+pub mod timelyfl;
+pub mod trainer;
+
+use std::time::Instant;
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+use crate::config::{RunConfig, StrategyKind};
+use crate::data::{FederatedDataset, SyntheticSpec};
+use crate::devices::Fleet;
+use crate::metrics::{EvalPoint, ParticipationTracker, RoundRecord, RunReport};
+use crate::model::ParamVec;
+use crate::runtime::engine::Batch;
+use crate::runtime::{Manifest, ModelRuntime, Task};
+use crate::util::rng::Rng;
+
+/// Everything a strategy driver needs for one run.
+pub struct Simulation {
+    pub cfg: RunConfig,
+    pub runtime: ModelRuntime,
+    pub dataset: FederatedDataset,
+    pub fleet: Fleet,
+    eval_set: Vec<Batch>,
+}
+
+impl Simulation {
+    /// Build a simulation from a config + artifacts directory. Compiles all
+    /// executables once; reusable across `run()` calls.
+    pub fn new(cfg: RunConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Simulation> {
+        cfg.validate()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Self::with_client(cfg, &manifest, &client)
+    }
+
+    /// Same, sharing an existing PJRT client (benches build several
+    /// simulations against one client).
+    pub fn with_client(
+        cfg: RunConfig,
+        manifest: &Manifest,
+        client: &PjRtClient,
+    ) -> Result<Simulation> {
+        cfg.validate()?;
+        let runtime = ModelRuntime::load(client, manifest, &cfg.model)?;
+        let spec = SyntheticSpec {
+            dataset_seed: cfg.data_seed,
+            alpha: cfg.dirichlet_alpha,
+            template_scale: cfg.template_scale,
+            lm_noise: cfg.lm_noise,
+        };
+        let dataset = FederatedDataset::new(spec, &runtime.meta, cfg.population);
+        let mut fleet_rng = Rng::seed_from(cfg.seed ^ 0xF1EE7);
+        let fleet = Fleet::generate(cfg.population, cfg.fleet.clone(), &mut fleet_rng);
+        let eval_set = dataset.eval_batches(cfg.eval_batches, 0);
+        Ok(Simulation {
+            cfg,
+            runtime,
+            dataset,
+            fleet,
+            eval_set,
+        })
+    }
+
+    /// Dispatch on the configured strategy.
+    pub fn run(&self) -> Result<RunReport> {
+        match self.cfg.strategy {
+            StrategyKind::TimelyFl => timelyfl::run(self),
+            StrategyKind::FedBuff => fedbuff::run(self),
+            StrategyKind::SyncFl => syncfl::run(self),
+        }
+    }
+
+    /// Is the run's target metric reached? (accuracy: higher better;
+    /// perplexity: lower better.)
+    pub fn target_reached(&self, metric: f64) -> bool {
+        match self.cfg.target_metric {
+            None => false,
+            Some(t) => match self.runtime.meta.task {
+                Task::Classify => metric >= t,
+                Task::Lm => metric <= t,
+            },
+        }
+    }
+}
+
+/// Shared run-recording machinery for the three drivers.
+pub struct Recorder {
+    started: Instant,
+    pub participation: ParticipationTracker,
+    pub eval_points: Vec<EvalPoint>,
+    pub rounds: Vec<RoundRecord>,
+    stop: bool,
+}
+
+impl Recorder {
+    pub fn new(population: usize) -> Recorder {
+        Recorder {
+            started: Instant::now(),
+            participation: ParticipationTracker::new(population),
+            eval_points: Vec::new(),
+            rounds: Vec::new(),
+            stop: false,
+        }
+    }
+
+    /// Record one aggregation round's participants + stats.
+    pub fn record_round(
+        &mut self,
+        round: usize,
+        sim_secs: f64,
+        participant_ids: &[usize],
+        dropped: usize,
+        mean_train_loss: f64,
+    ) {
+        self.participation.record_round(participant_ids.iter().copied());
+        self.rounds.push(RoundRecord {
+            round,
+            sim_secs,
+            participants: participant_ids.len(),
+            dropped,
+            mean_train_loss,
+        });
+    }
+
+    /// Evaluate the global model if the cadence says so; set the stop flag
+    /// when the target metric or the sim-time budget is hit.
+    pub fn maybe_eval(
+        &mut self,
+        sim: &Simulation,
+        round: usize,
+        sim_secs: f64,
+        global: &ParamVec,
+    ) -> Result<()> {
+        let last = round + 1 == sim.cfg.rounds;
+        if round % sim.cfg.eval_every != 0 && !last {
+            return Ok(());
+        }
+        let res = sim.runtime.evaluate(global, &self.eval_batches(sim))?;
+        self.eval_points.push(EvalPoint {
+            round,
+            sim_secs,
+            mean_loss: res.mean_loss,
+            metric: res.metric,
+        });
+        if sim.target_reached(res.metric) {
+            self.stop = true;
+        }
+        Ok(())
+    }
+
+    fn eval_batches<'a>(&self, sim: &'a Simulation) -> &'a [Batch] {
+        &sim.eval_set
+    }
+
+    pub fn should_stop(&self, sim: &Simulation, sim_secs: f64) -> bool {
+        self.stop || sim_secs >= sim.cfg.sim_time_budget
+    }
+
+    pub fn finish(self, sim: &Simulation, sim_secs: f64, total_rounds: usize) -> RunReport {
+        RunReport {
+            strategy: sim.cfg.strategy.name().to_string(),
+            model: sim.cfg.model.clone(),
+            eval_points: self.eval_points,
+            rounds: self.rounds,
+            participation: self.participation.rates(),
+            sim_secs,
+            wall_secs: self.started.elapsed().as_secs_f64(),
+            total_rounds,
+            real_train_steps: sim.runtime.stats().train_steps,
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Algorithm 3 — Workload Scheduling, plus the aggregation-interval rule
+//! (Alg. 1 line 7: T_k = k-th smallest estimated unit total time).
+//!
+//! Fast clients (unit total <= T_k) are assigned extra local epochs to use
+//! their idle time; slow clients get a partial ratio alpha < 1 so at least
+//! one epoch (plus the shrunken upload) fits in the interval.
+
+use super::local_time::TimeEstimate;
+use crate::util::stats::kth_smallest;
+
+/// The per-client workload for one round (Alg. 3 outputs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Workload {
+    /// Local epochs E_c (>= 1).
+    pub epochs: usize,
+    /// Partial-training ratio alpha_c in (0, 1].
+    pub alpha: f64,
+    /// Report deadline t_rpt,c = T_k - t_com * alpha (wall time into the
+    /// round by which compute must end so the upload still lands in T_k).
+    pub t_rpt: f64,
+}
+
+/// Alg. 1 line 7: the aggregation interval for this round.
+pub fn aggregation_interval(estimated_totals: &[f64], k: usize) -> f64 {
+    kth_smallest(estimated_totals, k)
+}
+
+/// Alg. 3 body for one client.
+pub fn schedule(t_k: f64, est: &TimeEstimate, max_epochs: usize) -> Workload {
+    // line 2: E_c = max(floor((T_k - t_com) / t_cmp), 1)
+    let raw_epochs = ((t_k - est.t_com) / est.t_cmp).floor();
+    let epochs = if raw_epochs.is_finite() && raw_epochs >= 1.0 {
+        (raw_epochs as usize).min(max_epochs)
+    } else {
+        1
+    };
+    // line 3: alpha_c = min(T_k / (t_com + t_cmp), 1)
+    let alpha = (t_k / (est.t_com + est.t_cmp)).min(1.0);
+    // line 4: t_rpt,c = T_k - t_com * alpha
+    let t_rpt = t_k - est.t_com * alpha;
+    Workload {
+        epochs,
+        alpha,
+        t_rpt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(t_cmp: f64, t_com: f64) -> TimeEstimate {
+        TimeEstimate { t_cmp, t_com }
+    }
+
+    #[test]
+    fn interval_is_kth_smallest() {
+        let totals = [30.0, 10.0, 20.0, 40.0];
+        assert_eq!(aggregation_interval(&totals, 2), 20.0);
+        assert_eq!(aggregation_interval(&totals, 4), 40.0);
+    }
+
+    #[test]
+    fn fast_client_gets_more_epochs_full_model() {
+        // unit total 12s, interval 50s -> E = floor((50-2)/10) = 4, alpha 1
+        let w = schedule(50.0, &est(10.0, 2.0), 100);
+        assert_eq!(w.epochs, 4);
+        assert_eq!(w.alpha, 1.0);
+        assert!((w.t_rpt - 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epochs_capped() {
+        let w = schedule(1000.0, &est(1.0, 0.0), 5);
+        assert_eq!(w.epochs, 5);
+    }
+
+    #[test]
+    fn slow_client_gets_partial_ratio() {
+        // unit total 100s, interval 50s -> E = 1, alpha = 0.5
+        let w = schedule(50.0, &est(80.0, 20.0), 4);
+        assert_eq!(w.epochs, 1);
+        assert!((w.alpha - 0.5).abs() < 1e-12);
+        // t_rpt = 50 - 20 * 0.5 = 40
+        assert!((w.t_rpt - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn client_exactly_at_interval_trains_full() {
+        let w = schedule(100.0, &est(80.0, 20.0), 4);
+        assert_eq!(w.epochs, 1);
+        assert_eq!(w.alpha, 1.0);
+    }
+
+    #[test]
+    fn partial_round_fits_interval_by_construction() {
+        // With exact estimates, the scheduled workload's predicted time
+        // fits in T_k: alpha * (t_cmp + t_com) <= T_k for slow clients,
+        // E * t_cmp + t_com <= T_k for fast clients.
+        for (t_cmp, t_com, t_k) in [
+            (80.0, 20.0, 50.0),
+            (10.0, 2.0, 50.0),
+            (200.0, 300.0, 100.0),
+            (5.0, 1.0, 6.0),
+        ] {
+            let e = est(t_cmp, t_com);
+            let w = schedule(t_k, &e, 1000);
+            let predicted = if w.alpha < 1.0 {
+                // one epoch at ratio alpha, upload scaled by alpha
+                e.t_cmp * w.alpha + e.t_com * w.alpha
+            } else {
+                e.t_cmp * w.epochs as f64 + e.t_com
+            };
+            assert!(
+                predicted <= t_k + 1e-9,
+                "cmp {t_cmp} com {t_com} tk {t_k}: predicted {predicted}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_still_give_valid_workload() {
+        // zero-ish compute time must not panic or yield epochs = 0
+        let w = schedule(10.0, &est(1e-12, 20.0), 8);
+        assert!(w.epochs >= 1);
+        assert!(w.alpha > 0.0 && w.alpha <= 1.0);
+    }
+}

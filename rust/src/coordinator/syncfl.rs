@@ -1,0 +1,94 @@
+//! SyncFL baseline: classic synchronous FedAvg/FedOpt.
+//!
+//! Every round samples `n` clients, all train the FULL model for the fixed
+//! number of local epochs, and the server waits for the slowest one — the
+//! round time is max over sampled clients of (E * t_cmp + t_com). No
+//! staleness, perfect participation within a round, terrible wall-clock:
+//! the straggler column of Table 1.
+
+use anyhow::Result;
+
+use super::local_time::truth;
+use super::trainer::train_client;
+use super::{Recorder, Simulation};
+use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::metrics::RunReport;
+use crate::util::rng::Rng;
+
+pub fn run(sim: &Simulation) -> Result<RunReport> {
+    let cfg = &sim.cfg;
+    let rt = &sim.runtime;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut client_rngs: Vec<Rng> = (0..cfg.population)
+        .map(|i| rng.fork(i as u64))
+        .collect();
+
+    let mut global = rt.init_params(cfg.init_seed)?;
+    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
+    let mut rec = Recorder::new(cfg.population);
+    let mut clock = 0.0f64;
+    let full = rt
+        .meta
+        .ratio_exact(1.0)
+        .expect("full ratio always compiled");
+    let epochs = cfg.fedbuff_local_epochs; // shared "local epochs" setting
+
+    let mut completed_rounds = 0usize;
+    for round in 0..cfg.rounds {
+        let sampled = rng.sample_without_replacement(cfg.population, cfg.concurrency);
+
+        let mut contributions = Vec::with_capacity(sampled.len());
+        let mut participant_ids = Vec::with_capacity(sampled.len());
+        let mut dropped = 0usize;
+        let mut loss_sum = 0.0;
+        let mut round_secs = 0.0f64;
+        for &c in &sampled {
+            let cond = sim.fleet.round_conditions(&mut rng);
+            let t = truth(&sim.fleet.devices[c], &cond, cfg.sim_model_bytes);
+            round_secs = round_secs.max(t.round_secs(epochs as f64, 1.0, 1.0));
+
+            // Failure injection: the server's cutoff fires without this
+            // client's update (its wait time is still paid above).
+            if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
+                dropped += 1;
+                continue;
+            }
+
+            let outcome = train_client(
+                rt,
+                &sim.dataset,
+                c,
+                &global,
+                full,
+                epochs,
+                cfg.steps_per_epoch,
+                cfg.client_lr,
+                &mut client_rngs[c],
+            )?;
+            loss_sum += outcome.mean_loss;
+            participant_ids.push(c);
+            contributions.push(Contribution {
+                client_id: c,
+                update: outcome.update,
+                weight: 1.0,
+                staleness: 0,
+            });
+        }
+
+        if !contributions.is_empty() {
+            let avg = average_delta(&global, &contributions, false);
+            server_opt.apply(&mut global, &avg);
+        }
+        clock += round_secs;
+        completed_rounds = round + 1;
+
+        let mean_loss = loss_sum / participant_ids.len().max(1) as f64;
+        rec.record_round(round, clock, &participant_ids, dropped, mean_loss);
+        rec.maybe_eval(sim, round, clock, &global)?;
+        if rec.should_stop(sim, clock) {
+            break;
+        }
+    }
+
+    Ok(rec.finish(sim, clock, completed_rounds))
+}

@@ -1,0 +1,146 @@
+//! TimelyFL — Algorithm 1.
+//!
+//! Per communication round:
+//!   1. sample `n` clients uniformly (training concurrency);
+//!   2. every sampled client runs Local Time Update (Alg. 2) — a one-batch
+//!      probe extrapolated to unit epoch + upload times;
+//!   3. the server sets the aggregation interval T_k = k-th smallest
+//!      estimated unit total time;
+//!   4. Workload Scheduling (Alg. 3) assigns each client (E_c, alpha_c,
+//!      t_rpt,c); alpha is rounded DOWN to the nearest AOT-compiled partial
+//!      ratio so the client still meets its deadline;
+//!   5. clients train for real; their *actual* round time (true unit times,
+//!      scheduled workload) decides whether the upload lands within
+//!      T_k (1 + grace) — estimation error can still cause misses;
+//!   6. all landed updates aggregate (no staleness — every update is based
+//!      on this round's model), the clock advances by T_k.
+//!
+//! `cfg.adaptive = false` reproduces the Fig. 7 ablation: each client's
+//! workload is frozen the first time it is scheduled and never re-adapted,
+//! and T_k stays at its round-0 value.
+
+use anyhow::Result;
+
+use super::local_time::{local_time_update, truth};
+use super::scheduler::{aggregation_interval, schedule, Workload};
+use super::trainer::train_client;
+use super::{Recorder, Simulation};
+use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::metrics::RunReport;
+use crate::util::rng::Rng;
+
+pub fn run(sim: &Simulation) -> Result<RunReport> {
+    let cfg = &sim.cfg;
+    let rt = &sim.runtime;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut client_rngs: Vec<Rng> = (0..cfg.population)
+        .map(|i| rng.fork(i as u64))
+        .collect();
+
+    let mut global = rt.init_params(cfg.init_seed)?;
+    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
+    let mut rec = Recorder::new(cfg.population);
+    let mut clock = 0.0f64;
+
+    // Fig. 7 ablation state: frozen (workload, T_k) per client.
+    let mut frozen_tk: Option<f64> = None;
+    let mut frozen_workload: Vec<Option<Workload>> = vec![None; cfg.population];
+
+    let mut completed_rounds = 0usize;
+    for round in 0..cfg.rounds {
+        // (1) sample n clients
+        let sampled = rng.sample_without_replacement(cfg.population, cfg.concurrency);
+
+        // (2) Local Time Update per sampled client
+        let probes: Vec<_> = sampled
+            .iter()
+            .map(|&c| {
+                let cond = sim.fleet.round_conditions(&mut rng);
+                let est = local_time_update(
+                    &sim.fleet.devices[c],
+                    &cond,
+                    cfg.sim_model_bytes,
+                    cfg.estimate_noise,
+                    &mut rng,
+                );
+                (c, cond, est)
+            })
+            .collect();
+
+        // (3) aggregation interval
+        let totals: Vec<f64> = probes.iter().map(|(_, _, e)| e.t_total()).collect();
+        let t_k = if cfg.adaptive {
+            aggregation_interval(&totals, cfg.k_target())
+        } else {
+            *frozen_tk.get_or_insert_with(|| aggregation_interval(&totals, cfg.k_target()))
+        };
+
+        // (4)+(5) schedule, train, check deadline
+        let mut contributions = Vec::new();
+        let mut participant_ids = Vec::new();
+        let mut dropped = 0usize;
+        let mut loss_sum = 0.0;
+
+        for (c, cond, est) in &probes {
+            let w = if cfg.adaptive {
+                schedule(t_k, est, cfg.max_local_epochs)
+            } else {
+                *frozen_workload[*c]
+                    .get_or_insert_with(|| schedule(t_k, est, cfg.max_local_epochs))
+            };
+            let ratio = rt.meta.quantize_ratio(w.alpha);
+
+            // Actual wall time with TRUE unit times and the scheduled
+            // workload. Compute scales with the nominal compiled ratio
+            // (paper's linear model); upload with the realized trainable
+            // fraction (that is what goes over the wire).
+            let t = truth(&sim.fleet.devices[*c], cond, cfg.sim_model_bytes);
+            let actual = t.round_secs(w.epochs as f64, ratio.ratio, ratio.trainable_fraction);
+            let landed = actual <= t_k * (1.0 + cfg.deadline_grace);
+            // Failure injection: finished but never delivered.
+            let lost = cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob;
+
+            if !landed || lost {
+                dropped += 1;
+                continue;
+            }
+
+            let outcome = train_client(
+                rt,
+                &sim.dataset,
+                *c,
+                &global,
+                ratio,
+                w.epochs,
+                cfg.steps_per_epoch,
+                cfg.client_lr,
+                &mut client_rngs[*c],
+            )?;
+            loss_sum += outcome.mean_loss;
+            participant_ids.push(*c);
+            contributions.push(Contribution {
+                client_id: *c,
+                update: outcome.update,
+                weight: 1.0,
+                staleness: 0, // by construction: base model is this round's
+            });
+        }
+
+        // (6) aggregate + advance simulated clock by the interval
+        if !contributions.is_empty() {
+            let avg = average_delta(&global, &contributions, false);
+            server_opt.apply(&mut global, &avg);
+        }
+        clock += t_k;
+        completed_rounds = round + 1;
+
+        let mean_loss = loss_sum / participant_ids.len().max(1) as f64;
+        rec.record_round(round, clock, &participant_ids, dropped, mean_loss);
+        rec.maybe_eval(sim, round, clock, &global)?;
+        if rec.should_stop(sim, clock) {
+            break;
+        }
+    }
+
+    Ok(rec.finish(sim, clock, completed_rounds))
+}

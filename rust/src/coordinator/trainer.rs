@@ -1,0 +1,65 @@
+//! Client-side local training executor: runs E local epochs of real PJRT
+//! train-steps against a base model snapshot and returns the suffix delta.
+
+use anyhow::Result;
+
+use crate::data::FederatedDataset;
+use crate::model::{ParamVec, Update};
+use crate::runtime::manifest::RatioMeta;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// Result of one client's local training for one round.
+#[derive(Clone, Debug)]
+pub struct LocalOutcome {
+    pub client_id: usize,
+    /// Suffix delta vs the base model (boundary = ratio's boundary).
+    pub update: Update,
+    /// Mean minibatch loss over all local steps (client-reported).
+    pub mean_loss: f64,
+    pub steps: u64,
+}
+
+/// Train `client` for `epochs` local epochs (each `steps_per_epoch`
+/// minibatches) at the given compiled partial ratio, starting from `base`.
+pub fn train_client(
+    rt: &ModelRuntime,
+    ds: &FederatedDataset,
+    client: usize,
+    base: &ParamVec,
+    ratio: &RatioMeta,
+    epochs: usize,
+    steps_per_epoch: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> Result<LocalOutcome> {
+    debug_assert!(epochs >= 1 && steps_per_epoch >= 1);
+    let total_steps = epochs * steps_per_epoch;
+    let mut params = base.clone();
+    let mut loss_sum = 0.0;
+    let mut steps = 0u64;
+    // Issue ceil(total / chunk) fused PJRT executions instead of one per
+    // minibatch (see ModelRuntime::train_chunk).
+    let chunk = rt.meta.chunk;
+    let mut remaining = total_steps;
+    while remaining > 0 {
+        let take = remaining.min(chunk);
+        let batches: Vec<_> = (0..take).map(|_| ds.train_batch(client, rng)).collect();
+        let (new_params, mean_loss) = rt.train_chunk(ratio, &params, &batches, lr)?;
+        anyhow::ensure!(
+            mean_loss.is_finite(),
+            "client {client} diverged (loss {mean_loss}) after step {steps}"
+        );
+        params = new_params;
+        loss_sum += mean_loss as f64 * take as f64;
+        steps += take as u64;
+        remaining -= take;
+    }
+    let update = params.delta_from(base, ratio.boundary);
+    Ok(LocalOutcome {
+        client_id: client,
+        update,
+        mean_loss: loss_sum / steps.max(1) as f64,
+        steps,
+    })
+}

@@ -1,0 +1,58 @@
+//! Per-round availability disturbance — paper Eq. 2, implemented exactly:
+//!
+//! ```text
+//! x ~ N(1, 0.3)
+//! w = 1    if x <= 1
+//!     x    if 1 <= x <= 1.3
+//!     1.3  if x >= 1.3
+//! ```
+//!
+//! `w` multiplies the client's base computation time each round, emulating
+//! low-power mode / concurrent apps on a mobile device.
+
+use crate::util::rng::Rng;
+
+pub const SIGMA: f64 = 0.3;
+pub const W_MIN: f64 = 1.0;
+pub const W_MAX: f64 = 1.3;
+
+/// Draw the coefficient `w` for one client-round.
+pub fn disturbance_coefficient(rng: &mut Rng) -> f64 {
+    let x = rng.normal_with(1.0, SIGMA);
+    x.clamp(W_MIN, W_MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded() {
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..10_000 {
+            let w = disturbance_coefficient(&mut rng);
+            assert!((W_MIN..=W_MAX).contains(&w));
+        }
+    }
+
+    #[test]
+    fn mass_at_one_matches_eq2() {
+        // P(x <= 1) = 0.5 exactly, so about half the draws clip to 1.0.
+        let mut rng = Rng::seed_from(12);
+        let n = 20_000;
+        let ones = (0..n)
+            .filter(|_| disturbance_coefficient(&mut rng) == 1.0)
+            .count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "frac at w=1: {frac}");
+    }
+
+    #[test]
+    fn mean_in_expected_band() {
+        let mut rng = Rng::seed_from(13);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| disturbance_coefficient(&mut rng)).sum::<f64>() / n as f64;
+        // E[w] ≈ 0.5*1 + truncated-mean part ≈ 1.10 ± a bit.
+        assert!(mean > 1.05 && mean < 1.15, "mean {mean}");
+    }
+}

@@ -1,0 +1,181 @@
+//! The simulated device fleet: per-client compute capability (AI-Benchmark
+//! analogue, fixed per client) and per-round network bandwidth (MobiPerf
+//! analogue, resampled every round).
+
+use crate::util::rng::Rng;
+
+use super::disturbance::disturbance_coefficient;
+
+/// Calibration of the heterogeneity distributions.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Median seconds for ONE local epoch of FULL-model training on the
+    /// reference workload (the paper's "base computation time").
+    pub median_epoch_secs: f64,
+    /// Spread of compute capability: slowest/fastest ratio across the fleet
+    /// (paper Fig. 8a reports ~13.3x for AI Benchmark).
+    pub compute_spread: f64,
+    /// Median uplink bandwidth in bytes/sec.
+    pub median_bandwidth: f64,
+    /// Spread of bandwidth: best/worst ratio (paper Fig. 8b: ~200x).
+    pub bandwidth_spread: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            median_epoch_secs: 60.0,
+            compute_spread: 13.3,
+            median_bandwidth: 1.0 * 1024.0 * 1024.0, // 1 MiB/s
+            bandwidth_spread: 200.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Log-normal sigma such that the ~[p1, p99] range of exp(N(0, sigma^2))
+    /// spans `spread`x: spread = exp(2 * 2.326 * sigma).
+    fn sigma(spread: f64) -> f64 {
+        spread.ln() / (2.0 * 2.326)
+    }
+}
+
+/// Static, per-client capability (the AI-Benchmark assignment).
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub id: usize,
+    /// Seconds for one epoch of full-model training, before disturbance.
+    pub base_epoch_secs: f64,
+}
+
+/// Conditions a client experiences during one communication round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundConditions {
+    /// Eq. 2 coefficient applied to compute time this round.
+    pub disturbance: f64,
+    /// Bytes/sec available this round (intermittent connectivity).
+    pub bandwidth: f64,
+}
+
+impl DeviceProfile {
+    /// Seconds of compute for one epoch of training a partial model of the
+    /// given ratio, under this round's disturbance. Linear in ratio — the
+    /// paper validates this on a Galaxy S20 + MNN (Fig. 9, Appendix A.2.1).
+    pub fn compute_secs(&self, cond: &RoundConditions, ratio: f64, epochs: f64) -> f64 {
+        self.base_epoch_secs * cond.disturbance * ratio * epochs
+    }
+
+    /// Seconds to upload `bytes` under this round's bandwidth.
+    pub fn upload_secs(&self, cond: &RoundConditions, bytes: f64) -> f64 {
+        bytes / cond.bandwidth
+    }
+}
+
+/// The whole simulated population.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub config: FleetConfig,
+    pub devices: Vec<DeviceProfile>,
+    sigma_bw: f64,
+}
+
+impl Fleet {
+    /// Sample `n` clients' static capabilities. The log-normal draw is
+    /// clamped to the configured spread so a single outlier cannot exceed
+    /// the paper's reported max/min ratio.
+    pub fn generate(n: usize, config: FleetConfig, rng: &mut Rng) -> Fleet {
+        let sigma_cmp = FleetConfig::sigma(config.compute_spread);
+        let half = config.compute_spread.sqrt();
+        let devices = (0..n)
+            .map(|id| {
+                let factor = rng.lognormal(0.0, sigma_cmp).clamp(1.0 / half, half);
+                DeviceProfile {
+                    id,
+                    base_epoch_secs: config.median_epoch_secs * factor,
+                }
+            })
+            .collect();
+        let sigma_bw = FleetConfig::sigma(config.bandwidth_spread);
+        Fleet {
+            sigma_bw,
+            config,
+            devices,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Draw one round's conditions for a client (disturbance + bandwidth).
+    pub fn round_conditions(&self, rng: &mut Rng) -> RoundConditions {
+        let half = self.config.bandwidth_spread.sqrt();
+        let factor = rng.lognormal(0.0, self.sigma_bw).clamp(1.0 / half, half);
+        RoundConditions {
+            disturbance: disturbance_coefficient(rng),
+            bandwidth: self.config.median_bandwidth * factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_respected() {
+        let mut rng = Rng::seed_from(21);
+        let fleet = Fleet::generate(2000, FleetConfig::default(), &mut rng);
+        let times: Vec<f64> = fleet.devices.iter().map(|d| d.base_epoch_secs).collect();
+        let max = times.iter().cloned().fold(f64::MIN, f64::max);
+        let min = times.iter().cloned().fold(f64::MAX, f64::min);
+        let ratio = max / min;
+        assert!(
+            ratio <= 13.3 + 1e-9,
+            "spread {ratio} exceeds configured 13.3"
+        );
+        assert!(ratio > 5.0, "spread {ratio} suspiciously tight");
+    }
+
+    #[test]
+    fn bandwidth_spread_respected() {
+        let mut rng = Rng::seed_from(22);
+        let fleet = Fleet::generate(1, FleetConfig::default(), &mut rng);
+        let bws: Vec<f64> = (0..5000)
+            .map(|_| fleet.round_conditions(&mut rng).bandwidth)
+            .collect();
+        let max = bws.iter().cloned().fold(f64::MIN, f64::max);
+        let min = bws.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min <= 200.0 + 1e-6);
+        assert!(max / min > 20.0);
+    }
+
+    #[test]
+    fn compute_time_linear_in_ratio_and_epochs() {
+        let d = DeviceProfile {
+            id: 0,
+            base_epoch_secs: 10.0,
+        };
+        let cond = RoundConditions {
+            disturbance: 1.2,
+            bandwidth: 1e6,
+        };
+        let full = d.compute_secs(&cond, 1.0, 1.0);
+        assert!((d.compute_secs(&cond, 0.5, 1.0) - 0.5 * full).abs() < 1e-12);
+        assert!((d.compute_secs(&cond, 1.0, 3.0) - 3.0 * full).abs() < 1e-12);
+        assert!((full - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let f1 = Fleet::generate(50, FleetConfig::default(), &mut Rng::seed_from(7));
+        let f2 = Fleet::generate(50, FleetConfig::default(), &mut Rng::seed_from(7));
+        for (a, b) in f1.devices.iter().zip(&f2.devices) {
+            assert_eq!(a.base_epoch_secs, b.base_epoch_secs);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Device heterogeneity model (DESIGN.md §3 substitutions).
+//!
+//! The paper emulates real devices by assigning per-client compute times
+//! from AI Benchmark [10] and bandwidths from MobiPerf [8]. Neither trace is
+//! distributable here, so we sample from log-normal distributions calibrated
+//! to the paper's own summary statistics:
+//!
+//! - compute: slowest / fastest ≈ 13.3x (paper Fig. 8a)
+//! - bandwidth: best / worst ≈ 200x (paper Fig. 8b), resampled every round
+//!   to emulate intermittent connectivity
+//! - per-round availability disturbance `w` drawn from truncated N(1, 0.3)
+//!   clipped to [1, 1.3] (paper Eq. 2), multiplying the base compute time.
+
+pub mod disturbance;
+pub mod fleet;
+
+pub use disturbance::disturbance_coefficient;
+pub use fleet::{DeviceProfile, Fleet, FleetConfig, RoundConditions};

@@ -1,0 +1,31 @@
+//! TimelyFL: heterogeneity-aware asynchronous federated learning with
+//! adaptive partial training.
+//!
+//! Reproduction of Zhang et al., "TimelyFL: Heterogeneity-aware Asynchronous
+//! Federated Learning with Adaptive Partial Training" (2023), as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the federated-learning coordinator: client
+//!   sampling, local-time estimation, workload scheduling (Algorithm 3),
+//!   aggregation-interval control, FedBuff / SyncFL baselines, FedAvg /
+//!   FedOpt server optimizers, and an event-driven heterogeneous-device
+//!   simulator.
+//! - **Layer 2 (python/compile/model.py)** — JAX forward/backward train-step
+//!   graphs (with partial-training variants) lowered once to HLO text.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the dense
+//!   compute hot-spot, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the training path: the rust binary loads the AOT
+//! artifacts via PJRT (`xla` crate) and drives everything.
+
+pub mod aggregation;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simtime;
+pub mod util;

@@ -1,0 +1,199 @@
+//! `timelyfl` CLI — launcher for simulated federated-learning runs.
+//!
+//! ```text
+//! timelyfl run      --preset cifar_fedavg [--strategy timelyfl] [--set k=v ...]
+//! timelyfl compare  --preset cifar_fedavg [--set k=v ...]      # all 3 strategies
+//! timelyfl inspect  [--artifacts DIR]                           # manifest dump
+//! ```
+//!
+//! (Hand-rolled arg parsing: clap is not in the offline vendor set.)
+
+use anyhow::{Context, Result};
+
+use timelyfl::config::{parse as cfgparse, RunConfig, StrategyKind};
+use timelyfl::coordinator::Simulation;
+use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
+use timelyfl::runtime::{Manifest, Task};
+use timelyfl::simtime::hours;
+
+struct Args {
+    command: String,
+    preset: Option<String>,
+    strategy: Option<String>,
+    config_file: Option<String>,
+    sets: Vec<String>,
+    artifacts: String,
+    out: Option<String>,
+    target: Option<f64>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        command: String::new(),
+        preset: None,
+        strategy: None,
+        config_file: None,
+        sets: Vec::new(),
+        artifacts: "artifacts".into(),
+        out: None,
+        target: None,
+    };
+    let mut it = std::env::args().skip(1);
+    args.command = it.next().unwrap_or_else(|| "help".into());
+    while let Some(a) = it.next() {
+        let mut need = |name: &str| -> Result<String> {
+            it.next().with_context(|| format!("{name} needs a value"))
+        };
+        match a.as_str() {
+            "--preset" => args.preset = Some(need("--preset")?),
+            "--strategy" => args.strategy = Some(need("--strategy")?),
+            "--config" => args.config_file = Some(need("--config")?),
+            "--set" => args.sets.push(need("--set")?),
+            "--artifacts" => args.artifacts = need("--artifacts")?,
+            "--out" => args.out = Some(need("--out")?),
+            "--target" => args.target = Some(need("--target")?.parse()?),
+            "--help" | "-h" => {
+                args.command = "help".into();
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+    }
+    Ok(args)
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match &args.preset {
+        Some(p) => RunConfig::preset(p)?,
+        None => RunConfig::default(),
+    };
+    if let Some(path) = &args.config_file {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        cfgparse::apply_file(&mut cfg, &text)?;
+    }
+    for kv in &args.sets {
+        cfgparse::apply_cli(&mut cfg, kv)?;
+    }
+    if let Some(s) = &args.strategy {
+        cfg.strategy = StrategyKind::parse(s)?;
+    }
+    if let Some(t) = args.target {
+        cfg.target_metric = Some(t);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "run: model={} strategy={} population={} concurrency={} rounds={}",
+        cfg.model,
+        cfg.strategy.name(),
+        cfg.population,
+        cfg.concurrency,
+        cfg.rounds
+    );
+    let sim = Simulation::new(cfg, &args.artifacts)?;
+    let report = sim.run()?;
+
+    let mut t = Table::new(&["round", "sim_hours", "loss", "metric"]);
+    for p in &report.eval_points {
+        t.row(vec![
+            p.round.to_string(),
+            format!("{:.3}", hours(p.sim_secs)),
+            format!("{:.4}", p.mean_loss),
+            format!("{:.4}", p.metric),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "rounds={} sim={:.2}h wall={:.1}s steps={} mean_participation={:.3}",
+        report.total_rounds,
+        hours(report.sim_secs),
+        report.wall_secs,
+        report.real_train_steps,
+        report.mean_participation()
+    );
+    if let Some(out) = &args.out {
+        std::fs::write(out, report.to_json().to_string())?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = build_config(args)?;
+    let manifest = Manifest::load(&args.artifacts)?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let higher_better = manifest.model(&base.model)?.task == Task::Classify;
+
+    let mut reports = Vec::new();
+    for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+        let mut cfg = base.clone();
+        cfg.strategy = strat;
+        eprintln!("running {} ...", strat.name());
+        let sim = Simulation::with_client(cfg, &manifest, &client)?;
+        reports.push(sim.run()?);
+    }
+
+    let target = base.target_metric;
+    let mut t = Table::new(&[
+        "strategy",
+        "final_metric",
+        "time_to_target",
+        "speedup_vs",
+        "sim_hours",
+        "mean_particip",
+    ]);
+    let tt0 = target.and_then(|tv| reports[0].time_to_target(tv, higher_better));
+    for r in &reports {
+        let tt = target.and_then(|tv| r.time_to_target(tv, higher_better));
+        t.row(vec![
+            r.strategy.clone(),
+            r.final_metric().map(|m| format!("{m:.4}")).unwrap_or_default(),
+            fmt_hours(tt),
+            fmt_speedup(tt0, tt),
+            format!("{:.2}", hours(r.sim_secs)),
+            format!("{:.3}", r.mean_participation()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts)?;
+    let mut t = Table::new(&["model", "task", "params", "tensors", "ratios", "batch"]);
+    for (name, m) in &manifest.models {
+        t.row(vec![
+            name.clone(),
+            format!("{:?}", m.task),
+            m.total_params.to_string(),
+            m.params.len().to_string(),
+            m.ratios
+                .iter()
+                .map(|r| format!("{}", r.ratio))
+                .collect::<Vec<_>>()
+                .join("/"),
+            m.batch.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => {
+            eprintln!(
+                "usage: timelyfl <run|compare|inspect> [--preset P] [--strategy S] \
+                 [--config FILE] [--set k=v]... [--artifacts DIR] [--out FILE] [--target X]"
+            );
+            Ok(())
+        }
+    }
+}

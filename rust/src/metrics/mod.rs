@@ -1,0 +1,199 @@
+//! Run metrics: participation tracking (paper Figs. 1a/1b/5), learning
+//! curves over simulated time (Figs. 1c/4/6/7), and time-to-target
+//! extraction (Tables 1/2).
+
+pub mod report;
+
+use crate::simtime::hours;
+
+/// One evaluation of the global model during a run.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// Global aggregation rounds completed at this point.
+    pub round: usize,
+    /// Simulated seconds elapsed.
+    pub sim_secs: f64,
+    pub mean_loss: f64,
+    /// Accuracy (classify, higher better) or perplexity (lm, lower better).
+    pub metric: f64,
+}
+
+/// Per-round bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub sim_secs: f64,
+    /// Clients whose update entered this aggregation.
+    pub participants: usize,
+    /// Clients that were scheduled but missed the deadline / were dropped.
+    pub dropped: usize,
+    /// Mean reported client training loss this round.
+    pub mean_train_loss: f64,
+}
+
+/// Tracks how often each client contributes to global aggregation.
+/// Participation rate (paper definition): rounds contributed / total rounds.
+#[derive(Clone, Debug)]
+pub struct ParticipationTracker {
+    contributions: Vec<u64>,
+    total_rounds: u64,
+}
+
+impl ParticipationTracker {
+    pub fn new(population: usize) -> Self {
+        ParticipationTracker {
+            contributions: vec![0; population],
+            total_rounds: 0,
+        }
+    }
+
+    pub fn record_round(&mut self, participant_ids: impl IntoIterator<Item = usize>) {
+        self.total_rounds += 1;
+        for id in participant_ids {
+            self.contributions[id] += 1;
+        }
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        self.total_rounds
+    }
+
+    /// Per-client participation rates in [0, 1].
+    pub fn rates(&self) -> Vec<f64> {
+        if self.total_rounds == 0 {
+            return vec![0.0; self.contributions.len()];
+        }
+        self.contributions
+            .iter()
+            .map(|&c| c as f64 / self.total_rounds as f64)
+            .collect()
+    }
+
+    pub fn mean_rate(&self) -> f64 {
+        crate::util::stats::mean(&self.rates())
+    }
+
+    /// Fraction of clients with a strictly higher rate than in `other`
+    /// (paper: "66.4% of devices increase the participation rate").
+    pub fn fraction_improved_over(&self, other: &ParticipationTracker) -> f64 {
+        let a = self.rates();
+        let b = other.rates();
+        assert_eq!(a.len(), b.len(), "populations differ");
+        let improved = a.iter().zip(&b).filter(|(x, y)| x > y).count();
+        improved as f64 / a.len().max(1) as f64
+    }
+}
+
+/// Everything a finished run reports.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub strategy: String,
+    pub model: String,
+    pub eval_points: Vec<EvalPoint>,
+    pub rounds: Vec<RoundRecord>,
+    pub participation: Vec<f64>,
+    pub sim_secs: f64,
+    pub wall_secs: f64,
+    pub total_rounds: usize,
+    /// Real PJRT train-steps executed (for perf accounting).
+    pub real_train_steps: u64,
+}
+
+impl RunReport {
+    /// Simulated hours to first reach `target` (accuracy: >=, ppl: <=).
+    /// `higher_is_better` selects the comparison. None = never reached.
+    pub fn time_to_target(&self, target: f64, higher_is_better: bool) -> Option<f64> {
+        self.eval_points
+            .iter()
+            .find(|p| {
+                if higher_is_better {
+                    p.metric >= target
+                } else {
+                    p.metric <= target
+                }
+            })
+            .map(|p| hours(p.sim_secs))
+    }
+
+    /// Best metric seen over the run.
+    pub fn best_metric(&self, higher_is_better: bool) -> Option<f64> {
+        let iter = self.eval_points.iter().map(|p| p.metric);
+        if higher_is_better {
+            iter.fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+        } else {
+            iter.fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.min(x))))
+        }
+    }
+
+    pub fn final_metric(&self) -> Option<f64> {
+        self.eval_points.last().map(|p| p.metric)
+    }
+
+    pub fn mean_participation(&self) -> f64 {
+        crate::util::stats::mean(&self.participation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn participation_rates() {
+        let mut t = ParticipationTracker::new(3);
+        t.record_round([0, 1]);
+        t.record_round([0]);
+        t.record_round([0, 2]);
+        assert_eq!(t.total_rounds(), 3);
+        let r = t.rates();
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!((r[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((r[2] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((t.mean_rate() - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_improved() {
+        let mut a = ParticipationTracker::new(2);
+        let mut b = ParticipationTracker::new(2);
+        a.record_round([0, 1]);
+        b.record_round([0]);
+        // a: [1, 1], b: [1, 0] -> only client 1 improved
+        assert_eq!(a.fraction_improved_over(&b), 0.5);
+    }
+
+    fn report_with(points: Vec<EvalPoint>) -> RunReport {
+        RunReport {
+            strategy: "t".into(),
+            model: "m".into(),
+            eval_points: points,
+            rounds: vec![],
+            participation: vec![],
+            sim_secs: 0.0,
+            wall_secs: 0.0,
+            total_rounds: 0,
+            real_train_steps: 0,
+        }
+    }
+
+    #[test]
+    fn time_to_target_accuracy() {
+        let r = report_with(vec![
+            EvalPoint { round: 1, sim_secs: 3600.0, mean_loss: 2.0, metric: 0.4 },
+            EvalPoint { round: 2, sim_secs: 7200.0, mean_loss: 1.5, metric: 0.62 },
+        ]);
+        assert_eq!(r.time_to_target(0.6, true), Some(2.0));
+        assert_eq!(r.time_to_target(0.9, true), None);
+        assert_eq!(r.best_metric(true), Some(0.62));
+    }
+
+    #[test]
+    fn time_to_target_ppl() {
+        let r = report_with(vec![
+            EvalPoint { round: 1, sim_secs: 1800.0, mean_loss: 3.0, metric: 20.0 },
+            EvalPoint { round: 2, sim_secs: 3600.0, mean_loss: 2.0, metric: 7.0 },
+        ]);
+        assert_eq!(r.time_to_target(7.0, false), Some(1.0));
+        assert_eq!(r.best_metric(false), Some(7.0));
+    }
+}

@@ -1,0 +1,171 @@
+//! Report serialization: JSON dumps and aligned-text tables for the bench
+//! harnesses (each bench prints the same rows/series its paper table or
+//! figure reports).
+
+use std::fmt::Write as _;
+
+use super::RunReport;
+use crate::util::json::Json;
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("sim_secs", Json::num(self.sim_secs)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("total_rounds", Json::num(self.total_rounds as f64)),
+            ("real_train_steps", Json::num(self.real_train_steps as f64)),
+            (
+                "mean_participation",
+                Json::num(self.mean_participation()),
+            ),
+            (
+                "participation",
+                Json::arr(self.participation.iter().map(|&r| Json::num(r)).collect()),
+            ),
+            (
+                "eval_points",
+                Json::arr(
+                    self.eval_points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("round", Json::num(p.round as f64)),
+                                ("sim_secs", Json::num(p.sim_secs)),
+                                ("mean_loss", Json::num(p.mean_loss)),
+                                ("metric", Json::num(p.metric)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// CSV of the learning curve (round, sim_hours, loss, metric).
+    pub fn curve_csv(&self) -> String {
+        let mut out = String::from("round,sim_hours,mean_loss,metric\n");
+        for p in &self.eval_points {
+            let _ = writeln!(
+                out,
+                "{},{:.4},{:.6},{:.6}",
+                p.round,
+                p.sim_secs / 3600.0,
+                p.mean_loss,
+                p.metric
+            );
+        }
+        out
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            for i in 0..ncols {
+                let _ = write!(out, "{:width$}  ", cells[i], width = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers, &widths);
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncols));
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+}
+
+/// Format simulated hours like the paper's Table 1 cells ("5.50 hr",
+/// "> budget" when the target was never reached).
+pub fn fmt_hours(h: Option<f64>) -> String {
+    match h {
+        Some(h) => format!("{h:.2} hr"),
+        None => "> budget".into(),
+    }
+}
+
+/// "(1.43x)" speedup annotation relative to a baseline time.
+pub fn fmt_speedup(ours: Option<f64>, theirs: Option<f64>) -> String {
+    match (ours, theirs) {
+        (Some(a), Some(b)) if a > 0.0 => format!("({:.2}x)", b / a),
+        _ => "(—)".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EvalPoint;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(vec!["xx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("a   bbbb"));
+        assert!(s.contains("xx  y"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = RunReport {
+            strategy: "TimelyFL".into(),
+            model: "vision".into(),
+            eval_points: vec![EvalPoint {
+                round: 5,
+                sim_secs: 100.0,
+                mean_loss: 1.0,
+                metric: 0.5,
+            }],
+            rounds: vec![],
+            participation: vec![0.5, 1.0],
+            sim_secs: 100.0,
+            wall_secs: 1.0,
+            total_rounds: 5,
+            real_train_steps: 10,
+        };
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("strategy").unwrap().as_str().unwrap(), "TimelyFL");
+        assert_eq!(
+            parsed.get("eval_points").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn hour_formatting() {
+        assert_eq!(fmt_hours(Some(5.5)), "5.50 hr");
+        assert_eq!(fmt_hours(None), "> budget");
+        assert_eq!(fmt_speedup(Some(2.0), Some(5.0)), "(2.50x)");
+        assert_eq!(fmt_speedup(None, Some(5.0)), "(—)");
+    }
+}

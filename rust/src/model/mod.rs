@@ -1,0 +1,180 @@
+//! Model parameter store: positionally-ordered f32 tensors matching the
+//! manifest layout, plus the update/delta algebra the aggregators need.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::manifest::ModelMeta;
+
+/// A full set of model parameters (one `Vec<f32>` per tensor, in manifest
+/// order). Cheap to clone structurally via `Arc` snapshots at the
+/// coordinator level; the inner data is cloned only when mutated.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamVec {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+/// Immutable snapshot of a global model version. Async strategies keep one
+/// alive per in-flight client (a slow client trains against the version it
+/// started from — that is what staleness *is*).
+pub type ModelSnapshot = Arc<VersionedParams>;
+
+#[derive(Clone, Debug)]
+pub struct VersionedParams {
+    /// Global aggregation round that produced these parameters.
+    pub version: u64,
+    pub params: ParamVec,
+}
+
+impl ParamVec {
+    pub fn zeros_like(meta: &ModelMeta) -> ParamVec {
+        ParamVec {
+            tensors: meta.params.iter().map(|p| vec![0.0; p.size]).collect(),
+        }
+    }
+
+    /// Validate tensor count + sizes against the manifest.
+    pub fn check(&self, meta: &ModelMeta) -> Result<()> {
+        anyhow::ensure!(
+            self.tensors.len() == meta.params.len(),
+            "param count {} != manifest {}",
+            self.tensors.len(),
+            meta.params.len()
+        );
+        for (t, p) in self.tensors.iter().zip(&meta.params) {
+            anyhow::ensure!(
+                t.len() == p.size,
+                "tensor {} len {} != manifest {}",
+                p.name,
+                t.len(),
+                p.size
+            );
+        }
+        Ok(())
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Delta (self - base) restricted to the trainable suffix
+    /// [boundary, ..): exactly what a partially-trained client uploads
+    /// (paper §3.2.2 — frozen layers are unchanged, so they are not sent).
+    pub fn delta_from(&self, base: &ParamVec, boundary: usize) -> Update {
+        debug_assert_eq!(self.tensors.len(), base.tensors.len());
+        let tensors = self.tensors[boundary..]
+            .iter()
+            .zip(&base.tensors[boundary..])
+            .map(|(new, old)| new.iter().zip(old).map(|(a, b)| a - b).collect())
+            .collect();
+        Update { boundary, tensors }
+    }
+
+    /// Apply a (possibly staleness-scaled) update in place.
+    pub fn apply(&mut self, update: &Update, scale: f32) {
+        for (t, u) in self.tensors[update.boundary..].iter_mut().zip(&update.tensors) {
+            debug_assert_eq!(t.len(), u.len());
+            for (a, b) in t.iter_mut().zip(u) {
+                *a += scale * b;
+            }
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.tensors.iter().all(|t| t.iter().all(|x| x.is_finite()))
+    }
+}
+
+/// A client's uploaded model update: the delta of the trainable suffix.
+/// `boundary` is the first trainable tensor index; `tensors[i]` corresponds
+/// to manifest tensor `boundary + i`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Update {
+    pub boundary: usize,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Update {
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Upload size in bytes (f32), the communication cost of this update.
+    pub fn bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(tensors: Vec<Vec<f32>>) -> ParamVec {
+        ParamVec { tensors }
+    }
+
+    #[test]
+    fn delta_and_apply_roundtrip_full() {
+        let base = pv(vec![vec![1.0, 2.0], vec![3.0]]);
+        let new = pv(vec![vec![1.5, 1.0], vec![4.0]]);
+        let d = new.delta_from(&base, 0);
+        assert_eq!(d.num_params(), 3);
+        let mut rebuilt = base.clone();
+        rebuilt.apply(&d, 1.0);
+        assert_eq!(rebuilt, new);
+    }
+
+    #[test]
+    fn delta_partial_only_covers_suffix() {
+        let base = pv(vec![vec![1.0, 2.0], vec![3.0], vec![5.0]]);
+        let new = pv(vec![vec![9.0, 9.0], vec![4.0], vec![7.0]]);
+        let d = new.delta_from(&base, 1);
+        assert_eq!(d.boundary, 1);
+        assert_eq!(d.tensors, vec![vec![1.0], vec![2.0]]);
+        assert_eq!(d.bytes(), 8);
+        let mut out = base.clone();
+        out.apply(&d, 1.0);
+        // frozen prefix untouched, suffix updated
+        assert_eq!(out.tensors[0], vec![1.0, 2.0]);
+        assert_eq!(out.tensors[1], vec![4.0]);
+        assert_eq!(out.tensors[2], vec![7.0]);
+    }
+
+    #[test]
+    fn apply_scaled() {
+        let base = pv(vec![vec![0.0, 0.0]]);
+        let new = pv(vec![vec![2.0, -4.0]]);
+        let d = new.delta_from(&base, 0);
+        let mut half = base.clone();
+        half.apply(&d, 0.5);
+        assert_eq!(half.tensors[0], vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let v = pv(vec![vec![3.0], vec![4.0]]);
+        assert!((v.l2_norm() - 5.0).abs() < 1e-12);
+        assert!(v.all_finite());
+        let bad = pv(vec![vec![f32::NAN]]);
+        assert!(!bad.all_finite());
+    }
+}

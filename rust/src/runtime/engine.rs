@@ -1,0 +1,367 @@
+//! Compiled-model execution engine: one `ModelRuntime` per zoo model, with
+//! one loaded executable per partial-training ratio plus eval and init.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Manifest, ModelMeta, RatioMeta, XDtype};
+use crate::model::ParamVec;
+
+/// A training batch. `x` layout is row-major `(batch, features…)` flattened;
+/// labels are one int per example (classify) or per token (lm).
+#[derive(Clone, Debug)]
+pub enum Batch {
+    F32 { x: Vec<f32>, y: Vec<i32> },
+    I32 { x: Vec<i32>, y: Vec<i32> },
+}
+
+impl Batch {
+    pub fn len_x(&self) -> usize {
+        match self {
+            Batch::F32 { x, .. } => x.len(),
+            Batch::I32 { x, .. } => x.len(),
+        }
+    }
+    pub fn y(&self) -> &[i32] {
+        match self {
+            Batch::F32 { y, .. } | Batch::I32 { y, .. } => y,
+        }
+    }
+}
+
+/// Cumulative wall-clock accounting of real PJRT executions (distinct from
+/// the *simulated* device time of the coordinator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    /// Logical SGD steps (minibatches consumed).
+    pub train_steps: u64,
+    /// PJRT executions issued for training (chunked: <= train_steps).
+    pub train_execs: u64,
+    pub train_secs: f64,
+    pub eval_batches: u64,
+    pub eval_secs: f64,
+}
+
+/// Loaded executables for one model.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    client: PjRtClient,
+    /// Parallel to `meta.ratios`; compiled lazily on first use — FedBuff
+    /// and SyncFL only ever execute ratio 1.0, and TimelyFL touches a
+    /// workload-dependent subset, so eager compilation of all five
+    /// variants wastes startup time (significant for the 6.9M-param
+    /// `e2e_lm`; see EXPERIMENTS.md §Perf).
+    train: Vec<once_cell::unsync::OnceCell<PjRtLoadedExecutable>>,
+    train_paths: Vec<std::path::PathBuf>,
+    eval: PjRtLoadedExecutable,
+    init: PjRtLoadedExecutable,
+    stats: RefCell<RuntimeStats>,
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 && dims[0] == data.len() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 && dims[0] == data.len() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+impl ModelRuntime {
+    /// Load + compile all artifacts of `name`. Compilation happens once; the
+    /// executables are reused for every simulated client across the run.
+    pub fn load(client: &PjRtClient, manifest: &Manifest, name: &str) -> Result<ModelRuntime> {
+        let meta = manifest.model(name)?.clone();
+        let train = (0..meta.ratios.len())
+            .map(|_| once_cell::unsync::OnceCell::new())
+            .collect();
+        let train_paths = meta
+            .ratios
+            .iter()
+            .map(|r| manifest.artifact_path(&r.artifact))
+            .collect();
+        let eval = compile(client, &manifest.artifact_path(&meta.eval_artifact))?;
+        let init = compile(client, &manifest.artifact_path(&meta.init_artifact))?;
+        Ok(ModelRuntime {
+            meta,
+            client: client.clone(),
+            train,
+            train_paths,
+            eval,
+            init,
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// The compiled train executable for ratio index `idx` (compiling it on
+    /// first use).
+    fn train_exe(&self, idx: usize) -> Result<&PjRtLoadedExecutable> {
+        if let Some(e) = self.train[idx].get() {
+            return Ok(e);
+        }
+        let e = compile(&self.client, &self.train_paths[idx])?;
+        let _ = self.train[idx].set(e);
+        Ok(self.train[idx].get().unwrap())
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Initial global model from the AOT init graph (seeded).
+    pub fn init_params(&self, seed: i32) -> Result<ParamVec> {
+        let out = self
+            .init
+            .execute::<Literal>(&[Literal::scalar(seed)])
+            .map_err(|e| anyhow::anyhow!("init: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("init fetch: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.meta.params.len(),
+            "init returned {} tensors, manifest has {}",
+            parts.len(),
+            self.meta.params.len()
+        );
+        let tensors = parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        let pv = ParamVec { tensors };
+        pv.check(&self.meta)?;
+        Ok(pv)
+    }
+
+    fn params_to_literals(&self, params: &ParamVec) -> Result<Vec<Literal>> {
+        params
+            .tensors
+            .iter()
+            .zip(&self.meta.params)
+            .map(|(t, p)| literal_f32(t, &p.shape))
+            .collect()
+    }
+
+    fn batch_literals(&self, batch: &Batch, batch_size: usize) -> Result<(Literal, Literal)> {
+        let mut x_dims = vec![batch_size];
+        x_dims.extend_from_slice(&self.meta.x_shape);
+        let x_lit = match (batch, self.meta.x_dtype) {
+            (Batch::F32 { x, .. }, XDtype::F32) => literal_f32(x, &x_dims)?,
+            (Batch::I32 { x, .. }, XDtype::I32) => literal_i32(x, &x_dims)?,
+            _ => anyhow::bail!("batch dtype does not match model {}", self.meta.name),
+        };
+        let y = batch.y();
+        let y_lit = match self.meta.task {
+            super::manifest::Task::Classify => literal_i32(y, &[batch_size])?,
+            super::manifest::Task::Lm => literal_i32(y, &[batch_size, self.meta.seq_len])?,
+        };
+        Ok((x_lit, y_lit))
+    }
+
+    /// Stack up to `meta.chunk` minibatches into the train artifact's
+    /// `(xs[S, B, …], ys[S, …])` operands, padding unused tail slots with a
+    /// repeat of the first batch (masked out in-graph by `n_steps`).
+    fn stacked_batch_literals(&self, batches: &[Batch]) -> Result<(Literal, Literal)> {
+        let chunk = self.meta.chunk;
+        anyhow::ensure!(
+            !batches.is_empty() && batches.len() <= chunk,
+            "got {} batches for chunk size {chunk}",
+            batches.len()
+        );
+        let x_per = self.meta.batch * self.meta.x_len();
+        let y_per = match self.meta.task {
+            super::manifest::Task::Classify => self.meta.batch,
+            super::manifest::Task::Lm => self.meta.batch * self.meta.seq_len,
+        };
+        let mut ys = Vec::with_capacity(chunk * y_per);
+        let mut x_dims = vec![chunk, self.meta.batch];
+        x_dims.extend_from_slice(&self.meta.x_shape);
+
+        let x_lit = match self.meta.x_dtype {
+            XDtype::F32 => {
+                let mut xs = Vec::with_capacity(chunk * x_per);
+                for i in 0..chunk {
+                    let b = &batches[i.min(batches.len() - 1)];
+                    let Batch::F32 { x, y } = b else {
+                        anyhow::bail!("batch dtype does not match model {}", self.meta.name)
+                    };
+                    anyhow::ensure!(x.len() == x_per && y.len() == y_per, "bad batch shape");
+                    xs.extend_from_slice(x);
+                    ys.extend_from_slice(y);
+                }
+                literal_f32(&xs, &x_dims)?
+            }
+            XDtype::I32 => {
+                let mut xs = Vec::with_capacity(chunk * x_per);
+                for i in 0..chunk {
+                    let b = &batches[i.min(batches.len() - 1)];
+                    let Batch::I32 { x, y } = b else {
+                        anyhow::bail!("batch dtype does not match model {}", self.meta.name)
+                    };
+                    anyhow::ensure!(x.len() == x_per && y.len() == y_per, "bad batch shape");
+                    xs.extend_from_slice(x);
+                    ys.extend_from_slice(y);
+                }
+                literal_i32(&xs, &x_dims)?
+            }
+        };
+        let y_dims: Vec<usize> = match self.meta.task {
+            super::manifest::Task::Classify => vec![chunk, self.meta.batch],
+            super::manifest::Task::Lm => vec![chunk, self.meta.batch, self.meta.seq_len],
+        };
+        let y_lit = literal_i32(&ys, &y_dims)?;
+        Ok((x_lit, y_lit))
+    }
+
+    /// Run up to `meta.chunk` consecutive local SGD steps in ONE PJRT
+    /// execution (the L2 scan fusion — see EXPERIMENTS.md §Perf). Returns
+    /// the updated parameters and the mean (pre-update) minibatch loss over
+    /// the executed steps.
+    ///
+    /// The executable's signature is
+    /// `(params…, xs, ys, lr, n_steps) -> (params…, loss_sum)`; frozen
+    /// prefix tensors pass through unchanged, so the output is always a
+    /// full ParamVec regardless of ratio.
+    pub fn train_chunk(
+        &self,
+        ratio: &RatioMeta,
+        params: &ParamVec,
+        batches: &[Batch],
+        lr: f32,
+    ) -> Result<(ParamVec, f32)> {
+        let idx = self
+            .meta
+            .ratios
+            .iter()
+            .position(|r| (r.ratio - ratio.ratio).abs() < 1e-9)
+            .with_context(|| format!("ratio {} not compiled", ratio.ratio))?;
+        let t0 = Instant::now();
+
+        let mut args = self.params_to_literals(params)?;
+        let (x_lit, y_lit) = self.stacked_batch_literals(batches)?;
+        args.push(x_lit);
+        args.push(y_lit);
+        args.push(Literal::scalar(lr));
+        args.push(Literal::scalar(batches.len() as i32));
+
+        let out = self.train_exe(idx)?
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("train_chunk: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("train fetch: {e:?}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.meta.params.len() + 1,
+            "train returned {} outputs",
+            parts.len()
+        );
+        let loss_lit = parts.pop().unwrap();
+        let loss_sum: f32 = loss_lit
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let tensors = parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut s = self.stats.borrow_mut();
+        s.train_steps += batches.len() as u64;
+        s.train_execs += 1;
+        s.train_secs += t0.elapsed().as_secs_f64();
+        Ok((ParamVec { tensors }, loss_sum / batches.len() as f32))
+    }
+
+    /// One local SGD step (single-batch convenience wrapper over
+    /// [`Self::train_chunk`]; tests and micro-benches use this).
+    pub fn train_step(
+        &self,
+        ratio: &RatioMeta,
+        params: &ParamVec,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(ParamVec, f32)> {
+        self.train_chunk(ratio, params, std::slice::from_ref(batch), lr)
+    }
+
+    /// One eval batch: returns `(loss_sum, correct_or_token_count)`.
+    pub fn eval_batch(&self, params: &ParamVec, batch: &Batch) -> Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let mut args = self.params_to_literals(params)?;
+        let (x_lit, y_lit) = self.batch_literals(batch, self.meta.eval_batch)?;
+        args.push(x_lit);
+        args.push(y_lit);
+        let out = self
+            .eval
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("eval: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("eval fetch: {e:?}"))?;
+        let (a, b) = out.to_tuple2().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let loss_sum: f32 = a.get_first_element().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let second: f32 = b.get_first_element().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.eval_batches += 1;
+        s.eval_secs += t0.elapsed().as_secs_f64();
+        Ok((loss_sum as f64, second as f64))
+    }
+
+    /// Evaluate over a full test set (already shaped into eval batches).
+    /// Returns (mean loss, accuracy) for classifiers, (mean nll, ppl) for LMs.
+    pub fn evaluate(&self, params: &ParamVec, batches: &[Batch]) -> Result<EvalResult> {
+        let mut loss_sum = 0.0;
+        let mut second_sum = 0.0;
+        let mut examples = 0usize;
+        for b in batches {
+            let (l, s) = self.eval_batch(params, b)?;
+            loss_sum += l;
+            second_sum += s;
+            examples += match self.meta.task {
+                super::manifest::Task::Classify => self.meta.eval_batch,
+                super::manifest::Task::Lm => self.meta.eval_batch * self.meta.seq_len,
+            };
+        }
+        let mean_loss = loss_sum / examples.max(1) as f64;
+        let metric = match self.meta.task {
+            super::manifest::Task::Classify => second_sum / examples.max(1) as f64, // accuracy
+            super::manifest::Task::Lm => mean_loss.exp(),                           // perplexity
+        };
+        Ok(EvalResult {
+            mean_loss,
+            metric,
+            examples,
+        })
+    }
+}
+
+/// Output of `ModelRuntime::evaluate`.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub mean_loss: f64,
+    /// Accuracy in [0,1] for classifiers; perplexity for LMs.
+    pub metric: f64,
+    pub examples: usize,
+}

@@ -1,0 +1,300 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Describes, per model, the positional parameter layout, the
+//! fixed batch shapes, and the partial-training ratio -> trainable-boundary
+//! mapping (paper §3.2.2: a partial model is a suffix of consecutive
+//! output-side tensors).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// One compiled partial-training variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatioMeta {
+    /// Nominal ratio requested at AOT time (0 < ratio <= 1).
+    pub ratio: f64,
+    /// First trainable parameter index; tensors [0, boundary) are frozen.
+    pub boundary: usize,
+    /// Actual fraction of parameters trainable at this boundary.
+    pub trainable_fraction: f64,
+    /// HLO text path relative to the artifacts directory.
+    pub artifact: String,
+}
+
+/// Task type of a model in the zoo.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classify,
+    /// Next-token LM: eval returns (nll_sum, token_count); ppl = exp(mean).
+    Lm,
+}
+
+/// Input element type of the model's `x` operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+/// Everything the runtime needs to know about one model.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub task: Task,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    pub num_classes: usize,
+    pub seq_len: usize,
+    pub total_params: usize,
+    /// SGD steps fused into one train-artifact execution (lax.scan length);
+    /// the trainer issues ceil(steps / chunk) calls with tail slots masked
+    /// via the `n_steps` operand.
+    pub chunk: usize,
+    pub params: Vec<ParamMeta>,
+    pub ratios: Vec<RatioMeta>,
+    pub eval_artifact: String,
+    pub init_artifact: String,
+}
+
+impl ModelMeta {
+    /// Per-example feature count of `x`.
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    /// Bytes of a full model update (f32 params), the `M` of Algorithm 2.
+    pub fn full_model_bytes(&self) -> usize {
+        self.total_params * 4
+    }
+
+    /// The largest compiled ratio <= `alpha` (the scheduler's continuous
+    /// alpha is rounded *down* so the client still meets its deadline).
+    /// Falls back to the smallest compiled ratio.
+    pub fn quantize_ratio(&self, alpha: f64) -> &RatioMeta {
+        self.ratios
+            .iter()
+            .filter(|r| r.ratio <= alpha + 1e-9)
+            .max_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap())
+            .unwrap_or_else(|| {
+                self.ratios
+                    .iter()
+                    .min_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap())
+                    .expect("model has no compiled ratios")
+            })
+    }
+
+    /// Ratio metadata for exact nominal ratio (1.0 = full training).
+    pub fn ratio_exact(&self, ratio: f64) -> Option<&RatioMeta> {
+        self.ratios.iter().find(|r| (r.ratio - ratio).abs() < 1e-9)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub ratios: Vec<f64>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(root, &json)
+    }
+
+    pub fn from_json(root: PathBuf, json: &Json) -> Result<Manifest> {
+        let ratios = json
+            .expect("ratios")?
+            .as_arr()?
+            .iter()
+            .map(|r| r.as_f64())
+            .collect::<Result<Vec<_>>>()?;
+        let mut models = BTreeMap::new();
+        for (name, m) in json.expect("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest {
+            root,
+            ratios,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact_path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
+    let task = match m.expect("task")?.as_str()? {
+        "classify" => Task::Classify,
+        "lm" => Task::Lm,
+        other => anyhow::bail!("unknown task {other:?}"),
+    };
+    let x_dtype = match m.expect("x_dtype")?.as_str()? {
+        "f32" => XDtype::F32,
+        "i32" => XDtype::I32,
+        other => anyhow::bail!("unknown x_dtype {other:?}"),
+    };
+    let params = m
+        .expect("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.expect("name")?.as_str()?.to_string(),
+                shape: p
+                    .expect("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                size: p.expect("size")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let ratios = m
+        .expect("ratios")?
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            Ok(RatioMeta {
+                ratio: r.expect("ratio")?.as_f64()?,
+                boundary: r.expect("boundary")?.as_usize()?,
+                trainable_fraction: r.expect("trainable_fraction")?.as_f64()?,
+                artifact: r.expect("artifact")?.as_str()?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let meta = ModelMeta {
+        name: name.to_string(),
+        task,
+        batch: m.expect("batch")?.as_usize()?,
+        eval_batch: m.expect("eval_batch")?.as_usize()?,
+        x_shape: m
+            .expect("x_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?,
+        x_dtype,
+        num_classes: m.expect("num_classes")?.as_usize()?,
+        seq_len: m.expect("seq_len")?.as_usize()?,
+        total_params: m.expect("total_params")?.as_usize()?,
+        chunk: m.expect("chunk")?.as_usize()?,
+        params,
+        ratios,
+        eval_artifact: m.expect("eval_artifact")?.as_str()?.to_string(),
+        init_artifact: m.expect("init_artifact")?.as_str()?.to_string(),
+    };
+
+    // Structural invariants the rest of the runtime relies on.
+    let sum: usize = meta.params.iter().map(|p| p.size).sum();
+    anyhow::ensure!(
+        sum == meta.total_params,
+        "{name}: param sizes sum {sum} != total {}",
+        meta.total_params
+    );
+    for p in &meta.params {
+        let prod: usize = p.shape.iter().product();
+        anyhow::ensure!(prod == p.size, "{name}/{}: shape/size mismatch", p.name);
+    }
+    for r in &meta.ratios {
+        anyhow::ensure!(
+            r.boundary < meta.params.len(),
+            "{name}: ratio {} boundary out of range",
+            r.ratio
+        );
+    }
+    Ok(meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+              "ratios": [0.5, 1.0],
+              "models": {
+                "m": {
+                  "task": "classify", "batch": 4, "eval_batch": 8,
+                  "x_shape": [6], "x_dtype": "f32",
+                  "num_classes": 3, "seq_len": 0, "total_params": 10,
+                  "chunk": 8,
+                  "params": [
+                    {"name": "a_w", "shape": [2, 3], "size": 6},
+                    {"name": "a_b", "shape": [4], "size": 4}
+                  ],
+                  "ratios": [
+                    {"ratio": 0.5, "boundary": 1, "trainable_fraction": 0.4,
+                     "artifact": "m/train_r0500.hlo.txt"},
+                    {"ratio": 1.0, "boundary": 0, "trainable_fraction": 1.0,
+                     "artifact": "m/train_r1000.hlo.txt"}
+                  ],
+                  "eval_artifact": "m/eval.hlo.txt",
+                  "init_artifact": "m/init.hlo.txt"
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let man = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest_json()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.x_len(), 6);
+        assert_eq!(m.full_model_bytes(), 40);
+        assert_eq!(m.task, Task::Classify);
+    }
+
+    #[test]
+    fn quantize_rounds_down() {
+        let man = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest_json()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.quantize_ratio(0.9).ratio, 0.5);
+        assert_eq!(m.quantize_ratio(1.0).ratio, 1.0);
+        assert_eq!(m.quantize_ratio(0.5).ratio, 0.5);
+        // below the smallest compiled ratio -> clamp to smallest
+        assert_eq!(m.quantize_ratio(0.1).ratio, 0.5);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let man = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest_json()).unwrap();
+        assert!(man.model("nope").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the CPU PJRT client. This is the only module that
+//! touches the `xla` crate; everything above it works on plain `Vec<f32>`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* (not serialized
+//! proto — xla_extension 0.5.1 rejects jax>=0.5 64-bit instruction ids),
+//! `return_tuple=True` on the python side, `to_tuple()` here.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Batch, ModelRuntime, RuntimeStats};
+pub use manifest::{Manifest, ModelMeta, RatioMeta, Task, XDtype};

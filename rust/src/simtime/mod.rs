@@ -1,0 +1,181 @@
+//! Discrete-event simulation engine.
+//!
+//! Wall-clock "hours" in all reproduced tables are *simulated* time derived
+//! from the device model — exactly as the paper's own FedScale-style
+//! emulation. The engine is a classic priority-queue event loop; async
+//! strategies (FedBuff) schedule client-finish events, synchronous-interval
+//! strategies (TimelyFL, SyncFL) mostly advance the clock in round steps but
+//! share the same queue for uniformity.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated seconds since experiment start.
+pub type SimTime = f64;
+
+/// An event scheduled at a simulated timestamp. `seq` breaks ties FIFO so
+/// identical timestamps pop deterministically.
+#[derive(Debug)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue + clock.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at absolute simulated time `at` (>= now).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        debug_assert!(at.is_finite(), "non-finite event time");
+        let at = at.max(self.now); // never schedule into the past
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a simulated delay.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|s| {
+            debug_assert!(s.at >= self.now, "time went backwards");
+            self.now = s.at;
+            self.processed += 1;
+            (s.at, s.event)
+        })
+    }
+
+    /// Advance the clock manually (round-stepped strategies).
+    pub fn advance_to(&mut self, t: SimTime) {
+        debug_assert!(t >= self.now, "advance_to into the past");
+        self.now = self.now.max(t);
+    }
+}
+
+/// Seconds -> hours, for reporting in the paper's units.
+pub fn hours(secs: SimTime) -> f64 {
+    secs / 3600.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 5.0);
+        assert_eq!(q.events_processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, 1);
+        q.schedule_at(2.0, 2);
+        q.schedule_at(2.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn never_schedules_into_past() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "x");
+        q.pop();
+        q.schedule_at(3.0, "late"); // clamped to now = 10.0
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(4.0, ());
+        q.pop();
+        q.schedule_in(2.5, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 6.5);
+    }
+
+    #[test]
+    fn advance_to_moves_clock() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(100.0);
+        assert_eq!(q.now(), 100.0);
+    }
+}

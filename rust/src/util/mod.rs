@@ -1,0 +1,8 @@
+//! In-tree substrates for facilities the offline build cannot pull from
+//! crates.io: PRNG + distributions, JSON, stats helpers, and a tiny
+//! property-testing harness (see `testkit`).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;

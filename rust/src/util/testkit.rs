@@ -1,0 +1,89 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set). Runs a property over N seeded random cases; on failure reports the
+//! failing case index and seed so it can be replayed deterministically.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the -rpath to /opt/xla_extension/lib,
+//! # // so executing them fails to load libstdc++ in this offline image.
+//! use timelyfl::util::{rng::Rng, testkit::check};
+//! check("sum is commutative", 256, |rng| {
+//!     let a = rng.f64();
+//!     let b = rng.f64();
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; override with TIMELYFL_PROP_SEED to reproduce CI failures.
+fn base_seed() -> u64 {
+    std::env::var("TIMELYFL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases` independently-seeded RNGs; panics (with the
+/// case's replay seed) on the first failing case.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, prop: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {case}/{cases} \
+                 (replay: TIMELYFL_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers for common test inputs.
+pub mod gen {
+    use super::Rng;
+
+    /// Vec<f64> of length in [lo, hi], values in [-scale, scale].
+    pub fn f64_vec(rng: &mut Rng, lo: usize, hi: usize, scale: f64) -> Vec<f64> {
+        let n = lo + rng.usize_below(hi - lo + 1);
+        (0..n).map(|_| rng.range(-scale, scale)).collect()
+    }
+
+    /// Vec<f32> of exact length n, values in [-scale, scale].
+    pub fn f32_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| rng.range(-scale as f64, scale as f64) as f32)
+            .collect()
+    }
+
+    /// Strictly positive durations (seconds), log-uniform over ~4 decades.
+    pub fn positive_time(rng: &mut Rng) -> f64 {
+        10f64.powf(rng.range(-2.0, 2.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 64, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert!((a + b - (b + a)).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn reports_failing_case() {
+        check("always-fails", 8, |_| panic!("boom"));
+    }
+}

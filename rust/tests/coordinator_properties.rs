@@ -1,0 +1,250 @@
+//! Property-based tests (in-tree `testkit` harness) over the coordinator's
+//! pure logic: workload scheduling, interval selection, aggregation
+//! algebra, update bookkeeping, the event queue, and the device model.
+//! These are the invariants Algorithm 1-3 rely on for correctness, checked
+//! over thousands of random cases — no PJRT involved, so they run in
+//! milliseconds.
+
+use timelyfl::aggregation::{average_delta, staleness_discount, Contribution};
+use timelyfl::coordinator::local_time::TimeEstimate;
+use timelyfl::coordinator::scheduler::{aggregation_interval, schedule};
+use timelyfl::devices::{Fleet, FleetConfig};
+use timelyfl::model::{ParamVec, Update};
+use timelyfl::simtime::EventQueue;
+use timelyfl::util::rng::Rng;
+use timelyfl::util::testkit::{check, gen};
+
+fn rand_estimate(rng: &mut Rng) -> TimeEstimate {
+    TimeEstimate {
+        t_cmp: gen::positive_time(rng) * 100.0,
+        t_com: gen::positive_time(rng) * 10.0,
+    }
+}
+
+#[test]
+fn prop_schedule_outputs_always_valid() {
+    check("schedule validity", 5000, |rng| {
+        let est = rand_estimate(rng);
+        let t_k = gen::positive_time(rng) * 100.0;
+        let max_epochs = 1 + rng.usize_below(32);
+        let w = schedule(t_k, &est, max_epochs);
+        assert!(w.epochs >= 1 && w.epochs <= max_epochs, "epochs {}", w.epochs);
+        assert!(w.alpha > 0.0 && w.alpha <= 1.0, "alpha {}", w.alpha);
+        assert!(w.t_rpt <= t_k + 1e-9, "report deadline after interval");
+    });
+}
+
+#[test]
+fn prop_scheduled_workload_fits_interval() {
+    // Alg. 3 guarantee: with exact estimates, the assigned workload's
+    // predicted duration never exceeds T_k (the paper's timeliness claim).
+    check("workload fits interval", 5000, |rng| {
+        let est = rand_estimate(rng);
+        let t_k = gen::positive_time(rng) * 100.0;
+        let w = schedule(t_k, &est, 64);
+        let predicted = if w.alpha < 1.0 {
+            (est.t_cmp + est.t_com) * w.alpha
+        } else {
+            est.t_cmp * w.epochs as f64 + est.t_com
+        };
+        // A fast client (E >= 1 fits) or a partial client both fit.
+        if predicted > t_k + 1e-9 {
+            // The only legal violation: even one epoch at the smallest
+            // alpha cannot fit — then E = 1, alpha < 1 is still assigned
+            // (the client trains its best effort). alpha*total <= t_k must
+            // hold by construction of line 3.
+            assert!(
+                w.alpha * (est.t_cmp + est.t_com) <= t_k + 1e-9,
+                "alpha rule violated: {} * {} > {t_k}",
+                w.alpha,
+                est.t_cmp + est.t_com
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_interval_is_order_statistic() {
+    check("T_k order statistic", 2000, |rng| {
+        let totals = gen::f64_vec(rng, 1, 64, 1.0)
+            .into_iter()
+            .map(f64::abs)
+            .collect::<Vec<_>>();
+        let k = 1 + rng.usize_below(totals.len());
+        let t_k = aggregation_interval(&totals, k);
+        let below = totals.iter().filter(|&&t| t <= t_k + 1e-12).count();
+        assert!(below >= k, "fewer than k totals fit inside T_k");
+        assert!(totals.contains(&t_k), "T_k must be one of the estimates");
+    });
+}
+
+#[test]
+fn prop_average_delta_bounded_by_extremes() {
+    // With uniform weights and full updates, every aggregated element lies
+    // within [min, max] of the contributions' elements.
+    check("average within extremes", 800, |rng| {
+        let n_tensors = 1 + rng.usize_below(4);
+        let sizes: Vec<usize> = (0..n_tensors).map(|_| 1 + rng.usize_below(16)).collect();
+        let template = ParamVec {
+            tensors: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        };
+        let n_clients = 1 + rng.usize_below(8);
+        let contributions: Vec<Contribution> = (0..n_clients)
+            .map(|i| Contribution {
+                client_id: i,
+                update: Update {
+                    boundary: 0,
+                    tensors: sizes.iter().map(|&s| gen::f32_vec(rng, s, 2.0)).collect(),
+                },
+                weight: 1.0,
+                staleness: 0,
+            })
+            .collect();
+        let avg = average_delta(&template, &contributions, false);
+        for t in 0..n_tensors {
+            for j in 0..sizes[t] {
+                let vals: Vec<f32> = contributions
+                    .iter()
+                    .map(|c| c.update.tensors[t][j])
+                    .collect();
+                let lo = vals.iter().cloned().fold(f32::MAX, f32::min);
+                let hi = vals.iter().cloned().fold(f32::MIN, f32::max);
+                let got = avg.tensors[t][j];
+                assert!(
+                    got >= lo - 1e-4 && got <= hi + 1e-4,
+                    "avg {got} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_partial_contributions_never_leak_across_boundary() {
+    // A client that trained only the suffix must have zero influence on
+    // prefix tensors, whatever the mix of boundaries in the cohort.
+    check("boundary isolation", 800, |rng| {
+        let sizes = [4usize, 3, 5];
+        let template = ParamVec {
+            tensors: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        };
+        // One full client with known values, one partial client.
+        let full_tensors: Vec<Vec<f32>> =
+            sizes.iter().map(|&s| gen::f32_vec(rng, s, 1.0)).collect();
+        let boundary = 1 + rng.usize_below(2);
+        let partial_tensors: Vec<Vec<f32>> = sizes[boundary..]
+            .iter()
+            .map(|&s| gen::f32_vec(rng, s, 1.0))
+            .collect();
+        let contributions = vec![
+            Contribution {
+                client_id: 0,
+                update: Update {
+                    boundary: 0,
+                    tensors: full_tensors.clone(),
+                },
+                weight: 1.0,
+                staleness: 0,
+            },
+            Contribution {
+                client_id: 1,
+                update: Update {
+                    boundary,
+                    tensors: partial_tensors,
+                },
+                weight: 1.0,
+                staleness: 0,
+            },
+        ];
+        let avg = average_delta(&template, &contributions, false);
+        // Prefix tensors: only the full client contributed -> exact match.
+        for t in 0..boundary {
+            assert_eq!(avg.tensors[t], full_tensors[t], "prefix diluted");
+        }
+    });
+}
+
+#[test]
+fn prop_staleness_discount_decreasing_in_tau() {
+    check("staleness monotone", 1000, |rng| {
+        let tau = rng.usize_below(100) as u64;
+        let d1 = staleness_discount(tau);
+        let d2 = staleness_discount(tau + 1 + rng.usize_below(10) as u64);
+        assert!(d1 > d2, "discount must strictly decrease");
+        assert!(d1 <= 1.0 && d2 > 0.0);
+    });
+}
+
+#[test]
+fn prop_delta_apply_roundtrip() {
+    check("delta/apply inverse", 1000, |rng| {
+        let n = 1 + rng.usize_below(4);
+        let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.usize_below(12)).collect();
+        let base = ParamVec {
+            tensors: sizes.iter().map(|&s| gen::f32_vec(rng, s, 5.0)).collect(),
+        };
+        let new = ParamVec {
+            tensors: sizes.iter().map(|&s| gen::f32_vec(rng, s, 5.0)).collect(),
+        };
+        let boundary = rng.usize_below(n);
+        let delta = new.delta_from(&base, boundary);
+        let mut rebuilt = base.clone();
+        rebuilt.apply(&delta, 1.0);
+        // prefix untouched, suffix == new
+        for t in 0..boundary {
+            assert_eq!(rebuilt.tensors[t], base.tensors[t]);
+        }
+        for t in boundary..n {
+            for (a, b) in rebuilt.tensors[t].iter().zip(&new.tensors[t]) {
+                assert!((a - b).abs() < 1e-4, "suffix mismatch");
+            }
+        }
+        assert_eq!(delta.bytes(), delta.num_params() * 4);
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_sorted() {
+    check("event queue order", 500, |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = 1 + rng.usize_below(200);
+        for i in 0..n {
+            q.schedule_in(gen::positive_time(rng), i as u64);
+        }
+        let mut last = 0.0f64;
+        let mut popped = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "time went backwards");
+            last = t;
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+        assert_eq!(q.events_processed(), n as u64);
+    });
+}
+
+#[test]
+fn prop_fleet_spread_always_within_calibration() {
+    check("fleet spread", 100, |rng| {
+        let spread = 1.5 + rng.f64() * 40.0;
+        let cfg = FleetConfig {
+            compute_spread: spread,
+            ..FleetConfig::default()
+        };
+        let fleet = Fleet::generate(64, cfg, rng);
+        let times: Vec<f64> = fleet.devices.iter().map(|d| d.base_epoch_secs).collect();
+        let max = times.iter().cloned().fold(f64::MIN, f64::max);
+        let min = times.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min <= spread + 1e-9, "spread violated");
+        assert!(times.iter().all(|&t| t > 0.0));
+    });
+}
+
+#[test]
+fn prop_disturbance_in_paper_bounds() {
+    // Eq. 2: w is clipped to [1, 1.3].
+    check("disturbance eq2", 5000, |rng| {
+        let w = timelyfl::devices::disturbance_coefficient(rng);
+        assert!((1.0..=1.3).contains(&w), "w = {w} outside [1, 1.3]");
+    });
+}

@@ -1,0 +1,196 @@
+//! Integration: the AOT artifacts load, compile, and train for real.
+//!
+//! Requires `make artifacts` to have run (skipped with a message otherwise,
+//! so `cargo test` stays green on a fresh checkout).
+
+use timelyfl::model::ParamVec;
+use timelyfl::runtime::{Batch, Manifest, ModelRuntime, Task};
+use timelyfl::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+/// Gaussian-cluster toy batch: class c has mean direction derived from c.
+fn toy_vision_batch(rng: &mut Rng, x_len: usize, batch: usize, classes: usize) -> Batch {
+    let mut x = Vec::with_capacity(batch * x_len);
+    let mut y = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let c = rng.usize_below(classes);
+        y.push(c as i32);
+        let mut feat = Rng::seed_from(c as u64 * 7919 + 13);
+        for _ in 0..x_len {
+            let center = feat.normal() as f32; // class-specific, fixed
+            x.push(center + 0.3 * rng.normal() as f32);
+        }
+    }
+    Batch::F32 { x, y }
+}
+
+#[test]
+fn init_is_deterministic_and_finite() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "vision").unwrap();
+    let a = rt.init_params(7).unwrap();
+    let b = rt.init_params(7).unwrap();
+    let c = rt.init_params(8).unwrap();
+    assert_eq!(a, b, "same seed must give identical params");
+    assert_ne!(a, c, "different seeds must differ");
+    assert!(a.all_finite());
+    assert_eq!(a.num_params(), rt.meta.total_params);
+}
+
+#[test]
+fn vision_training_reduces_loss() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "vision").unwrap();
+
+    let full = rt.meta.ratio_exact(1.0).unwrap().clone();
+    let mut params = rt.init_params(0).unwrap();
+    let mut rng = Rng::seed_from(42);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..60 {
+        let batch = toy_vision_batch(&mut rng, rt.meta.x_len(), rt.meta.batch, 10);
+        let (new_params, loss) = rt.train_step(&full, &params, &batch, 0.05).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        params = new_params;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss as f64;
+    }
+    let first = first.unwrap() as f64;
+    assert!(
+        last < 0.6 * first,
+        "loss did not drop: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn partial_ratio_freezes_prefix() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "vision").unwrap();
+
+    let partial = rt.meta.quantize_ratio(0.25).clone();
+    assert!(partial.boundary > 0, "0.25 ratio should freeze a prefix");
+
+    let params = rt.init_params(1).unwrap();
+    let mut rng = Rng::seed_from(9);
+    let batch = toy_vision_batch(&mut rng, rt.meta.x_len(), rt.meta.batch, 10);
+    let (new_params, _) = rt.train_step(&partial, &params, &batch, 0.1).unwrap();
+
+    // Frozen prefix must be bit-identical; trainable suffix must move.
+    for i in 0..partial.boundary {
+        assert_eq!(
+            params.tensors[i], new_params.tensors[i],
+            "frozen tensor {i} changed"
+        );
+    }
+    let moved = (partial.boundary..params.tensors.len())
+        .any(|i| params.tensors[i] != new_params.tensors[i]);
+    assert!(moved, "no trainable tensor changed");
+
+    // And the partial update is the suffix only.
+    let upd = new_params.delta_from(&params, partial.boundary);
+    assert!(upd.bytes() < rt.meta.full_model_bytes());
+}
+
+#[test]
+fn eval_returns_sane_metrics() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "vision").unwrap();
+    let params = rt.init_params(3).unwrap();
+
+    let mut rng = Rng::seed_from(5);
+    let batches: Vec<Batch> = (0..4)
+        .map(|_| toy_vision_batch(&mut rng, rt.meta.x_len(), rt.meta.eval_batch, 10))
+        .collect();
+    let res = rt.evaluate(&params, &batches).unwrap();
+    assert_eq!(res.examples, 4 * rt.meta.eval_batch);
+    // Untrained 10-class model: loss near ln(10), accuracy near chance.
+    assert!(res.mean_loss > 1.5 && res.mean_loss < 4.0, "{res:?}");
+    assert!(res.metric < 0.5, "{res:?}");
+}
+
+#[test]
+fn lm_round_trip_and_ppl() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "text").unwrap();
+    assert_eq!(rt.meta.task, Task::Lm);
+
+    let mut params = rt.init_params(0).unwrap();
+    let mut rng = Rng::seed_from(1);
+    let full = rt.meta.ratio_exact(1.0).unwrap().clone();
+    let vocab = rt.meta.num_classes;
+
+    // Highly predictable stream: token t+1 = (token t + 1) % 16.
+    let make_batch = |rng: &mut Rng, n: usize| {
+        let seq = rt.meta.seq_len;
+        let mut x = Vec::with_capacity(n * seq);
+        let mut y = Vec::with_capacity(n * seq);
+        for _ in 0..n {
+            let start = rng.usize_below(16) as i32;
+            for t in 0..seq as i32 {
+                x.push((start + t) % 16);
+                y.push((start + t + 1) % 16);
+            }
+        }
+        let _ = vocab;
+        Batch::I32 { x, y }
+    };
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let b = make_batch(&mut rng, rt.meta.batch);
+        let (p, loss) = rt.train_step(&full, &params, &b, 0.05).unwrap();
+        params = p;
+        losses.push(loss as f64);
+    }
+    assert!(
+        losses[29] < 0.5 * losses[0],
+        "LM loss did not drop: {:?}",
+        &losses[..3]
+    );
+
+    let eb = make_batch(&mut rng, rt.meta.eval_batch);
+    let res = rt.evaluate(&params, &[eb]).unwrap();
+    assert!(res.metric > 1.0, "ppl must exceed 1, got {}", res.metric);
+    assert!(res.metric < 100.0, "ppl should have dropped, got {}", res.metric);
+}
+
+#[test]
+fn rejects_mismatched_params() {
+    let dir = require_artifacts!();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "vision").unwrap();
+    let bad = ParamVec {
+        tensors: vec![vec![0.0; 3]],
+    };
+    assert!(bad.check(&rt.meta).is_err());
+}
