@@ -12,7 +12,7 @@
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
 use timelyfl::config::{RunConfig, StrategyKind};
-use timelyfl::metrics::report::Table;
+use timelyfl::metrics::report::{participation_table, Table};
 use timelyfl::metrics::RunReport;
 
 fn deciles(mut rates: Vec<f64>) -> Vec<f64> {
@@ -64,6 +64,13 @@ fn main() -> Result<()> {
     }
     let rendered = t.render();
     println!("{rendered}");
+
+    // Drop attribution: with the default always-on process online_frac is
+    // 1.0 and avail_drops 0 — the columns matter for the churn sweeps
+    // (see benches/fig10_availability_sweep.rs).
+    let rows: Vec<(&str, &RunReport)> =
+        reports.iter().map(|r| (r.strategy.as_str(), r)).collect();
+    println!("{}", participation_table(&rows).render());
 
     // Fig. 5b analogue: paired per-client comparison.
     let improved = timely

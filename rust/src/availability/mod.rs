@@ -1,0 +1,33 @@
+//! Client availability & churn subsystem.
+//!
+//! The paper's premise is that "the availability of each client to join the
+//! training is highly variable over time due to system heterogeneities and
+//! intermittent connectivity" (§1) — production cross-device FL (Papaya,
+//! Huba et al. 2022) is dominated by exactly this churn. The seed fleet
+//! model only covered compute/bandwidth heterogeneity; this module adds the
+//! missing dimension: per-client online/offline *processes* over simulated
+//! time.
+//!
+//! Four process kinds, all behind one [`AvailabilityModel`] facade:
+//!
+//! - **always-on** — the seed behaviour and the default; strictly additive
+//!   (runs are bit-identical to the pre-subsystem code).
+//! - **markov** — seeded on/off alternating renewal process with log-normal
+//!   dwell times (mean online / offline dwell configurable).
+//! - **diurnal** — deterministic sine-gated availability with a configurable
+//!   period, duty cycle and timezone sharding (clients in different shards
+//!   are phase-shifted copies of each other).
+//! - **trace** — replayed from a JSONL event file (`{"at": .., "client": ..,
+//!   "online": ..}` records; see `docs/availability.md`).
+//!
+//! Every process answers two queries — `is_available(client, t)` and
+//! `next_transition(client, t)` (first state flip strictly after `t`) — so
+//! availability integrates with the coordinator *event-driven*: transitions
+//! become [`crate::simtime::EventQueue`] events instead of per-round
+//! Bernoulli coin flips.
+
+pub mod process;
+pub mod trace;
+
+pub use process::{AvailabilityConfig, AvailabilityKind, AvailabilityModel, SEED_SALT};
+pub use trace::{parse_trace, write_trace, TraceEvent};

@@ -1,0 +1,757 @@
+//! Availability processes: always-on, seeded Markov on/off, diurnal
+//! sine-gated, and trace-replayed — unified behind [`AvailabilityModel`].
+//!
+//! The Markov and trace processes materialise per-client *timelines*
+//! (strictly increasing transition timestamps; the state flips at each).
+//! Markov timelines are generated lazily from a per-client forked RNG, so
+//! queries are deterministic in the seed regardless of query order pattern
+//! within a monotone simulation. The diurnal process is closed-form — no
+//! state at all — and always-on answers without allocating.
+
+use std::f64::consts::PI;
+
+use anyhow::{Context, Result};
+
+use super::trace::{self, TraceEvent};
+use crate::simtime::SimTime;
+use crate::util::rng::Rng;
+
+const TWO_PI: f64 = 2.0 * PI;
+
+/// Salt XORed into `RunConfig::seed` to derive the availability RNG stream,
+/// so availability draws never perturb the fleet/sampling streams (the
+/// always-on default must stay bit-identical to the pre-subsystem code).
+pub const SEED_SALT: u64 = 0xA7A1_1AB1_E5EE_D001;
+
+/// Which availability process drives the population.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AvailabilityKind {
+    /// Every client reachable at all times (seed behaviour, default).
+    AlwaysOn,
+    /// Alternating on/off renewal process with log-normal dwell times.
+    Markov,
+    /// Deterministic sine-gated availability, timezone-sharded.
+    Diurnal,
+    /// Replay a JSONL trace file (see `docs/availability.md`).
+    Trace,
+}
+
+impl AvailabilityKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "always_on" | "always-on" | "always" | "on" => AvailabilityKind::AlwaysOn,
+            "markov" => AvailabilityKind::Markov,
+            "diurnal" => AvailabilityKind::Diurnal,
+            "trace" => AvailabilityKind::Trace,
+            other => anyhow::bail!("unknown availability kind {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AvailabilityKind::AlwaysOn => "always_on",
+            AvailabilityKind::Markov => "markov",
+            AvailabilityKind::Diurnal => "diurnal",
+            AvailabilityKind::Trace => "trace",
+        }
+    }
+}
+
+/// Calibration of the availability process (threaded through `RunConfig`).
+#[derive(Clone, Debug)]
+pub struct AvailabilityConfig {
+    pub kind: AvailabilityKind,
+    /// Markov: mean online dwell in simulated seconds.
+    pub mean_online_secs: f64,
+    /// Markov: mean offline dwell in simulated seconds.
+    pub mean_offline_secs: f64,
+    /// Markov: log-normal sigma of both dwell distributions (0 = exact
+    /// means, deterministic dwells).
+    pub dwell_sigma: f64,
+    /// Diurnal: period of the availability wave (default: 24 h).
+    pub diurnal_period_secs: f64,
+    /// Diurnal: fraction of each period a client is online, in (0, 1].
+    pub diurnal_duty: f64,
+    /// Diurnal: number of timezone shards; client `c` sits in shard
+    /// `c % shards`, phase-shifted by `shard / shards` of a period.
+    pub diurnal_shards: usize,
+    /// Trace: path to the JSONL event file (required for `kind = trace`).
+    pub trace_path: Option<String>,
+}
+
+impl Default for AvailabilityConfig {
+    fn default() -> Self {
+        AvailabilityConfig {
+            kind: AvailabilityKind::AlwaysOn,
+            mean_online_secs: 3600.0,
+            mean_offline_secs: 1800.0,
+            dwell_sigma: 0.5,
+            diurnal_period_secs: 86_400.0,
+            diurnal_duty: 0.5,
+            diurnal_shards: 4,
+            trace_path: None,
+        }
+    }
+}
+
+impl AvailabilityConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.mean_online_secs > 0.0 && self.mean_online_secs.is_finite(),
+            "avail_mean_online_secs must be positive"
+        );
+        anyhow::ensure!(
+            self.mean_offline_secs > 0.0 && self.mean_offline_secs.is_finite(),
+            "avail_mean_offline_secs must be positive"
+        );
+        anyhow::ensure!(
+            self.dwell_sigma >= 0.0 && self.dwell_sigma.is_finite(),
+            "avail_dwell_sigma must be >= 0"
+        );
+        anyhow::ensure!(
+            self.diurnal_period_secs > 0.0 && self.diurnal_period_secs.is_finite(),
+            "avail_diurnal_period_secs must be positive"
+        );
+        anyhow::ensure!(
+            self.diurnal_duty > 0.0 && self.diurnal_duty <= 1.0,
+            "avail_diurnal_duty must be in (0, 1]"
+        );
+        anyhow::ensure!(self.diurnal_shards >= 1, "avail_diurnal_shards must be >= 1");
+        if self.kind == AvailabilityKind::Trace {
+            anyhow::ensure!(
+                self.trace_path.is_some(),
+                "kind = trace requires avail_trace_path"
+            );
+        }
+        Ok(())
+    }
+
+    /// Steady-state online probability of the Markov process.
+    pub fn markov_steady_state(&self) -> f64 {
+        self.mean_online_secs / (self.mean_online_secs + self.mean_offline_secs)
+    }
+}
+
+/// Lazy dwell-time generator backing a Markov timeline.
+#[derive(Clone, Debug)]
+struct MarkovGen {
+    rng: Rng,
+    /// Log-normal mu for online dwells: ln(mean) - sigma^2/2, so the dwell
+    /// MEAN equals the configured mean (E[lognormal] = exp(mu + sigma^2/2)).
+    mu_on: f64,
+    mu_off: f64,
+    sigma: f64,
+}
+
+/// One client's transition history: the state flips at each timestamp in
+/// `transitions`; the state on `[transitions[i-1], transitions[i])` is
+/// `initial_online ^ (i is odd)`. `covered` is the horizon up to which the
+/// timeline is final; Markov timelines extend it on demand, static (trace)
+/// timelines set it to infinity.
+#[derive(Clone, Debug)]
+struct Timeline {
+    initial_online: bool,
+    transitions: Vec<f64>,
+    covered: f64,
+    gen: Option<MarkovGen>,
+}
+
+impl Timeline {
+    fn fixed(initial_online: bool, transitions: Vec<f64>) -> Timeline {
+        debug_assert!(transitions.windows(2).all(|w| w[0] < w[1]));
+        Timeline {
+            initial_online,
+            transitions,
+            covered: f64::INFINITY,
+            gen: None,
+        }
+    }
+
+    fn markov(initial_online: bool, gen: MarkovGen) -> Timeline {
+        Timeline {
+            initial_online,
+            transitions: Vec::new(),
+            covered: 0.0,
+            gen: Some(gen),
+        }
+    }
+
+    /// Generate dwells until the timeline is final strictly past `t`.
+    fn extend_to(&mut self, t: f64) {
+        let Some(g) = self.gen.as_mut() else { return };
+        while self.covered <= t {
+            let online_now = self.initial_online ^ (self.transitions.len() % 2 == 1);
+            let mu = if online_now { g.mu_on } else { g.mu_off };
+            let dwell = g.rng.lognormal(mu, g.sigma).max(1e-6);
+            self.covered += dwell;
+            self.transitions.push(self.covered);
+        }
+    }
+
+    fn state_at(&mut self, t: f64) -> bool {
+        self.extend_to(t);
+        let flips = self.transitions.partition_point(|&x| x <= t);
+        self.initial_online ^ (flips % 2 == 1)
+    }
+
+    /// First transition strictly after `t` (None for a static timeline with
+    /// no further events).
+    fn next_after(&mut self, t: f64) -> Option<f64> {
+        self.extend_to(t);
+        let idx = self.transitions.partition_point(|&x| x <= t);
+        self.transitions.get(idx).copied()
+    }
+}
+
+/// Closed-form diurnal process: client `c` is online iff
+/// `sin(2*pi*t/period + phase(c)) >= cos(pi*duty)` — the threshold is chosen
+/// so exactly `duty` of each period is online.
+#[derive(Clone, Copy, Debug)]
+struct Diurnal {
+    period: f64,
+    duty: f64,
+    /// cos(pi * duty): sin(theta) >= threshold holds on an arc of measure
+    /// 2*pi*duty per period.
+    threshold: f64,
+    shards: usize,
+}
+
+impl Diurnal {
+    fn phase(&self, client: usize) -> f64 {
+        TWO_PI * (client % self.shards) as f64 / self.shards as f64
+    }
+
+    fn online(&self, client: usize, t: f64) -> bool {
+        if self.duty >= 1.0 {
+            return true;
+        }
+        (TWO_PI * t / self.period + self.phase(client)).sin() >= self.threshold
+    }
+
+    fn next_transition(&self, client: usize, t: f64) -> Option<f64> {
+        if self.duty >= 1.0 {
+            return None;
+        }
+        // Online arc in angle space: [a, pi - a] with a = asin(threshold).
+        let a = self.threshold.asin();
+        let theta = (TWO_PI * t / self.period + self.phase(client)).rem_euclid(TWO_PI);
+        // Distance (in angle) to each boundary, strictly ahead of theta.
+        let ahead = |boundary: f64| -> f64 {
+            let d = (boundary - theta).rem_euclid(TWO_PI);
+            if d < 1e-9 {
+                d + TWO_PI
+            } else {
+                d
+            }
+        };
+        let d = ahead(a).min(ahead(PI - a));
+        let next = t + d * self.period / TWO_PI;
+        // Floating-point guard: never report a transition at or before `t`.
+        if next <= t {
+            None
+        } else {
+            Some(next)
+        }
+    }
+}
+
+enum ModelKind {
+    AlwaysOn,
+    Timelines(Vec<Timeline>),
+    Diurnal(Diurnal),
+}
+
+/// Facade over the population's availability processes.
+pub struct AvailabilityModel {
+    population: usize,
+    kind: ModelKind,
+}
+
+impl AvailabilityModel {
+    /// The seed behaviour: everyone reachable forever.
+    pub fn always_on(population: usize) -> AvailabilityModel {
+        AvailabilityModel {
+            population,
+            kind: ModelKind::AlwaysOn,
+        }
+    }
+
+    /// Build the configured process for a population. Deterministic in
+    /// `seed` (which should already be salted with [`SEED_SALT`]).
+    pub fn build(cfg: &AvailabilityConfig, population: usize, seed: u64) -> Result<AvailabilityModel> {
+        cfg.validate()?;
+        let kind = match cfg.kind {
+            AvailabilityKind::AlwaysOn => ModelKind::AlwaysOn,
+            AvailabilityKind::Markov => {
+                let sigma = cfg.dwell_sigma;
+                let mu_on = cfg.mean_online_secs.ln() - sigma * sigma / 2.0;
+                let mu_off = cfg.mean_offline_secs.ln() - sigma * sigma / 2.0;
+                let p_on = cfg.markov_steady_state();
+                let mut master = Rng::seed_from(seed);
+                let timelines = (0..population)
+                    .map(|c| {
+                        let mut rng = master.fork(c as u64);
+                        let initial_online = rng.f64() < p_on;
+                        Timeline::markov(
+                            initial_online,
+                            MarkovGen {
+                                rng,
+                                mu_on,
+                                mu_off,
+                                sigma,
+                            },
+                        )
+                    })
+                    .collect();
+                ModelKind::Timelines(timelines)
+            }
+            AvailabilityKind::Diurnal => ModelKind::Diurnal(Diurnal {
+                period: cfg.diurnal_period_secs,
+                duty: cfg.diurnal_duty,
+                threshold: (PI * cfg.diurnal_duty).cos(),
+                shards: cfg.diurnal_shards,
+            }),
+            AvailabilityKind::Trace => {
+                let path = cfg.trace_path.as_ref().expect("validated above");
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading availability trace {path}"))?;
+                let events = trace::parse_trace(&text)
+                    .with_context(|| format!("parsing availability trace {path}"))?;
+                ModelKind::Timelines(Self::timelines_from_trace(&events, population)?)
+            }
+        };
+        Ok(AvailabilityModel { population, kind })
+    }
+
+    /// Fold trace events into per-client timelines. Clients with no events
+    /// are always online; events restating the current state are dropped.
+    fn timelines_from_trace(events: &[TraceEvent], population: usize) -> Result<Vec<Timeline>> {
+        let mut per_client: Vec<Vec<(f64, bool)>> = vec![Vec::new(); population];
+        for e in events {
+            anyhow::ensure!(
+                e.client < population,
+                "trace client {} out of range (population {population})",
+                e.client
+            );
+            per_client[e.client].push((e.at, e.online));
+        }
+        Ok(per_client
+            .into_iter()
+            .map(|mut evs| {
+                evs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite trace times"));
+                let initial_online = true;
+                let mut state = initial_online;
+                let mut transitions = Vec::new();
+                for (at, online) in evs {
+                    if online != state {
+                        // Coincident flip-flops collapse to the last state.
+                        if transitions.last() == Some(&at) {
+                            transitions.pop();
+                        } else {
+                            transitions.push(at);
+                        }
+                        state = online;
+                    }
+                }
+                Timeline::fixed(initial_online, transitions)
+            })
+            .collect())
+    }
+
+    pub fn population(&self) -> usize {
+        self.population
+    }
+
+    /// True when the model can never drop anyone (fast paths + reporting).
+    pub fn is_always_on(&self) -> bool {
+        matches!(self.kind, ModelKind::AlwaysOn)
+    }
+
+    /// Is `client` online at simulated time `t`? At a transition timestamp
+    /// the *post*-transition state holds.
+    pub fn is_available(&mut self, client: usize, t: SimTime) -> bool {
+        debug_assert!(client < self.population, "client {client} out of range");
+        match &mut self.kind {
+            ModelKind::AlwaysOn => true,
+            ModelKind::Timelines(ts) => ts[client].state_at(t),
+            ModelKind::Diurnal(d) => d.online(client, t),
+        }
+    }
+
+    /// First state flip strictly after `t` (None = no further transitions).
+    pub fn next_transition(&mut self, client: usize, t: SimTime) -> Option<SimTime> {
+        debug_assert!(client < self.population, "client {client} out of range");
+        match &mut self.kind {
+            ModelKind::AlwaysOn => None,
+            ModelKind::Timelines(ts) => ts[client].next_after(t),
+            ModelKind::Diurnal(d) => d.next_transition(client, t),
+        }
+    }
+
+    /// Client ids online at `t`, ascending. When everyone is online this is
+    /// exactly `0..population` — index-sampling from it is then identical
+    /// to sampling the whole population (the always-on bit-compat path).
+    pub fn online_clients(&mut self, t: SimTime) -> Vec<usize> {
+        let n = self.population;
+        (0..n).filter(|&c| self.is_available(c, t)).collect()
+    }
+
+    /// Does `client` stay online for the whole of `[t0, t1]`?
+    pub fn online_through(&mut self, client: usize, t0: SimTime, t1: SimTime) -> bool {
+        self.is_available(client, t0)
+            && self.next_transition(client, t0).map_or(true, |t| t >= t1)
+    }
+
+    /// Earliest transition of ANY client strictly after `t` (the wake-up
+    /// time when the whole population is momentarily offline).
+    pub fn earliest_transition(&mut self, t: SimTime) -> Option<SimTime> {
+        let n = self.population;
+        let mut best: Option<f64> = None;
+        for c in 0..n {
+            if let Some(x) = self.next_transition(c, t) {
+                best = Some(best.map_or(x, |b: f64| b.min(x)));
+            }
+        }
+        best
+    }
+
+    /// Fraction of `[0, horizon]` the client was online (1.0 for a zero
+    /// horizon — nothing has elapsed to be offline for).
+    pub fn online_fraction(&mut self, client: usize, horizon: SimTime) -> f64 {
+        if horizon <= 0.0 {
+            return 1.0;
+        }
+        let mut cur = 0.0;
+        let mut acc = 0.0;
+        while cur < horizon {
+            let next = self.next_transition(client, cur).unwrap_or(f64::INFINITY);
+            if next <= cur {
+                break; // floating-point guard; cannot regress
+            }
+            let seg_end = next.min(horizon);
+            // Sample the state at the segment MIDPOINT: the state is
+            // constant on the open segment, and midpoints dodge the
+            // ulp-level ambiguity of evaluating the diurnal gate exactly
+            // at a boundary instant.
+            if self.is_available(client, (cur + seg_end) / 2.0) {
+                acc += seg_end - cur;
+            }
+            if next >= horizon {
+                break;
+            }
+            cur = next;
+        }
+        (acc / horizon).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn markov_cfg() -> AvailabilityConfig {
+        AvailabilityConfig {
+            kind: AvailabilityKind::Markov,
+            mean_online_secs: 600.0,
+            mean_offline_secs: 300.0,
+            dwell_sigma: 0.4,
+            ..AvailabilityConfig::default()
+        }
+    }
+
+    #[test]
+    fn always_on_is_trivial() {
+        let mut m = AvailabilityModel::always_on(5);
+        assert!(m.is_always_on());
+        for c in 0..5 {
+            assert!(m.is_available(c, 0.0));
+            assert!(m.is_available(c, 1e9));
+            assert_eq!(m.next_transition(c, 0.0), None);
+            assert_eq!(m.online_fraction(c, 1e6), 1.0);
+        }
+        assert_eq!(m.online_clients(42.0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(m.earliest_transition(0.0), None);
+    }
+
+    #[test]
+    fn default_config_builds_always_on() {
+        let cfg = AvailabilityConfig::default();
+        let m = AvailabilityModel::build(&cfg, 8, 1).unwrap();
+        assert!(m.is_always_on());
+    }
+
+    #[test]
+    fn markov_transitions_alternate_states() {
+        let mut m = AvailabilityModel::build(&markov_cfg(), 4, 7).unwrap();
+        for c in 0..4 {
+            let mut t = 0.0;
+            let mut state = m.is_available(c, t);
+            for _ in 0..50 {
+                let next = m.next_transition(c, t).expect("markov always transitions");
+                assert!(next > t, "transition must move forward");
+                // state holds right up to the transition...
+                assert_eq!(m.is_available(c, (t + next) / 2.0), state);
+                // ...and flips at it.
+                let after = m.is_available(c, next);
+                assert_ne!(after, state, "state must flip at a transition");
+                t = next;
+                state = after;
+            }
+        }
+    }
+
+    #[test]
+    fn markov_deterministic_by_seed() {
+        let mut a = AvailabilityModel::build(&markov_cfg(), 6, 99).unwrap();
+        let mut b = AvailabilityModel::build(&markov_cfg(), 6, 99).unwrap();
+        for c in 0..6 {
+            let mut t = 0.0;
+            for _ in 0..200 {
+                let ta = a.next_transition(c, t).unwrap();
+                let tb = b.next_transition(c, t).unwrap();
+                assert_eq!(ta, tb, "same seed must give identical schedules");
+                assert_eq!(a.is_available(c, ta), b.is_available(c, ta));
+                t = ta;
+            }
+        }
+    }
+
+    #[test]
+    fn markov_seeds_differ() {
+        let mut a = AvailabilityModel::build(&markov_cfg(), 1, 1).unwrap();
+        let mut b = AvailabilityModel::build(&markov_cfg(), 1, 2).unwrap();
+        assert_ne!(a.next_transition(0, 0.0), b.next_transition(0, 0.0));
+    }
+
+    #[test]
+    fn markov_query_order_does_not_change_schedule() {
+        // Lazy extension must not depend on the interleaving of queries.
+        let mut a = AvailabilityModel::build(&markov_cfg(), 2, 5).unwrap();
+        let mut b = AvailabilityModel::build(&markov_cfg(), 2, 5).unwrap();
+        let far = a.next_transition(0, 50_000.0); // forces a long extension
+        let mut t = 0.0;
+        let mut last = None;
+        while t < 50_000.0 {
+            last = b.next_transition(0, t);
+            t = last.unwrap();
+        }
+        assert_eq!(far, last);
+    }
+
+    #[test]
+    fn markov_dwell_means_within_tolerance() {
+        let mut cfg = markov_cfg();
+        cfg.mean_online_secs = 500.0;
+        cfg.mean_offline_secs = 250.0;
+        cfg.dwell_sigma = 0.5;
+        let mut m = AvailabilityModel::build(&cfg, 64, 3).unwrap();
+        let (mut on_sum, mut on_n, mut off_sum, mut off_n) = (0.0, 0u32, 0.0, 0u32);
+        for c in 0..64 {
+            let mut t = 0.0;
+            for _ in 0..100 {
+                let online = m.is_available(c, t);
+                let next = m.next_transition(c, t).unwrap();
+                // The first dwell is truncated by t=0 only for the initial
+                // state draw; we include it anyway — bias is negligible at
+                // this sample size because t starts at 0 (no inspection
+                // paradox: we take whole dwells, not residuals).
+                if online {
+                    on_sum += next - t;
+                    on_n += 1;
+                } else {
+                    off_sum += next - t;
+                    off_n += 1;
+                }
+                t = next;
+            }
+        }
+        let on_mean = on_sum / on_n as f64;
+        let off_mean = off_sum / off_n as f64;
+        assert!(
+            (on_mean - 500.0).abs() < 0.1 * 500.0,
+            "online dwell mean {on_mean} != 500 +- 10%"
+        );
+        assert!(
+            (off_mean - 250.0).abs() < 0.1 * 250.0,
+            "offline dwell mean {off_mean} != 250 +- 10%"
+        );
+    }
+
+    #[test]
+    fn markov_zero_sigma_gives_exact_dwells() {
+        let mut cfg = markov_cfg();
+        cfg.dwell_sigma = 0.0;
+        let mut m = AvailabilityModel::build(&cfg, 1, 11).unwrap();
+        let t1 = m.next_transition(0, 0.0).unwrap();
+        let t2 = m.next_transition(0, t1).unwrap();
+        let d1 = t1;
+        let d2 = t2 - t1;
+        // Alternating exact dwells of 600 and 300 (order depends on the
+        // initial state draw).
+        let mut pair = [d1, d2];
+        pair.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((pair[0] - 300.0).abs() < 1e-6, "dwells {pair:?}");
+        assert!((pair[1] - 600.0).abs() < 1e-6, "dwells {pair:?}");
+    }
+
+    fn diurnal_cfg(duty: f64, shards: usize) -> AvailabilityConfig {
+        AvailabilityConfig {
+            kind: AvailabilityKind::Diurnal,
+            diurnal_period_secs: 1000.0,
+            diurnal_duty: duty,
+            diurnal_shards: shards,
+            ..AvailabilityConfig::default()
+        }
+    }
+
+    #[test]
+    fn diurnal_period_correct() {
+        let mut m = AvailabilityModel::build(&diurnal_cfg(0.5, 1), 1, 0).unwrap();
+        // Transitions alternate on/off boundaries; boundaries of the SAME
+        // type are exactly one period apart.
+        let t1 = m.next_transition(0, 0.0).unwrap();
+        let t2 = m.next_transition(0, t1).unwrap();
+        let t3 = m.next_transition(0, t2).unwrap();
+        let t4 = m.next_transition(0, t3).unwrap();
+        assert!((t3 - t1 - 1000.0).abs() < 1e-6, "period {t1} {t3}");
+        assert!((t4 - t2 - 1000.0).abs() < 1e-6, "period {t2} {t4}");
+        // Duty 0.5: the online stretch of each period is half of it.
+        let online_span = if m.is_available(0, (t1 + t2) / 2.0) {
+            t2 - t1
+        } else {
+            t3 - t2
+        };
+        assert!((online_span - 500.0).abs() < 1e-6, "duty span {online_span}");
+    }
+
+    #[test]
+    fn diurnal_duty_sets_online_fraction() {
+        for duty in [0.25, 0.5, 0.75] {
+            let mut m = AvailabilityModel::build(&diurnal_cfg(duty, 1), 1, 0).unwrap();
+            // Integrate over many whole periods: fraction == duty.
+            let f = m.online_fraction(0, 100.0 * 1000.0);
+            assert!((f - duty).abs() < 1e-6, "duty {duty} got fraction {f}");
+        }
+    }
+
+    #[test]
+    fn diurnal_shards_phase_shift() {
+        let mut m = AvailabilityModel::build(&diurnal_cfg(0.5, 4), 8, 0).unwrap();
+        // Same shard => identical schedule; different shard => shifted by
+        // period * shard_delta / shards.
+        let a0 = m.next_transition(0, 0.0).unwrap();
+        let a4 = m.next_transition(4, 0.0).unwrap();
+        assert_eq!(a0, a4, "clients 0 and 4 share shard 0");
+        for t in [0.0, 137.0, 800.0] {
+            let s1 = m.is_available(1, t);
+            let s0 = m.is_available(0, t + 250.0); // shard 1 leads by P/4
+            assert_eq!(s0, s1, "shard phase shift broken at t={t}");
+        }
+    }
+
+    #[test]
+    fn diurnal_full_duty_never_transitions() {
+        let mut m = AvailabilityModel::build(&diurnal_cfg(1.0, 3), 3, 0).unwrap();
+        for c in 0..3 {
+            assert!(m.is_available(c, 123.0));
+            assert_eq!(m.next_transition(c, 123.0), None);
+        }
+    }
+
+    #[test]
+    fn trace_semantics() {
+        let events = vec![
+            TraceEvent { at: 10.0, client: 0, online: false },
+            TraceEvent { at: 20.0, client: 0, online: true },
+            TraceEvent { at: 5.0, client: 2, online: false },
+        ];
+        let timelines = AvailabilityModel::timelines_from_trace(&events, 3).unwrap();
+        let mut m = AvailabilityModel {
+            population: 3,
+            kind: ModelKind::Timelines(timelines),
+        };
+        // Client 0: on until 10, off on [10, 20), on after.
+        assert!(m.is_available(0, 0.0));
+        assert!(m.is_available(0, 9.999));
+        assert!(!m.is_available(0, 10.0));
+        assert!(!m.is_available(0, 15.0));
+        assert!(m.is_available(0, 20.0));
+        assert_eq!(m.next_transition(0, 0.0), Some(10.0));
+        assert_eq!(m.next_transition(0, 10.0), Some(20.0));
+        assert_eq!(m.next_transition(0, 20.0), None);
+        // Client 1: no events => always online.
+        assert!(m.is_available(1, 1e9));
+        assert_eq!(m.next_transition(1, 0.0), None);
+        // Client 2: off forever after 5.
+        assert!(!m.is_available(2, 6.0));
+        assert_eq!(m.next_transition(2, 5.0), None);
+        // Online fraction of client 0 over [0, 40]: 30/40.
+        assert!((m.online_fraction(0, 40.0) - 0.75).abs() < 1e-12);
+        // Redundant restatements are ignored.
+        let noisy = vec![
+            TraceEvent { at: 1.0, client: 0, online: true }, // already online
+            TraceEvent { at: 2.0, client: 0, online: false },
+            TraceEvent { at: 3.0, client: 0, online: false }, // restated
+        ];
+        let tl = AvailabilityModel::timelines_from_trace(&noisy, 1).unwrap();
+        let mut m2 = AvailabilityModel {
+            population: 1,
+            kind: ModelKind::Timelines(tl),
+        };
+        assert!(m2.is_available(0, 1.5));
+        assert!(!m2.is_available(0, 2.5));
+        assert!(!m2.is_available(0, 3.5));
+    }
+
+    #[test]
+    fn trace_rejects_out_of_range_client() {
+        let events = vec![TraceEvent { at: 1.0, client: 9, online: false }];
+        assert!(AvailabilityModel::timelines_from_trace(&events, 3).is_err());
+    }
+
+    #[test]
+    fn online_through_detects_mid_window_dropout() {
+        let events = vec![
+            TraceEvent { at: 50.0, client: 0, online: false },
+            TraceEvent { at: 60.0, client: 0, online: true },
+        ];
+        let tl = AvailabilityModel::timelines_from_trace(&events, 1).unwrap();
+        let mut m = AvailabilityModel {
+            population: 1,
+            kind: ModelKind::Timelines(tl),
+        };
+        assert!(m.online_through(0, 0.0, 49.0));
+        assert!(m.online_through(0, 0.0, 50.0)); // transition exactly at end
+        assert!(!m.online_through(0, 0.0, 51.0));
+        assert!(!m.online_through(0, 55.0, 56.0)); // starts offline
+        assert!(m.online_through(0, 60.0, 1e9));
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut c = AvailabilityConfig::default();
+        c.validate().unwrap();
+        c.kind = AvailabilityKind::Trace;
+        assert!(c.validate().is_err(), "trace without path must fail");
+        c.trace_path = Some("x.jsonl".into());
+        c.validate().unwrap();
+        c.diurnal_duty = 0.0;
+        assert!(c.validate().is_err());
+        c.diurnal_duty = 0.5;
+        c.mean_online_secs = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            AvailabilityKind::AlwaysOn,
+            AvailabilityKind::Markov,
+            AvailabilityKind::Diurnal,
+            AvailabilityKind::Trace,
+        ] {
+            assert_eq!(AvailabilityKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(AvailabilityKind::parse("sometimes").is_err());
+    }
+}

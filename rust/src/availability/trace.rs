@@ -1,0 +1,108 @@
+//! Trace-driven availability: JSONL event records (one JSON object per
+//! line, in the machine-message idiom of cargo's `machine_message.rs`).
+//!
+//! Schema (documented in `docs/availability.md`):
+//!
+//! ```text
+//! {"at":120.0,"client":3,"online":false}
+//! {"at":540.5,"client":3,"online":true}
+//! ```
+//!
+//! - `at`      — simulated seconds since experiment start (finite, >= 0);
+//! - `client`  — client index in `[0, population)`;
+//! - `online`  — the state the client *enters* at `at`.
+//!
+//! Clients with no records are always online; every client is online before
+//! its first record (matching the always-on default). Records may appear in
+//! any order — the loader sorts per client — and records that restate the
+//! current state are ignored (no transition).
+
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One availability transition observed in a trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Simulated seconds since experiment start.
+    pub at: f64,
+    /// Client index.
+    pub client: usize,
+    /// The state the client enters at `at`.
+    pub online: bool,
+}
+
+/// Serialize events to the JSONL trace format.
+pub fn write_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let line = Json::obj(vec![
+            ("at", Json::num(e.at)),
+            ("client", Json::num(e.client as f64)),
+            ("online", Json::Bool(e.online)),
+        ]);
+        let _ = writeln!(out, "{line}");
+    }
+    out
+}
+
+/// Parse a JSONL trace. Blank lines are skipped; any malformed line is an
+/// error with its line number.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parse_line = || -> Result<TraceEvent> {
+            let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let at = v.expect("at")?.as_f64()?;
+            anyhow::ensure!(at.is_finite() && at >= 0.0, "at must be finite and >= 0, got {at}");
+            let client = v.expect("client")?.as_usize()?;
+            let online = v.expect("online")?.as_bool()?;
+            Ok(TraceEvent { at, client, online })
+        };
+        events.push(parse_line().with_context(|| format!("trace line {}", lineno + 1))?);
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let events = vec![
+            TraceEvent { at: 0.0, client: 0, online: false },
+            TraceEvent { at: 120.5, client: 0, online: true },
+            TraceEvent { at: 60.0, client: 3, online: false },
+        ];
+        let text = write_trace(&events);
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let back = parse_trace("\n{\"at\":1.0,\"client\":2,\"online\":true}\n\n").unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].client, 2);
+        assert!(back[0].online);
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_lineno() {
+        let err = parse_trace("{\"at\":1.0,\"client\":0,\"online\":true}\nnot json\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+        // missing field
+        assert!(parse_trace("{\"at\":1.0,\"client\":0}\n").is_err());
+        // negative / non-finite time
+        assert!(parse_trace("{\"at\":-1.0,\"client\":0,\"online\":true}\n").is_err());
+        // wrong type
+        assert!(parse_trace("{\"at\":1.0,\"client\":0,\"online\":1}\n").is_err());
+    }
+}

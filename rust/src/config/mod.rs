@@ -6,6 +6,7 @@
 pub mod parse;
 
 use crate::aggregation::ServerOptKind;
+use crate::availability::AvailabilityConfig;
 use crate::devices::FleetConfig;
 
 /// Which FL strategy drives the run.
@@ -94,6 +95,9 @@ pub struct RunConfig {
 
     /// Device fleet calibration.
     pub fleet: FleetConfig,
+    /// Client availability / churn process (default: always-on, the seed
+    /// behaviour — strictly additive).
+    pub availability: AvailabilityConfig,
     /// Simulated full-model bytes for communication time (PAPER-scale model
     /// size, not our stand-in's size — preserves the paper's compute/comm
     /// balance; see DESIGN.md §3).
@@ -140,6 +144,7 @@ impl Default for RunConfig {
             template_scale: 0.12,
             lm_noise: 0.1,
             fleet: FleetConfig::default(),
+            availability: AvailabilityConfig::default(),
             sim_model_bytes: 1.09e6, // ResNet-20 f32 ~ 1.09 MB
             eval_every: 10,
             eval_batches: 4,
@@ -255,6 +260,7 @@ impl RunConfig {
         );
         anyhow::ensure!(self.sim_model_bytes > 0.0, "sim_model_bytes > 0");
         anyhow::ensure!(self.eval_every > 0, "eval_every >= 1");
+        self.availability.validate()?;
         Ok(())
     }
 }

@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 
 use super::{RunConfig, StrategyKind};
 use crate::aggregation::ServerOptKind;
+use crate::availability::AvailabilityKind;
 
 /// Parse one `key = value` line into an override on `cfg`.
 pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
@@ -39,6 +40,20 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "data_seed" => cfg.data_seed = v.parse()?,
         "template_scale" => cfg.template_scale = v.parse()?,
         "lm_noise" => cfg.lm_noise = v.parse()?,
+        "availability" => cfg.availability.kind = AvailabilityKind::parse(v)?,
+        "avail_mean_online_secs" => cfg.availability.mean_online_secs = v.parse()?,
+        "avail_mean_offline_secs" => cfg.availability.mean_offline_secs = v.parse()?,
+        "avail_dwell_sigma" => cfg.availability.dwell_sigma = v.parse()?,
+        "avail_diurnal_period_secs" => cfg.availability.diurnal_period_secs = v.parse()?,
+        "avail_diurnal_duty" => cfg.availability.diurnal_duty = v.parse()?,
+        "avail_diurnal_shards" => cfg.availability.diurnal_shards = v.parse()?,
+        "avail_trace_path" => {
+            cfg.availability.trace_path = if v.eq_ignore_ascii_case("none") {
+                None
+            } else {
+                Some(v.to_string())
+            }
+        }
         "median_epoch_secs" => cfg.fleet.median_epoch_secs = v.parse()?,
         "compute_spread" => cfg.fleet.compute_spread = v.parse()?,
         "median_bandwidth" => cfg.fleet.median_bandwidth = v.parse()?,
@@ -113,6 +128,34 @@ mod tests {
         assert_eq!(cfg.client_lr, 0.5);
         assert!(!cfg.adaptive);
         assert_eq!(cfg.max_staleness, Some(10));
+    }
+
+    #[test]
+    fn availability_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "availability = markov\n\
+             avail_mean_online_secs = 1200\n\
+             avail_mean_offline_secs = 600\n\
+             avail_dwell_sigma = 0.3\n\
+             avail_diurnal_period_secs = 7200\n\
+             avail_diurnal_duty = 0.4\n\
+             avail_diurnal_shards = 8\n\
+             avail_trace_path = \"traces/day.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.availability.kind, AvailabilityKind::Markov);
+        assert_eq!(cfg.availability.mean_online_secs, 1200.0);
+        assert_eq!(cfg.availability.mean_offline_secs, 600.0);
+        assert_eq!(cfg.availability.dwell_sigma, 0.3);
+        assert_eq!(cfg.availability.diurnal_period_secs, 7200.0);
+        assert_eq!(cfg.availability.diurnal_duty, 0.4);
+        assert_eq!(cfg.availability.diurnal_shards, 8);
+        assert_eq!(cfg.availability.trace_path.as_deref(), Some("traces/day.jsonl"));
+        apply_cli(&mut cfg, "avail_trace_path=none").unwrap();
+        assert_eq!(cfg.availability.trace_path, None);
+        assert!(apply_cli(&mut cfg, "availability=sometimes").is_err());
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! *training* is real (PJRT executions of the AOT artifacts); client
 //! *timing* is simulated from the device model — the same emulation
 //! methodology as the paper (§4.1).
+//!
+//! All three drivers share one `simtime::EventQueue` clock and one
+//! availability model (`crate::availability`): round-stepped strategies pop
+//! round-boundary events, FedBuff pops client-finish and
+//! availability-transition events from a single queue, and every driver
+//! samples only from currently-available clients, attributing
+//! churn losses separately from deadline losses.
 
 pub mod fedbuff;
 pub mod local_time;
@@ -19,9 +26,11 @@ use std::time::Instant;
 use anyhow::Result;
 use xla::PjRtClient;
 
+use crate::availability::AvailabilityModel;
 use crate::config::{RunConfig, StrategyKind};
 use crate::data::{FederatedDataset, SyntheticSpec};
 use crate::devices::Fleet;
+use crate::simtime::EventQueue;
 use crate::metrics::{EvalPoint, ParticipationTracker, RoundRecord, RunReport};
 use crate::model::ParamVec;
 use crate::runtime::engine::Batch;
@@ -117,14 +126,18 @@ impl Recorder {
         }
     }
 
-    /// Record one aggregation round's participants + stats.
+    /// Record one aggregation round's participants + stats. Deadline /
+    /// staleness / injected-failure losses (`dropped`) are attributed
+    /// separately from availability-churn losses (`avail_dropped`);
+    /// `mean_train_loss` is `None` when no sampled client delivered.
     pub fn record_round(
         &mut self,
         round: usize,
         sim_secs: f64,
         participant_ids: &[usize],
         dropped: usize,
-        mean_train_loss: f64,
+        avail_dropped: usize,
+        mean_train_loss: Option<f64>,
     ) {
         self.participation.record_round(participant_ids.iter().copied());
         self.rounds.push(RoundRecord {
@@ -132,6 +145,7 @@ impl Recorder {
             sim_secs,
             participants: participant_ids.len(),
             dropped,
+            avail_dropped,
             mean_train_loss,
         });
     }
@@ -170,17 +184,62 @@ impl Recorder {
         self.stop || sim_secs >= sim.cfg.sim_time_budget
     }
 
-    pub fn finish(self, sim: &Simulation, sim_secs: f64, total_rounds: usize) -> RunReport {
+    /// Fold drops that accumulated after the last recorded aggregation
+    /// into the final round's attribution, so end-of-run tails (budget
+    /// stops, partially-filled FedBuff buffers) don't silently undercount
+    /// `total_avail_drops()` / `total_deadline_drops()`.
+    pub fn absorb_tail_drops(&mut self, dropped: usize, avail_dropped: usize) {
+        if dropped == 0 && avail_dropped == 0 {
+            return;
+        }
+        if let Some(last) = self.rounds.last_mut() {
+            last.dropped += dropped;
+            last.avail_dropped += avail_dropped;
+        }
+    }
+
+    /// Build the final report; per-client online fractions are measured
+    /// from the availability model over the run's simulated span.
+    pub fn finish(
+        self,
+        sim: &Simulation,
+        sim_secs: f64,
+        total_rounds: usize,
+        events_processed: u64,
+        avail: &mut AvailabilityModel,
+    ) -> RunReport {
+        let online_fraction = (0..sim.cfg.population)
+            .map(|c| avail.online_fraction(c, sim_secs))
+            .collect();
         RunReport {
             strategy: sim.cfg.strategy.name().to_string(),
             model: sim.cfg.model.clone(),
             eval_points: self.eval_points,
             rounds: self.rounds,
             participation: self.participation.rates(),
+            online_fraction,
             sim_secs,
             wall_secs: self.started.elapsed().as_secs_f64(),
             total_rounds,
+            events_processed,
             real_train_steps: sim.runtime.stats().train_steps,
         }
     }
+}
+
+/// Shared idle-wait for the round-stepped drivers: when the whole
+/// population is momentarily offline, advance the clock (as an event) to
+/// the next availability transition. Returns `false` when no transition
+/// will ever come — the population is permanently offline and the run
+/// should end gracefully.
+pub(crate) fn idle_until_transition(
+    avail: &mut AvailabilityModel,
+    events: &mut EventQueue<()>,
+) -> bool {
+    let Some(t) = avail.earliest_transition(events.now()) else {
+        return false;
+    };
+    events.schedule_at(t, ());
+    events.pop();
+    true
 }

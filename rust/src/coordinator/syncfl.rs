@@ -1,10 +1,17 @@
 //! SyncFL baseline: classic synchronous FedAvg/FedOpt.
 //!
-//! Every round samples `n` clients, all train the FULL model for the fixed
-//! number of local epochs, and the server waits for the slowest one — the
-//! round time is max over sampled clients of (E * t_cmp + t_com). No
-//! staleness, perfect participation within a round, terrible wall-clock:
-//! the straggler column of Table 1.
+//! Every round samples `n` clients from the currently-available population,
+//! all train the FULL model for the fixed number of local epochs, and the
+//! server waits for the slowest one — the round time is max over sampled
+//! clients of (E * t_cmp + t_com). No staleness, perfect participation
+//! within a round, terrible wall-clock: the straggler column of Table 1.
+//!
+//! Availability churn hits SyncFL twice: a client that goes offline
+//! mid-round loses its update (an availability drop — the server still
+//! waits out its slot, exactly like the paper's timeout-and-discard
+//! behaviour), and an offline client cannot be sampled at all. The round
+//! boundary advances the shared `EventQueue` clock, so `events_processed()`
+//! is meaningful here too.
 
 use anyhow::Result;
 
@@ -12,7 +19,9 @@ use super::local_time::truth;
 use super::trainer::train_client;
 use super::{Recorder, Simulation};
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::availability::{AvailabilityModel, SEED_SALT};
 use crate::metrics::RunReport;
+use crate::simtime::EventQueue;
 use crate::util::rng::Rng;
 
 pub fn run(sim: &Simulation) -> Result<RunReport> {
@@ -22,11 +31,16 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
     let mut client_rngs: Vec<Rng> = (0..cfg.population)
         .map(|i| rng.fork(i as u64))
         .collect();
+    let mut avail = AvailabilityModel::build(
+        &cfg.availability,
+        cfg.population,
+        cfg.seed ^ SEED_SALT,
+    )?;
 
     let mut global = rt.init_params(cfg.init_seed)?;
     let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
     let mut rec = Recorder::new(cfg.population);
-    let mut clock = 0.0f64;
+    let mut events: EventQueue<()> = EventQueue::new();
     let full = rt
         .meta
         .ratio_exact(1.0)
@@ -34,19 +48,45 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
     let epochs = cfg.fedbuff_local_epochs; // shared "local epochs" setting
 
     let mut completed_rounds = 0usize;
-    for round in 0..cfg.rounds {
-        let sampled = rng.sample_without_replacement(cfg.population, cfg.concurrency);
+    while completed_rounds < cfg.rounds {
+        let now = events.now();
+        let online = avail.online_clients(now);
+        if online.is_empty() {
+            // Idle until someone comes back online (false = permanently
+            // offline population — end the run gracefully).
+            if !super::idle_until_transition(&mut avail, &mut events)
+                || rec.should_stop(sim, events.now())
+            {
+                break;
+            }
+            continue;
+        }
+        let want = cfg.concurrency.min(online.len());
+        let sampled: Vec<usize> = rng
+            .sample_without_replacement(online.len(), want)
+            .into_iter()
+            .map(|i| online[i])
+            .collect();
 
         let mut contributions = Vec::with_capacity(sampled.len());
         let mut participant_ids = Vec::with_capacity(sampled.len());
         let mut dropped = 0usize;
+        let mut avail_dropped = 0usize;
         let mut loss_sum = 0.0;
         let mut round_secs = 0.0f64;
         for &c in &sampled {
             let cond = sim.fleet.round_conditions(&mut rng);
             let t = truth(&sim.fleet.devices[c], &cond, cfg.sim_model_bytes);
-            round_secs = round_secs.max(t.round_secs(epochs as f64, 1.0, 1.0));
+            let duration = t.round_secs(epochs as f64, 1.0, 1.0);
+            // The server waits for the slowest sampled client whether or
+            // not it delivers (timeout-and-discard).
+            round_secs = round_secs.max(duration);
 
+            // Churn: offline mid-round means the update never uploads.
+            if !avail.online_through(c, now, now + duration) {
+                avail_dropped += 1;
+                continue;
+            }
             // Failure injection: the server's cutoff fires without this
             // client's update (its wait time is still paid above).
             if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
@@ -79,16 +119,29 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             let avg = average_delta(&global, &contributions, false);
             server_opt.apply(&mut global, &avg);
         }
-        clock += round_secs;
-        completed_rounds = round + 1;
+        events.schedule_in(round_secs, ());
+        let (clock, ()) = events.pop().expect("round boundary was scheduled");
+        let round = completed_rounds;
+        completed_rounds += 1;
 
-        let mean_loss = loss_sum / participant_ids.len().max(1) as f64;
-        rec.record_round(round, clock, &participant_ids, dropped, mean_loss);
+        let mean_loss = if participant_ids.is_empty() {
+            None
+        } else {
+            Some(loss_sum / participant_ids.len() as f64)
+        };
+        rec.record_round(round, clock, &participant_ids, dropped, avail_dropped, mean_loss);
         rec.maybe_eval(sim, round, clock, &global)?;
         if rec.should_stop(sim, clock) {
             break;
         }
     }
 
-    Ok(rec.finish(sim, clock, completed_rounds))
+    let sim_secs = events.now();
+    Ok(rec.finish(
+        sim,
+        sim_secs,
+        completed_rounds,
+        events.events_processed(),
+        &mut avail,
+    ))
 }

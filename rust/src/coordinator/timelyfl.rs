@@ -1,7 +1,8 @@
 //! TimelyFL — Algorithm 1.
 //!
 //! Per communication round:
-//!   1. sample `n` clients uniformly (training concurrency);
+//!   1. sample `n` clients uniformly from the CURRENTLY AVAILABLE
+//!      population (training concurrency);
 //!   2. every sampled client runs Local Time Update (Alg. 2) — a one-batch
 //!      probe extrapolated to unit epoch + upload times;
 //!   3. the server sets the aggregation interval T_k = k-th smallest
@@ -11,9 +12,18 @@
 //!      ratio so the client still meets its deadline;
 //!   5. clients train for real; their *actual* round time (true unit times,
 //!      scheduled workload) decides whether the upload lands within
-//!      T_k (1 + grace) — estimation error can still cause misses;
+//!      T_k (1 + grace) — estimation error can still cause misses. A client
+//!      whose availability process takes it OFFLINE inside its own round
+//!      window loses the update (counted as an availability drop, not a
+//!      deadline miss);
 //!   6. all landed updates aggregate (no staleness — every update is based
-//!      on this round's model), the clock advances by T_k.
+//!      on this round's model); the round boundary is an `EventQueue` event,
+//!      so all three drivers share one clock and `events_processed()` is
+//!      meaningful.
+//!
+//! If the whole population is momentarily offline the server idles until
+//! the next availability transition (also an event) instead of burning a
+//! round.
 //!
 //! `cfg.adaptive = false` reproduces the Fig. 7 ablation: each client's
 //! workload is frozen the first time it is scheduled and never re-adapted,
@@ -26,7 +36,9 @@ use super::scheduler::{aggregation_interval, schedule, Workload};
 use super::trainer::train_client;
 use super::{Recorder, Simulation};
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::availability::{AvailabilityModel, SEED_SALT};
 use crate::metrics::RunReport;
+use crate::simtime::EventQueue;
 use crate::util::rng::Rng;
 
 pub fn run(sim: &Simulation) -> Result<RunReport> {
@@ -36,20 +48,48 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
     let mut client_rngs: Vec<Rng> = (0..cfg.population)
         .map(|i| rng.fork(i as u64))
         .collect();
+    let mut avail = AvailabilityModel::build(
+        &cfg.availability,
+        cfg.population,
+        cfg.seed ^ SEED_SALT,
+    )?;
 
     let mut global = rt.init_params(cfg.init_seed)?;
     let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
     let mut rec = Recorder::new(cfg.population);
-    let mut clock = 0.0f64;
+    // Round boundaries (and idle waits for availability) are events: the
+    // clock only moves by popping the queue.
+    let mut events: EventQueue<()> = EventQueue::new();
 
     // Fig. 7 ablation state: frozen (workload, T_k) per client.
     let mut frozen_tk: Option<f64> = None;
     let mut frozen_workload: Vec<Option<Workload>> = vec![None; cfg.population];
 
     let mut completed_rounds = 0usize;
-    for round in 0..cfg.rounds {
-        // (1) sample n clients
-        let sampled = rng.sample_without_replacement(cfg.population, cfg.concurrency);
+    while completed_rounds < cfg.rounds {
+        let now = events.now();
+
+        // (1) sample n clients from the currently-available population.
+        // When everyone is online, `online` is exactly 0..population and
+        // this is bit-identical to sampling the whole population.
+        let online = avail.online_clients(now);
+        if online.is_empty() {
+            // Nobody to sample: idle until the next availability
+            // transition wakes the server up (false = population
+            // permanently offline, e.g. the trace ran out).
+            if !super::idle_until_transition(&mut avail, &mut events)
+                || rec.should_stop(sim, events.now())
+            {
+                break;
+            }
+            continue;
+        }
+        let want = cfg.concurrency.min(online.len());
+        let sampled: Vec<usize> = rng
+            .sample_without_replacement(online.len(), want)
+            .into_iter()
+            .map(|i| online[i])
+            .collect();
 
         // (2) Local Time Update per sampled client
         let probes: Vec<_> = sampled
@@ -75,10 +115,11 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             *frozen_tk.get_or_insert_with(|| aggregation_interval(&totals, cfg.k_target()))
         };
 
-        // (4)+(5) schedule, train, check deadline
+        // (4)+(5) schedule, train, check availability + deadline
         let mut contributions = Vec::new();
         let mut participant_ids = Vec::new();
         let mut dropped = 0usize;
+        let mut avail_dropped = 0usize;
         let mut loss_sum = 0.0;
 
         for (c, cond, est) in &probes {
@@ -100,6 +141,12 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             // Failure injection: finished but never delivered.
             let lost = cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob;
 
+            // Churn: the client must stay online for its whole round
+            // window or the update is lost with it.
+            if !avail.online_through(*c, now, now + actual) {
+                avail_dropped += 1;
+                continue;
+            }
             if !landed || lost {
                 dropped += 1;
                 continue;
@@ -126,21 +173,35 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             });
         }
 
-        // (6) aggregate + advance simulated clock by the interval
+        // (6) aggregate + advance the shared clock by the interval (the
+        // round boundary is an event popped off the queue)
         if !contributions.is_empty() {
             let avg = average_delta(&global, &contributions, false);
             server_opt.apply(&mut global, &avg);
         }
-        clock += t_k;
-        completed_rounds = round + 1;
+        events.schedule_in(t_k, ());
+        let (clock, ()) = events.pop().expect("round boundary was scheduled");
+        let round = completed_rounds;
+        completed_rounds += 1;
 
-        let mean_loss = loss_sum / participant_ids.len().max(1) as f64;
-        rec.record_round(round, clock, &participant_ids, dropped, mean_loss);
+        let mean_loss = if participant_ids.is_empty() {
+            None
+        } else {
+            Some(loss_sum / participant_ids.len() as f64)
+        };
+        rec.record_round(round, clock, &participant_ids, dropped, avail_dropped, mean_loss);
         rec.maybe_eval(sim, round, clock, &global)?;
         if rec.should_stop(sim, clock) {
             break;
         }
     }
 
-    Ok(rec.finish(sim, clock, completed_rounds))
+    let sim_secs = events.now();
+    Ok(rec.finish(
+        sim,
+        sim_secs,
+        completed_rounds,
+        events.events_processed(),
+        &mut avail,
+    ))
 }

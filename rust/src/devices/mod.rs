@@ -10,6 +10,11 @@
 //!   to emulate intermittent connectivity
 //! - per-round availability disturbance `w` drawn from truncated N(1, 0.3)
 //!   clipped to [1, 1.3] (paper Eq. 2), multiplying the base compute time.
+//!
+//! Whether a client is *reachable at all* is a separate axis: the fleet
+//! models how fast a client is when it participates, while
+//! `crate::availability` models when it is online (churn, diurnal cycles,
+//! traces). The two compose in the strategy drivers.
 
 pub mod disturbance;
 pub mod fleet;

@@ -9,7 +9,9 @@
 //!   sampling, local-time estimation, workload scheduling (Algorithm 3),
 //!   aggregation-interval control, FedBuff / SyncFL baselines, FedAvg /
 //!   FedOpt server optimizers, and an event-driven heterogeneous-device
-//!   simulator.
+//!   simulator with a first-class client availability & churn subsystem
+//!   (`availability`: always-on / Markov on-off / diurnal / trace-driven
+//!   processes whose transitions are `simtime` events).
 //! - **Layer 2 (python/compile/model.py)** — JAX forward/backward train-step
 //!   graphs (with partial-training variants) lowered once to HLO text.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the dense
@@ -19,6 +21,7 @@
 //! artifacts via PJRT (`xla` crate) and drives everything.
 
 pub mod aggregation;
+pub mod availability;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;

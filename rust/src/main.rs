@@ -12,7 +12,8 @@ use anyhow::{Context, Result};
 
 use timelyfl::config::{parse as cfgparse, RunConfig, StrategyKind};
 use timelyfl::coordinator::Simulation;
-use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
+use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
+use timelyfl::metrics::RunReport;
 use timelyfl::runtime::{Manifest, Task};
 use timelyfl::simtime::hours;
 
@@ -107,12 +108,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "rounds={} sim={:.2}h wall={:.1}s steps={} mean_participation={:.3}",
+        "rounds={} sim={:.2}h wall={:.1}s steps={} events={} mean_participation={:.3} \
+         online_frac={:.3} avail_drops={} deadline_drops={}",
         report.total_rounds,
         hours(report.sim_secs),
         report.wall_secs,
         report.real_train_steps,
-        report.mean_participation()
+        report.events_processed,
+        report.mean_participation(),
+        report.mean_online_fraction(),
+        report.total_avail_drops(),
+        report.total_deadline_drops()
     );
     if let Some(out) = &args.out {
         std::fs::write(out, report.to_json().to_string())?;
@@ -158,6 +164,10 @@ fn cmd_compare(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    // Availability attribution (online-fraction, churn vs deadline drops).
+    let rows: Vec<(&str, &RunReport)> =
+        reports.iter().map(|r| (r.strategy.as_str(), r)).collect();
+    println!("{}", participation_table(&rows).render());
     Ok(())
 }
 

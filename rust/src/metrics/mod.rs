@@ -25,10 +25,17 @@ pub struct RoundRecord {
     pub sim_secs: f64,
     /// Clients whose update entered this aggregation.
     pub participants: usize,
-    /// Clients that were scheduled but missed the deadline / were dropped.
+    /// Clients dropped for timing/injection reasons: deadline misses,
+    /// staleness-cap discards, injected delivery failures.
     pub dropped: usize,
-    /// Mean reported client training loss this round.
-    pub mean_train_loss: f64,
+    /// Clients dropped because they went OFFLINE mid-round (availability
+    /// churn) — attributed separately so Fig. 1/5-style participation
+    /// numbers can tell connectivity losses from straggler losses.
+    pub avail_dropped: usize,
+    /// Mean reported client training loss this round; `None` when no
+    /// sampled client delivered an update (a fabricated 0.0 here would
+    /// read as a perfect loss).
+    pub mean_train_loss: Option<f64>,
 }
 
 /// Tracks how often each client contributes to global aggregation.
@@ -92,9 +99,15 @@ pub struct RunReport {
     pub eval_points: Vec<EvalPoint>,
     pub rounds: Vec<RoundRecord>,
     pub participation: Vec<f64>,
+    /// Per-client fraction of the run's simulated time spent online (all
+    /// 1.0 under the default always-on process).
+    pub online_fraction: Vec<f64>,
     pub sim_secs: f64,
     pub wall_secs: f64,
     pub total_rounds: usize,
+    /// Simulation events processed by the driver's `EventQueue` (round
+    /// boundaries, client finishes, availability transitions).
+    pub events_processed: u64,
     /// Real PJRT train-steps executed (for perf accounting).
     pub real_train_steps: u64,
 }
@@ -131,6 +144,21 @@ impl RunReport {
 
     pub fn mean_participation(&self) -> f64 {
         crate::util::stats::mean(&self.participation)
+    }
+
+    /// Population-mean online fraction (1.0 under always-on).
+    pub fn mean_online_fraction(&self) -> f64 {
+        crate::util::stats::mean(&self.online_fraction)
+    }
+
+    /// Total clients lost to availability churn across all rounds.
+    pub fn total_avail_drops(&self) -> usize {
+        self.rounds.iter().map(|r| r.avail_dropped).sum()
+    }
+
+    /// Total clients lost to deadlines / staleness caps / injected failures.
+    pub fn total_deadline_drops(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
     }
 }
 
@@ -169,11 +197,40 @@ mod tests {
             eval_points: points,
             rounds: vec![],
             participation: vec![],
+            online_fraction: vec![],
             sim_secs: 0.0,
             wall_secs: 0.0,
             total_rounds: 0,
+            events_processed: 0,
             real_train_steps: 0,
         }
+    }
+
+    #[test]
+    fn drop_attribution_sums() {
+        let mut r = report_with(vec![]);
+        r.rounds = vec![
+            RoundRecord {
+                round: 0,
+                sim_secs: 10.0,
+                participants: 3,
+                dropped: 1,
+                avail_dropped: 2,
+                mean_train_loss: Some(1.5),
+            },
+            RoundRecord {
+                round: 1,
+                sim_secs: 20.0,
+                participants: 0,
+                dropped: 0,
+                avail_dropped: 4,
+                mean_train_loss: None,
+            },
+        ];
+        r.online_fraction = vec![1.0, 0.5];
+        assert_eq!(r.total_avail_drops(), 6);
+        assert_eq!(r.total_deadline_drops(), 1);
+        assert!((r.mean_online_fraction() - 0.75).abs() < 1e-12);
     }
 
     #[test]

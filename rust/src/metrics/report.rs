@@ -15,6 +15,7 @@ impl RunReport {
             ("sim_secs", Json::num(self.sim_secs)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("total_rounds", Json::num(self.total_rounds as f64)),
+            ("events_processed", Json::num(self.events_processed as f64)),
             ("real_train_steps", Json::num(self.real_train_steps as f64)),
             (
                 "mean_participation",
@@ -23,6 +24,19 @@ impl RunReport {
             (
                 "participation",
                 Json::arr(self.participation.iter().map(|&r| Json::num(r)).collect()),
+            ),
+            (
+                "mean_online_fraction",
+                Json::num(self.mean_online_fraction()),
+            ),
+            (
+                "online_fraction",
+                Json::arr(self.online_fraction.iter().map(|&r| Json::num(r)).collect()),
+            ),
+            ("avail_drops", Json::num(self.total_avail_drops() as f64)),
+            (
+                "deadline_drops",
+                Json::num(self.total_deadline_drops() as f64),
             ),
             (
                 "eval_points",
@@ -35,6 +49,27 @@ impl RunReport {
                                 ("sim_secs", Json::num(p.sim_secs)),
                                 ("mean_loss", Json::num(p.mean_loss)),
                                 ("metric", Json::num(p.metric)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "rounds",
+                Json::arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::num(r.round as f64)),
+                                ("sim_secs", Json::num(r.sim_secs)),
+                                ("participants", Json::num(r.participants as f64)),
+                                ("dropped", Json::num(r.dropped as f64)),
+                                ("avail_dropped", Json::num(r.avail_dropped as f64)),
+                                (
+                                    "mean_train_loss",
+                                    r.mean_train_loss.map_or(Json::Null, Json::num),
+                                ),
                             ])
                         })
                         .collect(),
@@ -58,6 +93,60 @@ impl RunReport {
         }
         out
     }
+
+    /// CSV of per-round bookkeeping with drop attribution; rounds where no
+    /// client delivered render the train loss as `-`.
+    pub fn rounds_csv(&self) -> String {
+        let mut out =
+            String::from("round,sim_hours,participants,deadline_dropped,avail_dropped,mean_train_loss\n");
+        for r in &self.rounds {
+            let _ = writeln!(
+                out,
+                "{},{:.4},{},{},{},{}",
+                r.round,
+                r.sim_secs / 3600.0,
+                r.participants,
+                r.dropped,
+                r.avail_dropped,
+                fmt_opt_loss(r.mean_train_loss),
+            );
+        }
+        out
+    }
+}
+
+/// Render an optional mean train loss: `-` when no client trained (instead
+/// of a fabricated perfect 0.0).
+pub fn fmt_opt_loss(loss: Option<f64>) -> String {
+    match loss {
+        Some(l) => format!("{l:.4}"),
+        None => "-".into(),
+    }
+}
+
+/// Participation/availability summary across runs: the Fig. 1/5-style
+/// numbers with the availability columns that make them attributable
+/// (online-fraction, availability-drops vs deadline-drops).
+pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
+    let mut t = Table::new(&[
+        "run",
+        "mean_particip",
+        "online_frac",
+        "avail_drops",
+        "deadline_drops",
+        "rounds",
+    ]);
+    for (label, r) in rows {
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", r.mean_participation()),
+            format!("{:.3}", r.mean_online_fraction()),
+            r.total_avail_drops().to_string(),
+            r.total_deadline_drops().to_string(),
+            r.total_rounds.to_string(),
+        ]);
+    }
+    t
 }
 
 /// Fixed-width table printer for bench output.
@@ -134,9 +223,8 @@ mod tests {
         assert!(s.contains("xx  y"));
     }
 
-    #[test]
-    fn json_roundtrips() {
-        let r = RunReport {
+    fn sample_report() -> RunReport {
+        RunReport {
             strategy: "TimelyFL".into(),
             model: "vision".into(),
             eval_points: vec![EvalPoint {
@@ -145,13 +233,37 @@ mod tests {
                 mean_loss: 1.0,
                 metric: 0.5,
             }],
-            rounds: vec![],
+            rounds: vec![
+                crate::metrics::RoundRecord {
+                    round: 0,
+                    sim_secs: 50.0,
+                    participants: 2,
+                    dropped: 1,
+                    avail_dropped: 3,
+                    mean_train_loss: Some(2.25),
+                },
+                crate::metrics::RoundRecord {
+                    round: 1,
+                    sim_secs: 100.0,
+                    participants: 0,
+                    dropped: 0,
+                    avail_dropped: 6,
+                    mean_train_loss: None,
+                },
+            ],
             participation: vec![0.5, 1.0],
+            online_fraction: vec![0.25, 0.75],
             sim_secs: 100.0,
             wall_secs: 1.0,
             total_rounds: 5,
+            events_processed: 7,
             real_train_steps: 10,
-        };
+        }
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = sample_report();
         let j = r.to_json().to_string();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("strategy").unwrap().as_str().unwrap(), "TimelyFL");
@@ -159,6 +271,35 @@ mod tests {
             parsed.get("eval_points").unwrap().as_arr().unwrap().len(),
             1
         );
+        assert_eq!(parsed.get("events_processed").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(parsed.get("avail_drops").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(parsed.get("deadline_drops").unwrap().as_f64().unwrap(), 1.0);
+        assert!(
+            (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn rounds_csv_renders_dash_for_empty_rounds() {
+        let csv = sample_report().rounds_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].ends_with(",2.2500"), "line: {}", lines[1]);
+        assert!(lines[2].ends_with(",-"), "line: {}", lines[2]);
+        assert_eq!(fmt_opt_loss(None), "-");
+        assert_eq!(fmt_opt_loss(Some(1.0)), "1.0000");
+    }
+
+    #[test]
+    fn participation_table_has_availability_columns() {
+        let r = sample_report();
+        let t = participation_table(&[("TimelyFL", &r)]);
+        let s = t.render();
+        assert!(s.contains("online_frac"));
+        assert!(s.contains("avail_drops"));
+        assert!(s.contains("deadline_drops"));
+        assert!(s.contains("0.500")); // online fraction
+        assert!(s.contains('9')); // avail drops
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! Wall-clock "hours" in all reproduced tables are *simulated* time derived
 //! from the device model — exactly as the paper's own FedScale-style
-//! emulation. The engine is a classic priority-queue event loop; async
-//! strategies (FedBuff) schedule client-finish events, synchronous-interval
-//! strategies (TimelyFL, SyncFL) mostly advance the clock in round steps but
-//! share the same queue for uniformity.
+//! emulation. The engine is a classic priority-queue event loop shared by
+//! all three strategy drivers: FedBuff pops client-finish and
+//! availability-transition events (`crate::availability`) from one queue,
+//! while the round-stepped strategies (TimelyFL, SyncFL) pop round-boundary
+//! and idle-wait events — so `events_processed()` is meaningful in every
+//! `RunReport` and the clock only ever moves through the queue.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

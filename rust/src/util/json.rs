@@ -76,6 +76,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+
     pub fn as_arr(&self) -> anyhow::Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),

@@ -1,0 +1,234 @@
+//! Property tests for the availability subsystem over its PUBLIC api —
+//! no PJRT / artifacts involved, so these always run. The per-process
+//! invariants: determinism by seed, dwell-time calibration, diurnal
+//! periodicity, trace round-tripping (including through a real file and
+//! `AvailabilityModel::build`), and the event-driven contract
+//! (`next_transition` is exactly where `is_available` flips).
+
+use timelyfl::availability::{
+    parse_trace, write_trace, AvailabilityConfig, AvailabilityKind, AvailabilityModel, TraceEvent,
+};
+use timelyfl::util::rng::Rng;
+
+fn markov_cfg() -> AvailabilityConfig {
+    AvailabilityConfig {
+        kind: AvailabilityKind::Markov,
+        mean_online_secs: 900.0,
+        mean_offline_secs: 450.0,
+        dwell_sigma: 0.6,
+        ..AvailabilityConfig::default()
+    }
+}
+
+/// Walk a client's transition schedule for `n` steps.
+fn schedule(model: &mut AvailabilityModel, client: usize, n: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for _ in 0..n {
+        match model.next_transition(client, t) {
+            Some(next) => {
+                assert!(next > t, "transition must be strictly after the query");
+                out.push(next);
+                t = next;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[test]
+fn same_seed_identical_transition_sequences() {
+    let mut a = AvailabilityModel::build(&markov_cfg(), 8, 1234).unwrap();
+    let mut b = AvailabilityModel::build(&markov_cfg(), 8, 1234).unwrap();
+    for c in 0..8 {
+        assert_eq!(
+            schedule(&mut a, c, 300),
+            schedule(&mut b, c, 300),
+            "client {c}: same seed must give an identical schedule"
+        );
+    }
+}
+
+#[test]
+fn different_seeds_different_sequences() {
+    let mut a = AvailabilityModel::build(&markov_cfg(), 4, 1).unwrap();
+    let mut b = AvailabilityModel::build(&markov_cfg(), 4, 2).unwrap();
+    let sa: Vec<Vec<f64>> = (0..4).map(|c| schedule(&mut a, c, 20)).collect();
+    let sb: Vec<Vec<f64>> = (0..4).map(|c| schedule(&mut b, c, 20)).collect();
+    assert_ne!(sa, sb, "seeds must matter");
+}
+
+#[test]
+fn clients_have_independent_streams() {
+    let mut m = AvailabilityModel::build(&markov_cfg(), 2, 5).unwrap();
+    assert_ne!(
+        schedule(&mut m, 0, 20),
+        schedule(&mut m, 1, 20),
+        "per-client schedules must differ"
+    );
+}
+
+#[test]
+fn markov_dwell_means_calibrated() {
+    // Collect on/off dwells across a large population and compare the
+    // sample means to the configured means.
+    let cfg = markov_cfg();
+    let mut m = AvailabilityModel::build(&cfg, 128, 42).unwrap();
+    let (mut on_sum, mut on_n, mut off_sum, mut off_n) = (0.0f64, 0u64, 0.0f64, 0u64);
+    for c in 0..128 {
+        let mut t = 0.0;
+        for _ in 0..60 {
+            let online = m.is_available(c, t);
+            let next = m.next_transition(c, t).unwrap();
+            if online {
+                on_sum += next - t;
+                on_n += 1;
+            } else {
+                off_sum += next - t;
+                off_n += 1;
+            }
+            t = next;
+        }
+    }
+    let on_mean = on_sum / on_n as f64;
+    let off_mean = off_sum / off_n as f64;
+    assert!(
+        (on_mean - cfg.mean_online_secs).abs() < 0.1 * cfg.mean_online_secs,
+        "online dwell mean {on_mean}, want ~{}",
+        cfg.mean_online_secs
+    );
+    assert!(
+        (off_mean - cfg.mean_offline_secs).abs() < 0.1 * cfg.mean_offline_secs,
+        "offline dwell mean {off_mean}, want ~{}",
+        cfg.mean_offline_secs
+    );
+}
+
+#[test]
+fn markov_long_run_fraction_tracks_steady_state() {
+    let cfg = markov_cfg(); // steady state = 900 / 1350 = 2/3
+    let mut m = AvailabilityModel::build(&cfg, 64, 7).unwrap();
+    let horizon = 400_000.0; // ~300 cycles
+    let mean: f64 =
+        (0..64).map(|c| m.online_fraction(c, horizon)).sum::<f64>() / 64.0;
+    assert!(
+        (mean - cfg.markov_steady_state()).abs() < 0.05,
+        "mean online fraction {mean} vs steady state {}",
+        cfg.markov_steady_state()
+    );
+}
+
+#[test]
+fn transitions_are_exactly_where_state_flips() {
+    // The event-driven contract: between consecutive transitions the state
+    // is constant, and it differs across each transition.
+    let mut m = AvailabilityModel::build(&markov_cfg(), 4, 99).unwrap();
+    for c in 0..4 {
+        let mut t = 0.0;
+        for _ in 0..100 {
+            let next = m.next_transition(c, t).unwrap();
+            let before = m.is_available(c, t);
+            let mid = m.is_available(c, (t + next) / 2.0);
+            let after = m.is_available(c, next);
+            assert_eq!(before, mid, "state changed without a transition");
+            assert_ne!(mid, after, "transition without a state change");
+            t = next;
+        }
+    }
+}
+
+#[test]
+fn diurnal_schedule_has_the_configured_period() {
+    let cfg = AvailabilityConfig {
+        kind: AvailabilityKind::Diurnal,
+        diurnal_period_secs: 5000.0,
+        diurnal_duty: 0.3,
+        diurnal_shards: 3,
+        ..AvailabilityConfig::default()
+    };
+    let mut m = AvailabilityModel::build(&cfg, 3, 0).unwrap();
+    for c in 0..3 {
+        let s = schedule(&mut m, c, 9);
+        assert_eq!(s.len(), 9, "diurnal must keep transitioning");
+        // Same-type boundaries (every second transition) are one period
+        // apart; the on/off split inside a period follows the duty cycle.
+        for w in s.windows(3).step_by(2) {
+            assert!(
+                (w[2] - w[0] - 5000.0).abs() < 1e-6,
+                "client {c}: period broken: {w:?}"
+            );
+        }
+        let frac = m.online_fraction(c, 20.0 * 5000.0);
+        assert!(
+            (frac - 0.3).abs() < 1e-6,
+            "client {c}: duty 0.3 but fraction {frac}"
+        );
+    }
+}
+
+#[test]
+fn trace_jsonl_round_trips_through_a_file() {
+    // Build a synthetic trace, write it to disk, load it back through the
+    // full AvailabilityModel::build path, and check both the parsed events
+    // and the resulting schedule.
+    let mut rng = Rng::seed_from(77);
+    let mut events = Vec::new();
+    for client in 0..6usize {
+        let mut t = 0.0;
+        let mut online = true;
+        for _ in 0..20 {
+            t += 50.0 + rng.f64() * 500.0;
+            online = !online;
+            events.push(TraceEvent { at: t, client, online });
+        }
+    }
+    let text = write_trace(&events);
+    assert_eq!(parse_trace(&text).unwrap(), events, "write -> parse identity");
+
+    let path = std::env::temp_dir().join(format!(
+        "timelyfl_avail_trace_{}.jsonl",
+        std::process::id()
+    ));
+    std::fs::write(&path, &text).unwrap();
+    let cfg = AvailabilityConfig {
+        kind: AvailabilityKind::Trace,
+        trace_path: Some(path.to_string_lossy().into_owned()),
+        ..AvailabilityConfig::default()
+    };
+    let mut a = AvailabilityModel::build(&cfg, 8, 0).unwrap();
+    let mut b = AvailabilityModel::build(&cfg, 8, 12345).unwrap(); // seed-free
+    for c in 0..8 {
+        assert_eq!(
+            schedule(&mut a, c, 64),
+            schedule(&mut b, c, 64),
+            "trace schedules are seed-independent"
+        );
+    }
+    // Clients 6 and 7 have no events: always online.
+    assert!(a.is_available(6, 1e9));
+    assert_eq!(a.next_transition(7, 0.0), None);
+    // Client 0's schedule replays its (already alternating) event times.
+    let want: Vec<f64> = events.iter().filter(|e| e.client == 0).map(|e| e.at).collect();
+    assert_eq!(schedule(&mut a, 0, 64), want);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn build_rejects_bad_configs() {
+    let mut cfg = markov_cfg();
+    cfg.mean_online_secs = 0.0;
+    assert!(AvailabilityModel::build(&cfg, 4, 0).is_err());
+    let cfg = AvailabilityConfig {
+        kind: AvailabilityKind::Trace,
+        trace_path: None,
+        ..AvailabilityConfig::default()
+    };
+    assert!(AvailabilityModel::build(&cfg, 4, 0).is_err());
+    let cfg = AvailabilityConfig {
+        kind: AvailabilityKind::Trace,
+        trace_path: Some("/nonexistent/availability.jsonl".into()),
+        ..AvailabilityConfig::default()
+    };
+    assert!(AvailabilityModel::build(&cfg, 4, 0).is_err());
+}

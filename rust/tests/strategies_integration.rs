@@ -53,10 +53,39 @@ fn assert_report_sane(r: &RunReport, cfg: &RunConfig) {
         assert!(w[1].sim_secs >= w[0].sim_secs, "sim time went backwards");
     }
     for round in &r.rounds {
-        assert!(round.participants + round.dropped <= cfg.concurrency);
-        assert!(round.mean_train_loss.is_finite());
+        // (FedBuff accumulates drop counts between buffer flushes, so only
+        // participants is bounded by the concurrency here; the round-stepped
+        // strategies get the tighter bound below.)
+        assert!(round.participants <= cfg.concurrency);
+        match round.mean_train_loss {
+            Some(l) => {
+                assert!(l.is_finite());
+                assert!(round.participants > 0, "loss reported with no participants");
+            }
+            None => assert_eq!(round.participants, 0, "participants but no loss"),
+        }
     }
+    assert_eq!(r.online_fraction.len(), cfg.population);
+    for &f in &r.online_fraction {
+        assert!((0.0..=1.0).contains(&f), "online fraction {f} out of range");
+    }
+    assert!(r.events_processed > 0, "no simulation events processed");
     assert!(r.real_train_steps > 0, "no real PJRT training happened");
+}
+
+/// Round-stepped strategies (TimelyFL / SyncFL) sample once per round, so
+/// participants + all drops are bounded by the concurrency.
+fn assert_round_drops_bounded(r: &RunReport, cfg: &RunConfig) {
+    for round in &r.rounds {
+        assert!(
+            round.participants + round.dropped + round.avail_dropped <= cfg.concurrency,
+            "round {}: {} + {} + {} > concurrency",
+            round.round,
+            round.participants,
+            round.dropped,
+            round.avail_dropped
+        );
+    }
 }
 
 #[test]
@@ -64,7 +93,11 @@ fn timelyfl_runs_and_is_sane() {
     let cfg = tiny_cfg(StrategyKind::TimelyFl);
     let r = run(cfg.clone());
     assert_report_sane(&r, &cfg);
+    assert_round_drops_bounded(&r, &cfg);
     assert_eq!(r.strategy, "TimelyFL");
+    // Always-on default: every client online the whole run, no churn drops.
+    assert!(r.online_fraction.iter().all(|&f| f == 1.0));
+    assert_eq!(r.total_avail_drops(), 0);
 }
 
 #[test]
@@ -84,6 +117,7 @@ fn syncfl_runs_and_is_sane() {
     let cfg = tiny_cfg(StrategyKind::SyncFl);
     let r = run(cfg.clone());
     assert_report_sane(&r, &cfg);
+    assert_round_drops_bounded(&r, &cfg);
     // Without dropout every sampled client participates: mean rate is
     // exactly concurrency / population.
     let expected = cfg.concurrency as f64 / cfg.population as f64;
@@ -238,6 +272,106 @@ fn fedopt_adam_server_converges_on_vision() {
             p.mean_loss
         );
     }
+}
+
+fn markov_availability(mean_online: f64, mean_offline: f64) -> timelyfl::availability::AvailabilityConfig {
+    use timelyfl::availability::{AvailabilityConfig, AvailabilityKind};
+    AvailabilityConfig {
+        kind: AvailabilityKind::Markov,
+        mean_online_secs: mean_online,
+        mean_offline_secs: mean_offline,
+        dwell_sigma: 0.5,
+        ..AvailabilityConfig::default()
+    }
+}
+
+#[test]
+fn markov_churn_reduces_participation() {
+    // ~25% steady-state availability with dwells comparable to round times:
+    // participation must fall well below the always-on baseline, and the
+    // loss must be attributed to availability, not deadlines.
+    let base = {
+        let mut c = tiny_cfg(StrategyKind::TimelyFl);
+        c.rounds = 10;
+        c
+    };
+    let churn = {
+        let mut c = base.clone();
+        c.availability = markov_availability(200.0, 600.0);
+        c
+    };
+    let rb = run(base.clone());
+    let rc = run(churn.clone());
+    assert_report_sane(&rc, &churn);
+    assert_round_drops_bounded(&rc, &churn);
+    assert!(
+        rc.mean_online_fraction() < 0.6,
+        "online fraction {} not reduced by churn",
+        rc.mean_online_fraction()
+    );
+    assert!(
+        rc.mean_participation() < rb.mean_participation(),
+        "churn {} should reduce participation vs always-on {}",
+        rc.mean_participation(),
+        rb.mean_participation()
+    );
+}
+
+#[test]
+fn fedbuff_churn_still_aggregates() {
+    let mut cfg = tiny_cfg(StrategyKind::FedBuff);
+    cfg.rounds = 10;
+    // Short online dwells relative to FedBuff round times: clients churn
+    // out mid-training often enough to register.
+    cfg.availability = markov_availability(120.0, 240.0);
+    let r = run(cfg.clone());
+    assert_report_sane(&r, &cfg);
+    assert!(
+        r.mean_online_fraction() < 0.8,
+        "online fraction {} not reduced",
+        r.mean_online_fraction()
+    );
+    // The run must still aggregate k updates per round despite churn.
+    let k = cfg.k_target();
+    for round in &r.rounds {
+        assert!(round.participants >= k, "buffer flushed below the goal");
+    }
+}
+
+#[test]
+fn diurnal_availability_runs_all_strategies() {
+    use timelyfl::availability::AvailabilityKind;
+    for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+        let mut cfg = tiny_cfg(strat);
+        cfg.rounds = 6;
+        cfg.availability.kind = AvailabilityKind::Diurnal;
+        cfg.availability.diurnal_period_secs = 2000.0;
+        cfg.availability.diurnal_duty = 0.5;
+        cfg.availability.diurnal_shards = 4;
+        let r = run(cfg.clone());
+        assert_report_sane(&r, &cfg);
+        // Over whole periods the population-mean online fraction tracks the
+        // duty cycle; runs end mid-period, so keep the bracket loose.
+        let f = r.mean_online_fraction();
+        assert!(
+            (0.2..=0.85).contains(&f),
+            "{}: diurnal online fraction {f} implausible for duty 0.5",
+            strat.name()
+        );
+    }
+}
+
+#[test]
+fn churn_determinism_by_seed() {
+    let mut cfg = tiny_cfg(StrategyKind::TimelyFl);
+    cfg.rounds = 6;
+    cfg.availability = markov_availability(300.0, 300.0);
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert_eq!(a.participation, b.participation);
+    assert_eq!(a.online_fraction, b.online_fraction);
+    assert_eq!(a.total_avail_drops(), b.total_avail_drops());
+    assert!((a.sim_secs - b.sim_secs).abs() < 1e-9);
 }
 
 #[test]
