@@ -1,5 +1,6 @@
 //! "Figure 10" (new scenario, beyond the paper) — participation under
-//! client churn: all three strategies swept across mean online-fraction.
+//! client churn: every registered strategy swept across mean
+//! online-fraction.
 //!
 //! The paper's participation claim (Figs. 1/5: +21.1% mean participation
 //! vs FedBuff) is measured against an always-reachable population. Here the
@@ -11,6 +12,9 @@
 //! in-flight updates), while TimelyFL re-samples from whoever is online and
 //! right-sizes their workload.
 //!
+//! Strategies come from `coordinator::registry` — a newly-registered
+//! strategy (e.g. SemiAsync) joins the sweep with zero bench changes.
+//!
 //! Prints one row per (online-fraction, strategy) with the availability
 //! columns (online_frac, avail_drops, deadline_drops) plus the per-setting
 //! TimelyFL-vs-FedBuff participation gap.
@@ -18,7 +22,8 @@
 use anyhow::Result;
 use timelyfl::availability::AvailabilityKind;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::registry;
 use timelyfl::metrics::report::Table;
 use timelyfl::metrics::RunReport;
 
@@ -51,9 +56,9 @@ fn main() -> Result<()> {
 
     for &frac in FRACTIONS {
         let mut reports: Vec<RunReport> = Vec::new();
-        for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+        for info in registry::STRATEGIES {
             let mut cfg = RunConfig::preset("cifar_fedavg")?;
-            cfg.strategy = strat;
+            cfg.strategy = info.name.to_string();
             cfg.rounds = bench.scale.rounds(60);
             cfg.eval_every = 20;
             if frac < 1.0 {
@@ -64,7 +69,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "  online~{:.0}% {} (rounds={}) ...",
                 frac * 100.0,
-                strat.name(),
+                info.name,
                 cfg.rounds
             );
             let r = bench.run(cfg)?;
@@ -87,8 +92,15 @@ fn main() -> Result<()> {
             ));
             reports.push(r);
         }
-        let timely = reports[0].mean_participation();
-        let fedbuff = reports[1].mean_participation();
+        let by_name = |name: &str| {
+            reports
+                .iter()
+                .find(|r| r.strategy == name)
+                .map(|r| r.mean_participation())
+                .expect("registry strategy missing from reports")
+        };
+        let timely = by_name("TimelyFL");
+        let fedbuff = by_name("FedBuff");
         let rel = (timely - fedbuff) / fedbuff.max(1e-9) * 100.0;
         gaps.push((frac, timely - fedbuff, rel));
     }

@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::report::{participation_table, Table};
 use timelyfl::metrics::RunReport;
 
@@ -30,12 +30,12 @@ fn main() -> Result<()> {
     let bench = Bench::new()?;
 
     let mut reports: Vec<RunReport> = Vec::new();
-    for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+    for strat in ["TimelyFL", "FedBuff", "SyncFL"] {
         let mut cfg = RunConfig::preset("cifar_fedavg")?;
-        cfg.strategy = strat;
+        cfg.strategy = strat.to_string();
         cfg.rounds = bench.scale.rounds(150);
         cfg.eval_every = 50;
-        eprintln!("  {} (rounds={}) ...", strat.name(), cfg.rounds);
+        eprintln!("  {strat} (rounds={}) ...", cfg.rounds);
         reports.push(bench.run(cfg)?);
     }
     let [timely, fedbuff, syncfl] = &reports[..] else { unreachable!() };

@@ -9,11 +9,11 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::RunReport;
 
-const STRATEGIES: [StrategyKind; 3] =
-    [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl];
+/// Fig. 1c/4 curve set (registry names; first letters label the plot).
+const STRATEGIES: [&str; 3] = ["TimelyFL", "FedBuff", "SyncFL"];
 
 /// Coarse terminal plot: metric vs sim-hours, one letter per strategy.
 fn text_plot(reports: &[RunReport], higher_better: bool) -> String {
@@ -73,13 +73,13 @@ fn main() -> Result<()> {
         let mut reports = Vec::new();
         for strat in STRATEGIES {
             let mut cfg = RunConfig::preset(preset)?;
-            cfg.strategy = strat;
+            cfg.strategy = strat.to_string();
             cfg.rounds = bench.scale.rounds(rounds);
             cfg.eval_every = 10;
-            eprintln!("  {} (rounds={}) ...", strat.name(), cfg.rounds);
+            eprintln!("  {strat} (rounds={}) ...", cfg.rounds);
             let report = bench.run(cfg)?;
             benchkit::write_result(
-                &format!("fig4_curve_{label}_{}.csv", strat.name().to_lowercase()),
+                &format!("fig4_curve_{label}_{}.csv", strat.to_lowercase()),
                 &report.curve_csv(),
             );
             reports.push(report);

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 
 const TARGET: f64 = 0.40;
@@ -34,16 +34,16 @@ fn main() -> Result<()> {
     for alpha in [0.1, 0.5, 1.0] {
         let mut times = Vec::new();
         let mut finals = Vec::new();
-        for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff] {
+        for strat in ["TimelyFL", "FedBuff"] {
             let mut cfg = RunConfig::preset("cifar_fedavg")?;
-            cfg.strategy = strat;
+            cfg.strategy = strat.to_string();
             cfg.dirichlet_alpha = alpha;
             cfg.rounds = bench.scale.rounds(180);
             cfg.eval_every = 10;
-            eprintln!("  alpha={alpha} {} (rounds={}) ...", strat.name(), cfg.rounds);
+            eprintln!("  alpha={alpha} {strat} (rounds={}) ...", cfg.rounds);
             let r = bench.run(cfg)?;
             benchkit::write_result(
-                &format!("fig6_curve_a{alpha}_{}.csv", strat.name().to_lowercase()),
+                &format!("fig6_curve_a{alpha}_{}.csv", strat.to_lowercase()),
                 &r.curve_csv(),
             );
             times.push(r.time_to_target(TARGET, true));

@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 use timelyfl::metrics::RunReport;
 
@@ -74,12 +74,12 @@ const CASES: &[Case] = &[
     },
 ];
 
-const STRATEGIES: [StrategyKind; 3] =
-    [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl];
+/// The paper's Table 1 column layout (registry names, fixed order).
+const STRATEGIES: [&str; 3] = ["TimelyFL", "FedBuff", "SyncFL"];
 
-fn run_case(bench: &Bench, case: &Case, strategy: StrategyKind) -> Result<RunReport> {
+fn run_case(bench: &Bench, case: &Case, strategy: &str) -> Result<RunReport> {
     let mut cfg = RunConfig::preset(case.preset)?;
-    cfg.strategy = strategy;
+    cfg.strategy = strategy.to_string();
     cfg.rounds = bench.scale.rounds(case.rounds);
     // SyncFL pays the straggler tax in *simulated* time, not wall time, so
     // the same round budget is fair across strategies.
@@ -89,7 +89,7 @@ fn run_case(bench: &Bench, case: &Case, strategy: StrategyKind) -> Result<RunRep
         "  {} / {} / {} (rounds<={}) ...",
         case.label,
         case.preset.rsplit('_').next().unwrap(),
-        strategy.name(),
+        strategy,
         cfg.rounds
     );
     bench.run(cfg)
@@ -118,7 +118,7 @@ fn main() -> Result<()> {
         let agg = case.preset.rsplit('_').next().unwrap();
         let reports: Vec<RunReport> = STRATEGIES
             .iter()
-            .map(|&s| run_case(&bench, case, s))
+            .map(|s| run_case(&bench, case, s))
             .collect::<Result<_>>()?;
 
         for (tname, tval) in case.targets {

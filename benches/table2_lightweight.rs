@@ -8,13 +8,13 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 use timelyfl::metrics::RunReport;
 
 const TARGETS: [(&str, f64); 2] = [("50%", 0.50), ("65%", 0.65)];
-const STRATEGIES: [StrategyKind; 3] =
-    [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl];
+/// The paper's Table 2 column layout (registry names, fixed order).
+const STRATEGIES: [&str; 3] = ["TimelyFL", "FedBuff", "SyncFL"];
 
 fn main() -> Result<()> {
     benchkit::banner(
@@ -36,13 +36,13 @@ fn main() -> Result<()> {
         let agg = preset.rsplit('_').next().unwrap();
         let reports: Vec<RunReport> = STRATEGIES
             .iter()
-            .map(|&s| {
+            .map(|s| {
                 let mut cfg = RunConfig::preset(preset)?;
-                cfg.strategy = s;
+                cfg.strategy = s.to_string();
                 cfg.rounds = bench.scale.rounds(220);
                 cfg.eval_every = 10;
                 cfg.target_metric = Some(TARGETS[1].1);
-                eprintln!("  {preset} / {} (rounds<={}) ...", s.name(), cfg.rounds);
+                eprintln!("  {preset} / {s} (rounds<={}) ...", cfg.rounds);
                 bench.run(cfg)
             })
             .collect::<Result<_>>()?;

@@ -13,19 +13,24 @@
 //! --rounds N --strategy timelyfl|fedbuff|sync --out FILE.
 
 use anyhow::Result;
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::registry;
 use timelyfl::coordinator::Simulation;
 use timelyfl::simtime::hours;
 
 fn main() -> Result<()> {
     let mut rounds = 20usize;
-    let mut strategy = StrategyKind::TimelyFl;
+    let mut strategy = String::from("TimelyFL");
     let mut out = String::from("results/e2e_loss_curve.csv");
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--rounds" => rounds = args.next().expect("--rounds N").parse()?,
-            "--strategy" => strategy = StrategyKind::parse(&args.next().expect("--strategy S"))?,
+            "--strategy" => {
+                strategy = registry::resolve(&args.next().expect("--strategy S"))?
+                    .name
+                    .to_string()
+            }
             "--out" => out = args.next().expect("--out FILE"),
             other => anyhow::bail!("unknown flag {other:?}"),
         }
@@ -48,7 +53,7 @@ fn main() -> Result<()> {
 
     eprintln!(
         "end-to-end: {} on e2e_lm ({} rounds, population {}, concurrency {})",
-        cfg.strategy.name(),
+        cfg.strategy,
         cfg.rounds,
         cfg.population,
         cfg.concurrency

@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::Bench;
-use timelyfl::config::{RunConfig, StrategyKind};
+use timelyfl::config::RunConfig;
 use timelyfl::metrics::report::{fmt_hours, Table};
 
 const TARGET: f64 = 0.35;
@@ -29,20 +29,20 @@ fn main() -> Result<()> {
     ]);
 
     for spread in [1.5, 6.0, 13.3, 50.0] {
-        for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+        for strat in ["TimelyFL", "FedBuff", "SyncFL"] {
             let mut cfg = RunConfig::preset("cifar_fedavg")?;
-            cfg.strategy = strat;
+            cfg.strategy = strat.to_string();
             cfg.population = 48;
             cfg.concurrency = 24;
             cfg.rounds = bench.scale.rounds(240);
             cfg.eval_every = 10;
             cfg.fleet.compute_spread = spread;
             cfg.target_metric = Some(TARGET);
-            eprintln!("spread={spread} {} ...", strat.name());
+            eprintln!("spread={spread} {strat} ...");
             let r = bench.run(cfg)?;
             t.row(vec![
                 format!("{spread}x"),
-                strat.name().into(),
+                strat.into(),
                 fmt_hours(r.time_to_target(TARGET, true)),
                 format!("{:.3}", r.mean_participation()),
                 format!("{:.3}", r.best_metric(true).unwrap_or(0.0)),

@@ -29,8 +29,9 @@ fn main() -> Result<()> {
     //    federated dataset and the device fleet.
     let sim = Simulation::new(cfg, "artifacts")?;
 
-    // 3. Run: the strategy driver (TimelyFL here) owns the whole loop —
-    //    probe, schedule, train (real PJRT executions), aggregate.
+    // 3. Run: the registry resolves the configured strategy (TimelyFL
+    //    here) and the shared SimEngine drives the whole loop — probe,
+    //    schedule, train (real PJRT executions), aggregate.
     let report = sim.run()?;
 
     // 4. Inspect.

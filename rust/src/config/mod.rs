@@ -9,41 +9,15 @@ use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityConfig;
 use crate::devices::FleetConfig;
 
-/// Which FL strategy drives the run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StrategyKind {
-    /// The paper's contribution (Algorithm 1).
-    TimelyFl,
-    /// Buffered asynchronous FL baseline (Nguyen et al.).
-    FedBuff,
-    /// Fully synchronous FedAvg/FedOpt baseline.
-    SyncFl,
-}
-
-impl StrategyKind {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "timelyfl" | "timely" => StrategyKind::TimelyFl,
-            "fedbuff" => StrategyKind::FedBuff,
-            "syncfl" | "sync" => StrategyKind::SyncFl,
-            other => anyhow::bail!("unknown strategy {other:?}"),
-        })
-    }
-    pub fn name(&self) -> &'static str {
-        match self {
-            StrategyKind::TimelyFl => "TimelyFL",
-            StrategyKind::FedBuff => "FedBuff",
-            StrategyKind::SyncFl => "SyncFL",
-        }
-    }
-}
-
 /// Full specification of one simulated FL run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Model-zoo name (must exist in the artifact manifest).
     pub model: String,
-    pub strategy: StrategyKind,
+    /// FL strategy name, resolved through `coordinator::registry` (any
+    /// registered name or alias, case-insensitive; the parser canonicalizes
+    /// so `RunReport::strategy` comparisons stay exact).
+    pub strategy: String,
 
     /// Total client population.
     pub population: usize,
@@ -122,7 +96,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             model: "vision".into(),
-            strategy: StrategyKind::TimelyFl,
+            strategy: "TimelyFL".into(),
             population: 128,
             concurrency: 32,
             k_fraction: 0.5,
@@ -241,6 +215,7 @@ impl RunConfig {
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
+        crate::coordinator::registry::resolve(&self.strategy)?;
         anyhow::ensure!(self.population > 0, "population must be positive");
         anyhow::ensure!(
             self.concurrency > 0 && self.concurrency <= self.population,
@@ -305,10 +280,13 @@ mod tests {
     }
 
     #[test]
-    fn strategy_parse() {
-        assert_eq!(StrategyKind::parse("TimelyFL").unwrap(), StrategyKind::TimelyFl);
-        assert_eq!(StrategyKind::parse("fedbuff").unwrap(), StrategyKind::FedBuff);
-        assert_eq!(StrategyKind::parse("sync").unwrap(), StrategyKind::SyncFl);
-        assert!(StrategyKind::parse("x").is_err());
+    fn strategy_validated_through_registry() {
+        let mut c = RunConfig::default();
+        for name in crate::coordinator::registry::names() {
+            c.strategy = name.to_string();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        c.strategy = "x".into();
+        assert!(c.validate().is_err());
     }
 }

@@ -4,16 +4,17 @@
 
 use anyhow::{Context, Result};
 
-use super::{RunConfig, StrategyKind};
+use super::RunConfig;
 use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityKind;
+use crate::coordinator::registry;
 
 /// Parse one `key = value` line into an override on `cfg`.
 pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
     let v = value.trim().trim_matches('"');
     match key.trim() {
         "model" => cfg.model = v.to_string(),
-        "strategy" => cfg.strategy = StrategyKind::parse(v)?,
+        "strategy" => cfg.strategy = registry::resolve(v)?.name.to_string(),
         "population" => cfg.population = v.parse()?,
         "concurrency" => cfg.concurrency = v.parse()?,
         "k_fraction" => cfg.k_fraction = v.parse()?,
@@ -123,7 +124,7 @@ mod tests {
              max_staleness = 10\n",
         )
         .unwrap();
-        assert_eq!(cfg.strategy, StrategyKind::FedBuff);
+        assert_eq!(cfg.strategy, "FedBuff");
         assert_eq!(cfg.rounds, 42);
         assert_eq!(cfg.client_lr, 0.5);
         assert!(!cfg.adaptive);
@@ -165,6 +166,19 @@ mod tests {
         assert_eq!(cfg.model, "text");
         assert!(apply_cli(&mut cfg, "no_equals").is_err());
         assert!(apply_cli(&mut cfg, "bogus_key=1").is_err());
+    }
+
+    #[test]
+    fn strategy_aliases_canonicalize() {
+        let mut cfg = RunConfig::default();
+        apply_cli(&mut cfg, "strategy=sync").unwrap();
+        assert_eq!(cfg.strategy, "SyncFL");
+        apply_cli(&mut cfg, "strategy=seafl").unwrap();
+        assert_eq!(cfg.strategy, "SemiAsync");
+        apply_cli(&mut cfg, "strategy=TIMELYFL").unwrap();
+        assert_eq!(cfg.strategy, "TimelyFL");
+        let err = apply_cli(&mut cfg, "strategy=bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("TimelyFL"), "error lists known names");
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! `SimEngine` — the shared run lifecycle behind every FL strategy, plus
+//! the `Strategy` hook traits.
+//!
+//! The engine owns everything the three original drivers duplicated: the
+//! seeded RNG tree (one master stream + one forked stream per client), the
+//! availability model, the `simtime::EventQueue` clock, online-client
+//! sampling, idle-until-transition waits, churn-vs-deadline drop
+//! attribution, eval/stop handling, the run-event stream, and
+//! `Recorder::finish`. Strategies implement a small hook surface:
+//!
+//! - **round-stepped** protocols (TimelyFL, SyncFL) implement
+//!   [`RoundStrategy::run_round`]: one aggregation round over a cohort the
+//!   engine already sampled from the currently-online population. The
+//!   engine drives the loop via [`SimEngine::drive_rounds`].
+//! - **event-driven** protocols (FedBuff, SemiAsync) implement
+//!   [`EventStrategy`]: the engine seeds and chains availability
+//!   transitions, cancels in-flight work on churn, validates finish
+//!   generations, and routes each event to a hook via
+//!   [`SimEngine::drive_events`].
+//!
+//! Both drivers preserve the pre-refactor drivers' exact RNG draw order and
+//! event schedule, so a ported strategy's `RunReport` is bit-identical to
+//! its hand-rolled predecessor (locked by the golden tests in
+//! `rust/tests/strategies_integration.rs`).
+
+use anyhow::Result;
+
+use super::trainer::train_client;
+use super::{local_time, Recorder, Simulation};
+use crate::availability::{AvailabilityModel, SEED_SALT};
+use crate::metrics::events::{DropCause, EventSink, RunEvent};
+use crate::metrics::RunReport;
+use crate::model::{ParamVec, Update};
+use crate::runtime::manifest::RatioMeta;
+use crate::simtime::{EventQueue, SimTime};
+use crate::util::rng::Rng;
+
+/// A dispatched client finishing local training. The update is computed
+/// eagerly at dispatch time (it only depends on the base snapshot, so this
+/// is equivalent and keeps the event payload self-contained); `gen` is the
+/// dispatch generation the finish belongs to — a mid-training offline
+/// transition bumps the client's generation, invalidating the pending
+/// finish.
+pub struct ClientFinish {
+    pub client: usize,
+    pub gen: u64,
+    /// Global model version the client trained against (for staleness).
+    pub base_version: u64,
+    pub update: Update,
+    pub mean_loss: f64,
+}
+
+/// Everything that can move the engine's clock.
+pub enum EngineEvent {
+    /// A round boundary or idle-wake (scheduled by the round-stepped loop).
+    Tick,
+    /// `client`'s availability state flips at this timestamp; the next
+    /// transition is chained onto the queue when this one is processed.
+    Transition { client: usize },
+    /// A dispatched client's simulated local training completes.
+    Finish(ClientFinish),
+    /// A strategy-scheduled timer (deadline-gated protocols re-arm it from
+    /// [`EventStrategy::on_alarm`]).
+    Alarm,
+}
+
+/// What a round-stepped strategy hands back for one aggregation round.
+pub struct RoundOutcome {
+    /// Simulated seconds the round occupied; the engine advances the clock
+    /// by this (as a popped `Tick` event — the clock only moves through the
+    /// queue).
+    pub advance_secs: f64,
+    /// Clients whose updates entered this aggregation.
+    pub participants: Vec<usize>,
+    /// Mean client-reported train loss; `None` when nobody delivered.
+    pub mean_train_loss: Option<f64>,
+}
+
+/// One round's working context. Borrows the engine mutably for the round's
+/// duration; `sampled` is the cohort the engine drew (uniformly, size
+/// `min(concurrency, online)`) from the currently-online population, so
+/// strategies never re-implement sampling. Split-borrow note: take
+/// `let eng = &mut *ctx.eng;` first — `ctx.sampled` stays readable through
+/// the disjoint field.
+pub struct RoundCtx<'e, 'a> {
+    /// Index of the aggregation round about to complete.
+    pub round: usize,
+    /// Simulated time at the round's start.
+    pub now: SimTime,
+    /// The sampled cohort (client ids).
+    pub sampled: &'e [usize],
+    pub eng: &'e mut SimEngine<'a>,
+}
+
+/// Hook surface for round-stepped protocols (TimelyFL, SyncFL).
+pub trait RoundStrategy {
+    /// Run one aggregation round over `ctx.sampled`. Report lost clients
+    /// through [`SimEngine::drop_client`]; the engine folds them into the
+    /// round record.
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome>;
+
+    /// Current global parameters — the engine evaluates these on the
+    /// configured cadence.
+    fn global_params(&self) -> &ParamVec;
+}
+
+/// Hook surface for event-driven protocols (FedBuff-shaped: a pool of
+/// `concurrency` in-flight clients, updates landing asynchronously). The
+/// engine owns busy/generation bookkeeping and churn cancellation; hooks
+/// decide dispatch policy, buffering, and when a round completes (via
+/// [`SimEngine::complete_round`]).
+pub trait EventStrategy {
+    /// Called once at t=0 (after availability transitions are seeded):
+    /// dispatch the initial cohort.
+    fn on_start(&mut self, eng: &mut SimEngine) -> Result<()>;
+
+    /// `client` just flipped online. It is not dispatched automatically.
+    fn on_client_online(&mut self, eng: &mut SimEngine, client: usize) -> Result<()>;
+
+    /// A concurrency slot was freed by churn cancellation (the lost update
+    /// is already attributed); refill it if the protocol wants to.
+    fn on_slot_freed(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()>;
+
+    /// A generation-valid finish arrived (its slot is already freed).
+    fn on_finish(&mut self, eng: &mut SimEngine, now: SimTime, fin: ClientFinish) -> Result<()>;
+
+    /// A strategy-scheduled [`EngineEvent::Alarm`] fired.
+    fn on_alarm(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        let _ = (eng, now);
+        Ok(())
+    }
+}
+
+/// A registered FL strategy: constructed per run by the registry
+/// (`coordinator::registry`), then handed the engine.
+pub trait Strategy {
+    /// Canonical display name; also the registry key and what
+    /// `RunReport::strategy` carries.
+    fn name(&self) -> &'static str;
+
+    /// Execute the full run — typically one line delegating to
+    /// [`SimEngine::drive_rounds`] or [`SimEngine::drive_events`].
+    fn run(&mut self, eng: &mut SimEngine) -> Result<()>;
+}
+
+/// Shared per-run state + lifecycle driver. One engine drives one run.
+pub struct SimEngine<'a> {
+    pub sim: &'a Simulation,
+    /// Master RNG stream (sampling, round conditions, dropout draws).
+    pub rng: Rng,
+    /// Per-client forked streams (data order inside local training).
+    pub client_rngs: Vec<Rng>,
+    pub avail: AvailabilityModel,
+    pub events: EventQueue<EngineEvent>,
+    pub recorder: Recorder,
+    busy: Vec<bool>,
+    gens: Vec<u64>,
+    in_flight: usize,
+    completed_rounds: usize,
+    /// Drop attribution accumulated since the last completed round.
+    dropped_pending: usize,
+    avail_dropped_pending: usize,
+    stop: bool,
+    sink: Option<&'a mut dyn EventSink>,
+}
+
+impl<'a> SimEngine<'a> {
+    /// Build the engine exactly as every pre-refactor driver did: master
+    /// RNG from `cfg.seed`, one forked stream per client, availability
+    /// model on the salted seed (its draws never perturb sampling).
+    pub fn new(
+        sim: &'a Simulation,
+        sink: Option<&'a mut dyn EventSink>,
+    ) -> Result<SimEngine<'a>> {
+        let cfg = &sim.cfg;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let client_rngs: Vec<Rng> = (0..cfg.population).map(|i| rng.fork(i as u64)).collect();
+        let avail =
+            AvailabilityModel::build(&cfg.availability, cfg.population, cfg.seed ^ SEED_SALT)?;
+        Ok(SimEngine {
+            sim,
+            rng,
+            client_rngs,
+            avail,
+            events: EventQueue::new(),
+            recorder: Recorder::new(cfg.population),
+            busy: vec![false; cfg.population],
+            gens: vec![0; cfg.population],
+            in_flight: 0,
+            completed_rounds: 0,
+            dropped_pending: 0,
+            avail_dropped_pending: 0,
+            stop: false,
+            sink,
+        })
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.events.now()
+    }
+
+    pub fn completed_rounds(&self) -> usize {
+        self.completed_rounds
+    }
+
+    /// Is `client` currently dispatched?
+    pub fn is_busy(&self, client: usize) -> bool {
+        self.busy[client]
+    }
+
+    /// Clients currently training (bounded by `cfg.concurrency`).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Ask the driver loop to end after the current hook returns (the
+    /// engine arms this itself when the eval target / time budget is hit).
+    pub fn request_stop(&mut self) {
+        self.stop = true;
+    }
+
+    fn emit(&mut self, ev: RunEvent) {
+        if let Some(sink) = self.sink.as_deref_mut() {
+            sink.emit(&ev);
+        }
+    }
+
+    /// Attribute one lost client update and emit its `client-dropped`
+    /// record. Folded into the NEXT completed round's attribution (for
+    /// round-stepped strategies that is the current round).
+    pub fn drop_client(&mut self, client: usize, cause: DropCause) {
+        match cause {
+            DropCause::Availability => self.avail_dropped_pending += 1,
+            DropCause::Deadline => self.dropped_pending += 1,
+        }
+        let ev = RunEvent::ClientDropped {
+            client,
+            sim_secs: self.events.now(),
+            cause,
+        };
+        self.emit(ev);
+    }
+
+    /// When the whole population is momentarily offline, advance the clock
+    /// (as an event) to the next availability transition. `false` = no
+    /// transition will ever come — permanently offline, end gracefully.
+    fn idle_until_transition(&mut self) -> bool {
+        let Some(t) = self.avail.earliest_transition(self.events.now()) else {
+            return false;
+        };
+        self.events.schedule_at(t, EngineEvent::Tick);
+        self.events.pop();
+        true
+    }
+
+    /// Record one completed aggregation round at `clock`: consumes the
+    /// pending drop attribution, emits `round-complete` (and `eval-point`
+    /// when the cadence fires), evaluates `global`, and arms the stop flag
+    /// once the target metric or sim-time budget is hit.
+    pub fn complete_round(
+        &mut self,
+        clock: SimTime,
+        participant_ids: &[usize],
+        mean_train_loss: Option<f64>,
+        global: &ParamVec,
+    ) -> Result<()> {
+        let sim = self.sim;
+        let round = self.completed_rounds;
+        let dropped = std::mem::take(&mut self.dropped_pending);
+        let avail_dropped = std::mem::take(&mut self.avail_dropped_pending);
+        self.recorder.record_round(
+            round,
+            clock,
+            participant_ids,
+            dropped,
+            avail_dropped,
+            mean_train_loss,
+        );
+        self.emit(RunEvent::RoundComplete {
+            round,
+            sim_secs: clock,
+            participants: participant_ids.len(),
+            dropped,
+            avail_dropped,
+            mean_train_loss,
+        });
+        if let Some(p) = self.recorder.maybe_eval(sim, round, clock, global)? {
+            self.emit(RunEvent::EvalPoint {
+                round: p.round,
+                sim_secs: p.sim_secs,
+                mean_loss: p.mean_loss,
+                metric: p.metric,
+            });
+        }
+        self.completed_rounds += 1;
+        if self.recorder.should_stop(sim, clock) {
+            self.stop = true;
+        }
+        Ok(())
+    }
+
+    /// The shared round-stepped loop: sample an online cohort, run the
+    /// strategy's round, advance the clock by the round's span, record /
+    /// eval / stop. Idles (as events) across whole-population offline gaps.
+    pub fn drive_rounds(&mut self, strat: &mut dyn RoundStrategy) -> Result<()> {
+        let sim = self.sim;
+        let cfg = &sim.cfg;
+        while self.completed_rounds < cfg.rounds {
+            let now = self.events.now();
+            // When everyone is online, `online` is exactly 0..population and
+            // index-sampling from it is bit-identical to sampling the whole
+            // population (the always-on compatibility path).
+            let online = self.avail.online_clients(now);
+            if online.is_empty() {
+                if !self.idle_until_transition()
+                    || self.recorder.should_stop(sim, self.events.now())
+                {
+                    break;
+                }
+                continue;
+            }
+            let want = cfg.concurrency.min(online.len());
+            let sampled: Vec<usize> = self
+                .rng
+                .sample_without_replacement(online.len(), want)
+                .into_iter()
+                .map(|i| online[i])
+                .collect();
+
+            let round = self.completed_rounds;
+            let outcome = strat.run_round(&mut RoundCtx {
+                round,
+                now,
+                sampled: &sampled,
+                eng: &mut *self,
+            })?;
+
+            // The round boundary is an event popped off the queue, so all
+            // strategies share one clock discipline.
+            self.events.schedule_in(outcome.advance_secs, EngineEvent::Tick);
+            let (clock, _) = self.events.pop().expect("round boundary was scheduled");
+            self.complete_round(
+                clock,
+                &outcome.participants,
+                outcome.mean_train_loss,
+                strat.global_params(),
+            )?;
+            if self.stop {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// The shared event-driven loop: seeds + chains availability
+    /// transitions, cancels in-flight updates on churn, validates finish
+    /// generations, and routes everything else to the strategy's hooks.
+    pub fn drive_events(&mut self, strat: &mut dyn EventStrategy) -> Result<()> {
+        let sim = self.sim;
+        let cfg = &sim.cfg;
+        // Seed the queue with each client's first availability transition
+        // (the chain re-schedules itself as transitions are processed).
+        // Always-on schedules nothing.
+        for c in 0..cfg.population {
+            if let Some(t) = self.avail.next_transition(c, 0.0) {
+                self.events.schedule_at(t, EngineEvent::Transition { client: c });
+            }
+        }
+        strat.on_start(self)?;
+
+        while self.completed_rounds < cfg.rounds {
+            let Some((now, ev)) = self.events.pop() else {
+                // A drained queue under always-on means the dispatch
+                // invariant broke — that is a bug. Under churn it is a
+                // legitimate end state (population permanently offline).
+                if self.avail.is_always_on() {
+                    anyhow::bail!(
+                        "event queue drained with {} rounds done",
+                        self.completed_rounds
+                    );
+                }
+                break;
+            };
+            // Budget guard at the loop top, not only at round completion: a
+            // heavily-churned population can keep transitions (and real
+            // training dispatches) flowing forever without ever filling a
+            // buffer. No-op under the default infinite budget.
+            if self.recorder.should_stop(sim, now) {
+                break;
+            }
+            match ev {
+                // Only the round-stepped loop schedules Ticks; tolerate a
+                // stray one (it already advanced the clock) rather than
+                // aborting a run.
+                EngineEvent::Tick => {}
+                EngineEvent::Transition { client } => {
+                    let next = self.avail.next_transition(client, now);
+                    if let Some(t) = next {
+                        self.events.schedule_at(t, EngineEvent::Transition { client });
+                    }
+                    // Read the post-transition state at the segment
+                    // midpoint: the state is constant until the next
+                    // transition, and the midpoint dodges ulp-level
+                    // ambiguity of evaluating the diurnal gate exactly at a
+                    // boundary instant.
+                    let online_now = match next {
+                        Some(t) => self.avail.is_available(client, (now + t) / 2.0),
+                        None => self.avail.is_available(client, now),
+                    };
+                    self.emit(RunEvent::AvailabilityTransition {
+                        client,
+                        sim_secs: now,
+                        online: online_now,
+                    });
+                    if online_now {
+                        strat.on_client_online(self, client)?;
+                    } else if self.busy[client] {
+                        // Went offline mid-training: the in-flight update is
+                        // lost with it.
+                        self.cancel_in_flight(client);
+                        strat.on_slot_freed(self, now)?;
+                    }
+                }
+                EngineEvent::Finish(fin) => {
+                    if fin.gen != self.gens[fin.client] {
+                        continue; // cancelled by an offline transition
+                    }
+                    self.busy[fin.client] = false;
+                    self.in_flight -= 1;
+                    strat.on_finish(self, now, fin)?;
+                    if self.stop {
+                        break;
+                    }
+                }
+                EngineEvent::Alarm => {
+                    strat.on_alarm(self, now)?;
+                    if self.stop {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Invalidate `client`'s pending finish (generation bump), return its
+    /// concurrency slot, and attribute the loss to availability churn.
+    fn cancel_in_flight(&mut self, client: usize) {
+        self.gens[client] += 1;
+        self.busy[client] = false;
+        self.in_flight -= 1;
+        self.drop_client(client, DropCause::Availability);
+    }
+
+    /// Dispatch one client for event-driven protocols: train eagerly on
+    /// `base` and schedule the finish event at the simulated completion
+    /// time. Callers pick only currently-online, non-busy clients.
+    pub fn dispatch(
+        &mut self,
+        client: usize,
+        epochs: usize,
+        ratio: &RatioMeta,
+        base: &ParamVec,
+        base_version: u64,
+    ) -> Result<()> {
+        let sim = self.sim;
+        let cfg = &sim.cfg;
+        debug_assert!(!self.busy[client], "client {client} dispatched twice");
+        self.busy[client] = true;
+        self.in_flight += 1;
+        let cond = sim.fleet.round_conditions(&mut self.rng);
+        let t = local_time::truth(&sim.fleet.devices[client], &cond, cfg.sim_model_bytes);
+        // Compute scales with the nominal compiled ratio, upload with the
+        // realized trainable fraction; both are exactly 1.0 for full-model
+        // dispatches.
+        let duration = t.round_secs(epochs as f64, ratio.ratio, ratio.trainable_fraction);
+        let outcome = train_client(
+            &sim.runtime,
+            &sim.dataset,
+            client,
+            base,
+            ratio,
+            epochs,
+            cfg.steps_per_epoch,
+            cfg.client_lr,
+            &mut self.client_rngs[client],
+        )?;
+        self.events.schedule_in(
+            duration,
+            EngineEvent::Finish(ClientFinish {
+                client,
+                gen: self.gens[client],
+                base_version,
+                update: outcome.update,
+                mean_loss: outcome.mean_loss,
+            }),
+        );
+        Ok(())
+    }
+
+    /// Full-model [`SimEngine::dispatch`] with the shared
+    /// `fedbuff_local_epochs` setting — the common case for buffered
+    /// asynchronous protocols.
+    pub fn dispatch_full(
+        &mut self,
+        client: usize,
+        base: &ParamVec,
+        base_version: u64,
+    ) -> Result<()> {
+        let sim = self.sim;
+        let full = sim
+            .runtime
+            .meta
+            .ratio_exact(1.0)
+            .expect("full ratio always compiled");
+        self.dispatch(client, sim.cfg.fedbuff_local_epochs, full, base, base_version)
+    }
+
+    /// Currently-idle, currently-online clients — the slot-refill pool for
+    /// event-driven dispatch policies.
+    pub fn idle_online_clients(&mut self, now: SimTime) -> Vec<usize> {
+        (0..self.sim.cfg.population)
+            .filter(|&i| !self.busy[i] && self.avail.is_available(i, now))
+            .collect()
+    }
+
+    /// Close out the run: absorb any post-round drop tail and build the
+    /// final report.
+    pub fn finish(self, strategy_name: &str) -> RunReport {
+        let SimEngine {
+            sim,
+            mut recorder,
+            mut avail,
+            events,
+            completed_rounds,
+            dropped_pending,
+            avail_dropped_pending,
+            ..
+        } = self;
+        recorder.absorb_tail_drops(dropped_pending, avail_dropped_pending);
+        recorder.finish(
+            strategy_name,
+            sim,
+            events.now(),
+            completed_rounds,
+            events.events_processed(),
+            &mut avail,
+        )
+    }
+}

@@ -1,5 +1,5 @@
 //! FedBuff baseline (Nguyen et al. 2021 / PAPAYA) — buffered asynchronous
-//! FL, event-driven.
+//! FL, as an [`EventStrategy`].
 //!
 //! `n` clients (the training concurrency) are always training, each on the
 //! global model version it pulled at dispatch time. Finished updates land
@@ -8,323 +8,146 @@
 //! (1/sqrt(1+tau)) and the version counter advances. The finishing client
 //! immediately re-dispatches on the fresh model.
 //!
-//! The loop drives off ONE `EventQueue` carrying two event kinds: client
-//! finishes and availability transitions. A client whose availability
-//! process takes it offline mid-training loses its in-flight update (its
-//! pending finish event is invalidated by a per-client dispatch generation
-//! counter), so realized staleness now interacts with churn: slow devices
-//! are the most likely to churn out before delivering. Offline clients are
-//! never dispatched; when a client comes back online it fills a free
-//! concurrency slot immediately.
+//! The engine owns the event loop (one `EventQueue` carrying client
+//! finishes and availability transitions), churn cancellation (a client
+//! going offline mid-training loses its in-flight update via a per-client
+//! dispatch generation), and drop attribution; this module is only the
+//! protocol: uniform dispatch over the idle-online pool, the buffer, and
+//! the K-updates flush rule.
 //!
 //! This is the behaviour the paper criticizes: fast devices cycle many
 //! times per aggregation round, slow devices contribute rarely and stale —
-//! the participation-rate gap of Figs. 1/5, now amplified by churn.
-
-use std::sync::Arc;
+//! the participation-rate gap of Figs. 1/5, amplified by churn.
 
 use anyhow::Result;
 
-use super::local_time::truth;
-use super::trainer::train_client;
-use super::{Recorder, Simulation};
+use super::engine::{ClientFinish, EventStrategy, SimEngine, Strategy};
+use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
-use crate::availability::{AvailabilityModel, SEED_SALT};
-use crate::metrics::RunReport;
-use crate::model::{Update, VersionedParams};
-use crate::simtime::EventQueue;
-use crate::util::rng::Rng;
+use crate::metrics::events::DropCause;
+use crate::model::VersionedParams;
+use crate::simtime::SimTime;
 
-/// A client finishing local training (update computed eagerly at dispatch —
-/// it only depends on the base snapshot, so this is equivalent and keeps
-/// the event payload self-contained). `gen` is the dispatch generation the
-/// finish belongs to; a mid-training offline transition bumps the client's
-/// generation, invalidating the pending finish.
-struct Finish {
-    client: usize,
-    gen: u64,
-    base_version: u64,
-    update: Update,
-    mean_loss: f64,
+pub struct FedBuff {
+    global: VersionedParams,
+    server_opt: ServerOpt,
+    buffer: Vec<Contribution>,
+    buffer_losses: Vec<f64>,
+    k_goal: usize,
 }
 
-/// Everything that can wake the FedBuff server.
-enum Event {
-    Finish(Finish),
-    /// `client`'s availability state flips at this timestamp; the next
-    /// transition is chained onto the queue when this one is processed.
-    Transition { client: usize },
+/// Registry constructor.
+pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(FedBuff {
+        global: VersionedParams {
+            version: 0,
+            params: sim.runtime.init_params(sim.cfg.init_seed)?,
+        },
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        buffer: Vec::new(),
+        buffer_losses: Vec::new(),
+        k_goal: sim.cfg.k_target(),
+    }))
 }
 
-pub fn run(sim: &Simulation) -> Result<RunReport> {
-    let cfg = &sim.cfg;
-    let rt = &sim.runtime;
-    let mut rng = Rng::seed_from(cfg.seed);
-    let mut client_rngs: Vec<Rng> = (0..cfg.population)
-        .map(|i| rng.fork(i as u64))
-        .collect();
-    let mut avail = AvailabilityModel::build(
-        &cfg.availability,
-        cfg.population,
-        cfg.seed ^ SEED_SALT,
-    )?;
-
-    let mut global = Arc::new(VersionedParams {
-        version: 0,
-        params: rt.init_params(cfg.init_seed)?,
-    });
-    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
-    let mut rec = Recorder::new(cfg.population);
-    let mut events: EventQueue<Event> = EventQueue::new();
-    let k_goal = cfg.k_target();
-
-    let mut busy = vec![false; cfg.population];
-    let mut gens: Vec<u64> = vec![0; cfg.population];
-    let mut in_flight = 0usize;
-
-    // Seed the queue with each client's first availability transition (the
-    // chain re-schedules itself as transitions are processed). Always-on
-    // schedules nothing — the queue is then bit-identical to the
-    // pre-availability code.
-    for c in 0..cfg.population {
-        if let Some(t) = avail.next_transition(c, 0.0) {
-            events.schedule_at(t, Event::Transition { client: c });
-        }
+impl FedBuff {
+    /// Dispatch `client` on the current global (full model, fixed epochs).
+    fn dispatch(&self, eng: &mut SimEngine, client: usize) -> Result<()> {
+        eng.dispatch_full(client, &self.global.params, self.global.version)
     }
 
-    // Dispatch one client: train eagerly on the current global, schedule
-    // the finish event at the simulated completion time.
-    let dispatch = |client: usize,
-                        global: &Arc<VersionedParams>,
-                        events: &mut EventQueue<Event>,
-                        rng: &mut Rng,
-                        client_rngs: &mut [Rng],
-                        busy: &mut [bool],
-                        gens: &[u64],
-                        in_flight: &mut usize|
-     -> Result<()> {
-        busy[client] = true;
-        *in_flight += 1;
-        let cond = sim.fleet.round_conditions(rng);
-        let t = truth(&sim.fleet.devices[client], &cond, cfg.sim_model_bytes);
-        let duration = t.round_secs(cfg.fedbuff_local_epochs as f64, 1.0, 1.0);
-        let full = rt
-            .meta
-            .ratio_exact(1.0)
-            .expect("full ratio always compiled");
-        let outcome = train_client(
-            rt,
-            &sim.dataset,
-            client,
-            &global.params,
-            full,
-            cfg.fedbuff_local_epochs,
-            cfg.steps_per_epoch,
-            cfg.client_lr,
-            &mut client_rngs[client],
-        )?;
-        events.schedule_in(
-            duration,
-            Event::Finish(Finish {
-                client,
-                gen: gens[client],
-                base_version: global.version,
-                update: outcome.update,
-                mean_loss: outcome.mean_loss,
-            }),
-        );
+    /// Uniform re-sampling over online idle clients keeps concurrency at n,
+    /// matching FedBuff's "training concurrency" definition; under churn
+    /// the pool can be momentarily empty — the slot refills when someone
+    /// comes back online.
+    fn refill_slot(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        let idle = eng.idle_online_clients(now);
+        if !idle.is_empty() {
+            let next = idle[eng.rng.usize_below(idle.len())];
+            self.dispatch(eng, next)?;
+        }
         Ok(())
-    };
+    }
+}
 
-    // Start: n distinct currently-online clients training. When everyone
-    // is online this samples exactly the seed's 0..population index space.
-    {
-        let online0 = avail.online_clients(0.0);
-        let want = cfg.concurrency.min(online0.len());
-        for &i in &rng.clone().sample_without_replacement(online0.len(), want) {
-            dispatch(
-                online0[i],
-                &global,
-                &mut events,
-                &mut rng,
-                &mut client_rngs,
-                &mut busy,
-                &gens,
-                &mut in_flight,
-            )?;
-        }
+impl Strategy for FedBuff {
+    fn name(&self) -> &'static str {
+        "FedBuff"
     }
 
-    let mut buffer: Vec<Contribution> = Vec::new();
-    let mut buffer_losses: Vec<f64> = Vec::new();
-    let mut completed_rounds = 0usize;
-    // Drop attribution accumulated since the last buffer flush.
-    let mut dropped_pending = 0usize;
-    let mut avail_dropped_pending = 0usize;
+    fn run(&mut self, eng: &mut SimEngine) -> Result<()> {
+        eng.drive_events(self)
+    }
+}
 
-    while completed_rounds < cfg.rounds {
-        let Some((now, ev)) = events.pop() else {
-            // A drained queue under always-on means the dispatch invariant
-            // broke — that is a bug. Under churn it is a legitimate end
-            // state (the population went permanently offline, e.g. a trace
-            // ran out): finish gracefully with the rounds that completed,
-            // like the round-stepped drivers do.
-            if avail.is_always_on() {
-                anyhow::bail!("event queue drained with {completed_rounds} rounds done");
-            }
-            break;
-        };
-        match ev {
-            Event::Transition { client } => {
-                // Chain the client's next transition onto the queue.
-                let next = avail.next_transition(client, now);
-                if let Some(t) = next {
-                    events.schedule_at(t, Event::Transition { client });
-                }
-                // Read the post-transition state at the segment midpoint:
-                // the state is constant until the next transition, and the
-                // midpoint dodges ulp-level ambiguity of evaluating the
-                // diurnal gate exactly at a boundary instant.
-                let online_now = match next {
-                    Some(t) => avail.is_available(client, (now + t) / 2.0),
-                    None => avail.is_available(client, now),
-                };
-                if online_now {
-                    // Came online: fill a free concurrency slot with it.
-                    if !busy[client] && in_flight < cfg.concurrency {
-                        dispatch(
-                            client,
-                            &global,
-                            &mut events,
-                            &mut rng,
-                            &mut client_rngs,
-                            &mut busy,
-                            &gens,
-                            &mut in_flight,
-                        )?;
-                    }
-                } else if busy[client] {
-                    // Went offline mid-training: the in-flight update is
-                    // lost with it. Invalidate the pending finish and
-                    // restore concurrency from the online idle pool.
-                    gens[client] += 1;
-                    busy[client] = false;
-                    in_flight -= 1;
-                    avail_dropped_pending += 1;
-                    let idle: Vec<usize> = (0..cfg.population)
-                        .filter(|&i| !busy[i] && avail.is_available(i, now))
-                        .collect();
-                    if !idle.is_empty() {
-                        let next = idle[rng.usize_below(idle.len())];
-                        dispatch(
-                            next,
-                            &global,
-                            &mut events,
-                            &mut rng,
-                            &mut client_rngs,
-                            &mut busy,
-                            &gens,
-                            &mut in_flight,
-                        )?;
-                    }
-                }
-            }
-            Event::Finish(fin) => {
-                if fin.gen != gens[fin.client] {
-                    continue; // cancelled by an offline transition
-                }
-                busy[fin.client] = false;
-                in_flight -= 1;
-
-                let staleness = global.version - fin.base_version;
-                // Failure injection: finished but the upload never arrived.
-                let lost = cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob;
-                let dropped_stale =
-                    cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost;
-                if dropped_stale {
-                    dropped_pending += 1;
-                } else {
-                    buffer.push(Contribution {
-                        client_id: fin.client,
-                        update: fin.update,
-                        weight: 1.0,
-                        staleness,
-                    });
-                    buffer_losses.push(fin.mean_loss);
-                }
-
-                // The finished client immediately starts again on the fresh
-                // model. (Uniform re-sampling over online idle clients
-                // keeps concurrency at n, matching FedBuff's "training
-                // concurrency" definition; under churn the pool can be
-                // momentarily empty — the slot refills when someone comes
-                // back online.)
-                let idle: Vec<usize> = (0..cfg.population)
-                    .filter(|&i| !busy[i] && avail.is_available(i, now))
-                    .collect();
-                if !idle.is_empty() {
-                    let next = idle[rng.usize_below(idle.len())];
-                    dispatch(
-                        next,
-                        &global,
-                        &mut events,
-                        &mut rng,
-                        &mut client_rngs,
-                        &mut busy,
-                        &gens,
-                        &mut in_flight,
-                    )?;
-                }
-
-                if buffer.len() >= k_goal {
-                    let round = completed_rounds;
-                    let participant_ids: Vec<usize> =
-                        buffer.iter().map(|c| c.client_id).collect();
-                    let avg = average_delta(&global.params, &buffer, true);
-                    let mut params = global.params.clone();
-                    server_opt.apply(&mut params, &avg);
-                    global = Arc::new(VersionedParams {
-                        version: global.version + 1,
-                        params,
-                    });
-
-                    let mean_loss = if buffer_losses.is_empty() {
-                        None
-                    } else {
-                        Some(buffer_losses.iter().sum::<f64>() / buffer_losses.len() as f64)
-                    };
-                    rec.record_round(
-                        round,
-                        now,
-                        &participant_ids,
-                        dropped_pending,
-                        avail_dropped_pending,
-                        mean_loss,
-                    );
-                    rec.maybe_eval(sim, round, now, &global.params)?;
-                    buffer.clear();
-                    buffer_losses.clear();
-                    dropped_pending = 0;
-                    avail_dropped_pending = 0;
-                    completed_rounds += 1;
-                    if rec.should_stop(sim, now) {
-                        break;
-                    }
-                }
-            }
+impl EventStrategy for FedBuff {
+    fn on_start(&mut self, eng: &mut SimEngine) -> Result<()> {
+        // Start: n distinct currently-online clients training. Sampling
+        // from a CLONE of the master RNG (not the stream itself) is the
+        // seed behaviour — preserved for bit-identical runs.
+        let online0 = eng.avail.online_clients(0.0);
+        let want = eng.sim.cfg.concurrency.min(online0.len());
+        let picks = eng.rng.clone().sample_without_replacement(online0.len(), want);
+        for &i in &picks {
+            self.dispatch(eng, online0[i])?;
         }
+        Ok(())
     }
 
-    // Drops that accumulated after the last flush would otherwise vanish
-    // from the attribution totals.
-    rec.absorb_tail_drops(dropped_pending, avail_dropped_pending);
+    fn on_client_online(&mut self, eng: &mut SimEngine, client: usize) -> Result<()> {
+        // Came online: fill a free concurrency slot with it.
+        if !eng.is_busy(client) && eng.in_flight() < eng.sim.cfg.concurrency {
+            self.dispatch(eng, client)?;
+        }
+        Ok(())
+    }
 
-    let sim_secs = events.now();
-    Ok(rec.finish(
-        sim,
-        sim_secs,
-        completed_rounds,
-        events.events_processed(),
-        &mut avail,
-    ))
+    fn on_slot_freed(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        // A churned-out client's slot goes back to the online idle pool.
+        self.refill_slot(eng, now)
+    }
+
+    fn on_finish(&mut self, eng: &mut SimEngine, now: SimTime, fin: ClientFinish) -> Result<()> {
+        let cfg = &eng.sim.cfg;
+        let staleness = self.global.version - fin.base_version;
+        // Failure injection: finished but the upload never arrived.
+        let lost = cfg.dropout_prob > 0.0 && eng.rng.f64() < cfg.dropout_prob;
+        if cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost {
+            eng.drop_client(fin.client, DropCause::Deadline);
+        } else {
+            self.buffer.push(Contribution {
+                client_id: fin.client,
+                update: fin.update,
+                weight: 1.0,
+                staleness,
+            });
+            self.buffer_losses.push(fin.mean_loss);
+        }
+
+        // The finished client's slot immediately restarts on the fresh
+        // model (uniform over the online idle pool, which includes it).
+        self.refill_slot(eng, now)?;
+
+        if self.buffer.len() >= self.k_goal {
+            let participant_ids: Vec<usize> =
+                self.buffer.iter().map(|c| c.client_id).collect();
+            let avg = average_delta(&self.global.params, &self.buffer, true);
+            let mut params = self.global.params.clone();
+            self.server_opt.apply(&mut params, &avg);
+            self.global = VersionedParams {
+                version: self.global.version + 1,
+                params,
+            };
+
+            let mean_loss = if self.buffer_losses.is_empty() {
+                None
+            } else {
+                Some(self.buffer_losses.iter().sum::<f64>() / self.buffer_losses.len() as f64)
+            };
+            eng.complete_round(now, &participant_ids, mean_loss, &self.global.params)?;
+            self.buffer.clear();
+            self.buffer_losses.clear();
+        }
+        Ok(())
+    }
 }

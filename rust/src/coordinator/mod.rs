@@ -1,22 +1,26 @@
 //! Layer-3 coordinator — the paper's system contribution.
 //!
 //! `Simulation` wires the compiled model runtime, the synthetic federated
-//! dataset, and the heterogeneous device fleet together; the three strategy
-//! drivers (TimelyFL / FedBuff / SyncFL) share that context. Client
-//! *training* is real (PJRT executions of the AOT artifacts); client
-//! *timing* is simulated from the device model — the same emulation
-//! methodology as the paper (§4.1).
+//! dataset, and the heterogeneous device fleet together. FL protocols are
+//! pluggable [`engine::Strategy`] implementations resolved through the
+//! [`registry`] (name → constructor) and driven by a shared
+//! [`engine::SimEngine`] that owns the run lifecycle: seeded RNG tree,
+//! availability model, one `simtime::EventQueue` clock, online-client
+//! sampling, drop attribution, eval/stop, and the machine-readable
+//! run-event stream (`metrics::events`).
 //!
-//! All three drivers share one `simtime::EventQueue` clock and one
-//! availability model (`crate::availability`): round-stepped strategies pop
-//! round-boundary events, FedBuff pops client-finish and
-//! availability-transition events from a single queue, and every driver
-//! samples only from currently-available clients, attributing
-//! churn losses separately from deadline losses.
+//! Client *training* is real (PJRT executions of the AOT artifacts); client
+//! *timing* is simulated from the device model — the same emulation
+//! methodology as the paper (§4.1). Every strategy samples only from
+//! currently-available clients and attributes churn losses separately from
+//! deadline losses.
 
+pub mod engine;
 pub mod fedbuff;
 pub mod local_time;
+pub mod registry;
 pub mod scheduler;
+pub mod semiasync;
 pub mod syncfl;
 pub mod timelyfl;
 pub mod trainer;
@@ -27,17 +31,23 @@ use anyhow::Result;
 use xla::PjRtClient;
 
 use crate::availability::AvailabilityModel;
-use crate::config::{RunConfig, StrategyKind};
+use crate::config::RunConfig;
 use crate::data::{FederatedDataset, SyntheticSpec};
 use crate::devices::Fleet;
-use crate::simtime::EventQueue;
+use crate::metrics::events::{EventSink, NullSink};
 use crate::metrics::{EvalPoint, ParticipationTracker, RoundRecord, RunReport};
 use crate::model::ParamVec;
 use crate::runtime::engine::Batch;
 use crate::runtime::{Manifest, ModelRuntime, Task};
 use crate::util::rng::Rng;
 
-/// Everything a strategy driver needs for one run.
+pub use engine::{
+    ClientFinish, EngineEvent, EventStrategy, RoundCtx, RoundOutcome, RoundStrategy, SimEngine,
+    Strategy,
+};
+pub use registry::{StrategyInfo, STRATEGIES};
+
+/// Everything a strategy needs for one run.
 pub struct Simulation {
     pub cfg: RunConfig,
     pub runtime: ModelRuntime,
@@ -84,13 +94,19 @@ impl Simulation {
         })
     }
 
-    /// Dispatch on the configured strategy.
+    /// Run the configured strategy, resolved through the registry.
     pub fn run(&self) -> Result<RunReport> {
-        match self.cfg.strategy {
-            StrategyKind::TimelyFl => timelyfl::run(self),
-            StrategyKind::FedBuff => fedbuff::run(self),
-            StrategyKind::SyncFl => syncfl::run(self),
-        }
+        self.run_with_sink(&mut NullSink)
+    }
+
+    /// Same, streaming machine-readable run events into `sink`
+    /// (`metrics::events`; the CLI's `--events FILE`).
+    pub fn run_with_sink(&self, sink: &mut dyn EventSink) -> Result<RunReport> {
+        let info = registry::resolve(&self.cfg.strategy)?;
+        let mut strategy = (info.build)(self)?;
+        let mut eng = SimEngine::new(self, Some(sink))?;
+        strategy.run(&mut eng)?;
+        Ok(eng.finish(strategy.name()))
     }
 
     /// Is the run's target metric reached? (accuracy: higher better;
@@ -106,13 +122,18 @@ impl Simulation {
     }
 }
 
-/// Shared run-recording machinery for the three drivers.
+/// Run-recording machinery shared by every strategy (owned by the engine).
 pub struct Recorder {
     started: Instant,
     pub participation: ParticipationTracker,
     pub eval_points: Vec<EvalPoint>,
     pub rounds: Vec<RoundRecord>,
     stop: bool,
+    /// Drops that accumulated when NO round was ever recorded (population
+    /// offline from t=0): carried at run level so attribution totals don't
+    /// silently undercount.
+    tail_dropped: usize,
+    tail_avail_dropped: usize,
 }
 
 impl Recorder {
@@ -123,6 +144,8 @@ impl Recorder {
             eval_points: Vec::new(),
             rounds: Vec::new(),
             stop: false,
+            tail_dropped: 0,
+            tail_avail_dropped: 0,
         }
     }
 
@@ -151,29 +174,31 @@ impl Recorder {
     }
 
     /// Evaluate the global model if the cadence says so; set the stop flag
-    /// when the target metric or the sim-time budget is hit.
+    /// when the target metric or the sim-time budget is hit. Returns the
+    /// recorded point when an evaluation ran.
     pub fn maybe_eval(
         &mut self,
         sim: &Simulation,
         round: usize,
         sim_secs: f64,
         global: &ParamVec,
-    ) -> Result<()> {
+    ) -> Result<Option<EvalPoint>> {
         let last = round + 1 == sim.cfg.rounds;
         if round % sim.cfg.eval_every != 0 && !last {
-            return Ok(());
+            return Ok(None);
         }
         let res = sim.runtime.evaluate(global, &self.eval_batches(sim))?;
-        self.eval_points.push(EvalPoint {
+        let point = EvalPoint {
             round,
             sim_secs,
             mean_loss: res.mean_loss,
             metric: res.metric,
-        });
+        };
+        self.eval_points.push(point);
         if sim.target_reached(res.metric) {
             self.stop = true;
         }
-        Ok(())
+        Ok(Some(point))
     }
 
     fn eval_batches<'a>(&self, sim: &'a Simulation) -> &'a [Batch] {
@@ -186,8 +211,10 @@ impl Recorder {
 
     /// Fold drops that accumulated after the last recorded aggregation
     /// into the final round's attribution, so end-of-run tails (budget
-    /// stops, partially-filled FedBuff buffers) don't silently undercount
-    /// `total_avail_drops()` / `total_deadline_drops()`.
+    /// stops, partially-filled buffers) don't silently undercount
+    /// `total_avail_drops()` / `total_deadline_drops()`. When NO round was
+    /// ever recorded (e.g. the population was offline from t=0) the counts
+    /// are carried as run-level tail counters instead of being discarded.
     pub fn absorb_tail_drops(&mut self, dropped: usize, avail_dropped: usize) {
         if dropped == 0 && avail_dropped == 0 {
             return;
@@ -195,6 +222,9 @@ impl Recorder {
         if let Some(last) = self.rounds.last_mut() {
             last.dropped += dropped;
             last.avail_dropped += avail_dropped;
+        } else {
+            self.tail_dropped += dropped;
+            self.tail_avail_dropped += avail_dropped;
         }
     }
 
@@ -202,6 +232,7 @@ impl Recorder {
     /// from the availability model over the run's simulated span.
     pub fn finish(
         self,
+        strategy: &str,
         sim: &Simulation,
         sim_secs: f64,
         total_rounds: usize,
@@ -212,7 +243,7 @@ impl Recorder {
             .map(|c| avail.online_fraction(c, sim_secs))
             .collect();
         RunReport {
-            strategy: sim.cfg.strategy.name().to_string(),
+            strategy: strategy.to_string(),
             model: sim.cfg.model.clone(),
             eval_points: self.eval_points,
             rounds: self.rounds,
@@ -223,23 +254,38 @@ impl Recorder {
             total_rounds,
             events_processed,
             real_train_steps: sim.runtime.stats().train_steps,
+            tail_dropped: self.tail_dropped,
+            tail_avail_dropped: self.tail_avail_dropped,
         }
     }
 }
 
-/// Shared idle-wait for the round-stepped drivers: when the whole
-/// population is momentarily offline, advance the clock (as an event) to
-/// the next availability transition. Returns `false` when no transition
-/// will ever come — the population is permanently offline and the run
-/// should end gracefully.
-pub(crate) fn idle_until_transition(
-    avail: &mut AvailabilityModel,
-    events: &mut EventQueue<()>,
-) -> bool {
-    let Some(t) = avail.earliest_transition(events.now()) else {
-        return false;
-    };
-    events.schedule_at(t, ());
-    events.pop();
-    true
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_drops_fold_into_last_round() {
+        let mut rec = Recorder::new(4);
+        rec.record_round(0, 10.0, &[1, 2], 1, 0, Some(2.0));
+        rec.absorb_tail_drops(2, 3);
+        let last = rec.rounds.last().unwrap();
+        assert_eq!(last.dropped, 3);
+        assert_eq!(last.avail_dropped, 3);
+        assert_eq!(rec.tail_dropped, 0);
+        assert_eq!(rec.tail_avail_dropped, 0);
+    }
+
+    #[test]
+    fn tail_drops_survive_with_zero_rounds() {
+        // Population offline from t=0: no round ever recorded. The counts
+        // must be carried at run level, not silently discarded.
+        let mut rec = Recorder::new(4);
+        rec.absorb_tail_drops(0, 0); // no-op
+        assert_eq!(rec.tail_avail_dropped, 0);
+        rec.absorb_tail_drops(1, 7);
+        assert!(rec.rounds.is_empty());
+        assert_eq!(rec.tail_dropped, 1);
+        assert_eq!(rec.tail_avail_dropped, 7);
+    }
 }

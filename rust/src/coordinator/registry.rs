@@ -1,0 +1,134 @@
+//! Strategy registry: name → constructor, in canonical comparison order.
+//!
+//! Everything that used to match on a closed `StrategyKind` enum — config
+//! parsing, `Simulation::run`, the CLI's `run`/`compare`, the benches —
+//! resolves through this table instead. Adding a strategy is three steps
+//! (see `docs/architecture.md`): write the module, implement the hook
+//! trait(s) + [`Strategy`], and append one [`StrategyInfo`] entry here.
+
+use anyhow::Result;
+
+use super::engine::Strategy;
+use super::{fedbuff, semiasync, syncfl, timelyfl, Simulation};
+
+/// One registered strategy.
+pub struct StrategyInfo {
+    /// Canonical display name (what `RunReport::strategy` carries).
+    pub name: &'static str,
+    /// Extra accepted spellings (lowercase) for config/CLI lookup; the
+    /// canonical name matches case-insensitively without being listed.
+    pub aliases: &'static [&'static str],
+    /// One-liner for `timelyfl strategies`.
+    pub summary: &'static str,
+    /// Build a fresh strategy instance for one run.
+    pub build: fn(&Simulation) -> Result<Box<dyn Strategy>>,
+}
+
+/// All registered strategies. Order is the canonical comparison order used
+/// by `timelyfl compare` and the sweep benches.
+pub static STRATEGIES: &[StrategyInfo] = &[
+    StrategyInfo {
+        name: "TimelyFL",
+        aliases: &["timely"],
+        summary: "the paper's contribution: adaptive partial training inside a k-th-smallest aggregation interval (Alg. 1-3)",
+        build: timelyfl::build,
+    },
+    StrategyInfo {
+        name: "FedBuff",
+        aliases: &[],
+        summary: "buffered asynchronous baseline (Nguyen et al. 2021): aggregate the k fastest arrivals, staleness-discounted",
+        build: fedbuff::build,
+    },
+    StrategyInfo {
+        name: "SyncFL",
+        aliases: &["sync"],
+        summary: "fully synchronous FedAvg/FedOpt baseline: every round waits for its slowest sampled client",
+        build: syncfl::build,
+    },
+    StrategyInfo {
+        name: "SemiAsync",
+        aliases: &["semi", "seafl"],
+        summary: "SEAFL-style semi-async baseline: deadline-gated buffer flushes with availability-selective dispatch",
+        build: semiasync::build,
+    },
+];
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static StrategyInfo> {
+    let needle = name.to_ascii_lowercase();
+    STRATEGIES
+        .iter()
+        .find(|s| s.name.to_ascii_lowercase() == needle || s.aliases.contains(&needle.as_str()))
+}
+
+/// Like [`find`], but an actionable error listing the known strategies.
+pub fn resolve(name: &str) -> Result<&'static StrategyInfo> {
+    find(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown strategy {name:?} (known: {})",
+            names().join(", ")
+        )
+    })
+}
+
+/// Canonical names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    STRATEGIES.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_unique_case_insensitive() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in STRATEGIES {
+            assert!(
+                seen.insert(s.name.to_ascii_lowercase()),
+                "duplicate strategy name {}",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_entry_and_never_collide() {
+        for s in STRATEGIES {
+            assert_eq!(find(s.name).unwrap().name, s.name);
+            assert_eq!(find(&s.name.to_ascii_uppercase()).unwrap().name, s.name);
+            for a in s.aliases {
+                assert_eq!(
+                    find(a).unwrap().name,
+                    s.name,
+                    "alias {a} resolves elsewhere"
+                );
+            }
+        }
+        // No alias shadows another entry's canonical name.
+        let mut keys = std::collections::BTreeSet::new();
+        for s in STRATEGIES {
+            assert!(keys.insert(s.name.to_ascii_lowercase()));
+            for a in s.aliases {
+                assert!(keys.insert(a.to_string()), "alias {a} collides");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_error_lists_known_strategies() {
+        let err = resolve("bogus").unwrap_err().to_string();
+        for s in STRATEGIES {
+            assert!(err.contains(s.name), "error should list {}", s.name);
+        }
+        assert!(find("").is_none());
+    }
+
+    #[test]
+    fn registry_order_starts_with_the_paper_trio() {
+        // compare/bench output layouts depend on this prefix order.
+        let n = names();
+        assert_eq!(&n[..3], &["TimelyFL", "FedBuff", "SyncFL"]);
+        assert!(n.contains(&"SemiAsync"));
+    }
+}

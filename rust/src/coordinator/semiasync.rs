@@ -1,0 +1,189 @@
+//! SemiAsync — a SEAFL-style semi-asynchronous baseline (Islam et al.
+//! 2025): a **deadline-gated** update buffer with **selective
+//! participation**, landed on the engine's event-driven hook surface to
+//! prove the `Strategy` API (this file + one registry entry is the whole
+//! change).
+//!
+//! Like FedBuff, `n` clients are always training the full model and
+//! finished updates land in a buffer. Unlike FedBuff, the server does NOT
+//! flush on a count: it aggregates on a fixed cadence D — the k-th smallest
+//! expected full-round time across the population, measured once at start —
+//! taking whatever landed in the window (staleness-discounted). Updates
+//! that miss a window simply wait in the buffer for the next one; only the
+//! staleness cap / injected failures discard.
+//!
+//! Selective participation: when refilling a concurrency slot the server
+//! prefers idle clients *predicted to stay online* through their own
+//! expected round time (SEAFL picks by predicted availability; we stand in
+//! the predictor with the availability process itself — an oracle upper
+//! bound on prediction quality), falling back to the whole idle pool when
+//! nobody qualifies.
+
+use anyhow::Result;
+
+use super::engine::{ClientFinish, EngineEvent, EventStrategy, SimEngine, Strategy};
+use super::local_time::truth;
+use super::Simulation;
+use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::metrics::events::DropCause;
+use crate::model::VersionedParams;
+use crate::simtime::SimTime;
+use crate::util::stats::kth_smallest;
+
+pub struct SemiAsync {
+    global: VersionedParams,
+    server_opt: ServerOpt,
+    buffer: Vec<Contribution>,
+    buffer_losses: Vec<f64>,
+    /// Aggregation cadence D (set once in `on_start`).
+    deadline_secs: f64,
+    /// Per-client expected full-round seconds — the selection horizon.
+    expected_secs: Vec<f64>,
+}
+
+/// Registry constructor.
+pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(SemiAsync {
+        global: VersionedParams {
+            version: 0,
+            params: sim.runtime.init_params(sim.cfg.init_seed)?,
+        },
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        buffer: Vec::new(),
+        buffer_losses: Vec::new(),
+        deadline_secs: 0.0,
+        expected_secs: Vec::new(),
+    }))
+}
+
+impl SemiAsync {
+    /// Selective dispatch: pick one client from the idle-online pool,
+    /// preferring those predicted to stay online through their own round.
+    fn select_and_dispatch(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        let idle = eng.idle_online_clients(now);
+        if idle.is_empty() {
+            return Ok(());
+        }
+        let safe: Vec<usize> = idle
+            .iter()
+            .copied()
+            .filter(|&c| eng.avail.online_through(c, now, now + self.expected_secs[c]))
+            .collect();
+        let pool = if safe.is_empty() { &idle } else { &safe };
+        let next = pool[eng.rng.usize_below(pool.len())];
+        eng.dispatch_full(next, &self.global.params, self.global.version)
+    }
+
+    /// Flush whatever landed in the closing window.
+    fn flush(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        // A fast client can land more than one update per window; it still
+        // participated in the round once (participation = rounds
+        // contributed / total rounds stays in [0, 1]).
+        let mut participant_ids: Vec<usize> = self.buffer.iter().map(|c| c.client_id).collect();
+        participant_ids.sort_unstable();
+        participant_ids.dedup();
+        let avg = average_delta(&self.global.params, &self.buffer, true);
+        let mut params = self.global.params.clone();
+        self.server_opt.apply(&mut params, &avg);
+        self.global = VersionedParams {
+            version: self.global.version + 1,
+            params,
+        };
+        let mean_loss = if self.buffer_losses.is_empty() {
+            None
+        } else {
+            Some(self.buffer_losses.iter().sum::<f64>() / self.buffer_losses.len() as f64)
+        };
+        eng.complete_round(now, &participant_ids, mean_loss, &self.global.params)?;
+        self.buffer.clear();
+        self.buffer_losses.clear();
+        Ok(())
+    }
+}
+
+impl Strategy for SemiAsync {
+    fn name(&self) -> &'static str {
+        "SemiAsync"
+    }
+
+    fn run(&mut self, eng: &mut SimEngine) -> Result<()> {
+        eng.drive_events(self)
+    }
+}
+
+impl EventStrategy for SemiAsync {
+    fn on_start(&mut self, eng: &mut SimEngine) -> Result<()> {
+        let sim = eng.sim;
+        let cfg = &sim.cfg;
+        // Expected full-round time per client (one conditions draw each),
+        // and the cadence D = k-th smallest across the population.
+        self.expected_secs = (0..cfg.population)
+            .map(|c| {
+                let cond = sim.fleet.round_conditions(&mut eng.rng);
+                truth(&sim.fleet.devices[c], &cond, cfg.sim_model_bytes)
+                    .round_secs(cfg.fedbuff_local_epochs as f64, 1.0, 1.0)
+            })
+            .collect();
+        self.deadline_secs = kth_smallest(&self.expected_secs, cfg.k_target());
+
+        // Initial cohort: fill every slot through the selective policy
+        // (dispatch marks a client busy, removing it from the next pool).
+        let want = cfg.concurrency.min(eng.avail.online_clients(0.0).len());
+        for _ in 0..want {
+            self.select_and_dispatch(eng, 0.0)?;
+        }
+        eng.events.schedule_in(self.deadline_secs, EngineEvent::Alarm);
+        Ok(())
+    }
+
+    fn on_client_online(&mut self, eng: &mut SimEngine, client: usize) -> Result<()> {
+        // A freed slot goes through the same selective policy as refills
+        // (the newly-online client is in the pool but not privileged —
+        // SEAFL picks by predicted availability, not arrival order).
+        if !eng.is_busy(client) && eng.in_flight() < eng.sim.cfg.concurrency {
+            let now = eng.now();
+            self.select_and_dispatch(eng, now)?;
+        }
+        Ok(())
+    }
+
+    fn on_slot_freed(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        self.select_and_dispatch(eng, now)
+    }
+
+    fn on_finish(&mut self, eng: &mut SimEngine, now: SimTime, fin: ClientFinish) -> Result<()> {
+        let cfg = &eng.sim.cfg;
+        let staleness = self.global.version - fin.base_version;
+        let lost = cfg.dropout_prob > 0.0 && eng.rng.f64() < cfg.dropout_prob;
+        if cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost {
+            eng.drop_client(fin.client, DropCause::Deadline);
+        } else {
+            self.buffer.push(Contribution {
+                client_id: fin.client,
+                update: fin.update,
+                weight: 1.0,
+                staleness,
+            });
+            self.buffer_losses.push(fin.mean_loss);
+        }
+        self.select_and_dispatch(eng, now)
+    }
+
+    fn on_alarm(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        // (The engine's event loop enforces the sim-time budget before
+        // every event, so an over-budget alarm never reaches this hook.)
+        // Re-arm unless the run is provably dead (nothing in flight or
+        // buffered and nobody will ever come back online) — then the queue
+        // drains and the engine ends the run gracefully.
+        let dead = self.buffer.is_empty()
+            && eng.in_flight() == 0
+            && eng.avail.earliest_transition(now).is_none();
+        if !dead {
+            eng.events.schedule_in(self.deadline_secs, EngineEvent::Alarm);
+        }
+        if !self.buffer.is_empty() {
+            self.flush(eng, now)?;
+        }
+        Ok(())
+    }
+}

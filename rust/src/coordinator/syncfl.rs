@@ -1,81 +1,74 @@
-//! SyncFL baseline: classic synchronous FedAvg/FedOpt.
+//! SyncFL baseline: classic synchronous FedAvg/FedOpt, as a round-stepped
+//! [`RoundStrategy`].
 //!
-//! Every round samples `n` clients from the currently-available population,
-//! all train the FULL model for the fixed number of local epochs, and the
-//! server waits for the slowest one — the round time is max over sampled
-//! clients of (E * t_cmp + t_com). No staleness, perfect participation
-//! within a round, terrible wall-clock: the straggler column of Table 1.
+//! Every round the engine samples `n` clients from the currently-available
+//! population; all train the FULL model for the fixed number of local
+//! epochs, and the server waits for the slowest one — the round time is max
+//! over sampled clients of (E * t_cmp + t_com). No staleness, perfect
+//! participation within a round, terrible wall-clock: the straggler column
+//! of Table 1.
 //!
 //! Availability churn hits SyncFL twice: a client that goes offline
 //! mid-round loses its update (an availability drop — the server still
 //! waits out its slot, exactly like the paper's timeout-and-discard
-//! behaviour), and an offline client cannot be sampled at all. The round
-//! boundary advances the shared `EventQueue` clock, so `events_processed()`
-//! is meaningful here too.
+//! behaviour), and an offline client cannot be sampled at all.
 
 use anyhow::Result;
 
+use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::local_time::truth;
 use super::trainer::train_client;
-use super::{Recorder, Simulation};
+use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
-use crate::availability::{AvailabilityModel, SEED_SALT};
-use crate::metrics::RunReport;
-use crate::simtime::EventQueue;
-use crate::util::rng::Rng;
+use crate::metrics::events::DropCause;
+use crate::model::ParamVec;
 
-pub fn run(sim: &Simulation) -> Result<RunReport> {
-    let cfg = &sim.cfg;
-    let rt = &sim.runtime;
-    let mut rng = Rng::seed_from(cfg.seed);
-    let mut client_rngs: Vec<Rng> = (0..cfg.population)
-        .map(|i| rng.fork(i as u64))
-        .collect();
-    let mut avail = AvailabilityModel::build(
-        &cfg.availability,
-        cfg.population,
-        cfg.seed ^ SEED_SALT,
-    )?;
+pub struct SyncFl {
+    global: ParamVec,
+    server_opt: ServerOpt,
+}
 
-    let mut global = rt.init_params(cfg.init_seed)?;
-    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
-    let mut rec = Recorder::new(cfg.population);
-    let mut events: EventQueue<()> = EventQueue::new();
-    let full = rt
-        .meta
-        .ratio_exact(1.0)
-        .expect("full ratio always compiled");
-    let epochs = cfg.fedbuff_local_epochs; // shared "local epochs" setting
+/// Registry constructor.
+pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(SyncFl {
+        global: sim.runtime.init_params(sim.cfg.init_seed)?,
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+    }))
+}
 
-    let mut completed_rounds = 0usize;
-    while completed_rounds < cfg.rounds {
-        let now = events.now();
-        let online = avail.online_clients(now);
-        if online.is_empty() {
-            // Idle until someone comes back online (false = permanently
-            // offline population — end the run gracefully).
-            if !super::idle_until_transition(&mut avail, &mut events)
-                || rec.should_stop(sim, events.now())
-            {
-                break;
-            }
-            continue;
-        }
-        let want = cfg.concurrency.min(online.len());
-        let sampled: Vec<usize> = rng
-            .sample_without_replacement(online.len(), want)
-            .into_iter()
-            .map(|i| online[i])
-            .collect();
+impl Strategy for SyncFl {
+    fn name(&self) -> &'static str {
+        "SyncFL"
+    }
 
-        let mut contributions = Vec::with_capacity(sampled.len());
-        let mut participant_ids = Vec::with_capacity(sampled.len());
-        let mut dropped = 0usize;
-        let mut avail_dropped = 0usize;
+    fn run(&mut self, eng: &mut SimEngine) -> Result<()> {
+        eng.drive_rounds(self)
+    }
+}
+
+impl RoundStrategy for SyncFl {
+    fn global_params(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
+        let now = ctx.now;
+        let eng = &mut *ctx.eng;
+        let sim = eng.sim;
+        let cfg = &sim.cfg;
+        let rt = &sim.runtime;
+        let full = rt
+            .meta
+            .ratio_exact(1.0)
+            .expect("full ratio always compiled");
+        let epochs = cfg.fedbuff_local_epochs; // shared "local epochs" setting
+
+        let mut contributions = Vec::with_capacity(ctx.sampled.len());
+        let mut participant_ids = Vec::with_capacity(ctx.sampled.len());
         let mut loss_sum = 0.0;
         let mut round_secs = 0.0f64;
-        for &c in &sampled {
-            let cond = sim.fleet.round_conditions(&mut rng);
+        for &c in ctx.sampled {
+            let cond = sim.fleet.round_conditions(&mut eng.rng);
             let t = truth(&sim.fleet.devices[c], &cond, cfg.sim_model_bytes);
             let duration = t.round_secs(epochs as f64, 1.0, 1.0);
             // The server waits for the slowest sampled client whether or
@@ -83,14 +76,14 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             round_secs = round_secs.max(duration);
 
             // Churn: offline mid-round means the update never uploads.
-            if !avail.online_through(c, now, now + duration) {
-                avail_dropped += 1;
+            if !eng.avail.online_through(c, now, now + duration) {
+                eng.drop_client(c, DropCause::Availability);
                 continue;
             }
             // Failure injection: the server's cutoff fires without this
             // client's update (its wait time is still paid above).
-            if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
-                dropped += 1;
+            if cfg.dropout_prob > 0.0 && eng.rng.f64() < cfg.dropout_prob {
+                eng.drop_client(c, DropCause::Deadline);
                 continue;
             }
 
@@ -98,12 +91,12 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
                 rt,
                 &sim.dataset,
                 c,
-                &global,
+                &self.global,
                 full,
                 epochs,
                 cfg.steps_per_epoch,
                 cfg.client_lr,
-                &mut client_rngs[c],
+                &mut eng.client_rngs[c],
             )?;
             loss_sum += outcome.mean_loss;
             participant_ids.push(c);
@@ -116,32 +109,18 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
         }
 
         if !contributions.is_empty() {
-            let avg = average_delta(&global, &contributions, false);
-            server_opt.apply(&mut global, &avg);
+            let avg = average_delta(&self.global, &contributions, false);
+            self.server_opt.apply(&mut self.global, &avg);
         }
-        events.schedule_in(round_secs, ());
-        let (clock, ()) = events.pop().expect("round boundary was scheduled");
-        let round = completed_rounds;
-        completed_rounds += 1;
-
-        let mean_loss = if participant_ids.is_empty() {
+        let mean_train_loss = if participant_ids.is_empty() {
             None
         } else {
             Some(loss_sum / participant_ids.len() as f64)
         };
-        rec.record_round(round, clock, &participant_ids, dropped, avail_dropped, mean_loss);
-        rec.maybe_eval(sim, round, clock, &global)?;
-        if rec.should_stop(sim, clock) {
-            break;
-        }
+        Ok(RoundOutcome {
+            advance_secs: round_secs,
+            participants: participant_ids,
+            mean_train_loss,
+        })
     }
-
-    let sim_secs = events.now();
-    Ok(rec.finish(
-        sim,
-        sim_secs,
-        completed_rounds,
-        events.events_processed(),
-        &mut avail,
-    ))
 }

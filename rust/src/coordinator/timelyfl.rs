@@ -1,7 +1,9 @@
-//! TimelyFL — Algorithm 1.
+//! TimelyFL — Algorithm 1, as a round-stepped [`RoundStrategy`].
 //!
-//! Per communication round:
-//!   1. sample `n` clients uniformly from the CURRENTLY AVAILABLE
+//! Per communication round (the engine samples the cohort and owns the
+//! clock; this module is steps 2-6):
+//!
+//!   1. (engine) sample `n` clients uniformly from the CURRENTLY AVAILABLE
 //!      population (training concurrency);
 //!   2. every sampled client runs Local Time Update (Alg. 2) — a one-batch
 //!      probe extrapolated to unit epoch + upload times;
@@ -17,13 +19,7 @@
 //!      window loses the update (counted as an availability drop, not a
 //!      deadline miss);
 //!   6. all landed updates aggregate (no staleness — every update is based
-//!      on this round's model); the round boundary is an `EventQueue` event,
-//!      so all three drivers share one clock and `events_processed()` is
-//!      meaningful.
-//!
-//! If the whole population is momentarily offline the server idles until
-//! the next availability transition (also an event) instead of burning a
-//! round.
+//!      on this round's model); the engine advances the clock by T_k.
 //!
 //! `cfg.adaptive = false` reproduces the Fig. 7 ablation: each client's
 //! workload is frozen the first time it is scheduled and never re-adapted,
@@ -31,77 +27,67 @@
 
 use anyhow::Result;
 
+use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::local_time::{local_time_update, truth};
 use super::scheduler::{aggregation_interval, schedule, Workload};
 use super::trainer::train_client;
-use super::{Recorder, Simulation};
+use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
-use crate::availability::{AvailabilityModel, SEED_SALT};
-use crate::metrics::RunReport;
-use crate::simtime::EventQueue;
-use crate::util::rng::Rng;
+use crate::metrics::events::DropCause;
+use crate::model::ParamVec;
 
-pub fn run(sim: &Simulation) -> Result<RunReport> {
-    let cfg = &sim.cfg;
-    let rt = &sim.runtime;
-    let mut rng = Rng::seed_from(cfg.seed);
-    let mut client_rngs: Vec<Rng> = (0..cfg.population)
-        .map(|i| rng.fork(i as u64))
-        .collect();
-    let mut avail = AvailabilityModel::build(
-        &cfg.availability,
-        cfg.population,
-        cfg.seed ^ SEED_SALT,
-    )?;
+pub struct TimelyFl {
+    global: ParamVec,
+    server_opt: ServerOpt,
+    /// Fig. 7 ablation state: frozen (T_k, workload) per client.
+    frozen_tk: Option<f64>,
+    frozen_workload: Vec<Option<Workload>>,
+}
 
-    let mut global = rt.init_params(cfg.init_seed)?;
-    let mut server_opt = ServerOpt::new(cfg.server_opt, cfg.server_lr);
-    let mut rec = Recorder::new(cfg.population);
-    // Round boundaries (and idle waits for availability) are events: the
-    // clock only moves by popping the queue.
-    let mut events: EventQueue<()> = EventQueue::new();
+/// Registry constructor.
+pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(TimelyFl {
+        global: sim.runtime.init_params(sim.cfg.init_seed)?,
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        frozen_tk: None,
+        frozen_workload: vec![None; sim.cfg.population],
+    }))
+}
 
-    // Fig. 7 ablation state: frozen (workload, T_k) per client.
-    let mut frozen_tk: Option<f64> = None;
-    let mut frozen_workload: Vec<Option<Workload>> = vec![None; cfg.population];
+impl Strategy for TimelyFl {
+    fn name(&self) -> &'static str {
+        "TimelyFL"
+    }
 
-    let mut completed_rounds = 0usize;
-    while completed_rounds < cfg.rounds {
-        let now = events.now();
+    fn run(&mut self, eng: &mut SimEngine) -> Result<()> {
+        eng.drive_rounds(self)
+    }
+}
 
-        // (1) sample n clients from the currently-available population.
-        // When everyone is online, `online` is exactly 0..population and
-        // this is bit-identical to sampling the whole population.
-        let online = avail.online_clients(now);
-        if online.is_empty() {
-            // Nobody to sample: idle until the next availability
-            // transition wakes the server up (false = population
-            // permanently offline, e.g. the trace ran out).
-            if !super::idle_until_transition(&mut avail, &mut events)
-                || rec.should_stop(sim, events.now())
-            {
-                break;
-            }
-            continue;
-        }
-        let want = cfg.concurrency.min(online.len());
-        let sampled: Vec<usize> = rng
-            .sample_without_replacement(online.len(), want)
-            .into_iter()
-            .map(|i| online[i])
-            .collect();
+impl RoundStrategy for TimelyFl {
+    fn global_params(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
+        let now = ctx.now;
+        let eng = &mut *ctx.eng;
+        let sim = eng.sim;
+        let cfg = &sim.cfg;
+        let rt = &sim.runtime;
 
         // (2) Local Time Update per sampled client
-        let probes: Vec<_> = sampled
+        let probes: Vec<_> = ctx
+            .sampled
             .iter()
             .map(|&c| {
-                let cond = sim.fleet.round_conditions(&mut rng);
+                let cond = sim.fleet.round_conditions(&mut eng.rng);
                 let est = local_time_update(
                     &sim.fleet.devices[c],
                     &cond,
                     cfg.sim_model_bytes,
                     cfg.estimate_noise,
-                    &mut rng,
+                    &mut eng.rng,
                 );
                 (c, cond, est)
             })
@@ -112,21 +98,21 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
         let t_k = if cfg.adaptive {
             aggregation_interval(&totals, cfg.k_target())
         } else {
-            *frozen_tk.get_or_insert_with(|| aggregation_interval(&totals, cfg.k_target()))
+            *self
+                .frozen_tk
+                .get_or_insert_with(|| aggregation_interval(&totals, cfg.k_target()))
         };
 
         // (4)+(5) schedule, train, check availability + deadline
         let mut contributions = Vec::new();
         let mut participant_ids = Vec::new();
-        let mut dropped = 0usize;
-        let mut avail_dropped = 0usize;
         let mut loss_sum = 0.0;
 
         for (c, cond, est) in &probes {
             let w = if cfg.adaptive {
                 schedule(t_k, est, cfg.max_local_epochs)
             } else {
-                *frozen_workload[*c]
+                *self.frozen_workload[*c]
                     .get_or_insert_with(|| schedule(t_k, est, cfg.max_local_epochs))
             };
             let ratio = rt.meta.quantize_ratio(w.alpha);
@@ -139,16 +125,16 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             let actual = t.round_secs(w.epochs as f64, ratio.ratio, ratio.trainable_fraction);
             let landed = actual <= t_k * (1.0 + cfg.deadline_grace);
             // Failure injection: finished but never delivered.
-            let lost = cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob;
+            let lost = cfg.dropout_prob > 0.0 && eng.rng.f64() < cfg.dropout_prob;
 
             // Churn: the client must stay online for its whole round
             // window or the update is lost with it.
-            if !avail.online_through(*c, now, now + actual) {
-                avail_dropped += 1;
+            if !eng.avail.online_through(*c, now, now + actual) {
+                eng.drop_client(*c, DropCause::Availability);
                 continue;
             }
             if !landed || lost {
-                dropped += 1;
+                eng.drop_client(*c, DropCause::Deadline);
                 continue;
             }
 
@@ -156,12 +142,12 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
                 rt,
                 &sim.dataset,
                 *c,
-                &global,
+                &self.global,
                 ratio,
                 w.epochs,
                 cfg.steps_per_epoch,
                 cfg.client_lr,
-                &mut client_rngs[*c],
+                &mut eng.client_rngs[*c],
             )?;
             loss_sum += outcome.mean_loss;
             participant_ids.push(*c);
@@ -173,35 +159,20 @@ pub fn run(sim: &Simulation) -> Result<RunReport> {
             });
         }
 
-        // (6) aggregate + advance the shared clock by the interval (the
-        // round boundary is an event popped off the queue)
+        // (6) aggregate; the engine advances the shared clock by T_k
         if !contributions.is_empty() {
-            let avg = average_delta(&global, &contributions, false);
-            server_opt.apply(&mut global, &avg);
+            let avg = average_delta(&self.global, &contributions, false);
+            self.server_opt.apply(&mut self.global, &avg);
         }
-        events.schedule_in(t_k, ());
-        let (clock, ()) = events.pop().expect("round boundary was scheduled");
-        let round = completed_rounds;
-        completed_rounds += 1;
-
-        let mean_loss = if participant_ids.is_empty() {
+        let mean_train_loss = if participant_ids.is_empty() {
             None
         } else {
             Some(loss_sum / participant_ids.len() as f64)
         };
-        rec.record_round(round, clock, &participant_ids, dropped, avail_dropped, mean_loss);
-        rec.maybe_eval(sim, round, clock, &global)?;
-        if rec.should_stop(sim, clock) {
-            break;
-        }
+        Ok(RoundOutcome {
+            advance_secs: t_k,
+            participants: participant_ids,
+            mean_train_loss,
+        })
     }
-
-    let sim_secs = events.now();
-    Ok(rec.finish(
-        sim,
-        sim_secs,
-        completed_rounds,
-        events.events_processed(),
-        &mut avail,
-    ))
 }

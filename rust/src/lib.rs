@@ -5,13 +5,16 @@
 //! Federated Learning with Adaptive Partial Training" (2023), as a
 //! three-layer rust + JAX + Pallas stack:
 //!
-//! - **Layer 3 (this crate)** — the federated-learning coordinator: client
-//!   sampling, local-time estimation, workload scheduling (Algorithm 3),
-//!   aggregation-interval control, FedBuff / SyncFL baselines, FedAvg /
-//!   FedOpt server optimizers, and an event-driven heterogeneous-device
-//!   simulator with a first-class client availability & churn subsystem
-//!   (`availability`: always-on / Markov on-off / diurnal / trace-driven
-//!   processes whose transitions are `simtime` events).
+//! - **Layer 3 (this crate)** — the federated-learning coordinator:
+//!   pluggable FL protocols behind a `Strategy` trait + registry
+//!   (`coordinator::registry`; TimelyFL, FedBuff, SyncFL, SemiAsync) driven
+//!   by a shared `SimEngine` that owns local-time estimation inputs, client
+//!   sampling, aggregation lifecycle, FedAvg / FedOpt server optimizers, a
+//!   machine-readable run-event stream (`metrics::events`), and an
+//!   event-driven heterogeneous-device simulator with a first-class client
+//!   availability & churn subsystem (`availability`: always-on / Markov
+//!   on-off / diurnal / trace-driven processes whose transitions are
+//!   `simtime` events). See `docs/architecture.md`.
 //! - **Layer 2 (python/compile/model.py)** — JAX forward/backward train-step
 //!   graphs (with partial-training variants) lowered once to HLO text.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the dense

@@ -1,17 +1,29 @@
 //! `timelyfl` CLI — launcher for simulated federated-learning runs.
 //!
 //! ```text
-//! timelyfl run      --preset cifar_fedavg [--strategy timelyfl] [--set k=v ...]
-//! timelyfl compare  --preset cifar_fedavg [--set k=v ...]      # all 3 strategies
-//! timelyfl inspect  [--artifacts DIR]                           # manifest dump
+//! timelyfl run        --preset cifar_fedavg [--strategy NAME] [--set k=v ...]
+//!                     [--events FILE]                # JSONL run-event stream
+//! timelyfl compare    --preset cifar_fedavg [--set k=v ...]  # every registered strategy
+//! timelyfl strategies                                 # dump the strategy registry
+//! timelyfl trace record [--set avail_*=..] [--horizon SECS] [--out FILE]
+//!                                                     # dump the availability schedule as a JSONL trace
+//! timelyfl inspect    [--artifacts DIR]               # manifest dump
 //! ```
+//!
+//! Strategies resolve through `coordinator::registry` — `--strategy`
+//! accepts any registered name or alias. Unknown subcommands exit non-zero
+//! (shell pipelines depend on it).
 //!
 //! (Hand-rolled arg parsing: clap is not in the offline vendor set.)
 
+use std::io::Write as _;
+
 use anyhow::{Context, Result};
 
-use timelyfl::config::{parse as cfgparse, RunConfig, StrategyKind};
-use timelyfl::coordinator::Simulation;
+use timelyfl::availability::{write_trace, AvailabilityModel, TraceEvent, SEED_SALT};
+use timelyfl::config::{parse as cfgparse, RunConfig};
+use timelyfl::coordinator::{registry, Simulation};
+use timelyfl::metrics::events::JsonlSink;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
 use timelyfl::metrics::RunReport;
 use timelyfl::runtime::{Manifest, Task};
@@ -19,6 +31,8 @@ use timelyfl::simtime::hours;
 
 struct Args {
     command: String,
+    /// First bare word after the command (e.g. `trace record`).
+    subcommand: Option<String>,
     preset: Option<String>,
     strategy: Option<String>,
     config_file: Option<String>,
@@ -26,11 +40,14 @@ struct Args {
     artifacts: String,
     out: Option<String>,
     target: Option<f64>,
+    events: Option<String>,
+    horizon: Option<f64>,
 }
 
 fn parse_args() -> Result<Args> {
     let mut args = Args {
         command: String::new(),
+        subcommand: None,
         preset: None,
         strategy: None,
         config_file: None,
@@ -38,6 +55,8 @@ fn parse_args() -> Result<Args> {
         artifacts: "artifacts".into(),
         out: None,
         target: None,
+        events: None,
+        horizon: None,
     };
     let mut it = std::env::args().skip(1);
     args.command = it.next().unwrap_or_else(|| "help".into());
@@ -53,8 +72,13 @@ fn parse_args() -> Result<Args> {
             "--artifacts" => args.artifacts = need("--artifacts")?,
             "--out" => args.out = Some(need("--out")?),
             "--target" => args.target = Some(need("--target")?.parse()?),
+            "--events" => args.events = Some(need("--events")?),
+            "--horizon" => args.horizon = Some(need("--horizon")?.parse()?),
             "--help" | "-h" => {
                 args.command = "help".into();
+            }
+            other if !other.starts_with('-') && args.subcommand.is_none() => {
+                args.subcommand = Some(other.to_string());
             }
             other => anyhow::bail!("unknown flag {other:?}"),
         }
@@ -75,7 +99,7 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         cfgparse::apply_cli(&mut cfg, kv)?;
     }
     if let Some(s) = &args.strategy {
-        cfg.strategy = StrategyKind::parse(s)?;
+        cfg.strategy = registry::resolve(s)?.name.to_string();
     }
     if let Some(t) = args.target {
         cfg.target_metric = Some(t);
@@ -84,19 +108,7 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = build_config(args)?;
-    eprintln!(
-        "run: model={} strategy={} population={} concurrency={} rounds={}",
-        cfg.model,
-        cfg.strategy.name(),
-        cfg.population,
-        cfg.concurrency,
-        cfg.rounds
-    );
-    let sim = Simulation::new(cfg, &args.artifacts)?;
-    let report = sim.run()?;
-
+fn print_report(report: &RunReport) {
     let mut t = Table::new(&["round", "sim_hours", "loss", "metric"]);
     for p in &report.eval_points {
         t.row(vec![
@@ -120,6 +132,30 @@ fn cmd_run(args: &Args) -> Result<()> {
         report.total_avail_drops(),
         report.total_deadline_drops()
     );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "run: model={} strategy={} population={} concurrency={} rounds={}",
+        cfg.model, cfg.strategy, cfg.population, cfg.concurrency, cfg.rounds
+    );
+    let sim = Simulation::new(cfg, &args.artifacts)?;
+    let report = match &args.events {
+        Some(path) => {
+            let file = std::fs::File::create(path)
+                .with_context(|| format!("creating event stream {path}"))?;
+            let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+            let report = sim.run_with_sink(&mut sink)?;
+            anyhow::ensure!(sink.errors == 0, "{} event-stream writes failed", sink.errors);
+            sink.into_inner().flush()?;
+            eprintln!("wrote event stream {path}");
+            report
+        }
+        None => sim.run()?,
+    };
+
+    print_report(&report);
     if let Some(out) = &args.out {
         std::fs::write(out, report.to_json().to_string())?;
         eprintln!("wrote {out}");
@@ -133,11 +169,13 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
     let higher_better = manifest.model(&base.model)?.task == Task::Classify;
 
+    // Every registered strategy, in registry order — a new strategy shows
+    // up here with zero CLI changes.
     let mut reports = Vec::new();
-    for strat in [StrategyKind::TimelyFl, StrategyKind::FedBuff, StrategyKind::SyncFl] {
+    for info in registry::STRATEGIES {
         let mut cfg = base.clone();
-        cfg.strategy = strat;
-        eprintln!("running {} ...", strat.name());
+        cfg.strategy = info.name.to_string();
+        eprintln!("running {} ...", info.name);
         let sim = Simulation::with_client(cfg, &manifest, &client)?;
         reports.push(sim.run()?);
     }
@@ -171,6 +209,76 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_strategies() -> Result<()> {
+    let mut t = Table::new(&["name", "aliases", "summary"]);
+    for info in registry::STRATEGIES {
+        t.row(vec![
+            info.name.to_string(),
+            info.aliases.join(", "),
+            info.summary.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `timelyfl trace record`: dump the configured availability process's
+/// schedule to the JSONL trace format of `docs/availability.md`, so a
+/// Markov/diurnal run can be replayed elsewhere with `availability=trace`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("record") => {}
+        other => anyhow::bail!(
+            "usage: timelyfl trace record [--preset P] [--set avail_*=..] \
+             [--horizon SECS] [--out FILE] (got {other:?})"
+        ),
+    }
+    let cfg = build_config(args)?;
+    let horizon = match args.horizon {
+        Some(h) => h,
+        None if cfg.sim_time_budget.is_finite() => cfg.sim_time_budget,
+        None => 86_400.0, // one simulated day
+    };
+    anyhow::ensure!(
+        horizon > 0.0 && horizon.is_finite(),
+        "--horizon must be positive and finite (got {horizon})"
+    );
+    let mut model =
+        AvailabilityModel::build(&cfg.availability, cfg.population, cfg.seed ^ SEED_SALT)?;
+
+    let mut events = Vec::new();
+    for client in 0..cfg.population {
+        // Trace semantics: clients are online before their first record, so
+        // an initially-offline client needs an explicit record at t=0.
+        let mut online = model.is_available(client, 0.0);
+        if !online {
+            events.push(TraceEvent { at: 0.0, client, online: false });
+        }
+        let mut t = 0.0;
+        while let Some(next) = model.next_transition(client, t) {
+            if next > horizon {
+                break;
+            }
+            online = !online;
+            events.push(TraceEvent { at: next, client, online });
+            t = next;
+        }
+    }
+    let text = write_trace(&events);
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "wrote {} transitions for {} clients over {horizon}s to {path}",
+                events.len(),
+                cfg.population
+            );
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts)?;
     let mut t = Table::new(&["model", "task", "params", "tensors", "ratios", "batch"]);
@@ -192,18 +300,44 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn usage() -> String {
+    format!(
+        "usage: timelyfl <run|compare|strategies|trace record|inspect> [--preset P] \
+         [--strategy S] [--config FILE] [--set k=v]... [--artifacts DIR] [--out FILE] \
+         [--target X] [--events FILE] [--horizon SECS]\n\
+         strategies: {}",
+        registry::names().join(", ")
+    )
+}
+
 fn main() -> Result<()> {
     let args = parse_args()?;
+    // Only `trace` takes a subcommand word; a stray bare argument anywhere
+    // else is a user error (e.g. a forgotten `--`), not something to skip.
+    let stray = (args.command != "trace")
+        .then_some(args.subcommand.as_deref())
+        .flatten();
+    if let Some(word) = stray {
+        eprintln!("{}", usage());
+        eprintln!("timelyfl: unexpected argument {word:?}");
+        std::process::exit(2);
+    }
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "strategies" => cmd_strategies(),
+        "trace" => cmd_trace(&args),
         "inspect" => cmd_inspect(&args),
-        _ => {
-            eprintln!(
-                "usage: timelyfl <run|compare|inspect> [--preset P] [--strategy S] \
-                 [--config FILE] [--set k=v]... [--artifacts DIR] [--out FILE] [--target X]"
-            );
+        "help" => {
+            println!("{}", usage());
             Ok(())
+        }
+        other => {
+            // Unknown subcommands must fail loudly AND non-zero, or shell
+            // pipelines (and scripts/check.sh composition) silently pass.
+            eprintln!("{}", usage());
+            eprintln!("timelyfl: unknown subcommand {other:?}");
+            std::process::exit(2);
         }
     }
 }

@@ -1,0 +1,385 @@
+//! Machine-readable run-event stream: JSONL records in the machine-message
+//! idiom of cargo's `machine_message.rs` — every record is one JSON object
+//! per line carrying a `reason` discriminator, so external tooling can
+//! consume runs (`timelyfl run --events FILE`) without parsing the aligned
+//! text tables.
+//!
+//! Record kinds (`reason` values):
+//!
+//! ```text
+//! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
+//!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83}
+//! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
+//! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability"}
+//! {"reason":"availability-transition","client":17,"sim_secs":390.0,"online":false}
+//! ```
+//!
+//! `write_jsonl` / `parse_jsonl` round-trip the format through `util::json`;
+//! unknown `reason` values are an error (the schema is versioned by the set
+//! of reasons — see `docs/architecture.md`).
+
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Why a sampled / in-flight client's update was lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropCause {
+    /// The client's availability process took it offline mid-round.
+    Availability,
+    /// Deadline miss, staleness-cap discard, or injected delivery failure.
+    Deadline,
+}
+
+impl DropCause {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropCause::Availability => "availability",
+            DropCause::Deadline => "deadline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DropCause> {
+        match s {
+            "availability" => Ok(DropCause::Availability),
+            "deadline" => Ok(DropCause::Deadline),
+            other => anyhow::bail!("unknown drop cause {other:?}"),
+        }
+    }
+}
+
+/// One record in a run's event stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunEvent {
+    /// One aggregation round finished (mirrors `metrics::RoundRecord`).
+    RoundComplete {
+        round: usize,
+        sim_secs: f64,
+        participants: usize,
+        dropped: usize,
+        avail_dropped: usize,
+        mean_train_loss: Option<f64>,
+    },
+    /// The global model was evaluated (mirrors `metrics::EvalPoint`).
+    EvalPoint {
+        round: usize,
+        sim_secs: f64,
+        mean_loss: f64,
+        metric: f64,
+    },
+    /// A client's update was lost, with its attribution.
+    ClientDropped {
+        client: usize,
+        sim_secs: f64,
+        cause: DropCause,
+    },
+    /// A client's availability state flipped (emitted where the engine
+    /// processes transitions as simulation events, i.e. by event-driven
+    /// strategies).
+    AvailabilityTransition {
+        client: usize,
+        sim_secs: f64,
+        online: bool,
+    },
+}
+
+impl RunEvent {
+    /// The record's `reason` discriminator.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            RunEvent::RoundComplete { .. } => "round-complete",
+            RunEvent::EvalPoint { .. } => "eval-point",
+            RunEvent::ClientDropped { .. } => "client-dropped",
+            RunEvent::AvailabilityTransition { .. } => "availability-transition",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("reason", Json::str(self.reason()))];
+        match self {
+            RunEvent::RoundComplete {
+                round,
+                sim_secs,
+                participants,
+                dropped,
+                avail_dropped,
+                mean_train_loss,
+            } => {
+                pairs.push(("round", Json::num(*round as f64)));
+                pairs.push(("sim_secs", Json::num(*sim_secs)));
+                pairs.push(("participants", Json::num(*participants as f64)));
+                pairs.push(("dropped", Json::num(*dropped as f64)));
+                pairs.push(("avail_dropped", Json::num(*avail_dropped as f64)));
+                pairs.push((
+                    "mean_train_loss",
+                    mean_train_loss.map_or(Json::Null, Json::num),
+                ));
+            }
+            RunEvent::EvalPoint {
+                round,
+                sim_secs,
+                mean_loss,
+                metric,
+            } => {
+                pairs.push(("round", Json::num(*round as f64)));
+                pairs.push(("sim_secs", Json::num(*sim_secs)));
+                pairs.push(("mean_loss", Json::num(*mean_loss)));
+                pairs.push(("metric", Json::num(*metric)));
+            }
+            RunEvent::ClientDropped {
+                client,
+                sim_secs,
+                cause,
+            } => {
+                pairs.push(("client", Json::num(*client as f64)));
+                pairs.push(("sim_secs", Json::num(*sim_secs)));
+                pairs.push(("cause", Json::str(cause.name())));
+            }
+            RunEvent::AvailabilityTransition {
+                client,
+                sim_secs,
+                online,
+            } => {
+                pairs.push(("client", Json::num(*client as f64)));
+                pairs.push(("sim_secs", Json::num(*sim_secs)));
+                pairs.push(("online", Json::Bool(*online)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunEvent> {
+        let reason = v.expect("reason")?.as_str()?;
+        Ok(match reason {
+            "round-complete" => RunEvent::RoundComplete {
+                round: v.expect("round")?.as_usize()?,
+                sim_secs: v.expect("sim_secs")?.as_f64()?,
+                participants: v.expect("participants")?.as_usize()?,
+                dropped: v.expect("dropped")?.as_usize()?,
+                avail_dropped: v.expect("avail_dropped")?.as_usize()?,
+                mean_train_loss: match v.expect("mean_train_loss")? {
+                    Json::Null => None,
+                    other => Some(other.as_f64()?),
+                },
+            },
+            "eval-point" => RunEvent::EvalPoint {
+                round: v.expect("round")?.as_usize()?,
+                sim_secs: v.expect("sim_secs")?.as_f64()?,
+                mean_loss: v.expect("mean_loss")?.as_f64()?,
+                metric: v.expect("metric")?.as_f64()?,
+            },
+            "client-dropped" => RunEvent::ClientDropped {
+                client: v.expect("client")?.as_usize()?,
+                sim_secs: v.expect("sim_secs")?.as_f64()?,
+                cause: DropCause::parse(v.expect("cause")?.as_str()?)?,
+            },
+            "availability-transition" => RunEvent::AvailabilityTransition {
+                client: v.expect("client")?.as_usize()?,
+                sim_secs: v.expect("sim_secs")?.as_f64()?,
+                online: v.expect("online")?.as_bool()?,
+            },
+            other => anyhow::bail!("unknown event reason {other:?}"),
+        })
+    }
+
+    /// Parse one JSONL line.
+    pub fn parse_line(line: &str) -> Result<RunEvent> {
+        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Serialize events to the JSONL stream format.
+pub fn write_jsonl(events: &[RunEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a whole JSONL event stream. Blank lines are skipped; malformed
+/// lines error with their line number.
+pub fn parse_jsonl(text: &str) -> Result<Vec<RunEvent>> {
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        events.push(
+            RunEvent::parse_line(line).with_context(|| format!("event line {}", lineno + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+/// Where the engine streams run events during a run.
+pub trait EventSink {
+    fn emit(&mut self, ev: &RunEvent);
+}
+
+/// Discards everything — the default for `Simulation::run`.
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&mut self, _ev: &RunEvent) {}
+}
+
+/// Buffers events in memory (tests, post-run analysis).
+#[derive(Default)]
+pub struct CollectSink {
+    pub events: Vec<RunEvent>,
+}
+
+impl EventSink for CollectSink {
+    fn emit(&mut self, ev: &RunEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+/// Streams JSONL records to a writer (the CLI's `--events FILE`). Write
+/// errors are counted, not propagated — the run's result outranks its
+/// telemetry; callers check `errors` after the run.
+pub struct JsonlSink<W: Write> {
+    w: W,
+    pub errors: usize,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w, errors: 0 }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: Write> EventSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &RunEvent) {
+        if writeln!(self.w, "{}", ev.to_json()).is_err() {
+            self.errors += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RoundComplete {
+                round: 3,
+                sim_secs: 412.5,
+                participants: 14,
+                dropped: 1,
+                avail_dropped: 2,
+                mean_train_loss: Some(1.83),
+            },
+            RunEvent::RoundComplete {
+                round: 4,
+                sim_secs: 500.0,
+                participants: 0,
+                dropped: 0,
+                avail_dropped: 6,
+                mean_train_loss: None,
+            },
+            RunEvent::EvalPoint {
+                round: 3,
+                sim_secs: 412.5,
+                mean_loss: 1.79,
+                metric: 0.41,
+            },
+            RunEvent::ClientDropped {
+                client: 17,
+                sim_secs: 390.0,
+                cause: DropCause::Availability,
+            },
+            RunEvent::ClientDropped {
+                client: 4,
+                sim_secs: 391.0,
+                cause: DropCause::Deadline,
+            },
+            RunEvent::AvailabilityTransition {
+                client: 17,
+                sim_secs: 390.0,
+                online: false,
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let events = samples();
+        let text = write_jsonl(&events);
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn reasons_match_schema() {
+        let reasons: Vec<&str> = samples().iter().map(|e| e.reason()).collect();
+        for want in [
+            "round-complete",
+            "eval-point",
+            "client-dropped",
+            "availability-transition",
+        ] {
+            assert!(reasons.contains(&want), "missing reason {want}");
+        }
+        // Every line carries the reason discriminator.
+        for line in write_jsonl(&samples()).lines() {
+            assert!(line.contains("\"reason\":"), "line without reason: {line}");
+        }
+    }
+
+    #[test]
+    fn null_loss_round_trips_as_none() {
+        let ev = RunEvent::RoundComplete {
+            round: 0,
+            sim_secs: 1.0,
+            participants: 0,
+            dropped: 0,
+            avail_dropped: 0,
+            mean_train_loss: None,
+        };
+        let line = ev.to_json().to_string();
+        assert!(line.contains("\"mean_train_loss\":null"));
+        assert_eq!(RunEvent::parse_line(&line).unwrap(), ev);
+    }
+
+    #[test]
+    fn rejects_malformed_streams() {
+        let err = parse_jsonl("{\"reason\":\"eval-point\"}\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"));
+        assert!(parse_jsonl("{\"reason\":\"bogus\",\"x\":1}\n").is_err());
+        assert!(RunEvent::parse_line("not json").is_err());
+        assert!(DropCause::parse("gravity").is_err());
+        // Blank lines are fine.
+        let ok = parse_jsonl("\n{\"reason\":\"availability-transition\",\"client\":1,\"sim_secs\":2.0,\"online\":true}\n\n").unwrap();
+        assert_eq!(ok.len(), 1);
+    }
+
+    #[test]
+    fn sinks_collect_and_write() {
+        let mut collect = CollectSink::default();
+        for e in samples() {
+            collect.emit(&e);
+        }
+        assert_eq!(collect.events, samples());
+
+        let mut sink = JsonlSink::new(Vec::new());
+        for e in samples() {
+            sink.emit(&e);
+        }
+        assert_eq!(sink.errors, 0);
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        assert_eq!(parse_jsonl(&text).unwrap(), samples());
+
+        NullSink.emit(&samples()[0]); // no-op, must not panic
+    }
+}

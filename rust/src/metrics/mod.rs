@@ -2,6 +2,7 @@
 //! curves over simulated time (Figs. 1c/4/6/7), and time-to-target
 //! extraction (Tables 1/2).
 
+pub mod events;
 pub mod report;
 
 use crate::simtime::hours;
@@ -110,6 +111,12 @@ pub struct RunReport {
     pub events_processed: u64,
     /// Real PJRT train-steps executed (for perf accounting).
     pub real_train_steps: u64,
+    /// Deadline-side drops that accumulated when no round was ever
+    /// recorded (e.g. the population was offline from t=0); included in
+    /// `total_deadline_drops()`.
+    pub tail_dropped: usize,
+    /// Same, for availability-churn drops (`total_avail_drops()`).
+    pub tail_avail_dropped: usize,
 }
 
 impl RunReport {
@@ -151,14 +158,16 @@ impl RunReport {
         crate::util::stats::mean(&self.online_fraction)
     }
 
-    /// Total clients lost to availability churn across all rounds.
+    /// Total clients lost to availability churn across the whole run
+    /// (per-round attribution plus the zero-round tail).
     pub fn total_avail_drops(&self) -> usize {
-        self.rounds.iter().map(|r| r.avail_dropped).sum()
+        self.rounds.iter().map(|r| r.avail_dropped).sum::<usize>() + self.tail_avail_dropped
     }
 
-    /// Total clients lost to deadlines / staleness caps / injected failures.
+    /// Total clients lost to deadlines / staleness caps / injected failures
+    /// (per-round attribution plus the zero-round tail).
     pub fn total_deadline_drops(&self) -> usize {
-        self.rounds.iter().map(|r| r.dropped).sum()
+        self.rounds.iter().map(|r| r.dropped).sum::<usize>() + self.tail_dropped
     }
 }
 
@@ -203,6 +212,8 @@ mod tests {
             total_rounds: 0,
             events_processed: 0,
             real_train_steps: 0,
+            tail_dropped: 0,
+            tail_avail_dropped: 0,
         }
     }
 
@@ -231,6 +242,18 @@ mod tests {
         assert_eq!(r.total_avail_drops(), 6);
         assert_eq!(r.total_deadline_drops(), 1);
         assert!((r.mean_online_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_round_tail_counts_survive_into_totals() {
+        // A run where the population was offline from t=0 records no
+        // rounds; the tail counters still reach the totals.
+        let mut r = report_with(vec![]);
+        r.tail_dropped = 2;
+        r.tail_avail_dropped = 5;
+        assert!(r.rounds.is_empty());
+        assert_eq!(r.total_deadline_drops(), 2);
+        assert_eq!(r.total_avail_drops(), 5);
     }
 
     #[test]

@@ -38,6 +38,11 @@ impl RunReport {
                 "deadline_drops",
                 Json::num(self.total_deadline_drops() as f64),
             ),
+            ("tail_dropped", Json::num(self.tail_dropped as f64)),
+            (
+                "tail_avail_dropped",
+                Json::num(self.tail_avail_dropped as f64),
+            ),
             (
                 "eval_points",
                 Json::arr(
@@ -258,6 +263,8 @@ mod tests {
             total_rounds: 5,
             events_processed: 7,
             real_train_steps: 10,
+            tail_dropped: 0,
+            tail_avail_dropped: 1,
         }
     }
 
@@ -272,8 +279,10 @@ mod tests {
             1
         );
         assert_eq!(parsed.get("events_processed").unwrap().as_f64().unwrap(), 7.0);
-        assert_eq!(parsed.get("avail_drops").unwrap().as_f64().unwrap(), 9.0);
+        // 3 + 6 per-round churn drops plus the zero-round tail of 1.
+        assert_eq!(parsed.get("avail_drops").unwrap().as_f64().unwrap(), 10.0);
         assert_eq!(parsed.get("deadline_drops").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(parsed.get("tail_avail_dropped").unwrap().as_f64().unwrap(), 1.0);
         assert!(
             (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
         );
@@ -299,7 +308,7 @@ mod tests {
         assert!(s.contains("avail_drops"));
         assert!(s.contains("deadline_drops"));
         assert!(s.contains("0.500")); // online fraction
-        assert!(s.contains('9')); // avail drops
+        assert!(s.contains("10")); // avail drops incl. run-level tail
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Artifact-free properties of the strategy registry, config resolution,
+//! and the run-event JSONL schema — everything here runs without the AOT
+//! artifacts or PJRT (the other half of the registry contract, actually
+//! constructing and driving strategies, lives in
+//! `strategies_integration.rs`).
+
+use timelyfl::config::{parse as cfgparse, RunConfig};
+use timelyfl::coordinator::registry;
+use timelyfl::metrics::events::{self, DropCause, RunEvent};
+
+#[test]
+fn every_registered_strategy_is_listed_and_resolvable() {
+    assert!(registry::STRATEGIES.len() >= 4, "paper trio + semi-async");
+    for info in registry::STRATEGIES {
+        assert!(!info.name.is_empty() && !info.summary.is_empty());
+        assert_eq!(registry::resolve(info.name).unwrap().name, info.name);
+        for alias in info.aliases {
+            assert_eq!(
+                registry::resolve(alias).unwrap().name,
+                info.name,
+                "alias {alias} must resolve to {}",
+                info.name
+            );
+        }
+    }
+}
+
+#[test]
+fn config_round_trips_every_strategy_name_and_alias() {
+    for info in registry::STRATEGIES {
+        let mut cfg = RunConfig::default();
+        cfgparse::apply_cli(&mut cfg, &format!("strategy={}", info.name)).unwrap();
+        assert_eq!(cfg.strategy, info.name);
+        cfg.validate().unwrap();
+        for alias in info.aliases {
+            cfgparse::apply_cli(&mut cfg, &format!("strategy={alias}")).unwrap();
+            assert_eq!(cfg.strategy, info.name, "alias {alias} not canonicalized");
+        }
+    }
+    // Unknown strategies fail at parse AND at validate (belt and braces for
+    // configs constructed programmatically).
+    let mut cfg = RunConfig::default();
+    assert!(cfgparse::apply_cli(&mut cfg, "strategy=adaptivefl").is_err());
+    cfg.strategy = "adaptivefl".into();
+    assert!(cfg.validate().is_err());
+}
+
+#[test]
+fn default_config_resolves_through_registry() {
+    let cfg = RunConfig::default();
+    assert_eq!(registry::resolve(&cfg.strategy).unwrap().name, "TimelyFL");
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn event_schema_round_trips_through_util_json() {
+    let events = vec![
+        RunEvent::RoundComplete {
+            round: 0,
+            sim_secs: 60.0,
+            participants: 3,
+            dropped: 0,
+            avail_dropped: 1,
+            mean_train_loss: Some(2.5),
+        },
+        RunEvent::RoundComplete {
+            round: 1,
+            sim_secs: 120.0,
+            participants: 0,
+            dropped: 2,
+            avail_dropped: 0,
+            mean_train_loss: None,
+        },
+        RunEvent::EvalPoint {
+            round: 1,
+            sim_secs: 120.0,
+            mean_loss: 2.25,
+            metric: 0.31,
+        },
+        RunEvent::ClientDropped {
+            client: 7,
+            sim_secs: 90.5,
+            cause: DropCause::Deadline,
+        },
+        RunEvent::AvailabilityTransition {
+            client: 2,
+            sim_secs: 88.0,
+            online: true,
+        },
+    ];
+    let text = events::write_jsonl(&events);
+    // One line per record, each a self-contained JSON object.
+    assert_eq!(text.lines().count(), events.len());
+    assert_eq!(events::parse_jsonl(&text).unwrap(), events);
+}
+
+#[test]
+fn event_reasons_are_the_documented_set() {
+    // docs/architecture.md documents exactly these reason strings; adding a
+    // kind means updating the doc (and this list).
+    let ev = [
+        RunEvent::RoundComplete {
+            round: 0,
+            sim_secs: 0.0,
+            participants: 0,
+            dropped: 0,
+            avail_dropped: 0,
+            mean_train_loss: None,
+        },
+        RunEvent::EvalPoint {
+            round: 0,
+            sim_secs: 0.0,
+            mean_loss: 0.0,
+            metric: 0.0,
+        },
+        RunEvent::ClientDropped {
+            client: 0,
+            sim_secs: 0.0,
+            cause: DropCause::Availability,
+        },
+        RunEvent::AvailabilityTransition {
+            client: 0,
+            sim_secs: 0.0,
+            online: false,
+        },
+    ];
+    let got: Vec<&str> = ev.iter().map(|e| e.reason()).collect();
+    assert_eq!(
+        got,
+        vec![
+            "round-complete",
+            "eval-point",
+            "client-dropped",
+            "availability-transition"
+        ]
+    );
+}

@@ -9,6 +9,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Toolchain-free lint: dead code must be deleted, not silenced — the
+# coordinator is the subsystem most prone to accumulating orphaned hooks
+# during strategy refactors.
+echo "== forbid #[allow(dead_code)] in rust/src/coordinator"
+if grep -rn 'allow(dead_code)' rust/src/coordinator; then
+    echo "check.sh: #[allow(dead_code)] is banned in coordinator/ — delete the dead code instead." >&2
+    exit 1
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "check.sh: cargo not found on PATH — cannot run the gate." >&2
     echo "check.sh: install the rust toolchain (rustup) and re-run." >&2
@@ -30,6 +39,7 @@ else
     cargo test -q --lib
     cargo test -q --test coordinator_properties
     cargo test -q --test availability_properties
+    cargo test -q --test registry_properties
 fi
 
 echo "check.sh: OK"
