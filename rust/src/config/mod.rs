@@ -77,6 +77,17 @@ pub struct RunConfig {
     /// balance; see DESIGN.md §3).
     pub sim_model_bytes: f64,
 
+    /// Escape hatch for A/B-measuring the deferred dispatch path: run a
+    /// dispatched client's PJRT training at dispatch time (the historical
+    /// behaviour) instead of deferring it to the generation-validated
+    /// finish event. The run's *semantics* are bit-identical either way —
+    /// same rounds, participants, drops, learning curve, simulated clock —
+    /// only the perf accounting differs (`wall_secs`, `real_train_steps`,
+    /// `trainings_executed`/`trainings_avoided`): eager burns real
+    /// accelerator work on churn-cancelled dispatches, so its
+    /// `trainings_avoided` is always 0.
+    pub eager_train: bool,
+
     /// Evaluate every this many aggregation rounds.
     pub eval_every: usize,
     /// Held-out eval batches per evaluation.
@@ -120,6 +131,7 @@ impl Default for RunConfig {
             fleet: FleetConfig::default(),
             availability: AvailabilityConfig::default(),
             sim_model_bytes: 1.09e6, // ResNet-20 f32 ~ 1.09 MB
+            eager_train: false,
             eval_every: 10,
             eval_batches: 4,
             target_metric: None,

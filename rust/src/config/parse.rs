@@ -60,6 +60,7 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "median_bandwidth" => cfg.fleet.median_bandwidth = v.parse()?,
         "bandwidth_spread" => cfg.fleet.bandwidth_spread = v.parse()?,
         "sim_model_bytes" => cfg.sim_model_bytes = v.parse()?,
+        "eager_train" => cfg.eager_train = parse_bool(v)?,
         "eval_every" => cfg.eval_every = v.parse()?,
         "eval_batches" => cfg.eval_batches = v.parse()?,
         "target_metric" => {
@@ -121,7 +122,8 @@ mod tests {
              rounds = 42   # trailing comment\n\
              client_lr = 0.5\n\
              adaptive = false\n\
-             max_staleness = 10\n",
+             max_staleness = 10\n\
+             eager_train = true\n",
         )
         .unwrap();
         assert_eq!(cfg.strategy, "FedBuff");
@@ -129,6 +131,11 @@ mod tests {
         assert_eq!(cfg.client_lr, 0.5);
         assert!(!cfg.adaptive);
         assert_eq!(cfg.max_staleness, Some(10));
+        assert!(cfg.eager_train, "eager_train override not applied");
+        let mut deferred = RunConfig::default();
+        assert!(!deferred.eager_train, "deferred dispatch is the default");
+        apply_cli(&mut deferred, "eager_train=no").unwrap();
+        assert!(!deferred.eager_train);
     }
 
     #[test]

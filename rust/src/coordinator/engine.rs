@@ -22,10 +22,28 @@
 //! event schedule, so a ported strategy's `RunReport` is bit-identical to
 //! its hand-rolled predecessor (locked by the golden tests in
 //! `rust/tests/strategies_integration.rs`).
+//!
+//! # Deferred client training
+//!
+//! [`SimEngine::dispatch`] splits local training into *plan* and *execute*
+//! phases (`coordinator::trainer`). The plan — every data-batch draw — is
+//! taken eagerly from the per-client RNG at dispatch time, preserving
+//! stream positions and therefore golden-report bit-identity; the PJRT
+//! executions are deferred until the dispatch's Finish event arrives with a
+//! still-valid generation. A mid-training availability drop discards the
+//! pending [`TrainPlan`] without ever touching the accelerator
+//! (`trainings_avoided` in the report; `cfg.eager_train` restores the
+//! train-at-dispatch behaviour for A/B measurement). Base-model snapshots
+//! for pending plans live in a version-keyed refcounted [`SnapshotStore`]
+//! so concurrent dispatches against one global version share a single
+//! copy.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::trainer::train_client;
+use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, TrainPlan};
 use super::{local_time, Recorder, Simulation};
 use crate::availability::{AvailabilityModel, SEED_SALT};
 use crate::metrics::events::{DropCause, EventSink, RunEvent};
@@ -35,12 +53,13 @@ use crate::runtime::manifest::RatioMeta;
 use crate::simtime::{EventQueue, SimTime};
 use crate::util::rng::Rng;
 
-/// A dispatched client finishing local training. The update is computed
-/// eagerly at dispatch time (it only depends on the base snapshot, so this
-/// is equivalent and keeps the event payload self-contained); `gen` is the
-/// dispatch generation the finish belongs to — a mid-training offline
-/// transition bumps the client's generation, invalidating the pending
-/// finish.
+/// A dispatched client's completed local training, as delivered to
+/// [`EventStrategy::on_finish`]. Under deferred execution (the default) the
+/// update is computed by the engine when the Finish event validates; under
+/// `cfg.eager_train` it was computed at dispatch time and stashed. Either
+/// way the hook sees the same payload. `gen` is the dispatch generation the
+/// finish belongs to — a mid-training offline transition bumps the
+/// client's generation, invalidating the pending finish.
 pub struct ClientFinish {
     pub client: usize,
     pub gen: u64,
@@ -50,15 +69,19 @@ pub struct ClientFinish {
     pub mean_loss: f64,
 }
 
-/// Everything that can move the engine's clock.
+/// Everything that can move the engine's clock. `Finish` is a lightweight
+/// marker — the dispatch's stashed work lives in the engine's pending
+/// table, not in the queue — so cancelling it never wastes accelerator
+/// work.
 pub enum EngineEvent {
     /// A round boundary or idle-wake (scheduled by the round-stepped loop).
     Tick,
     /// `client`'s availability state flips at this timestamp; the next
     /// transition is chained onto the queue when this one is processed.
     Transition { client: usize },
-    /// A dispatched client's simulated local training completes.
-    Finish(ClientFinish),
+    /// A dispatched client's simulated local training completes. Valid iff
+    /// `gen` still matches the client's dispatch generation.
+    Finish { client: usize, gen: u64 },
     /// A strategy-scheduled timer (deadline-gated protocols re-arm it from
     /// [`EventStrategy::on_alarm`]).
     Alarm,
@@ -143,6 +166,63 @@ pub trait Strategy {
     fn run(&mut self, eng: &mut SimEngine) -> Result<()>;
 }
 
+/// The stashed half of an in-flight dispatch, resolved when its Finish
+/// event validates (or discarded when churn cancels it).
+enum PendingWork {
+    /// Deferred (default): the PJRT executions happen at the Finish event;
+    /// the plan pins the RNG draws, the `Arc` keeps the base snapshot
+    /// alive.
+    Planned { plan: TrainPlan, base: Arc<ParamVec> },
+    /// Eager (`cfg.eager_train`): trained at dispatch time, outcome stashed
+    /// until the finish — the pre-deferral behaviour, kept for A/B
+    /// measurement.
+    Trained { update: Update, mean_loss: f64 },
+}
+
+struct PendingDispatch {
+    base_version: u64,
+    work: PendingWork,
+}
+
+/// Version-keyed store of base-model snapshots for deferred dispatches.
+/// `retain` hands out a shared `Arc` per global version (cloning the
+/// parameters at most once per version, however many clients dispatch on
+/// it); `release` drops a reference and evicts the version once its last
+/// pending plan resolves — executed or cancelled — so the store never
+/// outgrows the set of versions with work still in flight.
+#[derive(Default)]
+pub(crate) struct SnapshotStore {
+    entries: BTreeMap<u64, (Arc<ParamVec>, usize)>,
+}
+
+impl SnapshotStore {
+    fn retain(&mut self, version: u64, params: &ParamVec) -> Arc<ParamVec> {
+        let entry = self
+            .entries
+            .entry(version)
+            .or_insert_with(|| (Arc::new(params.clone()), 0));
+        entry.1 += 1;
+        Arc::clone(&entry.0)
+    }
+
+    fn release(&mut self, version: u64) {
+        let Some(entry) = self.entries.get_mut(&version) else {
+            debug_assert!(false, "release of unretained snapshot version {version}");
+            return;
+        };
+        entry.1 -= 1;
+        if entry.1 == 0 {
+            self.entries.remove(&version);
+        }
+    }
+
+    /// Versions currently held (bounded by distinct in-flight versions).
+    #[cfg(test)]
+    fn versions_held(&self) -> usize {
+        self.entries.len()
+    }
+}
+
 /// Shared per-run state + lifecycle driver. One engine drives one run.
 pub struct SimEngine<'a> {
     pub sim: &'a Simulation,
@@ -155,6 +235,9 @@ pub struct SimEngine<'a> {
     pub recorder: Recorder,
     busy: Vec<bool>,
     gens: Vec<u64>,
+    /// Per-client stashed dispatch work (at most one — `busy` gates).
+    pending: Vec<Option<PendingDispatch>>,
+    snapshots: SnapshotStore,
     in_flight: usize,
     completed_rounds: usize,
     /// Drop attribution accumulated since the last completed round.
@@ -186,6 +269,8 @@ impl<'a> SimEngine<'a> {
             recorder: Recorder::new(cfg.population),
             busy: vec![false; cfg.population],
             gens: vec![0; cfg.population],
+            pending: (0..cfg.population).map(|_| None).collect(),
+            snapshots: SnapshotStore::default(),
             in_flight: 0,
             completed_rounds: 0,
             dropped_pending: 0,
@@ -229,6 +314,10 @@ impl<'a> SimEngine<'a> {
     /// record. Folded into the NEXT completed round's attribution (for
     /// round-stepped strategies that is the current round).
     pub fn drop_client(&mut self, client: usize, cause: DropCause) {
+        self.drop_client_inner(client, cause, false);
+    }
+
+    fn drop_client_inner(&mut self, client: usize, cause: DropCause, execution_avoided: bool) {
         match cause {
             DropCause::Availability => self.avail_dropped_pending += 1,
             DropCause::Deadline => self.dropped_pending += 1,
@@ -237,6 +326,7 @@ impl<'a> SimEngine<'a> {
             client,
             sim_secs: self.events.now(),
             cause,
+            execution_avoided,
         };
         self.emit(ev);
     }
@@ -354,7 +444,8 @@ impl<'a> SimEngine<'a> {
 
     /// The shared event-driven loop: seeds + chains availability
     /// transitions, cancels in-flight updates on churn, validates finish
-    /// generations, and routes everything else to the strategy's hooks.
+    /// generations (executing deferred plans for the valid ones), and
+    /// routes everything else to the strategy's hooks.
     pub fn drive_events(&mut self, strat: &mut dyn EventStrategy) -> Result<()> {
         let sim = self.sim;
         let cfg = &sim.cfg;
@@ -416,16 +507,17 @@ impl<'a> SimEngine<'a> {
                         strat.on_client_online(self, client)?;
                     } else if self.busy[client] {
                         // Went offline mid-training: the in-flight update is
-                        // lost with it.
+                        // lost with it (and its deferred execution skipped).
                         self.cancel_in_flight(client);
                         strat.on_slot_freed(self, now)?;
                     }
                 }
-                EngineEvent::Finish(fin) => {
-                    if fin.gen != self.gens[fin.client] {
+                EngineEvent::Finish { client, gen } => {
+                    if gen != self.gens[client] {
                         continue; // cancelled by an offline transition
                     }
-                    self.busy[fin.client] = false;
+                    let fin = self.resolve_finish(client, gen)?;
+                    self.busy[client] = false;
                     self.in_flight -= 1;
                     strat.on_finish(self, now, fin)?;
                     if self.stop {
@@ -443,18 +535,62 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
-    /// Invalidate `client`'s pending finish (generation bump), return its
-    /// concurrency slot, and attribute the loss to availability churn.
+    /// Turn a generation-valid finish marker into the hook payload: unstash
+    /// an eager outcome, or run the deferred plan's PJRT executions now —
+    /// the only point where the deferred path touches the accelerator.
+    fn resolve_finish(&mut self, client: usize, gen: u64) -> Result<ClientFinish> {
+        let pd = self.pending[client]
+            .take()
+            .expect("generation-valid finish without stashed work");
+        let base_version = pd.base_version;
+        let (update, mean_loss) = match pd.work {
+            PendingWork::Trained { update, mean_loss } => (update, mean_loss),
+            PendingWork::Planned { plan, base } => {
+                let outcome =
+                    execute_plan(&self.sim.runtime, &plan, &base, self.sim.cfg.client_lr)?;
+                self.snapshots.release(base_version);
+                self.recorder.wasted.on_execute();
+                (outcome.update, outcome.mean_loss)
+            }
+        };
+        Ok(ClientFinish {
+            client,
+            gen,
+            base_version,
+            update,
+            mean_loss,
+        })
+    }
+
+    /// Invalidate `client`'s pending finish (generation bump), discard its
+    /// stashed work — a deferred plan dies here WITHOUT ever executing on
+    /// the accelerator — return its concurrency slot, and attribute the
+    /// loss to availability churn.
     fn cancel_in_flight(&mut self, client: usize) {
         self.gens[client] += 1;
         self.busy[client] = false;
         self.in_flight -= 1;
-        self.drop_client(client, DropCause::Availability);
+        let execution_avoided = match self.pending[client].take() {
+            Some(PendingDispatch {
+                base_version,
+                work: PendingWork::Planned { .. },
+            }) => {
+                self.snapshots.release(base_version);
+                self.recorder.wasted.on_avoid();
+                true
+            }
+            // Eager dispatch: the PJRT work already burned at dispatch time.
+            _ => false,
+        };
+        self.drop_client_inner(client, DropCause::Availability, execution_avoided);
     }
 
-    /// Dispatch one client for event-driven protocols: train eagerly on
-    /// `base` and schedule the finish event at the simulated completion
-    /// time. Callers pick only currently-online, non-busy clients.
+    /// Dispatch one client for event-driven protocols: draw the full data
+    /// plan from the client's RNG stream now (pinning golden bit-identity),
+    /// stash the work in the pending table, and schedule the finish marker
+    /// at the simulated completion time. The PJRT executions run only when
+    /// the finish validates (unless `cfg.eager_train`). Callers pick only
+    /// currently-online, non-busy clients.
     pub fn dispatch(
         &mut self,
         client: usize,
@@ -474,26 +610,33 @@ impl<'a> SimEngine<'a> {
         // realized trainable fraction; both are exactly 1.0 for full-model
         // dispatches.
         let duration = t.round_secs(epochs as f64, ratio.ratio, ratio.trainable_fraction);
-        let outcome = train_client(
-            &sim.runtime,
+        let plan = plan_client(
             &sim.dataset,
             client,
-            base,
             ratio,
             epochs,
             cfg.steps_per_epoch,
-            cfg.client_lr,
             &mut self.client_rngs[client],
-        )?;
-        self.events.schedule_in(
-            duration,
-            EngineEvent::Finish(ClientFinish {
-                client,
-                gen: self.gens[client],
-                base_version,
+        );
+        self.recorder.wasted.on_dispatch();
+        let work = if cfg.eager_train {
+            let outcome = execute_plan(&sim.runtime, &plan, base, cfg.client_lr)?;
+            self.recorder.wasted.on_execute();
+            PendingWork::Trained {
                 update: outcome.update,
                 mean_loss: outcome.mean_loss,
-            }),
+            }
+        } else {
+            let base = self.snapshots.retain(base_version, base);
+            PendingWork::Planned { plan, base }
+        };
+        self.pending[client] = Some(PendingDispatch { base_version, work });
+        self.events.schedule_in(
+            duration,
+            EngineEvent::Finish {
+                client,
+                gen: self.gens[client],
+            },
         );
         Ok(())
     }
@@ -516,6 +659,34 @@ impl<'a> SimEngine<'a> {
         self.dispatch(client, sim.cfg.fedbuff_local_epochs, full, base, base_version)
     }
 
+    /// Synchronous training for round-stepped strategies: plan + execute in
+    /// one call (round protocols decide eligibility BEFORE training, so
+    /// there is never a speculative execution to defer), counted as one
+    /// executed dispatch in the wasted-work ledger.
+    pub fn train_now(
+        &mut self,
+        client: usize,
+        base: &ParamVec,
+        ratio: &RatioMeta,
+        epochs: usize,
+    ) -> Result<LocalOutcome> {
+        let sim = self.sim;
+        self.recorder.wasted.on_dispatch();
+        let outcome = train_client(
+            &sim.runtime,
+            &sim.dataset,
+            client,
+            base,
+            ratio,
+            epochs,
+            sim.cfg.steps_per_epoch,
+            sim.cfg.client_lr,
+            &mut self.client_rngs[client],
+        )?;
+        self.recorder.wasted.on_execute();
+        Ok(outcome)
+    }
+
     /// Currently-idle, currently-online clients — the slot-refill pool for
     /// event-driven dispatch policies.
     pub fn idle_online_clients(&mut self, now: SimTime) -> Vec<usize> {
@@ -524,7 +695,9 @@ impl<'a> SimEngine<'a> {
             .collect()
     }
 
-    /// Close out the run: absorb any post-round drop tail and build the
+    /// Close out the run: absorb any post-round drop tail, settle the
+    /// wasted-work ledger (plans still pending when the run ends were never
+    /// executed — deferred wins the eager path pays for), and build the
     /// final report.
     pub fn finish(self, strategy_name: &str) -> RunReport {
         let SimEngine {
@@ -532,11 +705,17 @@ impl<'a> SimEngine<'a> {
             mut recorder,
             mut avail,
             events,
+            pending,
             completed_rounds,
             dropped_pending,
             avail_dropped_pending,
             ..
         } = self;
+        for pd in pending.into_iter().flatten() {
+            if matches!(pd.work, PendingWork::Planned { .. }) {
+                recorder.wasted.on_avoid();
+            }
+        }
         recorder.absorb_tail_drops(dropped_pending, avail_dropped_pending);
         recorder.finish(
             strategy_name,
@@ -546,5 +725,61 @@ impl<'a> SimEngine<'a> {
             events.events_processed(),
             &mut avail,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(vals: &[f32]) -> ParamVec {
+        ParamVec {
+            tensors: vec![vals.to_vec()],
+        }
+    }
+
+    #[test]
+    fn snapshot_store_shares_one_arc_per_version() {
+        let mut store = SnapshotStore::default();
+        let a = store.retain(3, &pv(&[1.0, 2.0]));
+        let b = store.retain(3, &pv(&[9.0, 9.0])); // params ignored: version cached
+        assert!(Arc::ptr_eq(&a, &b), "same version must share one snapshot");
+        assert_eq!(a.tensors[0], vec![1.0, 2.0]);
+        assert_eq!(store.versions_held(), 1);
+        let c = store.retain(4, &pv(&[5.0]));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(store.versions_held(), 2);
+    }
+
+    #[test]
+    fn snapshot_store_evicts_on_last_release() {
+        let mut store = SnapshotStore::default();
+        let snap = store.retain(0, &pv(&[1.0]));
+        let _again = store.retain(0, &pv(&[1.0]));
+        store.release(0);
+        assert_eq!(store.versions_held(), 1, "one pending plan still holds version 0");
+        store.release(0);
+        assert_eq!(store.versions_held(), 0, "last release evicts the version");
+        // Plans that grabbed the Arc keep their data past eviction.
+        assert_eq!(snap.tensors[0], vec![1.0]);
+        // Re-retaining after eviction re-clones fresh parameters.
+        let fresh = store.retain(0, &pv(&[7.0]));
+        assert_eq!(fresh.tensors[0], vec![7.0]);
+        assert!(!Arc::ptr_eq(&snap, &fresh));
+    }
+
+    #[test]
+    fn snapshot_store_interleaved_versions() {
+        // Async reality: a slow client's old-version plan outlives several
+        // newer versions' retain/release cycles.
+        let mut store = SnapshotStore::default();
+        let _old = store.retain(1, &pv(&[1.0]));
+        for v in 2..6 {
+            let _s = store.retain(v, &pv(&[v as f32]));
+            store.release(v);
+        }
+        assert_eq!(store.versions_held(), 1, "only the old in-flight version survives");
+        store.release(1);
+        assert_eq!(store.versions_held(), 0);
     }
 }

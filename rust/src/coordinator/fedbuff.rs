@@ -11,7 +11,8 @@
 //! The engine owns the event loop (one `EventQueue` carrying client
 //! finishes and availability transitions), churn cancellation (a client
 //! going offline mid-training loses its in-flight update via a per-client
-//! dispatch generation), and drop attribution; this module is only the
+//! dispatch generation — and, with deferred dispatch execution, never runs
+//! its PJRT work at all), and drop attribution; this module is only the
 //! protocol: uniform dispatch over the idle-online pool, the buffer, and
 //! the K-updates flush rule.
 //!
@@ -52,6 +53,8 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
 
 impl FedBuff {
     /// Dispatch `client` on the current global (full model, fixed epochs).
+    /// The engine snapshots the version-keyed base and defers the PJRT
+    /// work to the finish event (churn-cancelled dispatches cost nothing).
     fn dispatch(&self, eng: &mut SimEngine, client: usize) -> Result<()> {
         eng.dispatch_full(client, &self.global.params, self.global.version)
     }

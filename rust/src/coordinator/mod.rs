@@ -13,7 +13,11 @@
 //! *timing* is simulated from the device model — the same emulation
 //! methodology as the paper (§4.1). Every strategy samples only from
 //! currently-available clients and attributes churn losses separately from
-//! deadline losses.
+//! deadline losses. Asynchronous dispatches are *deferred*: the engine
+//! draws the data plan eagerly (pinning RNG streams) but runs the PJRT
+//! work only when the dispatch's finish event survives churn, so cancelled
+//! dispatches never touch the accelerator (`Recorder::wasted`,
+//! `RunReport::trainings_{executed,avoided}`; `cfg.eager_train` opts out).
 
 pub mod engine;
 pub mod fedbuff;
@@ -35,7 +39,7 @@ use crate::config::RunConfig;
 use crate::data::{FederatedDataset, SyntheticSpec};
 use crate::devices::Fleet;
 use crate::metrics::events::{EventSink, NullSink};
-use crate::metrics::{EvalPoint, ParticipationTracker, RoundRecord, RunReport};
+use crate::metrics::{EvalPoint, ParticipationTracker, RoundRecord, RunReport, WastedWork};
 use crate::model::ParamVec;
 use crate::runtime::engine::Batch;
 use crate::runtime::{Manifest, ModelRuntime, Task};
@@ -129,6 +133,9 @@ pub struct Recorder {
     pub eval_points: Vec<EvalPoint>,
     pub rounds: Vec<RoundRecord>,
     stop: bool,
+    /// Wasted-work ledger for the plan/execute dispatch split: the engine
+    /// bumps it at dispatch, execution, and cancellation.
+    pub wasted: WastedWork,
     /// Drops that accumulated when NO round was ever recorded (population
     /// offline from t=0): carried at run level so attribution totals don't
     /// silently undercount.
@@ -144,6 +151,7 @@ impl Recorder {
             eval_points: Vec::new(),
             rounds: Vec::new(),
             stop: false,
+            wasted: WastedWork::default(),
             tail_dropped: 0,
             tail_avail_dropped: 0,
         }
@@ -239,6 +247,15 @@ impl Recorder {
         events_processed: u64,
         avail: &mut AvailabilityModel,
     ) -> RunReport {
+        // The engine drains its pending table before finishing, so every
+        // dispatch must have resolved to executed or avoided by now; a
+        // non-zero residue means a path lost a dispatch without settling.
+        debug_assert_eq!(
+            self.wasted.pending(),
+            0,
+            "wasted-work ledger not settled: {:?}",
+            self.wasted
+        );
         let online_fraction = (0..sim.cfg.population)
             .map(|c| avail.online_fraction(c, sim_secs))
             .collect();
@@ -254,6 +271,8 @@ impl Recorder {
             total_rounds,
             events_processed,
             real_train_steps: sim.runtime.stats().train_steps,
+            trainings_executed: self.wasted.executed,
+            trainings_avoided: self.wasted.avoided,
             tail_dropped: self.tail_dropped,
             tail_avail_dropped: self.tail_avail_dropped,
         }

@@ -59,6 +59,8 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
 impl SemiAsync {
     /// Selective dispatch: pick one client from the idle-online pool,
     /// preferring those predicted to stay online through their own round.
+    /// (Selection reduces churn cancellations; deferred dispatch execution
+    /// in the engine makes the remaining ones free on the accelerator.)
     fn select_and_dispatch(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
         let idle = eng.idle_online_clients(now);
         if idle.is_empty() {

@@ -17,7 +17,6 @@ use anyhow::Result;
 
 use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::local_time::truth;
-use super::trainer::train_client;
 use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
 use crate::metrics::events::DropCause;
@@ -87,17 +86,10 @@ impl RoundStrategy for SyncFl {
                 continue;
             }
 
-            let outcome = train_client(
-                rt,
-                &sim.dataset,
-                c,
-                &self.global,
-                full,
-                epochs,
-                cfg.steps_per_epoch,
-                cfg.client_lr,
-                &mut eng.client_rngs[c],
-            )?;
+            // Delivery is settled above, so this training is never
+            // speculative — train synchronously through the engine (which
+            // also keeps the wasted-work ledger).
+            let outcome = eng.train_now(c, &self.global, full, epochs)?;
             loss_sum += outcome.mean_loss;
             participant_ids.push(c);
             contributions.push(Contribution {

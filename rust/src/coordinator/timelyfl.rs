@@ -30,7 +30,6 @@ use anyhow::Result;
 use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::local_time::{local_time_update, truth};
 use super::scheduler::{aggregation_interval, schedule, Workload};
-use super::trainer::train_client;
 use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
 use crate::metrics::events::DropCause;
@@ -138,17 +137,10 @@ impl RoundStrategy for TimelyFl {
                 continue;
             }
 
-            let outcome = train_client(
-                rt,
-                &sim.dataset,
-                *c,
-                &self.global,
-                ratio,
-                w.epochs,
-                cfg.steps_per_epoch,
-                cfg.client_lr,
-                &mut eng.client_rngs[*c],
-            )?;
+            // Eligibility is settled above, so this training is never
+            // speculative — train synchronously through the engine (which
+            // also keeps the wasted-work ledger).
+            let outcome = eng.train_now(*c, &self.global, ratio, w.epochs)?;
             loss_sum += outcome.mean_loss;
             participant_ids.push(*c);
             contributions.push(Contribution {

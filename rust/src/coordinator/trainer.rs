@@ -1,10 +1,30 @@
 //! Client-side local training executor: runs E local epochs of real PJRT
 //! train-steps against a base model snapshot and returns the suffix delta.
+//!
+//! Training is split into two phases so the engine can *defer* the
+//! accelerator work of an asynchronous dispatch until its Finish event
+//! proves the work is still wanted (a churn-cancelled dispatch then never
+//! touches PJRT — see `SimEngine::dispatch`):
+//!
+//! - [`plan_client`] draws everything stochastic — the full minibatch
+//!   sequence — from the per-client RNG at dispatch time. Drawing eagerly
+//!   pins the RNG stream position, so a deferred (or discarded) execution
+//!   leaves every subsequent draw bit-identical to the eager path.
+//! - [`execute_plan`] replays the planned batches through the chunked PJRT
+//!   executions. It consumes no RNG and depends only on the plan and the
+//!   base snapshot, so it can run at the Finish event (or never).
+//!
+//! [`train_client`] is the fused plan-then-execute convenience used by the
+//! synchronous round-stepped strategies, byte-identical to the historical
+//! single-phase implementation: batch i was always drawn before batch i+1,
+//! and PJRT executions never touch the client RNG, so hoisting all draws
+//! ahead of the first execution does not move any stream position.
 
 use anyhow::Result;
 
 use crate::data::FederatedDataset;
 use crate::model::{ParamVec, Update};
+use crate::runtime::engine::Batch;
 use crate::runtime::manifest::RatioMeta;
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
@@ -20,8 +40,114 @@ pub struct LocalOutcome {
     pub steps: u64,
 }
 
+/// The eagerly-drawn half of a client dispatch: everything local training
+/// needs except the base model. A plan is cheap to discard — dropping it
+/// costs nothing on the accelerator.
+#[derive(Clone, Debug)]
+pub struct TrainPlan {
+    pub client_id: usize,
+    /// Nominal compiled ratio; resolved back to [`RatioMeta`] at execute
+    /// time (the plan must not borrow the runtime).
+    pub ratio: f64,
+    /// All `epochs * steps_per_epoch` minibatches, in draw order.
+    pub batches: Vec<Batch>,
+}
+
+impl TrainPlan {
+    /// Logical SGD steps this plan schedules.
+    pub fn total_steps(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+/// Sizes of the fused PJRT executions covering `total` steps at chunk
+/// capacity `chunk`: full chunks followed by the remainder tail. Matches
+/// the historical `remaining.min(chunk)` loop exactly.
+pub fn chunk_sizes(total: usize, chunk: usize) -> Vec<usize> {
+    debug_assert!(chunk >= 1);
+    let mut sizes = Vec::with_capacity(total.div_ceil(chunk.max(1)));
+    let mut remaining = total;
+    while remaining > 0 {
+        let take = remaining.min(chunk);
+        sizes.push(take);
+        remaining -= take;
+    }
+    sizes
+}
+
+/// The divergence guard on every chunk's reported loss. Extracted so the
+/// error path is unit-testable without a PJRT runtime.
+fn check_loss_finite(client: usize, mean_loss: f32, steps: u64) -> Result<()> {
+    anyhow::ensure!(
+        mean_loss.is_finite(),
+        "client {client} diverged (loss {mean_loss}) after step {steps}"
+    );
+    Ok(())
+}
+
+/// Phase 1: draw the full data-batch plan for `client` from its RNG stream.
+/// This is the ONLY stochastic part of local training; after it returns the
+/// client's stream position is exactly where eager training would have left
+/// it.
+pub fn plan_client(
+    ds: &FederatedDataset,
+    client: usize,
+    ratio: &RatioMeta,
+    epochs: usize,
+    steps_per_epoch: usize,
+    rng: &mut Rng,
+) -> TrainPlan {
+    debug_assert!(epochs >= 1 && steps_per_epoch >= 1);
+    let total_steps = epochs * steps_per_epoch;
+    let batches = (0..total_steps).map(|_| ds.train_batch(client, rng)).collect();
+    TrainPlan {
+        client_id: client,
+        ratio: ratio.ratio,
+        batches,
+    }
+}
+
+/// Phase 2: run the planned batches through ceil(total / chunk) fused PJRT
+/// executions (see `ModelRuntime::train_chunk`) against `base`. Pure in the
+/// plan + base: no RNG, no engine state.
+pub fn execute_plan(
+    rt: &ModelRuntime,
+    plan: &TrainPlan,
+    base: &ParamVec,
+    lr: f32,
+) -> Result<LocalOutcome> {
+    let client = plan.client_id;
+    let ratio = rt
+        .meta
+        .ratio_exact(plan.ratio)
+        .ok_or_else(|| anyhow::anyhow!("planned ratio {} not compiled", plan.ratio))?;
+    let mut params = base.clone();
+    let mut loss_sum = 0.0;
+    let mut steps = 0u64;
+    let mut offset = 0usize;
+    for take in chunk_sizes(plan.total_steps(), rt.meta.chunk) {
+        let batches = &plan.batches[offset..offset + take];
+        let (new_params, mean_loss) = rt.train_chunk(ratio, &params, batches, lr)?;
+        check_loss_finite(client, mean_loss, steps)?;
+        params = new_params;
+        loss_sum += mean_loss as f64 * take as f64;
+        steps += take as u64;
+        offset += take;
+    }
+    let update = params.delta_from(base, ratio.boundary);
+    Ok(LocalOutcome {
+        client_id: client,
+        update,
+        mean_loss: loss_sum / steps.max(1) as f64,
+        steps,
+    })
+}
+
 /// Train `client` for `epochs` local epochs (each `steps_per_epoch`
 /// minibatches) at the given compiled partial ratio, starting from `base`.
+/// Fused plan + execute — the synchronous path of the round-stepped
+/// strategies and the `--eager-train` escape hatch.
+#[allow(clippy::too_many_arguments)]
 pub fn train_client(
     rt: &ModelRuntime,
     ds: &FederatedDataset,
@@ -33,33 +159,152 @@ pub fn train_client(
     lr: f32,
     rng: &mut Rng,
 ) -> Result<LocalOutcome> {
-    debug_assert!(epochs >= 1 && steps_per_epoch >= 1);
-    let total_steps = epochs * steps_per_epoch;
-    let mut params = base.clone();
-    let mut loss_sum = 0.0;
-    let mut steps = 0u64;
-    // Issue ceil(total / chunk) fused PJRT executions instead of one per
-    // minibatch (see ModelRuntime::train_chunk).
-    let chunk = rt.meta.chunk;
-    let mut remaining = total_steps;
-    while remaining > 0 {
-        let take = remaining.min(chunk);
-        let batches: Vec<_> = (0..take).map(|_| ds.train_batch(client, rng)).collect();
-        let (new_params, mean_loss) = rt.train_chunk(ratio, &params, &batches, lr)?;
-        anyhow::ensure!(
-            mean_loss.is_finite(),
-            "client {client} diverged (loss {mean_loss}) after step {steps}"
-        );
-        params = new_params;
-        loss_sum += mean_loss as f64 * take as f64;
-        steps += take as u64;
-        remaining -= take;
+    let plan = plan_client(ds, client, ratio, epochs, steps_per_epoch, rng);
+    execute_plan(rt, &plan, base, lr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::runtime::manifest::{ModelMeta, ParamMeta, Task, XDtype};
+
+    #[test]
+    fn chunk_sizes_cover_all_cases() {
+        // chunk larger than the total: one partial execution.
+        assert_eq!(chunk_sizes(3, 8), vec![3]);
+        // exact multiple: full chunks only.
+        assert_eq!(chunk_sizes(8, 4), vec![4, 4]);
+        // remainder tail after full chunks.
+        assert_eq!(chunk_sizes(10, 4), vec![4, 4, 2]);
+        // single-step chunks degrade to one execution per minibatch.
+        assert_eq!(chunk_sizes(3, 1), vec![1, 1, 1]);
+        // zero steps schedule nothing.
+        assert_eq!(chunk_sizes(0, 4), Vec::<usize>::new());
     }
-    let update = params.delta_from(base, ratio.boundary);
-    Ok(LocalOutcome {
-        client_id: client,
-        update,
-        mean_loss: loss_sum / steps.max(1) as f64,
-        steps,
-    })
+
+    #[test]
+    fn chunk_sizes_always_sum_to_total() {
+        for total in 0..40 {
+            for chunk in 1..10 {
+                let sizes = chunk_sizes(total, chunk);
+                assert_eq!(sizes.iter().sum::<usize>(), total, "total={total} chunk={chunk}");
+                assert!(sizes.iter().all(|&s| s >= 1 && s <= chunk));
+                // Only the last execution may be partial.
+                for &s in sizes.iter().rev().skip(1) {
+                    assert_eq!(s, chunk, "non-tail partial chunk (total={total})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn divergence_guard_rejects_non_finite_losses() {
+        check_loss_finite(3, 1.25, 10).unwrap();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = check_loss_finite(7, bad, 4).unwrap_err().to_string();
+            assert!(err.contains("client 7 diverged"), "message: {err}");
+            assert!(err.contains("after step 4"), "message: {err}");
+        }
+    }
+
+    /// A minimal classify-model meta sufficient for FederatedDataset.
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            name: "tiny".into(),
+            task: Task::Classify,
+            batch: 2,
+            eval_batch: 2,
+            x_shape: vec![4],
+            x_dtype: XDtype::F32,
+            num_classes: 3,
+            seq_len: 1,
+            total_params: 4,
+            chunk: 4,
+            params: vec![ParamMeta {
+                name: "w".into(),
+                shape: vec![4],
+                size: 4,
+            }],
+            ratios: vec![],
+            eval_artifact: String::new(),
+            init_artifact: String::new(),
+        }
+    }
+
+    fn full_ratio() -> RatioMeta {
+        RatioMeta {
+            ratio: 1.0,
+            boundary: 0,
+            trainable_fraction: 1.0,
+            artifact: String::new(),
+        }
+    }
+
+    #[test]
+    fn plan_draws_exactly_epochs_times_steps_batches() {
+        let meta = tiny_meta();
+        let ds = FederatedDataset::new(SyntheticSpec::default(), &meta, 4);
+        let mut rng = Rng::seed_from(11);
+        let plan = plan_client(&ds, 1, &full_ratio(), 3, 2, &mut rng);
+        assert_eq!(plan.client_id, 1);
+        assert_eq!(plan.total_steps(), 6);
+        assert_eq!(plan.ratio, 1.0);
+    }
+
+    #[test]
+    fn plan_leaves_rng_where_eager_interleaving_would() {
+        // The deferred-execution determinism contract: planning draws the
+        // batches in the same order the historical eager loop did, so the
+        // stream position afterwards is identical — and a re-plan from the
+        // same position reproduces the same batches.
+        let meta = tiny_meta();
+        let ds = FederatedDataset::new(SyntheticSpec::default(), &meta, 4);
+
+        let mut planned = Rng::seed_from(99);
+        let plan = plan_client(&ds, 2, &full_ratio(), 2, 3, &mut planned);
+
+        // Historical order: one train_batch draw per step, nothing else.
+        let mut eager = Rng::seed_from(99);
+        let hand: Vec<Batch> = (0..6).map(|_| ds.train_batch(2, &mut eager)).collect();
+
+        for (a, b) in plan.batches.iter().zip(&hand) {
+            match (a, b) {
+                (Batch::F32 { x: ax, y: ay }, Batch::F32 { x: bx, y: by }) => {
+                    assert_eq!(ax, bx);
+                    assert_eq!(ay, by);
+                }
+                _ => panic!("classify dataset must yield F32 batches"),
+            }
+        }
+        // Both streams end at the same position.
+        assert_eq!(planned.next_u64(), eager.next_u64());
+    }
+
+    #[test]
+    fn discarding_a_plan_does_not_perturb_later_draws() {
+        // Stream A cancels its first dispatch (plan discarded, never
+        // executed); stream B's identical dispatch "runs". The NEXT
+        // dispatch must plan identically from both streams — the whole
+        // point of drawing batches at plan time.
+        let meta = tiny_meta();
+        let ds = FederatedDataset::new(SyntheticSpec::default(), &meta, 4);
+        let mut a = Rng::seed_from(5);
+        let mut b = Rng::seed_from(5);
+        let plan_a = plan_client(&ds, 0, &full_ratio(), 2, 2, &mut a);
+        let _plan_b = plan_client(&ds, 0, &full_ratio(), 2, 2, &mut b);
+        drop(plan_a); // cancelled: discarding costs nothing and moves no RNG
+        let next_a = plan_client(&ds, 0, &full_ratio(), 1, 2, &mut a);
+        let next_b = plan_client(&ds, 0, &full_ratio(), 1, 2, &mut b);
+        assert_eq!(next_a.total_steps(), next_b.total_steps());
+        for (pa, pb) in next_a.batches.iter().zip(&next_b.batches) {
+            match (pa, pb) {
+                (Batch::F32 { x: ax, y: ay }, Batch::F32 { x: bx, y: by }) => {
+                    assert_eq!(ax, bx);
+                    assert_eq!(ay, by);
+                }
+                _ => panic!("classify dataset must yield F32 batches"),
+            }
+        }
+    }
 }

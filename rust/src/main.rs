@@ -3,6 +3,7 @@
 //! ```text
 //! timelyfl run        --preset cifar_fedavg [--strategy NAME] [--set k=v ...]
 //!                     [--events FILE]                # JSONL run-event stream
+//!                     [--eager-train]                # A/B: train at dispatch, not at finish
 //! timelyfl compare    --preset cifar_fedavg [--set k=v ...]  # every registered strategy
 //! timelyfl strategies                                 # dump the strategy registry
 //! timelyfl trace record [--set avail_*=..] [--horizon SECS] [--out FILE]
@@ -42,6 +43,8 @@ struct Args {
     target: Option<f64>,
     events: Option<String>,
     horizon: Option<f64>,
+    /// `--eager-train`: disable deferred dispatch execution (A/B hatch).
+    eager_train: bool,
 }
 
 fn parse_args() -> Result<Args> {
@@ -57,6 +60,7 @@ fn parse_args() -> Result<Args> {
         target: None,
         events: None,
         horizon: None,
+        eager_train: false,
     };
     let mut it = std::env::args().skip(1);
     args.command = it.next().unwrap_or_else(|| "help".into());
@@ -74,6 +78,7 @@ fn parse_args() -> Result<Args> {
             "--target" => args.target = Some(need("--target")?.parse()?),
             "--events" => args.events = Some(need("--events")?),
             "--horizon" => args.horizon = Some(need("--horizon")?.parse()?),
+            "--eager-train" => args.eager_train = true,
             "--help" | "-h" => {
                 args.command = "help".into();
             }
@@ -104,6 +109,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if let Some(t) = args.target {
         cfg.target_metric = Some(t);
     }
+    if args.eager_train {
+        cfg.eager_train = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -121,7 +129,8 @@ fn print_report(report: &RunReport) {
     println!("{}", t.render());
     println!(
         "rounds={} sim={:.2}h wall={:.1}s steps={} events={} mean_participation={:.3} \
-         online_frac={:.3} avail_drops={} deadline_drops={}",
+         online_frac={:.3} avail_drops={} deadline_drops={} trainings_executed={} \
+         trainings_avoided={}",
         report.total_rounds,
         hours(report.sim_secs),
         report.wall_secs,
@@ -130,7 +139,9 @@ fn print_report(report: &RunReport) {
         report.mean_participation(),
         report.mean_online_fraction(),
         report.total_avail_drops(),
-        report.total_deadline_drops()
+        report.total_deadline_drops(),
+        report.trainings_executed,
+        report.trainings_avoided
     );
 }
 
@@ -304,7 +315,7 @@ fn usage() -> String {
     format!(
         "usage: timelyfl <run|compare|strategies|trace record|inspect> [--preset P] \
          [--strategy S] [--config FILE] [--set k=v]... [--artifacts DIR] [--out FILE] \
-         [--target X] [--events FILE] [--horizon SECS]\n\
+         [--target X] [--events FILE] [--horizon SECS] [--eager-train]\n\
          strategies: {}",
         registry::names().join(", ")
     )

@@ -10,7 +10,8 @@
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
 //!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83}
 //! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
-//! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability"}
+//! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability",
+//!  "execution_avoided":true}
 //! {"reason":"availability-transition","client":17,"sim_secs":390.0,"online":false}
 //! ```
 //!
@@ -70,10 +71,15 @@ pub enum RunEvent {
         metric: f64,
     },
     /// A client's update was lost, with its attribution.
+    /// `execution_avoided` is true when the drop cancelled a *deferred*
+    /// dispatch before its PJRT executions ran — the wasted-work saving of
+    /// the plan/execute split; false when the training had already burned
+    /// (eager mode, or work that never reached the accelerator path).
     ClientDropped {
         client: usize,
         sim_secs: f64,
         cause: DropCause,
+        execution_avoided: bool,
     },
     /// A client's availability state flipped (emitted where the engine
     /// processes transitions as simulation events, i.e. by event-driven
@@ -132,10 +138,12 @@ impl RunEvent {
                 client,
                 sim_secs,
                 cause,
+                execution_avoided,
             } => {
                 pairs.push(("client", Json::num(*client as f64)));
                 pairs.push(("sim_secs", Json::num(*sim_secs)));
                 pairs.push(("cause", Json::str(cause.name())));
+                pairs.push(("execution_avoided", Json::Bool(*execution_avoided)));
             }
             RunEvent::AvailabilityTransition {
                 client,
@@ -174,6 +182,7 @@ impl RunEvent {
                 client: v.expect("client")?.as_usize()?,
                 sim_secs: v.expect("sim_secs")?.as_f64()?,
                 cause: DropCause::parse(v.expect("cause")?.as_str()?)?,
+                execution_avoided: v.expect("execution_avoided")?.as_bool()?,
             },
             "availability-transition" => RunEvent::AvailabilityTransition {
                 client: v.expect("client")?.as_usize()?,
@@ -298,11 +307,13 @@ mod tests {
                 client: 17,
                 sim_secs: 390.0,
                 cause: DropCause::Availability,
+                execution_avoided: true,
             },
             RunEvent::ClientDropped {
                 client: 4,
                 sim_secs: 391.0,
                 cause: DropCause::Deadline,
+                execution_avoided: false,
             },
             RunEvent::AvailabilityTransition {
                 client: 17,
@@ -359,6 +370,12 @@ mod tests {
         assert!(parse_jsonl("{\"reason\":\"bogus\",\"x\":1}\n").is_err());
         assert!(RunEvent::parse_line("not json").is_err());
         assert!(DropCause::parse("gravity").is_err());
+        // client-dropped without the wasted-work attribution is malformed:
+        // the schema is versioned by its field set, not just its reasons.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"client-dropped\",\"client\":1,\"sim_secs\":2.0,\"cause\":\"deadline\"}"
+        )
+        .is_err());
         // Blank lines are fine.
         let ok = parse_jsonl("\n{\"reason\":\"availability-transition\",\"client\":1,\"sim_secs\":2.0,\"online\":true}\n\n").unwrap();
         assert_eq!(ok.len(), 1);

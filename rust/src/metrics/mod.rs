@@ -39,6 +39,58 @@ pub struct RoundRecord {
     pub mean_train_loss: Option<f64>,
 }
 
+/// Wasted-work ledger for the plan/execute dispatch split
+/// (`coordinator::trainer`): how many client dispatches were drawn, how
+/// many actually reached the accelerator, and how many PJRT executions the
+/// deferred path skipped (churn-cancelled plans plus plans still pending
+/// when the run ended). Eager training (`cfg.eager_train`) executes at
+/// dispatch time, so there `executed == dispatched` and `avoided == 0`.
+///
+/// Settled ledgers (after `SimEngine::finish` drains the pending table)
+/// satisfy `executed + avoided == dispatched`; mid-run,
+/// `dispatched - executed - avoided` is the in-flight count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WastedWork {
+    pub dispatched: u64,
+    pub executed: u64,
+    pub avoided: u64,
+}
+
+impl WastedWork {
+    /// A client dispatch was drawn (plan phase).
+    pub fn on_dispatch(&mut self) {
+        self.dispatched += 1;
+    }
+
+    /// A dispatch's PJRT executions actually ran.
+    pub fn on_execute(&mut self) {
+        self.executed += 1;
+        debug_assert!(self.executed + self.avoided <= self.dispatched);
+    }
+
+    /// A dispatch's PJRT executions were skipped (cancelled or never
+    /// resolved).
+    pub fn on_avoid(&mut self) {
+        self.avoided += 1;
+        debug_assert!(self.executed + self.avoided <= self.dispatched);
+    }
+
+    /// Dispatches not yet resolved either way (0 in settled ledgers).
+    pub fn pending(&self) -> u64 {
+        self.dispatched - self.executed - self.avoided
+    }
+
+    /// Fraction of dispatches whose accelerator work was skipped, in
+    /// [0, 1]; 0.0 for an empty ledger.
+    pub fn avoided_ratio(&self) -> f64 {
+        if self.dispatched == 0 {
+            0.0
+        } else {
+            self.avoided as f64 / self.dispatched as f64
+        }
+    }
+}
+
 /// Tracks how often each client contributes to global aggregation.
 /// Participation rate (paper definition): rounds contributed / total rounds.
 #[derive(Clone, Debug)]
@@ -111,6 +163,13 @@ pub struct RunReport {
     pub events_processed: u64,
     /// Real PJRT train-steps executed (for perf accounting).
     pub real_train_steps: u64,
+    /// Client dispatches whose local training actually ran on the
+    /// accelerator (wasted-work accounting; see [`WastedWork`]).
+    pub trainings_executed: u64,
+    /// Client dispatches whose PJRT executions were skipped by deferred
+    /// dispatch — churn-cancelled plans plus plans still pending at run
+    /// end. Always 0 under eager training.
+    pub trainings_avoided: u64,
     /// Deadline-side drops that accumulated when no round was ever
     /// recorded (e.g. the population was offline from t=0); included in
     /// `total_deadline_drops()`.
@@ -169,6 +228,22 @@ impl RunReport {
     pub fn total_deadline_drops(&self) -> usize {
         self.rounds.iter().map(|r| r.dropped).sum::<usize>() + self.tail_dropped
     }
+
+    /// Total client dispatches drawn over the run. The ledger is settled at
+    /// report time, so this is exactly `executed + avoided`.
+    pub fn total_train_dispatches(&self) -> u64 {
+        self.trainings_executed + self.trainings_avoided
+    }
+
+    /// Fraction of dispatches whose accelerator work was skipped.
+    pub fn trainings_avoided_ratio(&self) -> f64 {
+        let total = self.total_train_dispatches();
+        if total == 0 {
+            0.0
+        } else {
+            self.trainings_avoided as f64 / total as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +287,8 @@ mod tests {
             total_rounds: 0,
             events_processed: 0,
             real_train_steps: 0,
+            trainings_executed: 0,
+            trainings_avoided: 0,
             tail_dropped: 0,
             tail_avail_dropped: 0,
         }
@@ -265,6 +342,32 @@ mod tests {
         assert_eq!(r.time_to_target(0.6, true), Some(2.0));
         assert_eq!(r.time_to_target(0.9, true), None);
         assert_eq!(r.best_metric(true), Some(0.62));
+    }
+
+    #[test]
+    fn wasted_work_ledger_counts_and_ratio() {
+        let mut w = WastedWork::default();
+        assert_eq!(w.avoided_ratio(), 0.0, "empty ledger must not divide by 0");
+        for _ in 0..5 {
+            w.on_dispatch();
+        }
+        w.on_execute();
+        w.on_execute();
+        w.on_avoid();
+        assert_eq!(w, WastedWork { dispatched: 5, executed: 2, avoided: 1 });
+        assert_eq!(w.pending(), 2);
+        assert!((w.avoided_ratio() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_training_counters_settle() {
+        let mut r = report_with(vec![]);
+        r.trainings_executed = 7;
+        r.trainings_avoided = 3;
+        assert_eq!(r.total_train_dispatches(), 10);
+        assert!((r.trainings_avoided_ratio() - 0.3).abs() < 1e-12);
+        let zero = report_with(vec![]);
+        assert_eq!(zero.trainings_avoided_ratio(), 0.0);
     }
 
     #[test]

@@ -18,6 +18,14 @@ impl RunReport {
             ("events_processed", Json::num(self.events_processed as f64)),
             ("real_train_steps", Json::num(self.real_train_steps as f64)),
             (
+                "trainings_executed",
+                Json::num(self.trainings_executed as f64),
+            ),
+            (
+                "trainings_avoided",
+                Json::num(self.trainings_avoided as f64),
+            ),
+            (
                 "mean_participation",
                 Json::num(self.mean_participation()),
             ),
@@ -131,7 +139,9 @@ pub fn fmt_opt_loss(loss: Option<f64>) -> String {
 
 /// Participation/availability summary across runs: the Fig. 1/5-style
 /// numbers with the availability columns that make them attributable
-/// (online-fraction, availability-drops vs deadline-drops).
+/// (online-fraction, availability-drops vs deadline-drops) plus the
+/// wasted-work columns of the deferred dispatch path (accelerator
+/// executions run vs skipped).
 pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
     let mut t = Table::new(&[
         "run",
@@ -139,6 +149,8 @@ pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
         "online_frac",
         "avail_drops",
         "deadline_drops",
+        "train_execs",
+        "train_avoided",
         "rounds",
     ]);
     for (label, r) in rows {
@@ -148,6 +160,8 @@ pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
             format!("{:.3}", r.mean_online_fraction()),
             r.total_avail_drops().to_string(),
             r.total_deadline_drops().to_string(),
+            r.trainings_executed.to_string(),
+            r.trainings_avoided.to_string(),
             r.total_rounds.to_string(),
         ]);
     }
@@ -263,6 +277,8 @@ mod tests {
             total_rounds: 5,
             events_processed: 7,
             real_train_steps: 10,
+            trainings_executed: 9,
+            trainings_avoided: 4,
             tail_dropped: 0,
             tail_avail_dropped: 1,
         }
@@ -282,6 +298,14 @@ mod tests {
         // 3 + 6 per-round churn drops plus the zero-round tail of 1.
         assert_eq!(parsed.get("avail_drops").unwrap().as_f64().unwrap(), 10.0);
         assert_eq!(parsed.get("deadline_drops").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            parsed.get("trainings_executed").unwrap().as_f64().unwrap(),
+            9.0
+        );
+        assert_eq!(
+            parsed.get("trainings_avoided").unwrap().as_f64().unwrap(),
+            4.0
+        );
         assert_eq!(parsed.get("tail_avail_dropped").unwrap().as_f64().unwrap(), 1.0);
         assert!(
             (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
@@ -307,6 +331,8 @@ mod tests {
         assert!(s.contains("online_frac"));
         assert!(s.contains("avail_drops"));
         assert!(s.contains("deadline_drops"));
+        assert!(s.contains("train_execs"));
+        assert!(s.contains("train_avoided"));
         assert!(s.contains("0.500")); // online fraction
         assert!(s.contains("10")); // avail drops incl. run-level tail
     }

@@ -81,6 +81,13 @@ fn event_schema_round_trips_through_util_json() {
             client: 7,
             sim_secs: 90.5,
             cause: DropCause::Deadline,
+            execution_avoided: false,
+        },
+        RunEvent::ClientDropped {
+            client: 9,
+            sim_secs: 91.0,
+            cause: DropCause::Availability,
+            execution_avoided: true,
         },
         RunEvent::AvailabilityTransition {
             client: 2,
@@ -117,6 +124,7 @@ fn event_reasons_are_the_documented_set() {
             client: 0,
             sim_secs: 0.0,
             cause: DropCause::Availability,
+            execution_avoided: false,
         },
         RunEvent::AvailabilityTransition {
             client: 0,

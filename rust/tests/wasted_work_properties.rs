@@ -1,0 +1,211 @@
+//! Artifact-free properties of the wasted-work ledger behind deferred
+//! dispatch execution (`SimEngine::dispatch` / `metrics::WastedWork`).
+//!
+//! The engine's bookkeeping contract, modelled here without PJRT:
+//!
+//! - every dispatch is counted once (`on_dispatch`), at plan time;
+//! - eager mode (`cfg.eager_train`) executes at dispatch, so cancellation
+//!   cannot avoid anything;
+//! - deferred mode executes at a generation-valid finish; a churn
+//!   cancellation — or a plan still pending when the run ends — skips the
+//!   execution and counts as avoided.
+//!
+//! The same invariants over REAL strategy runs (with PJRT) are asserted in
+//! `rust/tests/deferred_equivalence.rs`; this suite is the pure-logic half
+//! that `scripts/check.sh` runs on artifact-less checkouts.
+
+use timelyfl::metrics::{RunReport, WastedWork};
+use timelyfl::util::json::Json;
+use timelyfl::util::rng::Rng;
+
+/// Minimal model of the engine's dispatch bookkeeping: one pending slot
+/// per in-flight dispatch, resolved by finish or cancel, drained at run
+/// end exactly as `SimEngine::finish` drains its pending table.
+struct DispatchModel {
+    eager: bool,
+    ledger: WastedWork,
+    /// In-flight dispatches; `true` = still holds an unexecuted plan.
+    in_flight: Vec<bool>,
+}
+
+impl DispatchModel {
+    fn new(eager: bool) -> Self {
+        DispatchModel {
+            eager,
+            ledger: WastedWork::default(),
+            in_flight: Vec::new(),
+        }
+    }
+
+    fn dispatch(&mut self) {
+        self.ledger.on_dispatch();
+        if self.eager {
+            self.ledger.on_execute(); // trains at dispatch time
+            self.in_flight.push(false);
+        } else {
+            self.in_flight.push(true); // plan stashed, accelerator untouched
+        }
+    }
+
+    fn finish(&mut self, idx: usize) {
+        if self.in_flight.swap_remove(idx) {
+            self.ledger.on_execute(); // deferred plan runs now
+        }
+    }
+
+    fn cancel(&mut self, idx: usize) {
+        if self.in_flight.swap_remove(idx) {
+            self.ledger.on_avoid(); // deferred plan dies unexecuted
+        }
+    }
+
+    /// Run-end settlement: plans still pending were never executed.
+    fn drain(&mut self) {
+        for planned in self.in_flight.drain(..) {
+            if planned {
+                self.ledger.on_avoid();
+            }
+        }
+    }
+}
+
+/// Drive a random dispatch/finish/cancel schedule. `cancel_weight` = 0
+/// models always-on availability (churn never cancels anything).
+fn random_run(seed: u64, eager: bool, cancel_weight: u64, ops: usize) -> (WastedWork, u64) {
+    let mut rng = Rng::seed_from(seed);
+    let mut m = DispatchModel::new(eager);
+    let mut cancels = 0u64;
+    for _ in 0..ops {
+        let have = !m.in_flight.is_empty();
+        match rng.below(10 + cancel_weight) {
+            0..=3 => m.dispatch(),
+            4..=9 if have => m.finish(rng.usize_below(m.in_flight.len())),
+            _ if have => {
+                m.cancel(rng.usize_below(m.in_flight.len()));
+                cancels += 1;
+            }
+            _ => m.dispatch(),
+        }
+        // Mid-run: the unresolved count is exactly the in-flight set.
+        assert_eq!(m.ledger.pending(), m.in_flight.len() as u64);
+        let r = m.ledger.avoided_ratio();
+        assert!((0.0..=1.0).contains(&r), "ratio {r} out of range");
+    }
+    m.drain();
+    (m.ledger, cancels)
+}
+
+#[test]
+fn executed_plus_avoided_equals_total_dispatches() {
+    // The headline conservation law, for event strategies in both modes:
+    // after settlement every dispatch resolved exactly one way.
+    for seed in 0..40u64 {
+        for eager in [false, true] {
+            let (w, _) = random_run(seed, eager, 6, 400);
+            assert_eq!(
+                w.executed + w.avoided,
+                w.dispatched,
+                "seed {seed} eager {eager}: ledger did not settle ({w:?})"
+            );
+            assert_eq!(w.pending(), 0);
+        }
+    }
+}
+
+#[test]
+fn eager_mode_never_avoids_anything() {
+    // --eager-train is the historical behaviour: churn-cancelled work was
+    // already burned, so avoided stays 0 under ANY cancellation pressure.
+    for seed in 0..40u64 {
+        let (w, cancels) = random_run(seed, true, 20, 400);
+        assert_eq!(w.avoided, 0, "seed {seed}: eager run avoided work");
+        assert_eq!(w.executed, w.dispatched);
+        assert!(cancels > 0, "seed {seed}: churn model never cancelled");
+    }
+}
+
+#[test]
+fn always_on_deferred_avoids_nothing_once_finishes_land() {
+    // Always-on availability: no cancellations ever, and every dispatch's
+    // finish event eventually validates — the deferred path then executes
+    // exactly what eager would have.
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from(seed ^ 0xA1105E);
+        let mut m = DispatchModel::new(false);
+        for _ in 0..200 {
+            if m.in_flight.is_empty() || rng.below(2) == 0 {
+                m.dispatch();
+            } else {
+                m.finish(rng.usize_below(m.in_flight.len()));
+            }
+        }
+        // Let every outstanding finish land (the queue running dry).
+        while !m.in_flight.is_empty() {
+            m.finish(m.in_flight.len() - 1);
+        }
+        m.drain();
+        assert_eq!(m.ledger.avoided, 0, "seed {seed}: no-churn run avoided work");
+        assert_eq!(m.ledger.executed, m.ledger.dispatched);
+    }
+}
+
+#[test]
+fn churned_deferred_runs_strictly_beat_eager_on_executions() {
+    // Same op schedule, both modes: deferred executes strictly less once
+    // at least one dispatch was cancelled or left pending.
+    for seed in 0..20u64 {
+        let (deferred, cancels) = random_run(seed, false, 8, 300);
+        let (eager, _) = random_run(seed, true, 8, 300);
+        assert_eq!(deferred.dispatched, eager.dispatched, "same schedule");
+        if cancels > 0 {
+            assert!(
+                deferred.executed < eager.executed,
+                "seed {seed}: deferred {deferred:?} did not beat eager {eager:?}"
+            );
+            assert!(deferred.avoided > 0);
+        }
+    }
+}
+
+#[test]
+fn counters_render_into_report_json() {
+    let mut report = RunReport {
+        strategy: "FedBuff".into(),
+        model: "kws_lite".into(),
+        eval_points: vec![],
+        rounds: vec![],
+        participation: vec![],
+        online_fraction: vec![],
+        sim_secs: 10.0,
+        wall_secs: 0.5,
+        total_rounds: 2,
+        events_processed: 9,
+        real_train_steps: 40,
+        trainings_executed: 11,
+        trainings_avoided: 4,
+        tail_dropped: 0,
+        tail_avail_dropped: 0,
+    };
+    assert_eq!(report.total_train_dispatches(), 15);
+    assert!((report.trainings_avoided_ratio() - 4.0 / 15.0).abs() < 1e-12);
+
+    let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(
+        parsed.get("trainings_executed").unwrap().as_f64().unwrap(),
+        11.0
+    );
+    assert_eq!(
+        parsed.get("trainings_avoided").unwrap().as_f64().unwrap(),
+        4.0
+    );
+
+    // An eager (or always-on-drained) report renders avoided as 0, not as
+    // a missing key — consumers can rely on the field's presence.
+    report.trainings_avoided = 0;
+    let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(
+        parsed.get("trainings_avoided").unwrap().as_f64().unwrap(),
+        0.0
+    );
+    assert_eq!(report.trainings_avoided_ratio(), 0.0);
+}

@@ -40,6 +40,7 @@ else
     cargo test -q --test coordinator_properties
     cargo test -q --test availability_properties
     cargo test -q --test registry_properties
+    cargo test -q --test wasted_work_properties
 fi
 
 echo "check.sh: OK"
