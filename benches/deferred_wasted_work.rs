@@ -19,30 +19,11 @@
 //! synchronously, so both modes must coincide (avoided = 0).
 
 use anyhow::Result;
-use timelyfl::availability::AvailabilityKind;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
 use timelyfl::coordinator::registry;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
 use timelyfl::metrics::RunReport;
-
-/// Mean online/offline dwell seconds: ~1/3 steady-state availability with
-/// dwells comparable to round times, so mid-training churn-outs are the
-/// common case (the regime SEAFL's selective training targets).
-const MEAN_ONLINE_SECS: f64 = 400.0;
-const MEAN_OFFLINE_SECS: f64 = 800.0;
-
-fn churn_cfg(strategy: &str, rounds: usize, eager: bool) -> Result<RunConfig> {
-    let mut cfg = RunConfig::preset("cifar_fedavg")?;
-    cfg.strategy = strategy.to_string();
-    cfg.rounds = rounds;
-    cfg.eval_every = 20;
-    cfg.eager_train = eager;
-    cfg.availability.kind = AvailabilityKind::Markov;
-    cfg.availability.mean_online_secs = MEAN_ONLINE_SECS;
-    cfg.availability.mean_offline_secs = MEAN_OFFLINE_SECS;
-    Ok(cfg)
-}
 
 fn main() -> Result<()> {
     benchkit::banner(
@@ -67,12 +48,29 @@ fn main() -> Result<()> {
     );
     let mut deltas: Vec<String> = Vec::new();
 
+    // The churn regime (~1/3 steady-state availability, dwells comparable
+    // to round times — where SEAFL-style selective training lives) comes
+    // from the `cifar_churn` scenario; the A/B is a strategy x eager_train
+    // grid. Pinned serial: the headline numbers are wall-time deltas, so
+    // cells must not co-run.
+    let mut base = scenario::resolve("cifar_churn")?.config()?;
+    base.rounds = rounds;
+    base.eval_every = 20;
+    let grid = SweepGrid::new(base)
+        .strategy_axis_all()
+        .axis("eager_train", &["true", "false"]);
+    eprintln!("  {} cells (strategy x eager/deferred, rounds={rounds}) ...", grid.len());
+    let result = bench.serial_runner().run(&grid)?;
+    let mut cells = result.cells.into_iter();
+
     for info in registry::STRATEGIES {
         let mut by_mode: Vec<RunReport> = Vec::new();
         for eager in [true, false] {
             let mode = if eager { "eager" } else { "deferred" };
-            eprintln!("  {} ({mode}, rounds={rounds}) ...", info.name);
-            let r = bench.run(churn_cfg(info.name, rounds, eager)?)?;
+            let cell = cells.next().expect("grid covers strategy x mode");
+            assert_eq!(cell.cell.cfg.eager_train, eager, "grid order drifted");
+            let r = cell.reports.into_iter().next().unwrap();
+            assert_eq!(r.strategy, info.name, "grid order drifted");
             t.row(vec![
                 r.strategy.clone(),
                 mode.to_string(),

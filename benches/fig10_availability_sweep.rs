@@ -12,25 +12,27 @@
 //! in-flight updates), while TimelyFL re-samples from whoever is online and
 //! right-sizes their workload.
 //!
-//! Strategies come from `coordinator::registry` — a newly-registered
-//! strategy (e.g. SemiAsync) joins the sweep with zero bench changes.
+//! The whole study is one grid: `avail_frac` axis × the full strategy
+//! registry (a newly-registered strategy joins with zero bench changes),
+//! cells executed in parallel by `ExperimentRunner`. The same sweep is one
+//! CLI line:
+//! `timelyfl sweep --scenario cifar --axis avail_frac=1.0,0.8,0.5,0.3 --axis strategy=...`.
 //!
 //! Prints one row per (online-fraction, strategy) with the availability
 //! columns (online_frac, avail_drops, deadline_drops) plus the per-setting
 //! TimelyFL-vs-FedBuff participation gap.
 
 use anyhow::Result;
-use timelyfl::availability::AvailabilityKind;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
-use timelyfl::coordinator::registry;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
 use timelyfl::metrics::RunReport;
 
 /// Target mean online fractions; 1.0 is the always-on control.
 const FRACTIONS: &[f64] = &[1.0, 0.8, 0.5, 0.3];
 /// One full on+off cycle, comparable to a handful of round intervals so
-/// churn actually interrupts training (not so fast it averages out).
+/// churn actually interrupts training (not so fast it averages out). The
+/// `avail_frac` axis splits this cycle per cell.
 const CYCLE_SECS: f64 = 3600.0;
 
 fn main() -> Result<()> {
@@ -39,6 +41,24 @@ fn main() -> Result<()> {
         "participation under churn (TimelyFL advantage widens as availability drops)",
     );
     let bench = Bench::new()?;
+
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.rounds = bench.scale.rounds(60);
+    base.eval_every = 20;
+    // Pin the Markov cycle the avail_frac axis splits (kind stays always-on
+    // until a cell sets avail_frac < 1.0 — the bit-compatible control).
+    base.availability.mean_online_secs = CYCLE_SECS / 2.0;
+    base.availability.mean_offline_secs = CYCLE_SECS / 2.0;
+    let grid = SweepGrid::new(base)
+        .axis("avail_frac", FRACTIONS)
+        .strategy_axis_all();
+    eprintln!(
+        "  {} cells ({} fractions x full strategy registry) ...",
+        grid.len(),
+        FRACTIONS.len()
+    );
+    let result = bench.runner().run(&grid)?;
+    let n_strategies = grid.len() / FRACTIONS.len();
 
     let mut t = Table::new(&[
         "online_target",
@@ -54,25 +74,10 @@ fn main() -> Result<()> {
     );
     let mut gaps: Vec<(f64, f64, f64)> = Vec::new(); // (fraction, abs gap, rel gap %)
 
-    for &frac in FRACTIONS {
-        let mut reports: Vec<RunReport> = Vec::new();
-        for info in registry::STRATEGIES {
-            let mut cfg = RunConfig::preset("cifar_fedavg")?;
-            cfg.strategy = info.name.to_string();
-            cfg.rounds = bench.scale.rounds(60);
-            cfg.eval_every = 20;
-            if frac < 1.0 {
-                cfg.availability.kind = AvailabilityKind::Markov;
-                cfg.availability.mean_online_secs = frac * CYCLE_SECS;
-                cfg.availability.mean_offline_secs = (1.0 - frac) * CYCLE_SECS;
-            }
-            eprintln!(
-                "  online~{:.0}% {} (rounds={}) ...",
-                frac * 100.0,
-                info.name,
-                cfg.rounds
-            );
-            let r = bench.run(cfg)?;
+    for (fi, &frac) in FRACTIONS.iter().enumerate() {
+        let cells = &result.cells[fi * n_strategies..(fi + 1) * n_strategies];
+        let reports: Vec<&RunReport> = cells.iter().map(|c| &c.reports[0]).collect();
+        for r in &reports {
             t.row(vec![
                 format!("{frac:.1}"),
                 r.strategy.clone(),
@@ -90,7 +95,6 @@ fn main() -> Result<()> {
                 r.total_avail_drops(),
                 r.total_deadline_drops(),
             ));
-            reports.push(r);
         }
         let by_name = |name: &str| {
             reports

@@ -5,13 +5,16 @@
 //! participation rate by ~21% relative to FedBuff, and 66.4% of devices
 //! individually improve. SyncFL is 100% by construction (everyone waits).
 //!
+//! Declared as a scenario + grid (`experiment` API): the `cifar` scenario
+//! with one strategy axis, executed by the parallel `ExperimentRunner`.
+//!
 //! Prints: mean participation per strategy, the improved-devices fraction,
 //! and the per-client rate distribution (sorted deciles — the shape of the
 //! paper's Fig. 5a scatter).
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::{participation_table, Table};
 use timelyfl::metrics::RunReport;
 
@@ -29,15 +32,12 @@ fn main() -> Result<()> {
     );
     let bench = Bench::new()?;
 
-    let mut reports: Vec<RunReport> = Vec::new();
-    for strat in ["TimelyFL", "FedBuff", "SyncFL"] {
-        let mut cfg = RunConfig::preset("cifar_fedavg")?;
-        cfg.strategy = strat.to_string();
-        cfg.rounds = bench.scale.rounds(150);
-        cfg.eval_every = 50;
-        eprintln!("  {strat} (rounds={}) ...", cfg.rounds);
-        reports.push(bench.run(cfg)?);
-    }
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.rounds = bench.scale.rounds(150);
+    base.eval_every = 50;
+    eprintln!("  TimelyFL/FedBuff/SyncFL (rounds={}) ...", base.rounds);
+    let grid = SweepGrid::new(base).axis("strategy", &["TimelyFL", "FedBuff", "SyncFL"]);
+    let reports: Vec<RunReport> = bench.runner().run(&grid)?.into_first_reports();
     let [timely, fedbuff, syncfl] = &reports[..] else { unreachable!() };
 
     // Fig. 1a/1b analogue: mean participation + distribution deciles.

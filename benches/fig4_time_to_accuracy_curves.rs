@@ -6,10 +6,13 @@
 //! Paper shape: TimelyFL's curve dominates FedBuff's, which dominates
 //! SyncFL's over simulated time; FedBuff converges fast early but plateaus
 //! lower (Fig. 1c).
+//!
+//! One scenario + strategy-axis grid per dataset, cells run in parallel by
+//! `ExperimentRunner`.
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::RunReport;
 
 /// Fig. 1c/4 curve set (registry names; first letters label the plot).
@@ -64,25 +67,23 @@ fn main() -> Result<()> {
     );
     let bench = Bench::new()?;
 
-    for (label, preset, rounds, higher_better) in [
+    for (label, scenario_name, rounds, higher_better) in [
         ("cifar10", "cifar_fedopt", 180, true),
         ("google_speech", "speech_fedopt", 120, true),
         ("reddit", "reddit_fedopt", 80, false),
     ] {
-        println!("--- {label} ({preset}) ---");
-        let mut reports = Vec::new();
-        for strat in STRATEGIES {
-            let mut cfg = RunConfig::preset(preset)?;
-            cfg.strategy = strat.to_string();
-            cfg.rounds = bench.scale.rounds(rounds);
-            cfg.eval_every = 10;
-            eprintln!("  {strat} (rounds={}) ...", cfg.rounds);
-            let report = bench.run(cfg)?;
+        println!("--- {label} ({scenario_name}) ---");
+        let mut base = scenario::resolve(scenario_name)?.config()?;
+        base.rounds = bench.scale.rounds(rounds);
+        base.eval_every = 10;
+        eprintln!("  {} (rounds={}) ...", STRATEGIES.join("/"), base.rounds);
+        let grid = SweepGrid::new(base).axis("strategy", &STRATEGIES);
+        let reports: Vec<RunReport> = bench.runner().run(&grid)?.into_first_reports();
+        for report in &reports {
             benchkit::write_result(
-                &format!("fig4_curve_{label}_{}.csv", strat.to_lowercase()),
+                &format!("fig4_curve_{label}_{}.csv", report.strategy.to_lowercase()),
                 &report.curve_csv(),
             );
-            reports.push(report);
         }
         print!("{}", text_plot(&reports, higher_better));
         println!("  (T = TimelyFL, F = FedBuff, S = SyncFL)\n");

@@ -9,10 +9,11 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 
 const TARGET: f64 = 0.40;
+const ALPHAS: [f64; 3] = [0.1, 0.5, 1.0];
 
 fn main() -> Result<()> {
     benchkit::banner(
@@ -31,17 +32,22 @@ fn main() -> Result<()> {
     ]);
     let mut csv = String::from("alpha,timelyfl_hr,fedbuff_hr,final_timelyfl,final_fedbuff\n");
 
-    for alpha in [0.1, 0.5, 1.0] {
+    // One grid: non-iid severity x the two compared strategies.
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.rounds = bench.scale.rounds(180);
+    base.eval_every = 10;
+    eprintln!("  alpha x strategy grid, 6 cells (rounds={}) ...", base.rounds);
+    let grid = SweepGrid::new(base)
+        .axis("dirichlet_alpha", &ALPHAS)
+        .axis("strategy", &["TimelyFL", "FedBuff"]);
+    let result = bench.runner().run(&grid)?;
+
+    for (ai, alpha) in ALPHAS.into_iter().enumerate() {
         let mut times = Vec::new();
         let mut finals = Vec::new();
-        for strat in ["TimelyFL", "FedBuff"] {
-            let mut cfg = RunConfig::preset("cifar_fedavg")?;
-            cfg.strategy = strat.to_string();
-            cfg.dirichlet_alpha = alpha;
-            cfg.rounds = bench.scale.rounds(180);
-            cfg.eval_every = 10;
-            eprintln!("  alpha={alpha} {strat} (rounds={}) ...", cfg.rounds);
-            let r = bench.run(cfg)?;
+        for (si, strat) in ["TimelyFL", "FedBuff"].into_iter().enumerate() {
+            let r = &result.cells[ai * 2 + si].reports[0];
+            assert_eq!(r.strategy, strat, "grid order drifted");
             benchkit::write_result(
                 &format!("fig6_curve_a{alpha}_{}.csv", strat.to_lowercase()),
                 &r.curve_csv(),

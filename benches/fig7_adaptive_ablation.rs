@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 
 const TARGET: f64 = 0.40;
@@ -21,23 +21,21 @@ fn main() -> Result<()> {
     );
     let bench = Bench::new()?;
 
-    let mut reports = Vec::new();
-    for adaptive in [true, false] {
-        let mut cfg = RunConfig::preset("cifar_fedavg")?;
-        cfg.adaptive = adaptive;
-        cfg.concurrency = 32; // paper uses 64 of 128; we scale 32 of 64
-        cfg.rounds = bench.scale.rounds(180);
-        cfg.eval_every = 10;
-        eprintln!("  adaptive={adaptive} (rounds={}) ...", cfg.rounds);
-        let r = bench.run(cfg)?;
-        benchkit::write_result(
-            &format!(
-                "fig7_curve_{}.csv",
-                if adaptive { "adaptive" } else { "frozen" }
-            ),
-            &r.curve_csv(),
-        );
-        reports.push(r);
+    // The ablation is one boolean axis on the cifar scenario.
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.concurrency = 32; // paper uses 64 of 128; we scale 32 of 64
+    base.rounds = bench.scale.rounds(180);
+    base.eval_every = 10;
+    eprintln!("  adaptive=true/false (rounds={}) ...", base.rounds);
+    let grid = SweepGrid::new(base).axis("adaptive", &["true", "false"]);
+    let result = bench.runner().run(&grid)?;
+    // Guard the label <-> cell binding against future axis reordering.
+    for (cell, want) in result.cells.iter().zip([true, false]) {
+        assert_eq!(cell.cell.cfg.adaptive, want, "grid order drifted");
+    }
+    let reports: Vec<_> = result.into_first_reports();
+    for (r, name) in reports.iter().zip(["adaptive", "frozen"]) {
+        benchkit::write_result(&format!("fig7_curve_{name}.csv"), &r.curve_csv());
     }
     let [adaptive, frozen] = &reports[..] else { unreachable!() };
 

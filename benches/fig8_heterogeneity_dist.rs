@@ -2,12 +2,15 @@
 //!
 //! Paper (Appendix A.1.2): AI-Benchmark compute times span ~13.3x between
 //! the slowest and fastest device (Fig. 8a); MobiPerf bandwidths span ~200x
-//! (Fig. 8b). This bench generates a 1000-client fleet from our calibrated
-//! log-normal substitutes and prints both distributions (histogram +
-//! percentiles) plus the max/min spread — the paper's summary statistic.
+//! (Fig. 8b). This bench generates the `fleet_hetero` scenario's
+//! 1000-client fleet from our calibrated log-normal substitutes and prints
+//! both distributions (histogram + percentiles) plus the max/min spread —
+//! the paper's summary statistic. (No training runs — the one bench that
+//! uses the scenario registry without the `ExperimentRunner`.)
 
 use timelyfl::benchkit::{self, Scale};
-use timelyfl::devices::{Fleet, FleetConfig};
+use timelyfl::devices::Fleet;
+use timelyfl::experiment::scenario;
 use timelyfl::metrics::report::Table;
 use timelyfl::util::rng::Rng;
 
@@ -41,10 +44,13 @@ fn main() -> anyhow::Result<()> {
         "Figure 8 (a: compute spread ~13.3x, b: bandwidth spread ~200x)",
     );
     let scale = Scale::from_env();
-    let n = scale.iters(1000);
+    // Fleet calibration + population come from the `fleet_hetero` scenario
+    // (no training runs here — this is a pure distribution study).
+    let cfg = scenario::resolve("fleet_hetero")?.config()?;
+    let n = scale.iters(cfg.population);
 
     let mut rng = Rng::seed_from(0xF18);
-    let fleet = Fleet::generate(n, FleetConfig::default(), &mut rng);
+    let fleet = Fleet::generate(n, cfg.fleet.clone(), &mut rng);
 
     // --- Fig. 8a analogue: per-client base compute time -------------------
     let mut cmp: Vec<f64> = fleet.devices.iter().map(|d| d.base_epoch_secs).collect();

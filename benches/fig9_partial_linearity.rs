@@ -8,10 +8,14 @@
 //! We measure the same claim on our substrate: real wall-clock of the
 //! compiled partial train-step executables (PJRT CPU) per ratio, normalised
 //! to the full-model time, for the vision and speech models.
+//!
+//! Declared as a one-axis grid (`model` = vision/speech) over the cifar
+//! scenario, executed via `ExperimentRunner::map` — pinned serial, because
+//! the measurement is wall-clock.
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, micro, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
 use timelyfl::util::rng::Rng;
 
@@ -23,16 +27,15 @@ fn main() -> Result<()> {
     let bench = Bench::new()?;
     let iters = bench.scale.iters(40);
 
-    let mut csv = String::from("model,ratio,trainable_fraction,mean_ms,relative\n");
-    for preset in ["cifar_fedavg", "speech_fedavg"] {
-        let mut cfg = RunConfig::preset(preset)?;
-        cfg.population = 8;
-        cfg.concurrency = 2;
-        let sim = bench.simulation(cfg)?;
-        let rt = &sim.runtime;
-        let model = rt.meta.name.clone();
-        println!("--- {model} ({} params) ---", rt.meta.total_params);
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.population = 8;
+    base.concurrency = 2;
+    let grid = SweepGrid::new(base).axis("model", &["vision", "speech"]);
 
+    // Per cell: (model name, total params, per-ratio rows of
+    // (ratio, trainable_fraction, mean_ns)).
+    let measured = bench.serial_runner().map(&grid, |sim, _job| {
+        let rt = &sim.runtime;
         let params = rt.init_params(0)?;
         let mut rng = Rng::seed_from(9);
         let batches: Vec<_> = (0..rt.meta.chunk)
@@ -48,6 +51,13 @@ fn main() -> Result<()> {
             });
             rows.push((r.ratio, r.trainable_fraction, stats.mean_ns));
         }
+        Ok((rt.meta.name.clone(), rt.meta.total_params, rows))
+    })?;
+
+    let mut csv = String::from("model,ratio,trainable_fraction,mean_ms,relative\n");
+    for cell in &measured {
+        let (model, total_params, rows) = &cell[0];
+        println!("--- {model} ({total_params} params) ---");
         let full = rows.last().unwrap().2; // ratio 1.0 is last (sorted in manifest)
 
         let mut t = Table::new(&[
@@ -58,7 +68,7 @@ fn main() -> Result<()> {
             "linear pred",
             "below line?",
         ]);
-        for &(ratio, frac, ns) in &rows {
+        for &(ratio, frac, ns) in rows {
             let rel = ns / full;
             // The paper's linear model predicts fwd+bwd time ∝ ratio with a
             // fixed forward-pass floor: rel ≈ fwd_share + (1-fwd_share)*ratio.

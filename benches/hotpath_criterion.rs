@@ -2,6 +2,10 @@
 //! boundary (in-tree harness; criterion itself is not in the offline
 //! vendor set, so `benchkit::micro` provides warmup + percentile stats).
 //!
+//! Runs as a one-cell grid over the cifar scenario through
+//! `ExperimentRunner::map` — pinned serial: every number here is
+//! wall-clock, so co-running cells would skew it.
+//!
 //! Paths covered (the before/after log lives in EXPERIMENTS.md §Perf):
 //!   - aggregation: `average_delta` over a full concurrency cohort
 //!   - server optimizers: FedAvg apply vs Adam step
@@ -16,10 +20,10 @@
 use anyhow::Result;
 use timelyfl::aggregation::{average_delta, Contribution, ServerOpt, ServerOptKind};
 use timelyfl::benchkit::{self, micro, Bench};
-use timelyfl::config::RunConfig;
 use timelyfl::coordinator::local_time::TimeEstimate;
 use timelyfl::coordinator::scheduler::{aggregation_interval, schedule};
 use timelyfl::devices::{Fleet, FleetConfig};
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
 use timelyfl::model::{ParamVec, Update};
 use timelyfl::simtime::EventQueue;
@@ -39,157 +43,165 @@ fn main() -> Result<()> {
     benchkit::banner("hotpath_criterion", "§Perf hot-path micro-benchmarks");
     let bench = Bench::new()?;
     let iters = bench.scale.iters(60);
+
+    let mut base = scenario::resolve("cifar")?.config()?;
+    base.population = 16;
+    base.concurrency = 8;
+    let grid = SweepGrid::new(base); // one cell: the base scenario
+
+    let measured = bench.serial_runner().map(&grid, |sim, _job| {
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut rng = Rng::seed_from(0xBE7C);
+        let meta = &sim.runtime.meta;
+
+        // --- pure-rust hot paths (no PJRT) --------------------------------
+        let base = synth_params(meta, &mut rng);
+        let cohort = 32;
+        let contributions: Vec<Contribution> = (0..cohort)
+            .map(|i| {
+                let new = synth_params(meta, &mut rng);
+                Contribution {
+                    client_id: i,
+                    update: new.delta_from(&base, if i % 3 == 0 { 4 } else { 0 }),
+                    weight: 1.0,
+                    staleness: (i % 5) as u64,
+                }
+            })
+            .collect();
+
+        rows.push(
+            micro::bench(5, iters, || {
+                std::hint::black_box(average_delta(&base, &contributions, true));
+            })
+            .row(&format!("average_delta n={cohort} ({} params)", meta.total_params)),
+        );
+
+        let avg: Update = average_delta(&base, &contributions, false);
+        let mut fedavg = ServerOpt::new(ServerOptKind::FedAvg, 1.0);
+        let mut adam = ServerOpt::new(ServerOptKind::Adam, 0.001);
+        let mut g1 = base.clone();
+        rows.push(
+            micro::bench(5, iters, || {
+                fedavg.apply(&mut g1, &avg);
+                std::hint::black_box(&g1);
+            })
+            .row("server_opt FedAvg apply"),
+        );
+        let mut g2 = base.clone();
+        rows.push(
+            micro::bench(5, iters, || {
+                adam.apply(&mut g2, &avg);
+                std::hint::black_box(&g2);
+            })
+            .row("server_opt Adam step"),
+        );
+
+        let other = synth_params(meta, &mut rng);
+        rows.push(
+            micro::bench(5, iters, || {
+                std::hint::black_box(other.delta_from(&base, 0));
+            })
+            .row("delta_from full model"),
+        );
+
+        // Scheduler: full cohort of Alg. 3 + T_k.
+        let estimates: Vec<TimeEstimate> = (0..128)
+            .map(|_| TimeEstimate {
+                t_cmp: rng.range(10.0, 800.0),
+                t_com: rng.range(1.0, 400.0),
+            })
+            .collect();
+        let totals: Vec<f64> = estimates.iter().map(|e| e.t_total()).collect();
+        rows.push(
+            micro::bench(5, iters * 10, || {
+                let tk = aggregation_interval(&totals, 64);
+                for e in &estimates {
+                    std::hint::black_box(schedule(tk, e, 16));
+                }
+            })
+            .row("Alg.3 schedule cohort n=128"),
+        );
+
+        // Event queue churn at FedBuff scale.
+        rows.push(
+            micro::bench(5, iters, || {
+                let mut q: EventQueue<usize> = EventQueue::new();
+                for i in 0..4096 {
+                    q.schedule_in((i % 97) as f64, i);
+                }
+                while let Some(e) = q.pop() {
+                    std::hint::black_box(e);
+                }
+            })
+            .row("event queue 4096 sched+pop"),
+        );
+
+        rows.push(
+            micro::bench(2, iters, || {
+                let mut r = Rng::seed_from(1);
+                std::hint::black_box(Fleet::generate(1024, FleetConfig::default(), &mut r));
+            })
+            .row("fleet generate n=1024"),
+        );
+
+        let fleet = Fleet::generate(128, FleetConfig::default(), &mut rng);
+        rows.push(
+            micro::bench(5, iters * 10, || {
+                for _ in 0..128 {
+                    std::hint::black_box(fleet.round_conditions(&mut rng));
+                }
+            })
+            .row("round_conditions x128"),
+        );
+
+        rows.push(
+            micro::bench(5, iters, || {
+                std::hint::black_box(sim.dataset.train_batch(3, &mut rng));
+            })
+            .row("synthetic train_batch"),
+        );
+
+        // --- PJRT boundary ------------------------------------------------
+        let rt = &sim.runtime;
+        let params = rt.init_params(0)?;
+        let full = rt.meta.ratio_exact(1.0).unwrap();
+        let batches: Vec<_> = (0..rt.meta.chunk)
+            .map(|_| sim.dataset.train_batch(0, &mut rng))
+            .collect();
+
+        rows.push(
+            micro::bench(3, iters, || {
+                std::hint::black_box(rt.train_chunk(full, &params, &batches[..1], 0.01).unwrap());
+            })
+            .row("PJRT train chunk of 1 step"),
+        );
+        rows.push(
+            micro::bench(3, iters, || {
+                std::hint::black_box(rt.train_chunk(full, &params, &batches, 0.01).unwrap());
+            })
+            .row(&format!("PJRT train chunk of {} steps", rt.meta.chunk)),
+        );
+        let eval_batches = sim.dataset.eval_batches(1, 0);
+        rows.push(
+            micro::bench(3, iters, || {
+                std::hint::black_box(rt.eval_batch(&params, &eval_batches[0]).unwrap());
+            })
+            .row("PJRT eval batch"),
+        );
+
+        Ok((rt.meta.chunk, rows))
+    })?;
+
+    let (chunk, rows) = &measured[0][0];
     let mut table = Table::new(&micro::MicroStats::HEADERS);
-    let mut rng = Rng::seed_from(0xBE7C);
-
-    // --- pure-rust hot paths (no PJRT) ------------------------------------
-    let mut cfg = RunConfig::preset("cifar_fedavg")?;
-    cfg.population = 16;
-    cfg.concurrency = 8;
-    let sim = bench.simulation(cfg)?;
-    let meta = &sim.runtime.meta;
-
-    let base = synth_params(meta, &mut rng);
-    let cohort = 32;
-    let contributions: Vec<Contribution> = (0..cohort)
-        .map(|i| {
-            let new = synth_params(meta, &mut rng);
-            Contribution {
-                client_id: i,
-                update: new.delta_from(&base, if i % 3 == 0 { 4 } else { 0 }),
-                weight: 1.0,
-                staleness: (i % 5) as u64,
-            }
-        })
-        .collect();
-
-    table.row(
-        micro::bench(5, iters, || {
-            std::hint::black_box(average_delta(&base, &contributions, true));
-        })
-        .row(&format!("average_delta n={cohort} ({} params)", meta.total_params)),
-    );
-
-    let avg: Update = average_delta(&base, &contributions, false);
-    let mut fedavg = ServerOpt::new(ServerOptKind::FedAvg, 1.0);
-    let mut adam = ServerOpt::new(ServerOptKind::Adam, 0.001);
-    let mut g1 = base.clone();
-    table.row(
-        micro::bench(5, iters, || {
-            fedavg.apply(&mut g1, &avg);
-            std::hint::black_box(&g1);
-        })
-        .row("server_opt FedAvg apply"),
-    );
-    let mut g2 = base.clone();
-    table.row(
-        micro::bench(5, iters, || {
-            adam.apply(&mut g2, &avg);
-            std::hint::black_box(&g2);
-        })
-        .row("server_opt Adam step"),
-    );
-
-    let other = synth_params(meta, &mut rng);
-    table.row(
-        micro::bench(5, iters, || {
-            std::hint::black_box(other.delta_from(&base, 0));
-        })
-        .row("delta_from full model"),
-    );
-
-    // Scheduler: full cohort of Alg. 3 + T_k.
-    let estimates: Vec<TimeEstimate> = (0..128)
-        .map(|_| TimeEstimate {
-            t_cmp: rng.range(10.0, 800.0),
-            t_com: rng.range(1.0, 400.0),
-        })
-        .collect();
-    let totals: Vec<f64> = estimates.iter().map(|e| e.t_total()).collect();
-    table.row(
-        micro::bench(5, iters * 10, || {
-            let tk = aggregation_interval(&totals, 64);
-            for e in &estimates {
-                std::hint::black_box(schedule(tk, e, 16));
-            }
-        })
-        .row("Alg.3 schedule cohort n=128"),
-    );
-
-    // Event queue churn at FedBuff scale.
-    table.row(
-        micro::bench(5, iters, || {
-            let mut q: EventQueue<usize> = EventQueue::new();
-            for i in 0..4096 {
-                q.schedule_in((i % 97) as f64, i);
-            }
-            while let Some(e) = q.pop() {
-                std::hint::black_box(e);
-            }
-        })
-        .row("event queue 4096 sched+pop"),
-    );
-
-    table.row(
-        micro::bench(2, iters, || {
-            let mut r = Rng::seed_from(1);
-            std::hint::black_box(Fleet::generate(1024, FleetConfig::default(), &mut r));
-        })
-        .row("fleet generate n=1024"),
-    );
-
-    let fleet = Fleet::generate(128, FleetConfig::default(), &mut rng);
-    table.row(
-        micro::bench(5, iters * 10, || {
-            for _ in 0..128 {
-                std::hint::black_box(fleet.round_conditions(&mut rng));
-            }
-        })
-        .row("round_conditions x128"),
-    );
-
-    table.row(
-        micro::bench(5, iters, || {
-            std::hint::black_box(sim.dataset.train_batch(3, &mut rng));
-        })
-        .row("synthetic train_batch"),
-    );
-
-    // --- PJRT boundary ------------------------------------------------------
-    let rt = &sim.runtime;
-    let params = rt.init_params(0)?;
-    let full = rt.meta.ratio_exact(1.0).unwrap();
-    let batches: Vec<_> = (0..rt.meta.chunk)
-        .map(|_| sim.dataset.train_batch(0, &mut rng))
-        .collect();
-
-    table.row(
-        micro::bench(3, iters, || {
-            std::hint::black_box(rt.train_chunk(full, &params, &batches[..1], 0.01).unwrap());
-        })
-        .row("PJRT train chunk of 1 step"),
-    );
-    table.row(
-        micro::bench(3, iters, || {
-            std::hint::black_box(rt.train_chunk(full, &params, &batches, 0.01).unwrap());
-        })
-        .row(&format!("PJRT train chunk of {} steps", rt.meta.chunk)),
-    );
-    let eval_batches = sim.dataset.eval_batches(1, 0);
-    table.row(
-        micro::bench(3, iters, || {
-            std::hint::black_box(rt.eval_batch(&params, &eval_batches[0]).unwrap());
-        })
-        .row("PJRT eval batch"),
-    );
-
+    for row in rows {
+        table.row(row.clone());
+    }
     let rendered = table.render();
     println!("{rendered}");
     println!(
-        "note: 'chunk of {} steps' vs {}x 'chunk of 1' shows the scan fusion win\n\
-         (per-execute dispatch + host<->device copies amortised across local steps).",
-        rt.meta.chunk,
-        rt.meta.chunk
+        "note: 'chunk of {chunk} steps' vs {chunk}x 'chunk of 1' shows the scan fusion win\n\
+         (per-execute dispatch + host<->device copies amortised across local steps)."
     );
     benchkit::write_result("hotpath_micro.txt", &rendered);
     Ok(())

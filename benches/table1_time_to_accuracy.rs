@@ -14,12 +14,13 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 use timelyfl::metrics::RunReport;
 
 struct Case {
     label: &'static str,
+    /// Scenario name (the paper presets are registered scenario aliases).
     preset: &'static str,
     /// (display, value) pairs — two target rows like the paper.
     targets: [(&'static str, f64); 2],
@@ -77,22 +78,24 @@ const CASES: &[Case] = &[
 /// The paper's Table 1 column layout (registry names, fixed order).
 const STRATEGIES: [&str; 3] = ["TimelyFL", "FedBuff", "SyncFL"];
 
-fn run_case(bench: &Bench, case: &Case, strategy: &str) -> Result<RunReport> {
-    let mut cfg = RunConfig::preset(case.preset)?;
-    cfg.strategy = strategy.to_string();
-    cfg.rounds = bench.scale.rounds(case.rounds);
+/// One case = a scenario-based grid over the Table 1 strategy columns, all
+/// cells run in parallel by the experiment runner.
+fn run_case(bench: &Bench, case: &Case) -> Result<Vec<RunReport>> {
+    let mut base = scenario::resolve(case.preset)?.config()?;
+    base.rounds = bench.scale.rounds(case.rounds);
     // SyncFL pays the straggler tax in *simulated* time, not wall time, so
     // the same round budget is fair across strategies.
-    cfg.eval_every = 10;
-    cfg.target_metric = Some(case.targets[1].1); // stop at the harder target
+    base.eval_every = 10;
+    base.target_metric = Some(case.targets[1].1); // stop at the harder target
     eprintln!(
         "  {} / {} / {} (rounds<={}) ...",
         case.label,
         case.preset.rsplit('_').next().unwrap(),
-        strategy,
-        cfg.rounds
+        STRATEGIES.join("/"),
+        base.rounds
     );
-    bench.run(cfg)
+    let grid = SweepGrid::new(base).axis("strategy", &STRATEGIES);
+    Ok(bench.runner().run(&grid)?.into_first_reports())
 }
 
 fn main() -> Result<()> {
@@ -116,10 +119,7 @@ fn main() -> Result<()> {
 
     for case in CASES {
         let agg = case.preset.rsplit('_').next().unwrap();
-        let reports: Vec<RunReport> = STRATEGIES
-            .iter()
-            .map(|s| run_case(&bench, case, s))
-            .collect::<Result<_>>()?;
+        let reports: Vec<RunReport> = run_case(&bench, case)?;
 
         for (tname, tval) in case.targets {
             let times: Vec<Option<f64>> = reports

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::config::RunConfig;
+use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
 use timelyfl::metrics::RunReport;
 
@@ -34,18 +34,14 @@ fn main() -> Result<()> {
 
     for preset in ["kws_fedavg", "kws_fedopt"] {
         let agg = preset.rsplit('_').next().unwrap();
-        let reports: Vec<RunReport> = STRATEGIES
-            .iter()
-            .map(|s| {
-                let mut cfg = RunConfig::preset(preset)?;
-                cfg.strategy = s.to_string();
-                cfg.rounds = bench.scale.rounds(220);
-                cfg.eval_every = 10;
-                cfg.target_metric = Some(TARGETS[1].1);
-                eprintln!("  {preset} / {s} (rounds<={}) ...", cfg.rounds);
-                bench.run(cfg)
-            })
-            .collect::<Result<_>>()?;
+        // Scenario + strategy-axis grid per aggregator, parallel cells.
+        let mut base = scenario::resolve(preset)?.config()?;
+        base.rounds = bench.scale.rounds(220);
+        base.eval_every = 10;
+        base.target_metric = Some(TARGETS[1].1);
+        eprintln!("  {preset} / {} (rounds<={}) ...", STRATEGIES.join("/"), base.rounds);
+        let grid = SweepGrid::new(base).axis("strategy", &STRATEGIES);
+        let reports: Vec<RunReport> = bench.runner().run(&grid)?.into_first_reports();
 
         for (tname, tval) in TARGETS {
             let times: Vec<Option<f64>> =

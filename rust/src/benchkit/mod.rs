@@ -7,8 +7,13 @@
 //! - [`Scale`] — `TIMELYFL_BENCH_FAST=1` shrinks round budgets ~4x for
 //!   smoke runs; default budgets reproduce the paper's *shape* on this
 //!   testbed (absolute numbers differ; see EXPERIMENTS.md).
+//!   `TIMELYFL_BENCH_JOBS=J` overrides the cell parallelism of
+//!   runner-based benches.
 //! - [`Bench`] — one shared PJRT client + manifest across all runs of a
-//!   bench (compiling executables once per model, like the coordinator).
+//!   bench (compiling executables once per model, like the coordinator),
+//!   plus [`Bench::runner`]/[`Bench::serial_runner`] for the declarative
+//!   scenario + grid path every sweep bench now uses
+//!   (`crate::experiment`; see `docs/experiments.md`).
 //! - [`micro`] — min/mean/p50/p95 micro-timing for the §Perf hot paths.
 //! - [`results_dir`]/[`write_result`] — benches drop their tables + CSV
 //!   series under `results/` so EXPERIMENTS.md can reference them.
@@ -22,6 +27,7 @@ use xla::PjRtClient;
 
 use crate::config::RunConfig;
 use crate::coordinator::Simulation;
+use crate::experiment::ExperimentRunner;
 use crate::metrics::RunReport;
 use crate::runtime::Manifest;
 
@@ -54,6 +60,31 @@ impl Scale {
         } else {
             full
         }
+    }
+
+    /// Worker threads for `ExperimentRunner`-based benches:
+    /// `TIMELYFL_BENCH_JOBS` overrides, else available parallelism capped
+    /// at 4 (cell runs are PJRT-heavy; oversubscribing the CPU client
+    /// beyond that buys nothing). Wall-time-measuring benches pass
+    /// `Scale::serial_jobs()` instead so co-running cells cannot skew
+    /// their A/B deltas.
+    pub fn jobs(&self) -> usize {
+        Self::jobs_env().unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |n| n.get().min(4))
+        })
+    }
+
+    /// Jobs for timing-sensitive benches: serial unless explicitly
+    /// overridden via `TIMELYFL_BENCH_JOBS`.
+    pub fn serial_jobs(&self) -> usize {
+        Self::jobs_env().unwrap_or(1)
+    }
+
+    fn jobs_env() -> Option<usize> {
+        std::env::var("TIMELYFL_BENCH_JOBS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&j| j >= 1)
     }
 }
 
@@ -94,6 +125,18 @@ impl Bench {
     /// to reach the runtime for micro-benches).
     pub fn simulation(&self, cfg: RunConfig) -> Result<Simulation> {
         Simulation::with_client(cfg, &self.manifest, &self.client)
+    }
+
+    /// An [`ExperimentRunner`] over this bench's artifacts at the default
+    /// bench parallelism (`Scale::jobs`; `TIMELYFL_BENCH_JOBS` overrides).
+    pub fn runner(&self) -> ExperimentRunner {
+        ExperimentRunner::new(Self::artifacts_dir()).jobs(self.scale.jobs())
+    }
+
+    /// Same, pinned serial (timing-sensitive benches; see
+    /// `Scale::serial_jobs`).
+    pub fn serial_runner(&self) -> ExperimentRunner {
+        ExperimentRunner::new(Self::artifacts_dir()).jobs(self.scale.serial_jobs())
     }
 }
 

@@ -141,6 +141,26 @@ impl Default for RunConfig {
     }
 }
 
+/// Every paper preset, as `(name, one-line summary)` — the single source
+/// the `preset()` constructor, the unknown-preset error, and the
+/// `timelyfl presets` subcommand all draw from (the same courtesy the
+/// strategy registry gives for unknown strategies).
+pub static PRESETS: &[(&str, &str)] = &[
+    ("cifar_fedavg", "CIFAR-10 / ResNet-20, FedAvg server (paper §4.1)"),
+    ("cifar_fedopt", "CIFAR-10 / ResNet-20, Adam server optimizer"),
+    ("speech_fedavg", "Google Speech / VGG11, FedAvg; ~507 MB model, comm-bound stragglers"),
+    ("speech_fedopt", "Google Speech / VGG11, Adam server optimizer"),
+    ("kws_fedavg", "lightweight KWS (79k params, Table 2), FedAvg"),
+    ("kws_fedopt", "lightweight KWS (79k params, Table 2), Adam server optimizer"),
+    ("reddit_fedavg", "Reddit / ALBERT next-word prediction, FedAvg"),
+    ("reddit_fedopt", "Reddit / ALBERT next-word prediction, Adam server optimizer"),
+];
+
+/// Preset names, in table order.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
 impl RunConfig {
     /// Aggregation participation target `k` in absolute clients.
     pub fn k_target(&self) -> usize {
@@ -220,7 +240,8 @@ impl RunConfig {
                 c.server_lr = 0.003;
             }
             other => anyhow::bail!(
-                "unknown preset {other:?} (have cifar/speech/kws/reddit x fedavg/fedopt)"
+                "unknown preset {other:?} (known: {})",
+                preset_names().join(", ")
             ),
         }
         Ok(c)
@@ -263,20 +284,23 @@ mod tests {
 
     #[test]
     fn presets_all_validate() {
-        for p in [
-            "cifar_fedavg",
-            "cifar_fedopt",
-            "speech_fedavg",
-            "speech_fedopt",
-            "kws_fedavg",
-            "kws_fedopt",
-            "reddit_fedavg",
-            "reddit_fedopt",
-        ] {
+        // PRESETS is the single source of truth: every listed name builds
+        // and validates, and nothing builds that is not listed.
+        assert_eq!(PRESETS.len(), 8);
+        for (p, summary) in PRESETS {
+            assert!(!summary.is_empty(), "{p}: empty summary");
             let c = RunConfig::preset(p).unwrap();
             c.validate().unwrap_or_else(|e| panic!("{p}: {e}"));
         }
         assert!(RunConfig::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn unknown_preset_error_lists_known_names() {
+        let err = format!("{:#}", RunConfig::preset("bogus").unwrap_err());
+        for name in preset_names() {
+            assert!(err.contains(name), "error should list {name}: {err}");
+        }
     }
 
     #[test]

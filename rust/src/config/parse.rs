@@ -42,6 +42,28 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "template_scale" => cfg.template_scale = v.parse()?,
         "lm_noise" => cfg.lm_noise = v.parse()?,
         "availability" => cfg.availability.kind = AvailabilityKind::parse(v)?,
+        // Derived sweep axis (paper Figs. 1/5/10 x-axis): target mean online
+        // fraction. 1.0 selects the always-on process (bit-compatible with
+        // the seed behaviour); below 1.0 it splits the CURRENT Markov cycle
+        // (mean_online + mean_offline, default 1.5 h) into online/offline
+        // dwells at that ratio, so a config can pin the cycle length first
+        // and sweep the fraction with one key.
+        "avail_frac" => {
+            let f: f64 = v.parse()?;
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "avail_frac must be in (0, 1], got {f}"
+            );
+            if f >= 1.0 {
+                cfg.availability.kind = AvailabilityKind::AlwaysOn;
+            } else {
+                let cycle =
+                    cfg.availability.mean_online_secs + cfg.availability.mean_offline_secs;
+                cfg.availability.kind = AvailabilityKind::Markov;
+                cfg.availability.mean_online_secs = f * cycle;
+                cfg.availability.mean_offline_secs = (1.0 - f) * cycle;
+            }
+        }
         "avail_mean_online_secs" => cfg.availability.mean_online_secs = v.parse()?,
         "avail_mean_offline_secs" => cfg.availability.mean_offline_secs = v.parse()?,
         "avail_dwell_sigma" => cfg.availability.dwell_sigma = v.parse()?,
@@ -164,6 +186,26 @@ mod tests {
         apply_cli(&mut cfg, "avail_trace_path=none").unwrap();
         assert_eq!(cfg.availability.trace_path, None);
         assert!(apply_cli(&mut cfg, "availability=sometimes").is_err());
+    }
+
+    #[test]
+    fn avail_frac_splits_the_current_cycle() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "avail_mean_online_secs = 1800\n\
+             avail_mean_offline_secs = 1800\n\
+             avail_frac = 0.8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.availability.kind, AvailabilityKind::Markov);
+        assert!((cfg.availability.mean_online_secs - 2880.0).abs() < 1e-9);
+        assert!((cfg.availability.mean_offline_secs - 720.0).abs() < 1e-9);
+        // 1.0 restores the always-on seed behaviour.
+        apply_cli(&mut cfg, "avail_frac=1.0").unwrap();
+        assert_eq!(cfg.availability.kind, AvailabilityKind::AlwaysOn);
+        assert!(apply_cli(&mut cfg, "avail_frac=0.0").is_err());
+        assert!(apply_cli(&mut cfg, "avail_frac=1.5").is_err());
     }
 
     #[test]

@@ -46,7 +46,7 @@ use anyhow::Result;
 use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, TrainPlan};
 use super::{local_time, Recorder, Simulation};
 use crate::availability::{AvailabilityModel, SEED_SALT};
-use crate::metrics::events::{DropCause, EventSink, RunEvent};
+use crate::metrics::events::{ClientWorkload, DropCause, EventSink, RunEvent};
 use crate::metrics::RunReport;
 use crate::model::{ParamVec, Update};
 use crate::runtime::manifest::RatioMeta;
@@ -243,6 +243,11 @@ pub struct SimEngine<'a> {
     /// Drop attribution accumulated since the last completed round.
     dropped_pending: usize,
     avail_dropped_pending: usize,
+    /// Workload assignments (Alg. 3's E_c / alpha_c, as dispatched)
+    /// accumulated since the last completed round; drained onto the
+    /// `round-complete` event record so sweep JSONL output exposes the
+    /// scheduler's per-client decisions.
+    workloads_pending: Vec<ClientWorkload>,
     stop: bool,
     sink: Option<&'a mut dyn EventSink>,
 }
@@ -275,6 +280,7 @@ impl<'a> SimEngine<'a> {
             completed_rounds: 0,
             dropped_pending: 0,
             avail_dropped_pending: 0,
+            workloads_pending: Vec::new(),
             stop: false,
             sink,
         })
@@ -307,6 +313,15 @@ impl<'a> SimEngine<'a> {
     fn emit(&mut self, ev: RunEvent) {
         if let Some(sink) = self.sink.as_deref_mut() {
             sink.emit(&ev);
+        }
+    }
+
+    /// Note one client's dispatched workload (Alg. 3's E_c / alpha_c as
+    /// realized) for the next `round-complete` record. Only bookkept when a
+    /// sink is attached — the telemetry must cost nothing on sink-less runs.
+    fn note_workload(&mut self, client: usize, epochs: usize, alpha: f64) {
+        if self.sink.is_some() {
+            self.workloads_pending.push(ClientWorkload { client, epochs, alpha });
         }
     }
 
@@ -358,6 +373,7 @@ impl<'a> SimEngine<'a> {
         let round = self.completed_rounds;
         let dropped = std::mem::take(&mut self.dropped_pending);
         let avail_dropped = std::mem::take(&mut self.avail_dropped_pending);
+        let workloads = std::mem::take(&mut self.workloads_pending);
         self.recorder.record_round(
             round,
             clock,
@@ -373,6 +389,7 @@ impl<'a> SimEngine<'a> {
             dropped,
             avail_dropped,
             mean_train_loss,
+            workloads,
         });
         if let Some(p) = self.recorder.maybe_eval(sim, round, clock, global)? {
             self.emit(RunEvent::EvalPoint {
@@ -619,6 +636,7 @@ impl<'a> SimEngine<'a> {
             &mut self.client_rngs[client],
         );
         self.recorder.wasted.on_dispatch();
+        self.note_workload(client, epochs, ratio.ratio);
         let work = if cfg.eager_train {
             let outcome = execute_plan(&sim.runtime, &plan, base, cfg.client_lr)?;
             self.recorder.wasted.on_execute();
@@ -672,6 +690,7 @@ impl<'a> SimEngine<'a> {
     ) -> Result<LocalOutcome> {
         let sim = self.sim;
         self.recorder.wasted.on_dispatch();
+        self.note_workload(client, epochs, ratio.ratio);
         let outcome = train_client(
             &sim.runtime,
             &sim.dataset,

@@ -1,0 +1,278 @@
+//! `SweepGrid` — typed axis expansion into validated per-cell `RunConfig`s.
+//!
+//! An axis is a config key plus a value list; values are applied through
+//! `config::parse::apply_override`, so a grid cell goes through exactly the
+//! validation (and strategy-registry canonicalization) of a config file.
+//! Two combinators:
+//!
+//! - [`SweepGrid::axis`] — a cross-product axis: every value combines with
+//!   every combination of the other groups;
+//! - [`SweepGrid::zip`] — parallel axes that advance together (one group of
+//!   several keys whose i-th values form the i-th row), for paired settings
+//!   like `(rounds, target_metric)` per dataset.
+//!
+//! Cell order is deterministic and row-major: the first-declared group is
+//! the outermost loop, the last-declared varies fastest — the same order
+//! the hand-rolled bench loops used.
+
+use anyhow::{Context, Result};
+
+use crate::config::{parse as cfgparse, RunConfig};
+use crate::coordinator::registry;
+
+/// One expansion group: a single key with N values (cross axis) or several
+/// keys with N rows of parallel values (zip).
+struct AxisGroup {
+    keys: Vec<String>,
+    /// `rows[i]` holds one value per key.
+    rows: Vec<Vec<String>>,
+}
+
+/// A declarative sweep: base config × expansion axes.
+pub struct SweepGrid {
+    base: RunConfig,
+    groups: Vec<AxisGroup>,
+}
+
+/// One materialised grid cell: the settings that produced it (in axis
+/// declaration order) and the validated config.
+#[derive(Clone)]
+pub struct GridCell {
+    /// Position in the grid's deterministic cell order.
+    pub index: usize,
+    /// `(key, value)` pairs, axis declaration order.
+    pub settings: Vec<(String, String)>,
+    pub cfg: RunConfig,
+}
+
+impl GridCell {
+    /// Human/machine label: `key=value,key=value` in axis order ("base" for
+    /// the axis-free one-cell grid).
+    pub fn label(&self) -> String {
+        if self.settings.is_empty() {
+            return "base".into();
+        }
+        self.settings
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl SweepGrid {
+    /// A grid over `base`; with no axes it has exactly one cell (the base).
+    pub fn new(base: RunConfig) -> SweepGrid {
+        SweepGrid { base, groups: Vec::new() }
+    }
+
+    /// Add a cross-product axis: `key` swept over `values`. Values are
+    /// stringified and applied through `config::parse`, so any config key
+    /// works — including derived ones like `avail_frac` and the
+    /// registry-resolved `strategy`.
+    pub fn axis<V: std::fmt::Display>(mut self, key: &str, values: &[V]) -> SweepGrid {
+        self.groups.push(AxisGroup {
+            keys: vec![key.to_string()],
+            rows: values.iter().map(|v| vec![v.to_string()]).collect(),
+        });
+        self
+    }
+
+    /// Add zipped parallel axes: `keys` advance together, row by row. Each
+    /// row must carry exactly one value per key (checked at [`cells`] time).
+    pub fn zip(mut self, keys: &[&str], rows: &[&[&str]]) -> SweepGrid {
+        self.groups.push(AxisGroup {
+            keys: keys.iter().map(|k| k.to_string()).collect(),
+            rows: rows
+                .iter()
+                .map(|r| r.iter().map(|v| v.to_string()).collect())
+                .collect(),
+        });
+        self
+    }
+
+    /// Convenience: a `strategy` axis over the whole coordinator registry,
+    /// in canonical comparison order — a newly-registered strategy joins
+    /// every such sweep with zero changes.
+    pub fn strategy_axis_all(self) -> SweepGrid {
+        self.axis("strategy", &registry::names())
+    }
+
+    /// Flattened axis keys, declaration order (for manifests/tables).
+    pub fn axis_keys(&self) -> Vec<String> {
+        self.groups.iter().flat_map(|g| g.keys.clone()).collect()
+    }
+
+    /// Number of cells the grid expands to (product of group row counts; a
+    /// grid with no axes has one cell, a group with no rows zero).
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|g| g.rows.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into validated cells, deterministic row-major order (first
+    /// group outermost). Errors name the offending cell and setting.
+    pub fn cells(&self) -> Result<Vec<GridCell>> {
+        for g in &self.groups {
+            for (i, row) in g.rows.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == g.keys.len(),
+                    "zip axis {:?}: row {i} has {} values for {} keys",
+                    g.keys,
+                    row.len(),
+                    g.keys.len()
+                );
+            }
+        }
+        let total = self.len();
+        let mut cells = Vec::with_capacity(total);
+        for index in 0..total {
+            // Mixed-radix digits of `index`, first group most significant.
+            let mut rem = index;
+            let mut picks = vec![0usize; self.groups.len()];
+            for (gi, g) in self.groups.iter().enumerate().rev() {
+                picks[gi] = rem % g.rows.len();
+                rem /= g.rows.len();
+            }
+            let mut settings = Vec::new();
+            let mut cfg = self.base.clone();
+            for (g, &pick) in self.groups.iter().zip(&picks) {
+                for (k, v) in g.keys.iter().zip(&g.rows[pick]) {
+                    cfgparse::apply_override(&mut cfg, k, v)
+                        .with_context(|| format!("grid cell {index}: {k} = {v}"))?;
+                    settings.push((k.clone(), v.clone()));
+                }
+            }
+            cfg.validate()
+                .with_context(|| format!("grid cell {index} invalid"))?;
+            cells.push(GridCell { index, settings, cfg });
+        }
+        Ok(cells)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_free_grid_is_the_base() {
+        let grid = SweepGrid::new(RunConfig::default());
+        assert_eq!(grid.len(), 1);
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label(), "base");
+        assert_eq!(cells[0].cfg.rounds, RunConfig::default().rounds);
+    }
+
+    #[test]
+    fn cross_product_counts_and_order() {
+        let grid = SweepGrid::new(RunConfig::default())
+            .axis("rounds", &[10, 20])
+            .axis("strategy", &["TimelyFL", "SyncFL", "FedBuff"]);
+        assert_eq!(grid.len(), 6);
+        let cells = grid.cells().unwrap();
+        // First axis outermost, second fastest — the bench nested-loop order.
+        let labels: Vec<String> = cells.iter().map(|c| c.label()).collect();
+        assert_eq!(labels[0], "rounds=10,strategy=TimelyFL");
+        assert_eq!(labels[1], "rounds=10,strategy=SyncFL");
+        assert_eq!(labels[3], "rounds=20,strategy=TimelyFL");
+        assert_eq!(cells[3].cfg.rounds, 20);
+        assert_eq!(cells[3].cfg.strategy, "TimelyFL");
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn zip_advances_keys_together() {
+        let grid = SweepGrid::new(RunConfig::default())
+            .zip(
+                &["rounds", "target_metric"],
+                &[&["10", "0.4"], &["20", "0.5"], &["30", "none"]],
+            )
+            .axis("strategy", &["TimelyFL", "FedBuff"]);
+        assert_eq!(grid.len(), 6);
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells[0].cfg.rounds, 10);
+        assert_eq!(cells[0].cfg.target_metric, Some(0.4));
+        assert_eq!(cells[2].cfg.rounds, 20);
+        assert_eq!(cells[2].cfg.target_metric, Some(0.5));
+        assert_eq!(cells[4].cfg.target_metric, None);
+        assert_eq!(
+            cells[2].label(),
+            "rounds=20,target_metric=0.5,strategy=TimelyFL"
+        );
+    }
+
+    #[test]
+    fn zip_row_arity_mismatch_errors() {
+        let grid = SweepGrid::new(RunConfig::default())
+            .zip(&["rounds", "target_metric"], &[&["10", "0.4"], &["20"]]);
+        let err = format!("{:#}", grid.cells().unwrap_err());
+        assert!(err.contains("row 1"), "error should name the bad row: {err}");
+    }
+
+    #[test]
+    fn cells_get_config_parse_validation() {
+        // Bad value: caught by the same parser as a config file.
+        let bad_value = SweepGrid::new(RunConfig::default()).axis("rounds", &["ten"]);
+        assert!(bad_value.cells().is_err());
+        // Unknown key.
+        let bad_key = SweepGrid::new(RunConfig::default()).axis("bogus_key", &[1]);
+        let err = format!("{:#}", bad_key.cells().unwrap_err());
+        assert!(err.contains("bogus_key"));
+        // Semantically invalid cell (concurrency > population) fails
+        // validate() with the cell named.
+        let invalid = SweepGrid::new(RunConfig::default()).axis("concurrency", &[100_000]);
+        let err = format!("{:#}", invalid.cells().unwrap_err());
+        assert!(err.contains("grid cell 0"), "cell not named: {err}");
+    }
+
+    #[test]
+    fn strategy_axis_canonicalizes_through_registry() {
+        let cells = SweepGrid::new(RunConfig::default())
+            .axis("strategy", &["timely", "sync", "seafl"])
+            .cells()
+            .unwrap();
+        let names: Vec<&str> = cells.iter().map(|c| c.cfg.strategy.as_str()).collect();
+        assert_eq!(names, ["TimelyFL", "SyncFL", "SemiAsync"]);
+        // Unknown strategies fail with the registry's name-listing error.
+        let err = format!(
+            "{:#}",
+            SweepGrid::new(RunConfig::default())
+                .axis("strategy", &["bogus"])
+                .cells()
+                .unwrap_err()
+        );
+        assert!(err.contains("TimelyFL"), "registry courtesy missing: {err}");
+    }
+
+    #[test]
+    fn strategy_axis_all_covers_the_registry() {
+        let cells = SweepGrid::new(RunConfig::default())
+            .strategy_axis_all()
+            .cells()
+            .unwrap();
+        assert_eq!(cells.len(), registry::STRATEGIES.len());
+        for (c, info) in cells.iter().zip(registry::STRATEGIES) {
+            assert_eq!(c.cfg.strategy, info.name);
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let make = || {
+            SweepGrid::new(RunConfig::default())
+                .axis("avail_frac", &["1.0", "0.5"])
+                .strategy_axis_all()
+        };
+        let a: Vec<String> = make().cells().unwrap().iter().map(|c| c.label()).collect();
+        let b: Vec<String> = make().cells().unwrap().iter().map(|c| c.label()).collect();
+        assert_eq!(a, b);
+        assert_eq!(make().axis_keys(), vec!["avail_frac", "strategy"]);
+    }
+}

@@ -1,0 +1,57 @@
+//! First-class experiment API: declarative scenarios, sweep grids, and a
+//! thread-parallel multi-seed runner.
+//!
+//! The paper's evidence is sweep-shaped — participation vs. availability
+//! (Figs. 1/5/10), time-to-accuracy curves (Fig. 4), non-iid and
+//! heterogeneity sweeps (Figs. 6/8) — and production FL evaluation
+//! (Papaya) lives on running many configurations at scale. This module is
+//! the seam that turns every such study into a few declarative lines
+//! instead of a hand-rolled bench loop:
+//!
+//! - [`scenario`] — a static registry of named, reusable experimental
+//!   setups (base preset × availability process × fleet heterogeneity ×
+//!   non-iid level), mirroring `coordinator::registry`. Listed by
+//!   `timelyfl scenarios`.
+//! - [`grid`] — [`SweepGrid`], a typed axis-expansion API: `cross` axes
+//!   (`axis("avail_frac", &[1.0, 0.8, 0.5, 0.3])`) and `zip`ped parallel
+//!   axes expand into cells; every cell materialises a `RunConfig` through
+//!   `config::parse::apply_override`, so cells get exactly the validation
+//!   (and the registry-resolved strategy canonicalization) of a config
+//!   file or `--set` flag.
+//! - [`runner`] — [`ExperimentRunner`] executes the cell × seed matrix
+//!   over a work queue of std threads (one PJRT client + artifact manifest
+//!   per worker, reused across that worker's runs), replicates each cell
+//!   over N derived seeds, and aggregates to [`CellSummary`] (mean/std).
+//! - [`summary`] — [`CellSummary`] / [`MeanStd`] and the machine-readable
+//!   sweep manifest (JSONL, same `reason`-discriminated idiom as
+//!   `metrics::events`).
+//!
+//! Summaries and the manifest are **wall-clock-free by construction**, so a
+//! `--jobs J` run is byte-identical to a `--jobs 1` run of the same grid
+//! and seeds (locked by `rust/tests/experiment_properties.rs` and the CI
+//! sweep smoke). Per-run wall seconds stay available on the underlying
+//! `RunReport`s for perf-sensitive benches.
+//!
+//! A whole sweep in three lines (see `docs/experiments.md`):
+//!
+//! ```no_run
+//! # use timelyfl::experiment::{scenario, ExperimentRunner, SweepGrid};
+//! let grid = SweepGrid::new(scenario::resolve("cifar")?.config()?)
+//!     .axis("avail_frac", &[1.0, 0.8, 0.5, 0.3])
+//!     .strategy_axis_all();
+//! let result = ExperimentRunner::new("artifacts").seeds(3).jobs(4).run(&grid)?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Or without writing rust at all:
+//! `timelyfl sweep --scenario cifar --axis avail_frac=1.0,0.8,0.5,0.3 --seeds 3 --jobs 4`.
+
+pub mod grid;
+pub mod runner;
+pub mod scenario;
+pub mod summary;
+
+pub use grid::{GridCell, SweepGrid};
+pub use runner::{run_queue, CellJob, CellResult, ExperimentRunner, SweepResult};
+pub use scenario::ScenarioSpec;
+pub use summary::{sweep_manifest, CellSummary, MeanStd, TargetStat};

@@ -1,0 +1,429 @@
+//! `ExperimentRunner` — thread-parallel execution of a grid's cell × seed
+//! matrix.
+//!
+//! Parallelism model: a deterministic job list (cells × seeds, cell-major)
+//! is drained by `jobs` std threads over an atomic cursor. Each worker
+//! thread builds ONE artifact manifest + PJRT client and reuses them for
+//! every run it picks up (`PjRtClient` is not `Sync`, so sharing one across
+//! workers is not an option — this mirrors how `benchkit::Bench` shares a
+//! client across a bench's serial runs). Results land in per-job slots, so
+//! completion order never affects output order: a `--jobs J` sweep is
+//! byte-identical to `--jobs 1` (summaries and manifests are also
+//! wall-clock-free; see `experiment::summary`).
+//!
+//! Seed replication: job `k` of a cell runs the cell's config with
+//! `seed = cfg.seed + k` (wrapping). Aggregation to [`CellSummary`] happens
+//! after the queue drains, in cell order.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::PjRtClient;
+
+use super::grid::{GridCell, SweepGrid};
+use super::summary::CellSummary;
+use crate::coordinator::Simulation;
+use crate::metrics::events::JsonlSink;
+use crate::metrics::RunReport;
+use crate::runtime::{Manifest, Task};
+
+/// One unit of work: a grid cell at one replicate seed.
+pub struct CellJob<'g> {
+    pub cell: &'g GridCell,
+    /// Replicate index in `0..seeds`.
+    pub seed_index: usize,
+    /// The derived master seed (`cell.cfg.seed + seed_index`, wrapping).
+    pub seed: u64,
+}
+
+/// The deterministic job list for `cells` × `seeds` (cell-major: all of a
+/// cell's replicates are adjacent).
+pub fn cell_jobs(cells: &[GridCell], seeds: usize) -> Vec<CellJob<'_>> {
+    let mut jobs = Vec::with_capacity(cells.len() * seeds);
+    for cell in cells {
+        for k in 0..seeds {
+            jobs.push(CellJob {
+                cell,
+                seed_index: k,
+                seed: cell.cfg.seed.wrapping_add(k as u64),
+            });
+        }
+    }
+    jobs
+}
+
+/// Drain `items` with up to `jobs` worker threads, each owning one context
+/// built by `make_worker` (reused across that worker's items). Results come
+/// back in item order regardless of scheduling; the first error (by item
+/// index) propagates. `jobs <= 1` runs serially on the calling thread —
+/// the reference path the parallel path must match byte-for-byte.
+pub fn run_queue<T, W, MW, F>(jobs: usize, items: &[CellJob<'_>], make_worker: MW, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    MW: Fn() -> Result<W> + Sync,
+    F: Fn(&mut W, &CellJob<'_>) -> Result<T> + Sync,
+{
+    let n = items.len();
+    let job_context =
+        |i: usize| format!("sweep job {i} ({})", items[i].cell.label());
+    let workers = jobs.clamp(1, n.max(1));
+    if workers <= 1 {
+        let mut w = make_worker()?;
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, j)| f(&mut w, j).with_context(|| job_context(i)))
+            .collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    // First failure aborts the drain: without this, a --jobs J sweep would
+    // burn through every remaining (possibly hours-long) PJRT run before
+    // surfacing the error the serial path reports immediately.
+    let failed = AtomicBool::new(false);
+    let slots: Mutex<Vec<Option<Result<T>>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut worker = match make_worker() {
+                    Ok(w) => Some(w),
+                    Err(e) => {
+                        // A worker that cannot build its context claims one
+                        // job to surface the error, then retires; the other
+                        // workers keep draining.
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i < n {
+                            slots.lock().unwrap()[i] =
+                                Some(Err(e.context("building sweep worker context")));
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        // i >= n: every job is already claimed by healthy
+                        // workers — this late build failure is irrelevant.
+                        None
+                    }
+                };
+                let Some(w) = worker.as_mut() else { return };
+                while !failed.load(Ordering::Relaxed) {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(w, &items[i]);
+                    if out.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    slots.lock().unwrap()[i] = Some(out);
+                }
+            });
+        }
+    });
+    let slots = slots.into_inner().unwrap();
+    if failed.load(Ordering::Relaxed) {
+        // Propagate the first error by item index (deterministic however
+        // the workers were scheduled).
+        for (i, slot) in slots.into_iter().enumerate() {
+            if let Some(Err(e)) = slot {
+                return Err(e.context(job_context(i)));
+            }
+        }
+        unreachable!("failure flagged but no error slot recorded");
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(_)) => unreachable!("error without failure flag"),
+            None => anyhow::bail!(
+                "{} was never executed (drain aborted?)",
+                job_context(i)
+            ),
+        }
+    }
+    Ok(out)
+}
+
+/// One cell's complete outcome: the per-seed reports plus their aggregate.
+pub struct CellResult {
+    pub cell: GridCell,
+    /// One report per replicate, seed order.
+    pub reports: Vec<RunReport>,
+    pub summary: CellSummary,
+}
+
+/// All cells of one sweep, grid order.
+pub struct SweepResult {
+    pub seeds: usize,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepResult {
+    pub fn summaries(&self) -> Vec<CellSummary> {
+        self.cells.iter().map(|c| c.summary.clone()).collect()
+    }
+
+    /// Consume the sweep into one report per cell (the single-seed bench
+    /// idiom: each cell's FIRST replicate, cell order). Multi-seed sweeps
+    /// should aggregate via `CellSummary` instead.
+    pub fn into_first_reports(self) -> Vec<RunReport> {
+        self.cells
+            .into_iter()
+            .map(|c| {
+                c.reports
+                    .into_iter()
+                    .next()
+                    .expect("every cell carries >= 1 replicate")
+            })
+            .collect()
+    }
+
+    /// The machine-readable sweep manifest (see `experiment::summary`).
+    pub fn manifest(&self, scenario: Option<&str>, axis_keys: &[String]) -> String {
+        super::summary::sweep_manifest(scenario, axis_keys, self.seeds, &self.summaries())
+    }
+}
+
+/// Fold a flat job-ordered report list back into per-cell results
+/// (pure — shared by [`ExperimentRunner::run`] and the artifact-free
+/// parallel-vs-serial property tests).
+pub fn assemble(
+    cells: Vec<GridCell>,
+    flat: Vec<RunReport>,
+    seeds: usize,
+    higher_better: &dyn Fn(&GridCell) -> bool,
+) -> SweepResult {
+    assert_eq!(flat.len(), cells.len() * seeds, "job/report count mismatch");
+    let mut it = flat.into_iter();
+    let cells = cells
+        .into_iter()
+        .map(|cell| {
+            let reports: Vec<RunReport> = (0..seeds).map(|_| it.next().unwrap()).collect();
+            let summary = CellSummary::from_reports(&cell, &reports, higher_better(&cell));
+            CellResult { cell, reports, summary }
+        })
+        .collect();
+    SweepResult { seeds, cells }
+}
+
+/// Executes a [`SweepGrid`]'s cell × seed matrix against the AOT artifacts.
+pub struct ExperimentRunner {
+    artifacts: PathBuf,
+    seeds: usize,
+    jobs: usize,
+    events_dir: Option<PathBuf>,
+}
+
+impl ExperimentRunner {
+    pub fn new(artifacts: impl Into<PathBuf>) -> ExperimentRunner {
+        ExperimentRunner {
+            artifacts: artifacts.into(),
+            seeds: 1,
+            jobs: 1,
+            events_dir: None,
+        }
+    }
+
+    /// Replicates per cell (>= 1); replicate `k` runs at `cfg.seed + k`.
+    pub fn seeds(mut self, seeds: usize) -> Self {
+        self.seeds = seeds.max(1);
+        self
+    }
+
+    /// Worker threads (>= 1). Output is identical for every value.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Stream every run's JSONL event records (the PR-2 `metrics::events`
+    /// machinery) into `dir/cell{index}_seed{k}.events.jsonl`.
+    pub fn events_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.events_dir = Some(dir.into());
+        self
+    }
+
+    fn make_worker(&self) -> Result<(Manifest, PjRtClient)> {
+        let manifest = Manifest::load(&self.artifacts)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((manifest, client))
+    }
+
+    /// Run the full matrix; each job is one `Simulation::run` (with an
+    /// event sink when an events dir is configured).
+    pub fn run(&self, grid: &SweepGrid) -> Result<SweepResult> {
+        let cells = grid.cells()?;
+        let jobs = cell_jobs(&cells, self.seeds);
+        if let Some(dir) = &self.events_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating events dir {}", dir.display()))?;
+        }
+        let events_dir = self.events_dir.as_deref();
+        let flat = run_queue(
+            self.jobs,
+            &jobs,
+            || self.make_worker(),
+            |worker, job| {
+                let (manifest, client) = &*worker;
+                let mut cfg = job.cell.cfg.clone();
+                cfg.seed = job.seed;
+                let sim = Simulation::with_client(cfg, manifest, client)?;
+                match events_dir {
+                    Some(dir) => run_with_event_file(&sim, dir, job),
+                    None => sim.run(),
+                }
+            },
+        )?;
+        drop(jobs); // release the borrow of `cells` before moving it
+        // Task direction (accuracy vs perplexity) per cell, resolved once
+        // against the manifest on the coordinating thread.
+        let manifest = Manifest::load(&self.artifacts)?;
+        let higher_better = |cell: &GridCell| -> bool {
+            manifest
+                .model(&cell.cfg.model)
+                .map(|m| m.task == Task::Classify)
+                .unwrap_or(true)
+        };
+        Ok(assemble(cells, flat, self.seeds, &higher_better))
+    }
+
+    /// Run an arbitrary per-job measurement instead of `Simulation::run`
+    /// (micro-benches that need the `Simulation` itself). Returns results
+    /// grouped per cell, seed order within.
+    pub fn map<T, F>(&self, grid: &SweepGrid, f: F) -> Result<Vec<Vec<T>>>
+    where
+        T: Send,
+        F: Fn(&Simulation, &CellJob<'_>) -> Result<T> + Sync,
+    {
+        let cells = grid.cells()?;
+        let jobs = cell_jobs(&cells, self.seeds);
+        let flat = run_queue(
+            self.jobs,
+            &jobs,
+            || self.make_worker(),
+            |worker, job| {
+                let (manifest, client) = &*worker;
+                let mut cfg = job.cell.cfg.clone();
+                cfg.seed = job.seed;
+                let sim = Simulation::with_client(cfg, manifest, client)?;
+                f(&sim, job)
+            },
+        )?;
+        let mut grouped = Vec::with_capacity(cells.len());
+        let mut it = flat.into_iter();
+        for _ in 0..cells.len() {
+            grouped.push((0..self.seeds).map(|_| it.next().unwrap()).collect());
+        }
+        Ok(grouped)
+    }
+}
+
+fn run_with_event_file(sim: &Simulation, dir: &Path, job: &CellJob<'_>) -> Result<RunReport> {
+    use std::io::Write as _;
+    let path = dir.join(format!(
+        "cell{:04}_seed{}.events.jsonl",
+        job.cell.index, job.seed_index
+    ));
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("creating event stream {}", path.display()))?;
+    let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+    let report = sim.run_with_sink(&mut sink)?;
+    anyhow::ensure!(
+        sink.errors == 0,
+        "{} event-stream writes failed for {}",
+        sink.errors,
+        path.display()
+    );
+    sink.into_inner().flush()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn cells(n: usize) -> Vec<GridCell> {
+        (0..n)
+            .map(|index| GridCell {
+                index,
+                settings: vec![("i".into(), index.to_string())],
+                cfg: RunConfig::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cell_jobs_are_cell_major_with_derived_seeds() {
+        let cs = cells(2);
+        let jobs = cell_jobs(&cs, 3);
+        assert_eq!(jobs.len(), 6);
+        assert_eq!(jobs[0].cell.index, 0);
+        assert_eq!(jobs[2].seed_index, 2);
+        assert_eq!(jobs[2].seed, RunConfig::default().seed + 2);
+        assert_eq!(jobs[3].cell.index, 1);
+        assert_eq!(jobs[3].seed, RunConfig::default().seed);
+    }
+
+    #[test]
+    fn run_queue_preserves_item_order_under_parallelism() {
+        let cs = cells(7);
+        let jobs = cell_jobs(&cs, 3);
+        let serial = run_queue(1, &jobs, || Ok(()), |_, j| {
+            Ok((j.cell.index, j.seed_index, j.seed))
+        })
+        .unwrap();
+        let parallel = run_queue(4, &jobs, || Ok(()), |_, j| {
+            Ok((j.cell.index, j.seed_index, j.seed))
+        })
+        .unwrap();
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.len(), 21);
+    }
+
+    #[test]
+    fn run_queue_worker_context_is_reused_within_a_worker() {
+        // Serial path: one context serves every job, so a per-worker counter
+        // ends at the job count.
+        let cs = cells(5);
+        let jobs = cell_jobs(&cs, 1);
+        let out = run_queue(1, &jobs, || Ok(0usize), |w, _| {
+            *w += 1;
+            Ok(*w)
+        })
+        .unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn run_queue_propagates_the_first_error_by_index() {
+        let cs = cells(4);
+        let jobs = cell_jobs(&cs, 1);
+        for workers in [1, 3] {
+            let err = run_queue(workers, &jobs, || Ok(()), |_, j| {
+                if j.cell.index >= 2 {
+                    anyhow::bail!("boom {}", j.cell.index)
+                }
+                Ok(j.cell.index)
+            })
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("boom 2"), "expected job 2's error, got: {msg}");
+        }
+    }
+
+    #[test]
+    fn run_queue_surfaces_worker_build_failure() {
+        let cs = cells(2);
+        let jobs = cell_jobs(&cs, 1);
+        for workers in [1, 2] {
+            let err = run_queue::<(), (), _, _>(
+                workers,
+                &jobs,
+                || anyhow::bail!("no context"),
+                |_, _| Ok(()),
+            )
+            .unwrap_err();
+            assert!(format!("{err:#}").contains("no context"));
+        }
+    }
+}

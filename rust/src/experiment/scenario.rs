@@ -1,0 +1,249 @@
+//! Scenario registry: name → reusable experimental setup, in canonical
+//! listing order (mirrors `coordinator::registry` for strategies).
+//!
+//! A scenario names a *setup*, not a sweep: base preset × availability
+//! process × fleet heterogeneity × non-iid level. Sweeps are declared on
+//! top with [`super::SweepGrid`] axes. Overrides are plain `key = value`
+//! pairs applied through `config::parse::apply_override`, so a scenario
+//! is validated exactly like a config file — adding one is appending a
+//! [`ScenarioSpec`] entry with strings, no new code paths.
+
+use anyhow::Result;
+
+use crate::config::{parse as cfgparse, RunConfig};
+
+/// One registered scenario.
+pub struct ScenarioSpec {
+    /// Canonical display name (what `timelyfl sweep --scenario` takes).
+    pub name: &'static str,
+    /// Extra accepted spellings (lowercase); the canonical name matches
+    /// case-insensitively without being listed.
+    pub aliases: &'static [&'static str],
+    /// One-liner for `timelyfl scenarios`.
+    pub summary: &'static str,
+    /// Base paper preset (`RunConfig::preset`); `None` = the default config.
+    pub preset: Option<&'static str>,
+    /// `key = value` overrides on top of the preset, applied through
+    /// `config::parse` (same validation as a config file).
+    pub overrides: &'static [(&'static str, &'static str)],
+}
+
+impl ScenarioSpec {
+    /// Materialise the scenario's base `RunConfig` (validated).
+    pub fn config(&self) -> Result<RunConfig> {
+        let mut cfg = match self.preset {
+            Some(p) => RunConfig::preset(p)?,
+            None => RunConfig::default(),
+        };
+        for (k, v) in self.overrides {
+            cfgparse::apply_override(&mut cfg, k, v)
+                .map_err(|e| anyhow::anyhow!("scenario {}: {k} = {v}: {e:#}", self.name))?;
+        }
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("scenario {}: {e:#}", self.name))?;
+        Ok(cfg)
+    }
+}
+
+/// All registered scenarios, in listing order: the paper presets first
+/// (aliased by their preset names so bench `Case` tables resolve
+/// unchanged), then the availability / non-iid / fleet variants that go
+/// beyond the paper.
+pub static SCENARIOS: &[ScenarioSpec] = &[
+    ScenarioSpec {
+        name: "cifar",
+        aliases: &["cifar_fedavg"],
+        summary: "CIFAR-10 / ResNet-20, FedAvg, always-on population (paper §4.1 baseline)",
+        preset: Some("cifar_fedavg"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "cifar_fedopt",
+        aliases: &[],
+        summary: "CIFAR-10 / ResNet-20 with the Adam server optimizer",
+        preset: Some("cifar_fedopt"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "speech",
+        aliases: &["speech_fedavg"],
+        summary: "Google Speech / VGG11, FedAvg; ~507 MB model, comm-bound stragglers",
+        preset: Some("speech_fedavg"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "speech_fedopt",
+        aliases: &[],
+        summary: "Google Speech / VGG11 with the Adam server optimizer",
+        preset: Some("speech_fedopt"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "kws",
+        aliases: &["kws_fedavg"],
+        summary: "lightweight KWS model (79k params, Table 2), FedAvg",
+        preset: Some("kws_fedavg"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "kws_fedopt",
+        aliases: &[],
+        summary: "lightweight KWS model with the Adam server optimizer",
+        preset: Some("kws_fedopt"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "reddit",
+        aliases: &["reddit_fedavg"],
+        summary: "Reddit / ALBERT next-word prediction (perplexity), FedAvg",
+        preset: Some("reddit_fedavg"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "reddit_fedopt",
+        aliases: &[],
+        summary: "Reddit / ALBERT with the Adam server optimizer",
+        preset: Some("reddit_fedopt"),
+        overrides: &[],
+    },
+    ScenarioSpec {
+        name: "cifar_churn",
+        aliases: &["churn"],
+        summary: "CIFAR under heavy Markov churn (~1/3 online, dwells ~ round times) — \
+                  the SEAFL selective-participation regime",
+        preset: Some("cifar_fedavg"),
+        overrides: &[
+            ("availability", "markov"),
+            ("avail_mean_online_secs", "400"),
+            ("avail_mean_offline_secs", "800"),
+        ],
+    },
+    ScenarioSpec {
+        name: "cifar_diurnal",
+        aliases: &["diurnal"],
+        summary: "CIFAR with sine-gated diurnal availability, 8 timezone shards",
+        preset: Some("cifar_fedavg"),
+        overrides: &[
+            ("availability", "diurnal"),
+            ("avail_diurnal_period_secs", "7200"),
+            ("avail_diurnal_duty", "0.5"),
+            ("avail_diurnal_shards", "8"),
+        ],
+    },
+    ScenarioSpec {
+        name: "cifar_noniid",
+        aliases: &["noniid"],
+        summary: "CIFAR at severe non-iid (Dirichlet alpha 0.05) — where inclusiveness \
+                  matters most (Fig. 6's hard end)",
+        preset: Some("cifar_fedavg"),
+        overrides: &[("dirichlet_alpha", "0.05")],
+    },
+    ScenarioSpec {
+        name: "fleet_hetero",
+        aliases: &[],
+        summary: "1000-client calibrated fleet, no training — compute/bandwidth \
+                  distribution studies (Fig. 8)",
+        preset: None,
+        overrides: &[("population", "1000"), ("concurrency", "32")],
+    },
+    ScenarioSpec {
+        name: "kws_smoke",
+        aliases: &["smoke"],
+        summary: "tiny KWS setup (12 clients, 4 rounds) for CI smokes and quick sweeps",
+        preset: Some("kws_fedavg"),
+        overrides: &[
+            ("population", "12"),
+            ("concurrency", "6"),
+            ("rounds", "4"),
+            ("eval_every", "2"),
+            ("eval_batches", "1"),
+            ("steps_per_epoch", "1"),
+            ("max_local_epochs", "2"),
+            ("sim_model_bytes", "3.2e5"),
+        ],
+    },
+];
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static ScenarioSpec> {
+    let needle = name.to_ascii_lowercase();
+    SCENARIOS
+        .iter()
+        .find(|s| s.name.to_ascii_lowercase() == needle || s.aliases.contains(&needle.as_str()))
+}
+
+/// Like [`find`], but an actionable error listing the known scenarios.
+pub fn resolve(name: &str) -> Result<&'static ScenarioSpec> {
+    find(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario {name:?} (known: {})", names().join(", "))
+    })
+}
+
+/// Canonical names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::availability::AvailabilityKind;
+
+    #[test]
+    fn every_scenario_materialises_a_valid_config() {
+        for s in SCENARIOS {
+            let cfg = s.config().unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+            assert!(!s.summary.is_empty(), "{}: empty summary", s.name);
+        }
+    }
+
+    #[test]
+    fn names_and_aliases_unique_and_resolvable() {
+        let mut keys = std::collections::BTreeSet::new();
+        for s in SCENARIOS {
+            assert!(keys.insert(s.name.to_ascii_lowercase()), "dup name {}", s.name);
+            assert_eq!(find(s.name).unwrap().name, s.name);
+            assert_eq!(find(&s.name.to_ascii_uppercase()).unwrap().name, s.name);
+            for a in s.aliases {
+                assert!(keys.insert(a.to_string()), "alias {a} collides");
+                assert_eq!(find(a).unwrap().name, s.name, "alias {a} resolves elsewhere");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_error_lists_known_scenarios() {
+        let err = resolve("bogus").unwrap_err().to_string();
+        for s in SCENARIOS {
+            assert!(err.contains(s.name), "error should list {}", s.name);
+        }
+        assert!(find("").is_none());
+    }
+
+    #[test]
+    fn preset_aliases_keep_bench_cases_resolving() {
+        // The table benches name paper presets; scenario aliases keep those
+        // strings working unchanged.
+        for preset in ["cifar_fedavg", "speech_fedavg", "kws_fedavg", "reddit_fedavg"] {
+            let s = resolve(preset).unwrap();
+            assert_eq!(s.preset, Some(preset));
+        }
+    }
+
+    #[test]
+    fn variant_scenarios_apply_their_overrides() {
+        let churn = resolve("cifar_churn").unwrap().config().unwrap();
+        assert_eq!(churn.availability.kind, AvailabilityKind::Markov);
+        assert_eq!(churn.availability.mean_online_secs, 400.0);
+        assert_eq!(churn.availability.mean_offline_secs, 800.0);
+
+        let smoke = resolve("smoke").unwrap().config().unwrap();
+        assert_eq!(smoke.model, "kws_lite");
+        assert_eq!(smoke.population, 12);
+        assert_eq!(smoke.rounds, 4);
+
+        let fleet = resolve("fleet_hetero").unwrap().config().unwrap();
+        assert_eq!(fleet.population, 1000);
+    }
+}

@@ -1,0 +1,368 @@
+//! `CellSummary` — per-cell aggregation over the seed replicates, and the
+//! machine-readable sweep manifest.
+//!
+//! Everything here is **deterministic in (grid, seeds)**: summaries carry
+//! no wall-clock (per-run wall seconds stay on the `RunReport`s), and the
+//! manifest is assembled in cell order after all runs complete, so a
+//! `--jobs J` sweep writes a byte-identical manifest to a `--jobs 1` sweep
+//! of the same grid and seed set.
+
+use anyhow::Result;
+
+use super::grid::GridCell;
+use crate::metrics::RunReport;
+use crate::util::json::Json;
+use crate::util::stats::{mean, std_dev};
+
+/// Mean ± population standard deviation over the seed replicates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl MeanStd {
+    pub fn of(xs: &[f64]) -> MeanStd {
+        MeanStd { mean: mean(xs), std: std_dev(xs) }
+    }
+
+    /// `1.234±0.056` (std omitted for single-seed cells).
+    pub fn fmt(&self, prec: usize) -> String {
+        if self.std == 0.0 {
+            format!("{:.prec$}", self.mean)
+        } else {
+            format!("{:.prec$}±{:.prec$}", self.mean, self.std)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("mean", Json::num(self.mean)), ("std", Json::num(self.std))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<MeanStd> {
+        Ok(MeanStd {
+            mean: v.expect("mean")?.as_f64()?,
+            std: v.expect("std")?.as_f64()?,
+        })
+    }
+}
+
+/// Time-to-target aggregation for cells whose config sets `target_metric`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TargetStat {
+    pub target: f64,
+    /// Seeds that reached the target within budget.
+    pub reached: usize,
+    /// Simulated hours to target, over the seeds that reached it (`None`
+    /// when none did — the paper's "> budget" cells).
+    pub hours: Option<MeanStd>,
+}
+
+/// Seed-aggregated result of one grid cell. Wall-clock-free by design (see
+/// module docs); counts are aggregated as means over seeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellSummary {
+    /// `key=value,...` cell label (axis declaration order).
+    pub label: String,
+    pub settings: Vec<(String, String)>,
+    pub seeds: usize,
+    pub rounds: MeanStd,
+    pub sim_hours: MeanStd,
+    /// `None` when no replicate recorded an eval point (e.g. population
+    /// offline from t=0).
+    pub final_metric: Option<MeanStd>,
+    pub best_metric: Option<MeanStd>,
+    pub mean_participation: MeanStd,
+    pub mean_online_fraction: MeanStd,
+    pub avail_drops: MeanStd,
+    pub deadline_drops: MeanStd,
+    pub trainings_executed: MeanStd,
+    pub trainings_avoided: MeanStd,
+    pub time_to_target: Option<TargetStat>,
+}
+
+impl CellSummary {
+    /// Aggregate one cell's seed replicates. `higher_better` selects the
+    /// best-metric / time-to-target comparisons (accuracy vs perplexity).
+    pub fn from_reports(cell: &GridCell, reports: &[RunReport], higher_better: bool) -> CellSummary {
+        assert!(!reports.is_empty(), "cell {} summarised with no reports", cell.index);
+        let agg = |f: &dyn Fn(&RunReport) -> f64| {
+            MeanStd::of(&reports.iter().map(f).collect::<Vec<_>>())
+        };
+        let opt_agg = |f: &dyn Fn(&RunReport) -> Option<f64>| {
+            let xs: Vec<f64> = reports.iter().filter_map(f).collect();
+            (!xs.is_empty()).then(|| MeanStd::of(&xs))
+        };
+        let time_to_target = cell.cfg.target_metric.map(|target| {
+            let hit: Vec<f64> = reports
+                .iter()
+                .filter_map(|r| r.time_to_target(target, higher_better))
+                .collect();
+            TargetStat {
+                target,
+                reached: hit.len(),
+                hours: (!hit.is_empty()).then(|| MeanStd::of(&hit)),
+            }
+        });
+        CellSummary {
+            label: cell.label(),
+            settings: cell.settings.clone(),
+            seeds: reports.len(),
+            rounds: agg(&|r| r.total_rounds as f64),
+            sim_hours: agg(&|r| r.sim_secs / 3600.0),
+            final_metric: opt_agg(&|r| r.final_metric()),
+            best_metric: opt_agg(&|r| r.best_metric(higher_better)),
+            mean_participation: agg(&|r| r.mean_participation()),
+            mean_online_fraction: agg(&|r| r.mean_online_fraction()),
+            avail_drops: agg(&|r| r.total_avail_drops() as f64),
+            deadline_drops: agg(&|r| r.total_deadline_drops() as f64),
+            trainings_executed: agg(&|r| r.trainings_executed as f64),
+            trainings_avoided: agg(&|r| r.trainings_avoided as f64),
+            time_to_target,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |m: &Option<MeanStd>| m.as_ref().map_or(Json::Null, |m| m.to_json());
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            (
+                "settings",
+                Json::arr(
+                    self.settings
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::arr(vec![Json::str(k.clone()), Json::str(v.clone())])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("rounds", self.rounds.to_json()),
+            ("sim_hours", self.sim_hours.to_json()),
+            ("final_metric", opt(&self.final_metric)),
+            ("best_metric", opt(&self.best_metric)),
+            ("mean_participation", self.mean_participation.to_json()),
+            ("mean_online_fraction", self.mean_online_fraction.to_json()),
+            ("avail_drops", self.avail_drops.to_json()),
+            ("deadline_drops", self.deadline_drops.to_json()),
+            ("trainings_executed", self.trainings_executed.to_json()),
+            ("trainings_avoided", self.trainings_avoided.to_json()),
+            (
+                "time_to_target",
+                self.time_to_target.as_ref().map_or(Json::Null, |t| {
+                    Json::obj(vec![
+                        ("target", Json::num(t.target)),
+                        ("reached", Json::num(t.reached as f64)),
+                        ("hours", opt(&t.hours)),
+                    ])
+                }),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CellSummary> {
+        let opt = |v: &Json| -> Result<Option<MeanStd>> {
+            Ok(match v {
+                Json::Null => None,
+                other => Some(MeanStd::from_json(other)?),
+            })
+        };
+        let settings = v
+            .expect("settings")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let pair = p.as_arr()?;
+                anyhow::ensure!(pair.len() == 2, "setting pair arity");
+                Ok((pair[0].as_str()?.to_string(), pair[1].as_str()?.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CellSummary {
+            label: v.expect("label")?.as_str()?.to_string(),
+            settings,
+            seeds: v.expect("seeds")?.as_usize()?,
+            rounds: MeanStd::from_json(v.expect("rounds")?)?,
+            sim_hours: MeanStd::from_json(v.expect("sim_hours")?)?,
+            final_metric: opt(v.expect("final_metric")?)?,
+            best_metric: opt(v.expect("best_metric")?)?,
+            mean_participation: MeanStd::from_json(v.expect("mean_participation")?)?,
+            mean_online_fraction: MeanStd::from_json(v.expect("mean_online_fraction")?)?,
+            avail_drops: MeanStd::from_json(v.expect("avail_drops")?)?,
+            deadline_drops: MeanStd::from_json(v.expect("deadline_drops")?)?,
+            trainings_executed: MeanStd::from_json(v.expect("trainings_executed")?)?,
+            trainings_avoided: MeanStd::from_json(v.expect("trainings_avoided")?)?,
+            time_to_target: match v.expect("time_to_target")? {
+                Json::Null => None,
+                t => Some(TargetStat {
+                    target: t.expect("target")?.as_f64()?,
+                    reached: t.expect("reached")?.as_usize()?,
+                    hours: opt(t.expect("hours")?)?,
+                }),
+            },
+        })
+    }
+}
+
+/// Machine-readable sweep manifest: JSONL in the `reason`-discriminated
+/// idiom of `metrics::events`. One `sweep` header line, then one `cell`
+/// line per grid cell in deterministic cell order.
+pub fn sweep_manifest(
+    scenario: Option<&str>,
+    axis_keys: &[String],
+    seeds: usize,
+    summaries: &[CellSummary],
+) -> String {
+    let mut out = String::new();
+    let header = Json::obj(vec![
+        ("reason", Json::str("sweep")),
+        (
+            "scenario",
+            scenario.map_or(Json::Null, Json::str),
+        ),
+        (
+            "axes",
+            Json::arr(axis_keys.iter().map(|k| Json::str(k.clone())).collect()),
+        ),
+        ("seeds", Json::num(seeds as f64)),
+        ("cells", Json::num(summaries.len() as f64)),
+    ]);
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for (i, s) in summaries.iter().enumerate() {
+        let line = Json::obj(vec![
+            ("reason", Json::str("cell")),
+            ("index", Json::num(i as f64)),
+            ("summary", s.to_json()),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a sweep manifest back into its cell summaries (downstream tooling
+/// and the round-trip property test).
+pub fn parse_sweep_manifest(text: &str) -> Result<Vec<CellSummary>> {
+    let mut summaries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("manifest line {}: {e}", lineno + 1))?;
+        match v.expect("reason")?.as_str()? {
+            "sweep" => {}
+            "cell" => summaries.push(CellSummary::from_json(v.expect("summary")?)?),
+            other => anyhow::bail!("manifest line {}: unknown reason {other:?}", lineno + 1),
+        }
+    }
+    Ok(summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::metrics::EvalPoint;
+
+    fn report(seed_shift: f64) -> RunReport {
+        RunReport {
+            strategy: "TimelyFL".into(),
+            model: "vision".into(),
+            eval_points: vec![
+                EvalPoint { round: 0, sim_secs: 1800.0, mean_loss: 2.0, metric: 0.3 + seed_shift },
+                EvalPoint { round: 4, sim_secs: 3600.0, mean_loss: 1.5, metric: 0.5 + seed_shift },
+            ],
+            rounds: vec![],
+            participation: vec![0.5, 1.0],
+            online_fraction: vec![1.0, 1.0],
+            sim_secs: 3600.0,
+            wall_secs: 1.23, // must never reach the summary
+            total_rounds: 5,
+            events_processed: 10,
+            real_train_steps: 100,
+            trainings_executed: 8,
+            trainings_avoided: 2,
+            tail_dropped: 0,
+            tail_avail_dropped: 0,
+        }
+    }
+
+    fn cell() -> GridCell {
+        let mut cfg = RunConfig::default();
+        cfg.target_metric = Some(0.45);
+        GridCell {
+            index: 0,
+            settings: vec![("strategy".into(), "TimelyFL".into())],
+            cfg,
+        }
+    }
+
+    #[test]
+    fn aggregates_mean_and_std_over_seeds() {
+        let s = CellSummary::from_reports(&cell(), &[report(0.0), report(0.1)], true);
+        assert_eq!(s.seeds, 2);
+        assert!((s.final_metric.unwrap().mean - 0.55).abs() < 1e-12);
+        assert!((s.final_metric.unwrap().std - 0.05).abs() < 1e-12);
+        assert!((s.sim_hours.mean - 1.0).abs() < 1e-12);
+        assert_eq!(s.rounds.mean, 5.0);
+        assert!((s.mean_participation.mean - 0.75).abs() < 1e-12);
+        assert_eq!(s.trainings_executed.mean, 8.0);
+        let tt = s.time_to_target.unwrap();
+        assert_eq!(tt.reached, 2); // 0.5 and 0.6 both pass 0.45
+        assert!((tt.hours.unwrap().mean - 1.0).abs() < 1e-12);
+        assert_eq!(s.label, "strategy=TimelyFL");
+    }
+
+    #[test]
+    fn target_not_reached_yields_budget_cell() {
+        let mut c = cell();
+        c.cfg.target_metric = Some(0.99);
+        let s = CellSummary::from_reports(&c, &[report(0.0)], true);
+        let tt = s.time_to_target.unwrap();
+        assert_eq!(tt.reached, 0);
+        assert!(tt.hours.is_none());
+    }
+
+    #[test]
+    fn lower_is_better_metrics_aggregate() {
+        // Perplexity-style: best = min.
+        let s = CellSummary::from_reports(&cell(), &[report(0.0)], false);
+        assert!((s.best_metric.unwrap().mean - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let s = CellSummary::from_reports(&cell(), &[report(0.0), report(0.2)], true);
+        let back = CellSummary::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn manifest_round_trips_and_is_jsonl() {
+        let s1 = CellSummary::from_reports(&cell(), &[report(0.0)], true);
+        let s2 = CellSummary::from_reports(&cell(), &[report(0.1)], true);
+        let text = sweep_manifest(
+            Some("cifar"),
+            &["strategy".to_string()],
+            1,
+            &[s1.clone(), s2.clone()],
+        );
+        assert_eq!(text.lines().count(), 3, "header + one line per cell");
+        let head = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(head.expect("reason").unwrap().as_str().unwrap(), "sweep");
+        assert_eq!(head.expect("cells").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(head.expect("scenario").unwrap().as_str().unwrap(), "cifar");
+        let back = parse_sweep_manifest(&text).unwrap();
+        assert_eq!(back, vec![s1, s2]);
+        // Wall-clock never leaks into the manifest (jobs-count identity).
+        assert!(!text.contains("wall"), "manifest must stay wall-clock-free");
+        assert!(parse_sweep_manifest("{\"reason\":\"bogus\"}\n").is_err());
+    }
+
+    #[test]
+    fn meanstd_formats_compactly() {
+        assert_eq!(MeanStd { mean: 1.25, std: 0.0 }.fmt(3), "1.250");
+        assert_eq!(MeanStd { mean: 1.25, std: 0.5 }.fmt(2), "1.25±0.50");
+    }
+}

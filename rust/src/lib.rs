@@ -14,7 +14,10 @@
 //!   event-driven heterogeneous-device simulator with a first-class client
 //!   availability & churn subsystem (`availability`: always-on / Markov
 //!   on-off / diurnal / trace-driven processes whose transitions are
-//!   `simtime` events). See `docs/architecture.md`.
+//!   `simtime` events). See `docs/architecture.md`. The evaluation surface
+//!   is declarative: named scenarios × sweep grids × a thread-parallel
+//!   multi-seed runner (`experiment`; `timelyfl sweep`,
+//!   `docs/experiments.md`).
 //! - **Layer 2 (python/compile/model.py)** — JAX forward/backward train-step
 //!   graphs (with partial-training variants) lowered once to HLO text.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the dense
@@ -30,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod devices;
+pub mod experiment;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

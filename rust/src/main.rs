@@ -5,15 +5,24 @@
 //!                     [--events FILE]                # JSONL run-event stream
 //!                     [--eager-train]                # A/B: train at dispatch, not at finish
 //! timelyfl compare    --preset cifar_fedavg [--set k=v ...]  # every registered strategy
+//! timelyfl sweep      --scenario NAME [--axis k=v1,v2]... [--seeds N] [--jobs J]
+//!                     [--out FILE]                   # machine-readable sweep manifest
+//!                     [--events DIR]                 # per-run JSONL event streams
 //! timelyfl strategies                                 # dump the strategy registry
+//! timelyfl scenarios                                  # dump the scenario registry
+//! timelyfl presets                                    # dump the paper presets
 //! timelyfl trace record [--set avail_*=..] [--horizon SECS] [--out FILE]
 //!                                                     # dump the availability schedule as a JSONL trace
 //! timelyfl inspect    [--artifacts DIR]               # manifest dump
 //! ```
 //!
-//! Strategies resolve through `coordinator::registry` — `--strategy`
-//! accepts any registered name or alias. Unknown subcommands exit non-zero
-//! (shell pipelines depend on it).
+//! Strategies resolve through `coordinator::registry`, scenarios through
+//! `experiment::scenario` — both accept any registered name or alias.
+//! `sweep` expands `--axis` flags into a cross-product grid (every value
+//! goes through the `config::parse` validation of a `--set` flag), runs
+//! the cell × seed matrix thread-parallel, and prints one summary row per
+//! cell; output is byte-identical for every `--jobs` value. Unknown
+//! subcommands exit non-zero (shell pipelines depend on it).
 //!
 //! (Hand-rolled arg parsing: clap is not in the offline vendor set.)
 
@@ -22,8 +31,9 @@ use std::io::Write as _;
 use anyhow::{Context, Result};
 
 use timelyfl::availability::{write_trace, AvailabilityModel, TraceEvent, SEED_SALT};
-use timelyfl::config::{parse as cfgparse, RunConfig};
+use timelyfl::config::{self, parse as cfgparse, RunConfig};
 use timelyfl::coordinator::{registry, Simulation};
+use timelyfl::experiment::{scenario, ExperimentRunner, SweepGrid};
 use timelyfl::metrics::events::JsonlSink;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
 use timelyfl::metrics::RunReport;
@@ -45,6 +55,15 @@ struct Args {
     horizon: Option<f64>,
     /// `--eager-train`: disable deferred dispatch execution (A/B hatch).
     eager_train: bool,
+    /// `--scenario NAME`: base the config on a registered scenario.
+    scenario: Option<String>,
+    /// `--axis key=v1,v2,...` (repeatable): sweep-grid axes, in order.
+    axes: Vec<String>,
+    /// `--seeds N`: replicates per sweep cell.
+    seeds: Option<usize>,
+    /// `--jobs J`: sweep worker threads (default: available parallelism,
+    /// capped at 4 — each worker owns a PJRT client).
+    jobs: Option<usize>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -61,6 +80,10 @@ fn parse_args() -> Result<Args> {
         events: None,
         horizon: None,
         eager_train: false,
+        scenario: None,
+        axes: Vec::new(),
+        seeds: None,
+        jobs: None,
     };
     let mut it = std::env::args().skip(1);
     args.command = it.next().unwrap_or_else(|| "help".into());
@@ -79,6 +102,10 @@ fn parse_args() -> Result<Args> {
             "--events" => args.events = Some(need("--events")?),
             "--horizon" => args.horizon = Some(need("--horizon")?.parse()?),
             "--eager-train" => args.eager_train = true,
+            "--scenario" => args.scenario = Some(need("--scenario")?),
+            "--axis" => args.axes.push(need("--axis")?),
+            "--seeds" => args.seeds = Some(need("--seeds")?.parse()?),
+            "--jobs" => args.jobs = Some(need("--jobs")?.parse()?),
             "--help" | "-h" => {
                 args.command = "help".into();
             }
@@ -92,9 +119,14 @@ fn parse_args() -> Result<Args> {
 }
 
 fn build_config(args: &Args) -> Result<RunConfig> {
-    let mut cfg = match &args.preset {
-        Some(p) => RunConfig::preset(p)?,
-        None => RunConfig::default(),
+    anyhow::ensure!(
+        args.scenario.is_none() || args.preset.is_none(),
+        "--scenario and --preset are mutually exclusive (a scenario already names its preset)"
+    );
+    let mut cfg = match (&args.scenario, &args.preset) {
+        (Some(s), _) => scenario::resolve(s)?.config()?,
+        (None, Some(p)) => RunConfig::preset(p)?,
+        (None, None) => RunConfig::default(),
     };
     if let Some(path) = &args.config_file {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -233,6 +265,112 @@ fn cmd_strategies() -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenarios() -> Result<()> {
+    let mut t = Table::new(&["name", "aliases", "preset", "summary"]);
+    for s in scenario::SCENARIOS {
+        t.row(vec![
+            s.name.to_string(),
+            s.aliases.join(", "),
+            s.preset.unwrap_or("(default)").to_string(),
+            s.summary.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_presets() -> Result<()> {
+    let mut t = Table::new(&["name", "summary"]);
+    for (name, summary) in config::PRESETS {
+        t.row(vec![name.to_string(), summary.to_string()]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `timelyfl sweep`: expand `--axis` flags over a scenario/preset base
+/// config and run the cell × seed matrix thread-parallel.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = build_config(args)?;
+    let mut grid = SweepGrid::new(base);
+    for spec in &args.axes {
+        let (key, values) = spec.split_once('=').with_context(|| {
+            format!("--axis {spec:?}: expected key=v1,v2,...")
+        })?;
+        let values: Vec<&str> = values.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            values.iter().all(|v| !v.is_empty()),
+            "--axis {spec:?}: empty value"
+        );
+        grid = grid.axis(key, &values);
+    }
+    let seeds = args.seeds.unwrap_or(1);
+    anyhow::ensure!(seeds >= 1, "--seeds must be >= 1");
+    let jobs = match args.jobs {
+        Some(j) => {
+            anyhow::ensure!(j >= 1, "--jobs must be >= 1");
+            j
+        }
+        // Default mirrors benchkit's policy: each worker owns a PJRT client
+        // + full executable set, so past ~4 workers the CPU client only
+        // oversubscribes. --jobs overrides for bigger machines.
+        None => std::thread::available_parallelism().map_or(1, |n| n.get().min(4)),
+    };
+    eprintln!(
+        "sweep: {} cells x {} seeds over axes [{}] ({} jobs)",
+        grid.len(),
+        seeds,
+        grid.axis_keys().join(", "),
+        jobs
+    );
+
+    let mut runner = ExperimentRunner::new(&args.artifacts).seeds(seeds).jobs(jobs);
+    if let Some(dir) = &args.events {
+        runner = runner.events_dir(dir);
+    }
+    let result = runner.run(&grid)?;
+
+    let mut t = Table::new(&[
+        "cell",
+        "final_metric",
+        "time_to_target",
+        "sim_hours",
+        "mean_particip",
+        "online_frac",
+        "avail_drops",
+        "deadline_drops",
+        "rounds",
+    ]);
+    for c in &result.cells {
+        let s = &c.summary;
+        t.row(vec![
+            s.label.clone(),
+            s.final_metric.map_or("-".into(), |m| m.fmt(4)),
+            match &s.time_to_target {
+                None => "-".into(),
+                Some(tt) => match &tt.hours {
+                    Some(h) => format!("{} hr ({}/{})", h.fmt(2), tt.reached, s.seeds),
+                    None => "> budget".into(),
+                },
+            },
+            s.sim_hours.fmt(2),
+            s.mean_participation.fmt(3),
+            s.mean_online_fraction.fmt(3),
+            s.avail_drops.fmt(1),
+            s.deadline_drops.fmt(1),
+            s.rounds.fmt(1),
+        ]);
+    }
+    println!("{}", t.render());
+
+    if let Some(out) = &args.out {
+        let manifest = result.manifest(args.scenario.as_deref(), &grid.axis_keys());
+        std::fs::write(out, manifest).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote sweep manifest {out}");
+    }
+    Ok(())
+}
+
 /// `timelyfl trace record`: dump the configured availability process's
 /// schedule to the JSONL trace format of `docs/availability.md`, so a
 /// Markov/diurnal run can be replayed elsewhere with `availability=trace`.
@@ -313,11 +451,14 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn usage() -> String {
     format!(
-        "usage: timelyfl <run|compare|strategies|trace record|inspect> [--preset P] \
-         [--strategy S] [--config FILE] [--set k=v]... [--artifacts DIR] [--out FILE] \
-         [--target X] [--events FILE] [--horizon SECS] [--eager-train]\n\
-         strategies: {}",
-        registry::names().join(", ")
+        "usage: timelyfl <run|compare|sweep|strategies|scenarios|presets|trace record|inspect> \
+         [--preset P] [--scenario S] [--strategy S] [--config FILE] [--set k=v]... \
+         [--axis k=v1,v2]... [--seeds N] [--jobs J] [--artifacts DIR] [--out FILE] \
+         [--target X] [--events FILE|DIR] [--horizon SECS] [--eager-train]\n\
+         strategies: {}\n\
+         scenarios:  {}",
+        registry::names().join(", "),
+        scenario::names().join(", ")
     )
 }
 
@@ -336,7 +477,10 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "sweep" => cmd_sweep(&args),
         "strategies" => cmd_strategies(),
+        "scenarios" => cmd_scenarios(),
+        "presets" => cmd_presets(),
         "trace" => cmd_trace(&args),
         "inspect" => cmd_inspect(&args),
         "help" => {

@@ -8,7 +8,8 @@
 //!
 //! ```text
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
-//!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83}
+//!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83,
+//!  "workloads":[{"alpha":0.75,"client":4,"epochs":2}]}
 //! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
 //! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability",
 //!  "execution_avoided":true}
@@ -51,10 +52,50 @@ impl DropCause {
     }
 }
 
+/// One client's scheduled workload for a dispatch — the paper's Alg. 3
+/// outputs (E_c local epochs, alpha_c partial-training ratio) as actually
+/// dispatched: `alpha` is the AOT-compiled ratio the quantizer selected,
+/// i.e. the fraction that really ran, not the scheduler's continuous
+/// pre-quantization value. Event-driven protocols always dispatch the full
+/// model (`alpha = 1.0`, fixed epochs); TimelyFL carries its per-round
+/// adaptive assignments here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientWorkload {
+    pub client: usize,
+    /// Scheduled local epochs E_c.
+    pub epochs: usize,
+    /// Realized partial-training ratio alpha_c in (0, 1].
+    pub alpha: f64,
+}
+
+impl ClientWorkload {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("client", Json::num(self.client as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("alpha", Json::num(self.alpha)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClientWorkload> {
+        Ok(ClientWorkload {
+            client: v.expect("client")?.as_usize()?,
+            epochs: v.expect("epochs")?.as_usize()?,
+            alpha: v.expect("alpha")?.as_f64()?,
+        })
+    }
+}
+
 /// One record in a run's event stream.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RunEvent {
     /// One aggregation round finished (mirrors `metrics::RoundRecord`).
+    /// `workloads` lists every client dispatch drawn since the previous
+    /// round-complete record, in dispatch order — the Alg. 3 scheduling
+    /// decisions as dispatched. For event-driven strategies this includes
+    /// dispatches later cancelled by churn (their finish never validates);
+    /// round-stepped strategies settle eligibility *before* training, so
+    /// their entries cover exactly the clients that trained.
     RoundComplete {
         round: usize,
         sim_secs: f64,
@@ -62,6 +103,7 @@ pub enum RunEvent {
         dropped: usize,
         avail_dropped: usize,
         mean_train_loss: Option<f64>,
+        workloads: Vec<ClientWorkload>,
     },
     /// The global model was evaluated (mirrors `metrics::EvalPoint`).
     EvalPoint {
@@ -112,6 +154,7 @@ impl RunEvent {
                 dropped,
                 avail_dropped,
                 mean_train_loss,
+                workloads,
             } => {
                 pairs.push(("round", Json::num(*round as f64)));
                 pairs.push(("sim_secs", Json::num(*sim_secs)));
@@ -121,6 +164,10 @@ impl RunEvent {
                 pairs.push((
                     "mean_train_loss",
                     mean_train_loss.map_or(Json::Null, Json::num),
+                ));
+                pairs.push((
+                    "workloads",
+                    Json::arr(workloads.iter().map(|w| w.to_json()).collect()),
                 ));
             }
             RunEvent::EvalPoint {
@@ -171,6 +218,12 @@ impl RunEvent {
                     Json::Null => None,
                     other => Some(other.as_f64()?),
                 },
+                workloads: v
+                    .expect("workloads")?
+                    .as_arr()?
+                    .iter()
+                    .map(ClientWorkload::from_json)
+                    .collect::<Result<_>>()?,
             },
             "eval-point" => RunEvent::EvalPoint {
                 round: v.expect("round")?.as_usize()?,
@@ -288,6 +341,10 @@ mod tests {
                 dropped: 1,
                 avail_dropped: 2,
                 mean_train_loss: Some(1.83),
+                workloads: vec![
+                    ClientWorkload { client: 4, epochs: 2, alpha: 0.75 },
+                    ClientWorkload { client: 9, epochs: 1, alpha: 1.0 },
+                ],
             },
             RunEvent::RoundComplete {
                 round: 4,
@@ -296,6 +353,7 @@ mod tests {
                 dropped: 0,
                 avail_dropped: 6,
                 mean_train_loss: None,
+                workloads: vec![],
             },
             RunEvent::EvalPoint {
                 round: 3,
@@ -357,10 +415,30 @@ mod tests {
             dropped: 0,
             avail_dropped: 0,
             mean_train_loss: None,
+            workloads: vec![],
         };
         let line = ev.to_json().to_string();
         assert!(line.contains("\"mean_train_loss\":null"));
+        assert!(line.contains("\"workloads\":[]"));
         assert_eq!(RunEvent::parse_line(&line).unwrap(), ev);
+    }
+
+    #[test]
+    fn workloads_round_trip_with_alg3_fields() {
+        let line = samples()[0].to_json().to_string();
+        assert!(line.contains("\"workloads\":["));
+        assert!(line.contains("\"alpha\":0.75"));
+        assert!(line.contains("\"epochs\":2"));
+        let back = RunEvent::parse_line(&line).unwrap();
+        assert_eq!(back, samples()[0]);
+        // Workload entries missing an Alg. 3 field are malformed — the
+        // schema is versioned by its field set.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\
+             \"workloads\":[{\"client\":1,\"epochs\":2}]}"
+        )
+        .is_err());
     }
 
     #[test]

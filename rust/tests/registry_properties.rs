@@ -6,7 +6,7 @@
 
 use timelyfl::config::{parse as cfgparse, RunConfig};
 use timelyfl::coordinator::registry;
-use timelyfl::metrics::events::{self, DropCause, RunEvent};
+use timelyfl::metrics::events::{self, ClientWorkload, DropCause, RunEvent};
 
 #[test]
 fn every_registered_strategy_is_listed_and_resolvable() {
@@ -62,6 +62,10 @@ fn event_schema_round_trips_through_util_json() {
             dropped: 0,
             avail_dropped: 1,
             mean_train_loss: Some(2.5),
+            workloads: vec![
+                ClientWorkload { client: 0, epochs: 3, alpha: 1.0 },
+                ClientWorkload { client: 5, epochs: 1, alpha: 0.5 },
+            ],
         },
         RunEvent::RoundComplete {
             round: 1,
@@ -70,6 +74,7 @@ fn event_schema_round_trips_through_util_json() {
             dropped: 2,
             avail_dropped: 0,
             mean_train_loss: None,
+            workloads: vec![],
         },
         RunEvent::EvalPoint {
             round: 1,
@@ -113,6 +118,7 @@ fn event_reasons_are_the_documented_set() {
             dropped: 0,
             avail_dropped: 0,
             mean_train_loss: None,
+            workloads: vec![],
         },
         RunEvent::EvalPoint {
             round: 0,

@@ -496,6 +496,39 @@ fn event_stream_matches_report() {
 }
 
 #[test]
+fn round_complete_events_carry_workloads() {
+    // Round-stepped strategies settle eligibility before training, so each
+    // round-complete record's workload list is exactly its participants'
+    // Alg. 3 assignments (E_c >= 1, alpha_c in (0, 1]).
+    let mut cfg = tiny_cfg("TimelyFL");
+    cfg.rounds = 6;
+    let sim = Simulation::new(cfg, ARTIFACTS).expect("build simulation");
+    let mut sink = CollectSink::default();
+    let report = sim.run_with_sink(&mut sink).expect("run with sink");
+    let mut assignments = 0usize;
+    for e in &sink.events {
+        if let RunEvent::RoundComplete { participants, workloads, .. } = e {
+            assert_eq!(
+                workloads.len(),
+                *participants,
+                "round-stepped workload list must match its participants"
+            );
+            for w in workloads {
+                assert!(w.epochs >= 1, "Alg. 3 line 2 guarantees E_c >= 1");
+                assert!(w.alpha > 0.0 && w.alpha <= 1.0, "alpha {} out of range", w.alpha);
+            }
+            assignments += workloads.len();
+        }
+    }
+    assert!(assignments > 0, "no workload assignments recorded");
+    assert_eq!(
+        assignments as u64,
+        report.trainings_executed,
+        "TimelyFL records one workload per executed training"
+    );
+}
+
+#[test]
 fn drop_events_match_attribution_totals() {
     let mut cfg = tiny_cfg("TimelyFL");
     cfg.dropout_prob = 0.5;

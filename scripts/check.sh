@@ -41,6 +41,7 @@ else
     cargo test -q --test availability_properties
     cargo test -q --test registry_properties
     cargo test -q --test wasted_work_properties
+    cargo test -q --test experiment_properties
 fi
 
 echo "check.sh: OK"
