@@ -20,16 +20,18 @@
 //!
 //! Prints one row per (online-fraction, strategy) with the availability
 //! columns (online_frac, avail_drops, deadline_drops) plus the per-setting
-//! TimelyFL-vs-FedBuff participation gap.
+//! TimelyFL-vs-FedBuff participation gap. Every cell is replicated over
+//! [`SEEDS`] seeds by the experiment runner and reported as mean ± std.
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
 use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
-use timelyfl::metrics::RunReport;
 
 /// Target mean online fractions; 1.0 is the always-on control.
 const FRACTIONS: &[f64] = &[1.0, 0.8, 0.5, 0.3];
+/// Seed replicates per cell (mean ± std in every reported column).
+const SEEDS: usize = 3;
 /// One full on+off cycle, comparable to a handful of round intervals so
 /// churn actually interrupts training (not so fast it averages out). The
 /// `avail_frac` axis splits this cycle per cell.
@@ -53,11 +55,11 @@ fn main() -> Result<()> {
         .axis("avail_frac", FRACTIONS)
         .strategy_axis_all();
     eprintln!(
-        "  {} cells ({} fractions x full strategy registry) ...",
+        "  {} cells ({} fractions x full strategy registry) x {SEEDS} seeds ...",
         grid.len(),
         FRACTIONS.len()
     );
-    let result = bench.runner().run(&grid)?;
+    let result = bench.runner().seeds(SEEDS).run(&grid)?;
     let n_strategies = grid.len() / FRACTIONS.len();
 
     let mut t = Table::new(&[
@@ -70,38 +72,40 @@ fn main() -> Result<()> {
         "rounds",
     ]);
     let mut csv = String::from(
-        "online_target,strategy,mean_participation,online_fraction,avail_drops,deadline_drops\n",
+        "online_target,strategy,seeds,mean_participation,participation_std,\
+         online_fraction,avail_drops,deadline_drops\n",
     );
     let mut gaps: Vec<(f64, f64, f64)> = Vec::new(); // (fraction, abs gap, rel gap %)
 
     for (fi, &frac) in FRACTIONS.iter().enumerate() {
         let cells = &result.cells[fi * n_strategies..(fi + 1) * n_strategies];
-        let reports: Vec<&RunReport> = cells.iter().map(|c| &c.reports[0]).collect();
-        for r in &reports {
+        for c in cells {
+            let strategy = c.cell.cfg.strategy.as_str();
+            let s = &c.summary;
             t.row(vec![
                 format!("{frac:.1}"),
-                r.strategy.clone(),
-                format!("{:.3}", r.mean_participation()),
-                format!("{:.3}", r.mean_online_fraction()),
-                r.total_avail_drops().to_string(),
-                r.total_deadline_drops().to_string(),
-                r.total_rounds.to_string(),
+                strategy.to_string(),
+                s.mean_participation.fmt(3),
+                s.mean_online_fraction.fmt(3),
+                s.avail_drops.fmt(1),
+                s.deadline_drops.fmt(1),
+                s.rounds.fmt(1),
             ]);
             csv.push_str(&format!(
-                "{frac},{},{:.4},{:.4},{},{}\n",
-                r.strategy,
-                r.mean_participation(),
-                r.mean_online_fraction(),
-                r.total_avail_drops(),
-                r.total_deadline_drops(),
+                "{frac},{strategy},{SEEDS},{:.4},{:.4},{:.4},{:.1},{:.1}\n",
+                s.mean_participation.mean,
+                s.mean_participation.std,
+                s.mean_online_fraction.mean,
+                s.avail_drops.mean,
+                s.deadline_drops.mean,
             ));
         }
         let by_name = |name: &str| {
-            reports
+            cells
                 .iter()
-                .find(|r| r.strategy == name)
-                .map(|r| r.mean_participation())
-                .expect("registry strategy missing from reports")
+                .find(|c| c.cell.cfg.strategy == name)
+                .map(|c| c.summary.mean_participation.mean)
+                .expect("registry strategy missing from cells")
         };
         let timely = by_name("TimelyFL");
         let fedbuff = by_name("FedBuff");

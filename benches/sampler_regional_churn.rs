@@ -1,0 +1,153 @@
+//! Availability-aware sampling under correlated regional churn (new
+//! scenario, beyond the paper — the PR-5 acceptance table).
+//!
+//! The `cifar_regional` scenario shards the fleet into regions that fail
+//! together (with bandwidth degrading before each outage) and sweeps the
+//! sampler axis across every registered strategy. Expected shape: the
+//! `stay-prob` policy — which prefers clients whose availability process
+//! predicts survival through the sampling horizon — achieves a **higher
+//! participation rate and a lower availability-drop share** than the
+//! availability-blind `uniform` policy, because it stops handing work to
+//! clients that a destabilizing region is about to take down. `drop-aware`
+//! (posterior from the observed drop ledger, no process model) should land
+//! between them: it learns who churns, but only after paying for the
+//! evidence.
+//!
+//! The same study is one CLI line:
+//! `timelyfl sweep --scenario cifar_regional --axis sampler=uniform,stay-prob,drop-aware --seeds 3`.
+//!
+//! Every cell is replicated over [`SEEDS`] seeds (mean ± std). The
+//! avail-share column is the per-seed fraction of sampled/dispatched
+//! slots lost to availability churn: `avail_drops / (participations +
+//! avail_drops + deadline_drops)`.
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::coordinator::sampler;
+use timelyfl::experiment::{scenario, MeanStd, SweepGrid};
+use timelyfl::metrics::report::Table;
+use timelyfl::metrics::RunReport;
+
+/// Seed replicates per (sampler, strategy) cell.
+const SEEDS: usize = 3;
+
+/// Fraction of this run's sampled/dispatched slots lost to churn.
+fn avail_share(r: &RunReport) -> f64 {
+    let participations: usize = r.rounds.iter().map(|x| x.participants).sum();
+    let total = participations + r.total_avail_drops() + r.total_deadline_drops();
+    if total == 0 {
+        0.0
+    } else {
+        r.total_avail_drops() as f64 / total as f64
+    }
+}
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "sampler_regional_churn",
+        "availability-aware sampling vs uniform under correlated regional churn",
+    );
+    let bench = Bench::new()?;
+
+    let mut base = scenario::resolve("cifar_regional")?.config()?;
+    base.rounds = bench.scale.rounds(40);
+    base.eval_every = 20;
+    let samplers = sampler::names();
+    let grid = SweepGrid::new(base)
+        .axis("sampler", &samplers)
+        .strategy_axis_all();
+    let n_strategies = grid.len() / samplers.len();
+    eprintln!(
+        "  {} cells ({} samplers x full strategy registry) x {SEEDS} seeds ...",
+        grid.len(),
+        samplers.len()
+    );
+    let result = bench.runner().seeds(SEEDS).run(&grid)?;
+
+    let mut t = Table::new(&[
+        "sampler",
+        "strategy",
+        "mean_particip",
+        "avail_share",
+        "avail_drops",
+        "deadline_drops",
+        "online_frac",
+        "rounds",
+    ]);
+    let mut csv = String::from(
+        "sampler,strategy,seeds,mean_participation,participation_std,avail_share,\
+         avail_drops,deadline_drops,online_fraction\n",
+    );
+    // (sampler, strategy) -> (participation MeanStd, avail-share MeanStd)
+    let mut stats: Vec<(String, String, MeanStd, MeanStd)> = Vec::new();
+
+    for (si, sampler_name) in samplers.iter().enumerate() {
+        let cells = &result.cells[si * n_strategies..(si + 1) * n_strategies];
+        for c in cells {
+            let strategy = c.cell.cfg.strategy.clone();
+            let s = &c.summary;
+            let shares: Vec<f64> = c.reports.iter().map(avail_share).collect();
+            let share = MeanStd::of(&shares);
+            t.row(vec![
+                sampler_name.to_string(),
+                strategy.clone(),
+                s.mean_participation.fmt(3),
+                share.fmt(3),
+                s.avail_drops.fmt(1),
+                s.deadline_drops.fmt(1),
+                s.mean_online_fraction.fmt(3),
+                s.rounds.fmt(1),
+            ]);
+            csv.push_str(&format!(
+                "{sampler_name},{strategy},{SEEDS},{:.4},{:.4},{:.4},{:.1},{:.1},{:.4}\n",
+                s.mean_participation.mean,
+                s.mean_participation.std,
+                share.mean,
+                s.avail_drops.mean,
+                s.deadline_drops.mean,
+                s.mean_online_fraction.mean,
+            ));
+            stats.push((sampler_name.to_string(), strategy, s.mean_participation, share));
+        }
+    }
+
+    let rendered = t.render();
+    println!("{rendered}");
+
+    // Per-strategy stay-prob vs uniform deltas — the acceptance shape.
+    let lookup = |sampler: &str, strategy: &str| {
+        stats
+            .iter()
+            .find(|(sa, st, _, _)| sa == sampler && st == strategy)
+            .map(|(_, _, p, sh)| (*p, *sh))
+            .expect("cell missing from stats")
+    };
+    let mut summary = rendered;
+    println!("stay-prob vs uniform, per strategy (positive participation delta = sampler wins):");
+    for c in &result.cells[..n_strategies] {
+        let strategy = c.cell.cfg.strategy.as_str();
+        let (pu, su) = lookup("uniform", strategy);
+        let (ps, ss) = lookup("stay-prob", strategy);
+        let line = format!(
+            "  {strategy:>9}: participation {:+.3} ({:.3} -> {:.3}), avail share {:+.3} ({:.3} -> {:.3})",
+            ps.mean - pu.mean,
+            pu.mean,
+            ps.mean,
+            ss.mean - su.mean,
+            su.mean,
+            ss.mean,
+        );
+        println!("{line}");
+        summary.push_str(&line);
+        summary.push('\n');
+    }
+    println!(
+        "expected shape: stay-prob raises participation and lowers the availability-drop\n\
+         share vs uniform under correlated churn; uniform under always-on availability\n\
+         stays bit-identical to the committed goldens."
+    );
+
+    benchkit::write_result("sampler_regional_churn.txt", &summary);
+    benchkit::write_result("sampler_regional_churn.csv", &csv);
+    Ok(())
+}

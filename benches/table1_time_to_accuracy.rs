@@ -10,13 +10,19 @@
 //! paper's "> 200 hr" cells).
 //!
 //! Hours reported are SIMULATED device time (the paper's own emulation
-//! methodology); each run also logs real wall seconds for §Perf accounting.
+//! methodology); each run also logs real wall seconds for §Perf
+//! accounting. Every cell is replicated over [`SEEDS`] seeds by the
+//! experiment runner and every hour cell reports mean ± std (with how
+//! many seeds reached the target).
 
 use anyhow::Result;
 use timelyfl::benchkit::{self, Bench};
-use timelyfl::experiment::{scenario, SweepGrid};
-use timelyfl::metrics::report::{fmt_hours, fmt_speedup, Table};
+use timelyfl::experiment::{scenario, MeanStd, SweepGrid, TargetStat};
+use timelyfl::metrics::report::Table;
 use timelyfl::metrics::RunReport;
+
+/// Seed replicates per (dataset, aggregator, strategy) cell.
+const SEEDS: usize = 3;
 
 struct Case {
     label: &'static str,
@@ -78,9 +84,11 @@ const CASES: &[Case] = &[
 /// The paper's Table 1 column layout (registry names, fixed order).
 const STRATEGIES: [&str; 3] = ["TimelyFL", "FedBuff", "SyncFL"];
 
-/// One case = a scenario-based grid over the Table 1 strategy columns, all
-/// cells run in parallel by the experiment runner.
-fn run_case(bench: &Bench, case: &Case) -> Result<Vec<RunReport>> {
+/// One case = a scenario-based grid over the Table 1 strategy columns,
+/// replicated over [`SEEDS`] seeds, all cells run in parallel by the
+/// experiment runner. Returns each strategy's per-seed reports, strategy
+/// order.
+fn run_case(bench: &Bench, case: &Case) -> Result<Vec<Vec<RunReport>>> {
     let mut base = scenario::resolve(case.preset)?.config()?;
     base.rounds = bench.scale.rounds(case.rounds);
     // SyncFL pays the straggler tax in *simulated* time, not wall time, so
@@ -88,20 +96,45 @@ fn run_case(bench: &Bench, case: &Case) -> Result<Vec<RunReport>> {
     base.eval_every = 10;
     base.target_metric = Some(case.targets[1].1); // stop at the harder target
     eprintln!(
-        "  {} / {} / {} (rounds<={}) ...",
+        "  {} / {} / {} (rounds<={}, {SEEDS} seeds) ...",
         case.label,
         case.preset.rsplit('_').next().unwrap(),
         STRATEGIES.join("/"),
         base.rounds
     );
     let grid = SweepGrid::new(base).axis("strategy", &STRATEGIES);
-    Ok(bench.runner().run(&grid)?.into_first_reports())
+    let result = bench.runner().seeds(SEEDS).run(&grid)?;
+    Ok(result.cells.into_iter().map(|c| c.reports).collect())
+}
+
+/// `"5.50±0.21 hr (3/3)"` or `"> budget"`.
+fn fmt_target(t: &TargetStat) -> String {
+    match &t.hours {
+        Some(h) => format!("{} hr ({}/{SEEDS})", h.fmt(2), t.reached),
+        None => "> budget".into(),
+    }
+}
+
+/// `"(1.43x)"` mean-hours speedup annotation relative to a baseline cell.
+fn fmt_speedup(t: &TargetStat, baseline: &TargetStat) -> String {
+    match t.ratio_vs(baseline) {
+        Some(x) => format!("({x:.2}x)"),
+        None => "(—)".into(),
+    }
+}
+
+fn csv_hours(t: &TargetStat) -> String {
+    t.hours.as_ref().map_or_else(|| ">budget".into(), |h| format!("{:.3}", h.mean))
+}
+
+fn csv_std(t: &TargetStat) -> String {
+    t.hours.as_ref().map_or_else(String::new, |h| format!("{:.3}", h.std))
 }
 
 fn main() -> Result<()> {
     benchkit::banner(
         "table1_time_to_accuracy",
-        "Table 1 (time-to-target, 3 datasets x FedAvg/FedOpt x 3 strategies)",
+        "Table 1 (time-to-target, 3 datasets x FedAvg/FedOpt x 3 strategies, mean±std over seeds)",
     );
     let bench = Bench::new()?;
     let mut out = Table::new(&[
@@ -114,50 +147,55 @@ fn main() -> Result<()> {
         "best T/F/S",
     ]);
     let mut csv = String::from(
-        "dataset,agg,target,timelyfl_hr,fedbuff_hr,syncfl_hr,fedbuff_x,syncfl_x\n",
+        "dataset,agg,target,seeds,timelyfl_hr,timelyfl_std,fedbuff_hr,fedbuff_std,\
+         syncfl_hr,syncfl_std,fedbuff_x,syncfl_x\n",
     );
 
     for case in CASES {
         let agg = case.preset.rsplit('_').next().unwrap();
-        let reports: Vec<RunReport> = run_case(&bench, case)?;
+        let per_strategy: Vec<Vec<RunReport>> = run_case(&bench, case)?;
 
         for (tname, tval) in case.targets {
-            let times: Vec<Option<f64>> = reports
+            let cells: Vec<TargetStat> = per_strategy
                 .iter()
-                .map(|r| r.time_to_target(tval, case.higher_better))
+                .map(|reports| TargetStat::of(reports, tval, case.higher_better))
                 .collect();
+            let best = |reports: &[RunReport]| {
+                let xs: Vec<f64> = reports
+                    .iter()
+                    .filter_map(|r| r.best_metric(case.higher_better))
+                    .collect();
+                if xs.is_empty() {
+                    String::new()
+                } else {
+                    format!("{:.3}", MeanStd::of(&xs).mean)
+                }
+            };
             out.row(vec![
                 case.label.into(),
                 agg.into(),
                 tname.into(),
-                fmt_hours(times[0]),
-                format!("{} {}", fmt_hours(times[1]), fmt_speedup(times[0], times[1])),
-                format!("{} {}", fmt_hours(times[2]), fmt_speedup(times[0], times[2])),
-                reports
-                    .iter()
-                    .map(|r| {
-                        r.best_metric(case.higher_better)
-                            .map(|m| format!("{m:.3}"))
-                            .unwrap_or_default()
-                    })
-                    .collect::<Vec<_>>()
-                    .join("/"),
+                fmt_target(&cells[0]),
+                format!("{} {}", fmt_target(&cells[1]), fmt_speedup(&cells[1], &cells[0])),
+                format!("{} {}", fmt_target(&cells[2]), fmt_speedup(&cells[2], &cells[0])),
+                per_strategy.iter().map(|r| best(r)).collect::<Vec<_>>().join("/"),
             ]);
-            let h = |t: Option<f64>| t.map(|v| format!("{v:.3}")).unwrap_or_else(|| ">budget".into());
-            let x = |t: Option<f64>| match (times[0], t) {
-                (Some(a), Some(b)) if a > 0.0 => format!("{:.2}", b / a),
-                _ => String::new(),
+            let x = |c: &TargetStat| {
+                c.ratio_vs(&cells[0]).map_or_else(String::new, |x| format!("{x:.2}"))
             };
             csv.push_str(&format!(
-                "{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{SEEDS},{},{},{},{},{},{},{},{}\n",
                 case.label,
                 agg,
                 tname,
-                h(times[0]),
-                h(times[1]),
-                h(times[2]),
-                x(times[1]),
-                x(times[2]),
+                csv_hours(&cells[0]),
+                csv_std(&cells[0]),
+                csv_hours(&cells[1]),
+                csv_std(&cells[1]),
+                csv_hours(&cells[2]),
+                csv_std(&cells[2]),
+                x(&cells[1]),
+                x(&cells[2]),
             ));
         }
     }

@@ -1,0 +1,349 @@
+//! Correlated churn: region-sharded clients flipped together by a seeded
+//! regional outage process, layered over per-client Markov dwells, with
+//! bandwidth degrading before the drop.
+//!
+//! Production fleets do not churn independently (Papaya, Huba et al. 2022):
+//! a cell tower hiccup, an ISP maintenance window, or an evening power cut
+//! takes a whole *region* of devices down at once, and connectivity
+//! usually degrades before it dies. Two layers compose per client:
+//!
+//! - **Region layer** — client `c` sits in region `c % regions`; each
+//!   region runs a seeded up/down alternating renewal process (log-normal
+//!   dwells with means `region_mtbf_secs` / `region_outage_secs`). When a
+//!   region goes down, every client in it is offline, simultaneously.
+//! - **Personal layer** — an independent per-client Markov on/off process
+//!   (the PR-1 machinery, same `mean_online_secs` / `mean_offline_secs` /
+//!   `dwell_sigma` calibration) modelling individual behaviour inside an
+//!   up region.
+//!
+//! A client is online iff its region is up AND its personal state is on,
+//! so the marginal online fraction is (region uptime) × (personal Markov
+//! steady state) — the property suite in
+//! `rust/tests/correlated_churn_properties.rs` locks exactly that.
+//!
+//! **Degrade-before-drop coupling**: inside the last `degrade_window_secs`
+//! before a region's next outage, every client in that region sees its
+//! effective throughput scaled by a factor that ramps linearly from 1.0
+//! down to `degrade_floor` at the outage edge
+//! ([`CorrelatedModel::bandwidth_factor`]; the coordinator divides upload
+//! times by it). The
+//! factor is monotone non-increasing as the outage approaches and exactly
+//! 1.0 outside the window, so uncoupled configurations are bit-identical.
+
+use crate::simtime::SimTime;
+use crate::util::rng::Rng;
+
+use super::process::{AvailabilityConfig, MarkovGen, Timeline};
+
+/// Stream-id offset separating region forks from client forks of the
+/// availability master RNG (regions and clients must never share streams,
+/// whatever the population size).
+const REGION_STREAM_SALT: u64 = 0x5E61_0000_0000_0000;
+
+/// The composed two-layer process (wrapped by `AvailabilityModel`; tests
+/// build it directly to reach the per-layer queries).
+pub struct CorrelatedModel {
+    /// Per-region up/down timelines ("online" = region up).
+    region_tl: Vec<Timeline>,
+    /// Per-client personal Markov timelines.
+    client_tl: Vec<Timeline>,
+    regions: usize,
+    degrade_window: f64,
+    degrade_floor: f64,
+}
+
+impl CorrelatedModel {
+    /// Deterministic in `seed` (already salted with
+    /// [`super::SEED_SALT`] by the caller). Region streams fork first, in
+    /// region order, then client streams in client order, so schedules are
+    /// stable under population growth of a fixed region count.
+    pub fn build(cfg: &AvailabilityConfig, population: usize, seed: u64) -> CorrelatedModel {
+        let mut master = Rng::seed_from(seed);
+        let region_p_up =
+            cfg.region_mtbf_secs / (cfg.region_mtbf_secs + cfg.region_outage_secs);
+        let region_tl = (0..cfg.regions)
+            .map(|r| {
+                let mut rng = master.fork(REGION_STREAM_SALT | r as u64);
+                let initially_up = rng.f64() < region_p_up;
+                Timeline::markov(
+                    initially_up,
+                    MarkovGen::with_means(
+                        rng,
+                        cfg.region_mtbf_secs,
+                        cfg.region_outage_secs,
+                        cfg.dwell_sigma,
+                    ),
+                )
+            })
+            .collect();
+        let personal_p_on = cfg.markov_steady_state();
+        let client_tl = (0..population)
+            .map(|c| {
+                let mut rng = master.fork(c as u64);
+                let initially_on = rng.f64() < personal_p_on;
+                Timeline::markov(
+                    initially_on,
+                    MarkovGen::with_means(
+                        rng,
+                        cfg.mean_online_secs,
+                        cfg.mean_offline_secs,
+                        cfg.dwell_sigma,
+                    ),
+                )
+            })
+            .collect();
+        CorrelatedModel {
+            region_tl,
+            client_tl,
+            regions: cfg.regions,
+            degrade_window: cfg.degrade_window_secs,
+            degrade_floor: cfg.degrade_floor,
+        }
+    }
+
+    /// Which region `client` belongs to.
+    pub fn region_of(&self, client: usize) -> usize {
+        client % self.regions
+    }
+
+    /// Is `region` up at `t`?
+    pub fn region_up(&mut self, region: usize, t: SimTime) -> bool {
+        self.region_tl[region].state_at(t)
+    }
+
+    /// The region's outage windows `[start, end)` intersecting
+    /// `[0, horizon]`, in order (an outage still open at the horizon is
+    /// truncated to it). Test surface for the flip-together property.
+    pub fn outage_windows(&mut self, region: usize, horizon: f64) -> Vec<(f64, f64)> {
+        let tl = &mut self.region_tl[region];
+        let mut windows = Vec::new();
+        let mut cur = 0.0;
+        let mut up = tl.state_at(0.0);
+        if !up {
+            // Outage already open at t = 0.
+            let end = tl.next_after(0.0).map_or(horizon, |t| t.min(horizon));
+            windows.push((0.0, end));
+        }
+        while cur < horizon {
+            let Some(next) = tl.next_after(cur) else { break };
+            if next >= horizon {
+                break;
+            }
+            up = !up;
+            if !up {
+                let end = tl.next_after(next).map_or(horizon, |t| t.min(horizon));
+                windows.push((next, end));
+            }
+            cur = next;
+        }
+        windows
+    }
+
+    pub fn is_available(&mut self, client: usize, t: SimTime) -> bool {
+        let r = self.region_of(client);
+        self.region_tl[r].state_at(t) && self.client_tl[client].state_at(t)
+    }
+
+    /// First flip of the COMPOSED state strictly after `t`: walk the
+    /// merged region/personal transition stream until the AND of the two
+    /// layers changes (personal flips during an outage, and region flips
+    /// while the personal layer is off, don't change the composite).
+    pub fn next_transition(&mut self, client: usize, t: SimTime) -> Option<SimTime> {
+        let r = self.region_of(client);
+        let cur = self.is_available(client, t);
+        let mut s = t;
+        loop {
+            let rn = self.region_tl[r].next_after(s);
+            let cn = self.client_tl[client].next_after(s);
+            let next = match (rn, cn) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => return None,
+            };
+            if self.is_available(client, next) != cur {
+                return Some(next);
+            }
+            s = next;
+        }
+    }
+
+    /// Survival through `[now, now + horizon]`: both layers must hold, and
+    /// they are independent by construction, so the probabilities multiply
+    /// (each layer's estimate is the analytic residual-dwell survival —
+    /// see `Timeline::survival_prob`).
+    pub fn survival_prob(&mut self, client: usize, now: SimTime, horizon: f64) -> f64 {
+        let r = self.region_of(client);
+        self.region_tl[r].survival_prob(now, horizon)
+            * self.client_tl[client].survival_prob(now, horizon)
+    }
+
+    /// Degrade-before-drop: effective-throughput multiplier in
+    /// `[degrade_floor, 1.0]`. Ramps linearly from 1.0 at
+    /// `degrade_window` seconds before the region's next outage down to
+    /// the floor at the outage edge; 1.0 outside the window or when the
+    /// coupling is disabled (`degrade_window == 0`). During an outage the
+    /// client is offline anyway; the floor is reported for consistency.
+    pub fn bandwidth_factor(&mut self, client: usize, t: SimTime) -> f64 {
+        if self.degrade_window <= 0.0 {
+            return 1.0;
+        }
+        let r = self.region_of(client);
+        if !self.region_tl[r].state_at(t) {
+            return self.degrade_floor;
+        }
+        let Some(outage_at) = self.region_tl[r].next_after(t) else {
+            return 1.0;
+        };
+        let remaining = outage_at - t;
+        if remaining >= self.degrade_window {
+            1.0
+        } else {
+            self.degrade_floor
+                + (1.0 - self.degrade_floor) * (remaining / self.degrade_window).clamp(0.0, 1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::process::AvailabilityKind;
+    use super::*;
+
+    fn cfg() -> AvailabilityConfig {
+        AvailabilityConfig {
+            kind: AvailabilityKind::Correlated,
+            mean_online_secs: 1200.0,
+            mean_offline_secs: 400.0,
+            dwell_sigma: 0.4,
+            regions: 3,
+            region_mtbf_secs: 2000.0,
+            region_outage_secs: 500.0,
+            degrade_window_secs: 300.0,
+            degrade_floor: 0.25,
+            ..AvailabilityConfig::default()
+        }
+    }
+
+    #[test]
+    fn regions_shard_by_modulo() {
+        let m = CorrelatedModel::build(&cfg(), 9, 1);
+        for c in 0..9 {
+            assert_eq!(m.region_of(c), c % 3);
+        }
+    }
+
+    #[test]
+    fn outage_takes_down_every_client_in_the_region() {
+        let mut m = CorrelatedModel::build(&cfg(), 12, 7);
+        let horizon = 40_000.0;
+        for r in 0..3 {
+            let windows = m.outage_windows(r, horizon);
+            assert!(!windows.is_empty(), "region {r} never failed in {horizon}s");
+            for &(start, end) in &windows {
+                assert!(end > start, "degenerate outage window");
+                let mid = (start + end) / 2.0;
+                for c in (0..12).filter(|&c| c % 3 == r) {
+                    assert!(
+                        !m.is_available(c, mid),
+                        "client {c} online during region {r} outage at {mid}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn composite_transitions_flip_the_composite_state() {
+        let mut m = CorrelatedModel::build(&cfg(), 6, 3);
+        for c in 0..6 {
+            let mut t = 0.0;
+            let mut state = m.is_available(c, t);
+            for _ in 0..40 {
+                let next = m.next_transition(c, t).expect("both layers keep flipping");
+                assert!(next > t);
+                // The composite state is constant until the transition...
+                assert_eq!(m.is_available(c, (t + next) / 2.0), state);
+                // ...and actually changes at it.
+                let after = m.is_available(c, next);
+                assert_ne!(after, state, "reported transition changed nothing");
+                t = next;
+                state = after;
+            }
+        }
+    }
+
+    #[test]
+    fn determinism_and_seed_sensitivity() {
+        let mut a = CorrelatedModel::build(&cfg(), 6, 42);
+        let mut b = CorrelatedModel::build(&cfg(), 6, 42);
+        for c in 0..6 {
+            let mut t = 0.0;
+            for _ in 0..50 {
+                let ta = a.next_transition(c, t).unwrap();
+                let tb = b.next_transition(c, t).unwrap();
+                assert_eq!(ta, tb, "same seed must give identical schedules");
+                t = ta;
+            }
+        }
+        let mut c2 = CorrelatedModel::build(&cfg(), 6, 43);
+        assert_ne!(
+            a.next_transition(0, 0.0),
+            c2.next_transition(0, 0.0),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn bandwidth_degrades_monotonically_into_the_outage() {
+        let mut m = CorrelatedModel::build(&cfg(), 3, 11);
+        let windows = m.outage_windows(0, 200_000.0);
+        // Pick an outage whose preceding up-gap covers the whole approach,
+        // so the region is up throughout the ramp we sample.
+        let start = windows
+            .windows(2)
+            .find(|w| w[1].0 - w[0].1 > 400.0)
+            .map(|w| w[1].0)
+            .expect("an outage preceded by a long-enough up dwell");
+        // Approach the outage from one window out: the factor starts at
+        // exactly 1.0 and never increases on the way in.
+        let mut prev = f64::INFINITY;
+        for i in 0..=20 {
+            let t = start - 300.0 + i as f64 * (300.0 / 20.0) - 1e-6;
+            let f = m.bandwidth_factor(0, t);
+            assert!((0.25..=1.0).contains(&f), "factor {f} out of range");
+            assert!(f <= prev + 1e-12, "factor must not recover approaching an outage");
+            prev = f;
+        }
+        assert_eq!(m.bandwidth_factor(0, start - 301.0), 1.0, "outside the window");
+        assert!(m.bandwidth_factor(0, start - 1.0) < 0.3, "near the edge -> near floor");
+    }
+
+    #[test]
+    fn zero_window_disables_the_coupling() {
+        let mut c = cfg();
+        c.degrade_window_secs = 0.0;
+        let mut m = CorrelatedModel::build(&c, 3, 11);
+        for t in [0.0, 500.0, 5000.0, 50_000.0] {
+            assert_eq!(m.bandwidth_factor(0, t), 1.0);
+        }
+    }
+
+    #[test]
+    fn survival_multiplies_the_layers() {
+        let mut m = CorrelatedModel::build(&cfg(), 6, 9);
+        for c in 0..6 {
+            let s = m.survival_prob(c, 0.0, 200.0);
+            assert!((0.0..=1.0).contains(&s));
+            if !m.is_available(c, 0.0) {
+                assert_eq!(s, 0.0, "offline composite must have zero survival");
+            } else {
+                // Composite survival can never beat either layer alone.
+                let r = m.region_of(c);
+                let region_s = m.region_tl[r].survival_prob(0.0, 200.0);
+                let personal_s = m.client_tl[c].survival_prob(0.0, 200.0);
+                assert!(s <= region_s + 1e-12 && s <= personal_s + 1e-12);
+            }
+        }
+    }
+}

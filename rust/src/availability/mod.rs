@@ -8,7 +8,7 @@
 //! missing dimension: per-client online/offline *processes* over simulated
 //! time.
 //!
-//! Four process kinds, all behind one [`AvailabilityModel`] facade:
+//! Five process kinds, all behind one [`AvailabilityModel`] facade:
 //!
 //! - **always-on** — the seed behaviour and the default; strictly additive
 //!   (runs are bit-identical to the pre-subsystem code).
@@ -19,15 +19,25 @@
 //!   are phase-shifted copies of each other).
 //! - **trace** — replayed from a JSONL event file (`{"at": .., "client": ..,
 //!   "online": ..}` records; see `docs/availability.md`).
+//! - **correlated** — region-sharded correlated churn: a seeded regional
+//!   outage process flips whole regions together, layered over per-client
+//!   Markov dwells, with bandwidth degrading before the drop
+//!   ([`correlated`]).
 //!
 //! Every process answers two queries — `is_available(client, t)` and
 //! `next_transition(client, t)` (first state flip strictly after `t`) — so
 //! availability integrates with the coordinator *event-driven*: transitions
 //! become [`crate::simtime::EventQueue`] events instead of per-round
-//! Bernoulli coin flips.
+//! Bernoulli coin flips. Two further queries feed availability-aware client
+//! sampling (`coordinator::sampler`): `survival_prob(client, now, horizon)`
+//! (the stay-prob policy's ranking signal) and `bandwidth_factor(client, t)`
+//! (the correlated process's degrade-before-drop coupling; exactly 1.0
+//! elsewhere).
 
+pub mod correlated;
 pub mod process;
 pub mod trace;
 
+pub use correlated::CorrelatedModel;
 pub use process::{AvailabilityConfig, AvailabilityKind, AvailabilityModel, SEED_SALT};
 pub use trace::{parse_trace, write_trace, TraceEvent};

@@ -12,9 +12,11 @@ use std::f64::consts::PI;
 
 use anyhow::{Context, Result};
 
+use super::correlated::CorrelatedModel;
 use super::trace::{self, TraceEvent};
 use crate::simtime::SimTime;
 use crate::util::rng::Rng;
+use crate::util::stats::lognormal_survival;
 
 const TWO_PI: f64 = 2.0 * PI;
 
@@ -34,6 +36,11 @@ pub enum AvailabilityKind {
     Diurnal,
     /// Replay a JSONL trace file (see `docs/availability.md`).
     Trace,
+    /// Region-sharded correlated churn: a seeded regional outage process
+    /// flips whole regions together, layered over per-client Markov
+    /// dwells, with bandwidth degrading before the drop
+    /// (`availability::correlated`).
+    Correlated,
 }
 
 impl AvailabilityKind {
@@ -43,6 +50,7 @@ impl AvailabilityKind {
             "markov" => AvailabilityKind::Markov,
             "diurnal" => AvailabilityKind::Diurnal,
             "trace" => AvailabilityKind::Trace,
+            "correlated" | "regional" => AvailabilityKind::Correlated,
             other => anyhow::bail!("unknown availability kind {other:?}"),
         })
     }
@@ -53,6 +61,7 @@ impl AvailabilityKind {
             AvailabilityKind::Markov => "markov",
             AvailabilityKind::Diurnal => "diurnal",
             AvailabilityKind::Trace => "trace",
+            AvailabilityKind::Correlated => "correlated",
         }
     }
 }
@@ -77,6 +86,19 @@ pub struct AvailabilityConfig {
     pub diurnal_shards: usize,
     /// Trace: path to the JSONL event file (required for `kind = trace`).
     pub trace_path: Option<String>,
+    /// Correlated: number of regions; client `c` sits in region
+    /// `c % regions` and the whole region flips together on outages.
+    pub regions: usize,
+    /// Correlated: mean up-time between regional outages (seconds).
+    pub region_mtbf_secs: f64,
+    /// Correlated: mean regional outage duration (seconds).
+    pub region_outage_secs: f64,
+    /// Correlated: bandwidth starts degrading this many seconds before a
+    /// regional outage begins (0 disables the coupling).
+    pub degrade_window_secs: f64,
+    /// Correlated: effective-throughput floor reached at the outage edge,
+    /// in (0, 1].
+    pub degrade_floor: f64,
 }
 
 impl Default for AvailabilityConfig {
@@ -90,6 +112,11 @@ impl Default for AvailabilityConfig {
             diurnal_duty: 0.5,
             diurnal_shards: 4,
             trace_path: None,
+            regions: 4,
+            region_mtbf_secs: 7200.0,
+            region_outage_secs: 900.0,
+            degrade_window_secs: 600.0,
+            degrade_floor: 0.25,
         }
     }
 }
@@ -117,6 +144,23 @@ impl AvailabilityConfig {
             "avail_diurnal_duty must be in (0, 1]"
         );
         anyhow::ensure!(self.diurnal_shards >= 1, "avail_diurnal_shards must be >= 1");
+        anyhow::ensure!(self.regions >= 1, "avail_regions must be >= 1");
+        anyhow::ensure!(
+            self.region_mtbf_secs > 0.0 && self.region_mtbf_secs.is_finite(),
+            "avail_region_mtbf_secs must be positive"
+        );
+        anyhow::ensure!(
+            self.region_outage_secs > 0.0 && self.region_outage_secs.is_finite(),
+            "avail_region_outage_secs must be positive"
+        );
+        anyhow::ensure!(
+            self.degrade_window_secs >= 0.0 && self.degrade_window_secs.is_finite(),
+            "avail_degrade_window_secs must be >= 0"
+        );
+        anyhow::ensure!(
+            self.degrade_floor > 0.0 && self.degrade_floor <= 1.0,
+            "avail_degrade_floor must be in (0, 1]"
+        );
         if self.kind == AvailabilityKind::Trace {
             anyhow::ensure!(
                 self.trace_path.is_some(),
@@ -134,7 +178,7 @@ impl AvailabilityConfig {
 
 /// Lazy dwell-time generator backing a Markov timeline.
 #[derive(Clone, Debug)]
-struct MarkovGen {
+pub(super) struct MarkovGen {
     rng: Rng,
     /// Log-normal mu for online dwells: ln(mean) - sigma^2/2, so the dwell
     /// MEAN equals the configured mean (E[lognormal] = exp(mu + sigma^2/2)).
@@ -143,13 +187,25 @@ struct MarkovGen {
     sigma: f64,
 }
 
+impl MarkovGen {
+    /// Build a generator whose dwell MEANS equal the given means.
+    pub(super) fn with_means(rng: Rng, mean_on: f64, mean_off: f64, sigma: f64) -> MarkovGen {
+        MarkovGen {
+            rng,
+            mu_on: mean_on.ln() - sigma * sigma / 2.0,
+            mu_off: mean_off.ln() - sigma * sigma / 2.0,
+            sigma,
+        }
+    }
+}
+
 /// One client's transition history: the state flips at each timestamp in
 /// `transitions`; the state on `[transitions[i-1], transitions[i])` is
 /// `initial_online ^ (i is odd)`. `covered` is the horizon up to which the
 /// timeline is final; Markov timelines extend it on demand, static (trace)
 /// timelines set it to infinity.
 #[derive(Clone, Debug)]
-struct Timeline {
+pub(super) struct Timeline {
     initial_online: bool,
     transitions: Vec<f64>,
     covered: f64,
@@ -157,7 +213,7 @@ struct Timeline {
 }
 
 impl Timeline {
-    fn fixed(initial_online: bool, transitions: Vec<f64>) -> Timeline {
+    pub(super) fn fixed(initial_online: bool, transitions: Vec<f64>) -> Timeline {
         debug_assert!(transitions.windows(2).all(|w| w[0] < w[1]));
         Timeline {
             initial_online,
@@ -167,7 +223,7 @@ impl Timeline {
         }
     }
 
-    fn markov(initial_online: bool, gen: MarkovGen) -> Timeline {
+    pub(super) fn markov(initial_online: bool, gen: MarkovGen) -> Timeline {
         Timeline {
             initial_online,
             transitions: Vec::new(),
@@ -188,7 +244,7 @@ impl Timeline {
         }
     }
 
-    fn state_at(&mut self, t: f64) -> bool {
+    pub(super) fn state_at(&mut self, t: f64) -> bool {
         self.extend_to(t);
         let flips = self.transitions.partition_point(|&x| x <= t);
         self.initial_online ^ (flips % 2 == 1)
@@ -196,10 +252,51 @@ impl Timeline {
 
     /// First transition strictly after `t` (None for a static timeline with
     /// no further events).
-    fn next_after(&mut self, t: f64) -> Option<f64> {
+    pub(super) fn next_after(&mut self, t: f64) -> Option<f64> {
         self.extend_to(t);
         let idx = self.transitions.partition_point(|&x| x <= t);
         self.transitions.get(idx).copied()
+    }
+
+    /// Start of the dwell segment containing `t` (0.0 inside the first).
+    fn segment_start(&mut self, t: f64) -> f64 {
+        self.extend_to(t);
+        let idx = self.transitions.partition_point(|&x| x <= t);
+        if idx == 0 {
+            0.0
+        } else {
+            self.transitions[idx - 1]
+        }
+    }
+
+    /// Probability the timeline stays "on" through `[now, now + horizon]`,
+    /// given what an observer at `now` can see. For a generated (Markov)
+    /// timeline this is the analytic residual-dwell survival from the
+    /// process parameters and the observed session age — NOT an oracle
+    /// peek at the realized schedule: `P(D >= age + h | D > age)` for the
+    /// log-normal dwell `D`. For a static (trace) timeline the schedule is
+    /// recorded data, so the answer is the exact 0/1.
+    pub(super) fn survival_prob(&mut self, now: f64, horizon: f64) -> f64 {
+        if !self.state_at(now) {
+            return 0.0;
+        }
+        if horizon <= 0.0 {
+            return 1.0;
+        }
+        if self.gen.is_none() {
+            // Static (trace) timeline: the schedule is recorded data.
+            return match self.next_after(now) {
+                Some(t) if t < now + horizon => 0.0,
+                _ => 1.0,
+            };
+        }
+        let age = (now - self.segment_start(now)).max(0.0);
+        let g = self.gen.as_ref().expect("generated timeline");
+        let s_age = lognormal_survival(age, g.mu_on, g.sigma);
+        if s_age <= 0.0 {
+            return 0.0;
+        }
+        (lognormal_survival(age + horizon, g.mu_on, g.sigma) / s_age).clamp(0.0, 1.0)
     }
 }
 
@@ -259,6 +356,7 @@ enum ModelKind {
     AlwaysOn,
     Timelines(Vec<Timeline>),
     Diurnal(Diurnal),
+    Correlated(CorrelatedModel),
 }
 
 /// Facade over the population's availability processes.
@@ -319,6 +417,9 @@ impl AvailabilityModel {
                     .with_context(|| format!("parsing availability trace {path}"))?;
                 ModelKind::Timelines(Self::timelines_from_trace(&events, population)?)
             }
+            AvailabilityKind::Correlated => {
+                ModelKind::Correlated(CorrelatedModel::build(cfg, population, seed))
+            }
         };
         Ok(AvailabilityModel { population, kind })
     }
@@ -375,6 +476,7 @@ impl AvailabilityModel {
             ModelKind::AlwaysOn => true,
             ModelKind::Timelines(ts) => ts[client].state_at(t),
             ModelKind::Diurnal(d) => d.online(client, t),
+            ModelKind::Correlated(c) => c.is_available(client, t),
         }
     }
 
@@ -385,6 +487,49 @@ impl AvailabilityModel {
             ModelKind::AlwaysOn => None,
             ModelKind::Timelines(ts) => ts[client].next_after(t),
             ModelKind::Diurnal(d) => d.next_transition(client, t),
+            ModelKind::Correlated(c) => c.next_transition(client, t),
+        }
+    }
+
+    /// Probability that `client` stays online through `[now, now + horizon]`
+    /// given what the server can observe at `now` — the prediction the
+    /// `stay-prob` sampler ranks by. Per process:
+    ///
+    /// - **always-on**: 1.0 (trivially — the sampler-equivalence anchor);
+    /// - **markov**: analytic residual-dwell survival from the process
+    ///   parameters and the observed session age (no oracle peek);
+    /// - **diurnal**: the process is deterministic, so the exact 0/1;
+    /// - **trace**: the schedule is recorded data, so the exact 0/1;
+    /// - **correlated**: product of the region-uptime and personal-layer
+    ///   survivals (both analytic).
+    pub fn survival_prob(&mut self, client: usize, now: SimTime, horizon: f64) -> f64 {
+        debug_assert!(client < self.population, "client {client} out of range");
+        match &mut self.kind {
+            ModelKind::AlwaysOn => 1.0,
+            ModelKind::Timelines(ts) => ts[client].survival_prob(now, horizon),
+            ModelKind::Diurnal(d) => {
+                if !d.online(client, now) {
+                    0.0
+                } else {
+                    match d.next_transition(client, now) {
+                        Some(t) if t < now + horizon => 0.0,
+                        _ => 1.0,
+                    }
+                }
+            }
+            ModelKind::Correlated(c) => c.survival_prob(client, now, horizon),
+        }
+    }
+
+    /// Effective-throughput multiplier in (0, 1] for `client` at `t` — the
+    /// degrade-before-drop coupling of the correlated process (a client's
+    /// bandwidth decays as its region approaches an outage). Exactly 1.0
+    /// for every other process, so the coupling is strictly additive.
+    pub fn bandwidth_factor(&mut self, client: usize, t: SimTime) -> f64 {
+        debug_assert!(client < self.population, "client {client} out of range");
+        match &mut self.kind {
+            ModelKind::Correlated(c) => c.bandwidth_factor(client, t),
+            _ => 1.0,
         }
     }
 
@@ -740,6 +885,20 @@ mod tests {
         c.diurnal_duty = 0.5;
         c.mean_online_secs = -1.0;
         assert!(c.validate().is_err());
+        c.mean_online_secs = 3600.0;
+        c.regions = 0;
+        assert!(c.validate().is_err(), "zero regions must fail");
+        c.regions = 4;
+        c.region_mtbf_secs = 0.0;
+        assert!(c.validate().is_err());
+        c.region_mtbf_secs = 7200.0;
+        c.degrade_floor = 0.0;
+        assert!(c.validate().is_err(), "degrade floor must be positive");
+        c.degrade_floor = 1.5;
+        assert!(c.validate().is_err(), "degrade floor must be <= 1");
+        c.degrade_floor = 0.25;
+        c.degrade_window_secs = -1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -749,9 +908,83 @@ mod tests {
             AvailabilityKind::Markov,
             AvailabilityKind::Diurnal,
             AvailabilityKind::Trace,
+            AvailabilityKind::Correlated,
         ] {
             assert_eq!(AvailabilityKind::parse(k.name()).unwrap(), k);
         }
+        assert_eq!(
+            AvailabilityKind::parse("regional").unwrap(),
+            AvailabilityKind::Correlated
+        );
         assert!(AvailabilityKind::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn survival_prob_always_on_is_one() {
+        let mut m = AvailabilityModel::always_on(3);
+        for c in 0..3 {
+            assert_eq!(m.survival_prob(c, 0.0, 1e9), 1.0);
+            assert_eq!(m.bandwidth_factor(c, 123.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn survival_prob_markov_is_a_probability_and_decreases() {
+        let mut m = AvailabilityModel::build(&markov_cfg(), 8, 21).unwrap();
+        for c in 0..8 {
+            let online = m.is_available(c, 0.0);
+            let s = m.survival_prob(c, 0.0, 100.0);
+            if !online {
+                assert_eq!(s, 0.0, "offline client must have zero survival");
+                continue;
+            }
+            assert!(s > 0.0 && s <= 1.0, "survival {s} out of range");
+            // Zero horizon is a sure thing; longer horizons never help.
+            assert_eq!(m.survival_prob(c, 0.0, 0.0), 1.0);
+            let mut prev = 1.0;
+            for h in [10.0, 100.0, 1000.0, 10_000.0] {
+                let s = m.survival_prob(c, 0.0, h);
+                assert!(s <= prev + 1e-12, "survival must decrease in horizon");
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn survival_prob_markov_is_not_an_oracle() {
+        // The analytic estimate must be strictly interior for a stochastic
+        // dwell at a modest horizon — 0/1 answers here would mean we peeked
+        // at the realized schedule.
+        let mut m = AvailabilityModel::build(&markov_cfg(), 16, 5).unwrap();
+        let interior = (0..16)
+            .filter(|&c| m.is_available(c, 0.0))
+            .map(|c| m.survival_prob(c, 0.0, 300.0))
+            .filter(|&s| s > 0.0 && s < 1.0)
+            .count();
+        assert!(interior > 0, "markov survival collapsed to 0/1 everywhere");
+    }
+
+    #[test]
+    fn survival_prob_diurnal_and_trace_are_exact() {
+        let mut d = AvailabilityModel::build(&diurnal_cfg(0.5, 1), 1, 0).unwrap();
+        let t1 = d.next_transition(0, 0.0).unwrap();
+        let online = d.is_available(0, 0.0);
+        // Whole horizon inside the current arc: survival matches the state.
+        let expect = if online { 1.0 } else { 0.0 };
+        assert_eq!(d.survival_prob(0, 0.0, (t1 - 0.0) / 2.0), expect);
+        // Horizon crossing the boundary: an online client surely flips.
+        if online {
+            assert_eq!(d.survival_prob(0, 0.0, t1 + 1.0), 0.0);
+        }
+
+        let events = vec![TraceEvent { at: 50.0, client: 0, online: false }];
+        let tl = AvailabilityModel::timelines_from_trace(&events, 1).unwrap();
+        let mut m = AvailabilityModel {
+            population: 1,
+            kind: ModelKind::Timelines(tl),
+        };
+        assert_eq!(m.survival_prob(0, 0.0, 40.0), 1.0);
+        assert_eq!(m.survival_prob(0, 0.0, 60.0), 0.0);
+        assert_eq!(m.survival_prob(0, 60.0, 1e9), 0.0, "offline forever");
     }
 }

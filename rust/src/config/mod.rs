@@ -18,6 +18,14 @@ pub struct RunConfig {
     /// registered name or alias, case-insensitive; the parser canonicalizes
     /// so `RunReport::strategy` comparisons stay exact).
     pub strategy: String,
+    /// Client-sampling policy, resolved through `coordinator::sampler`
+    /// (`uniform` | `stay-prob` | `drop-aware`; canonicalized like
+    /// `strategy`). `uniform` reproduces the pre-sampler RNG draws
+    /// exactly.
+    pub sampler: String,
+    /// Horizon (simulated seconds) the `stay-prob` policy predicts client
+    /// survival over — roughly one aggregation interval.
+    pub sampler_horizon_secs: f64,
 
     /// Total client population.
     pub population: usize,
@@ -108,6 +116,8 @@ impl Default for RunConfig {
         RunConfig {
             model: "vision".into(),
             strategy: "TimelyFL".into(),
+            sampler: "uniform".into(),
+            sampler_horizon_secs: 600.0,
             population: 128,
             concurrency: 32,
             k_fraction: 0.5,
@@ -249,6 +259,11 @@ impl RunConfig {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         crate::coordinator::registry::resolve(&self.strategy)?;
+        crate::coordinator::sampler::resolve(&self.sampler)?;
+        anyhow::ensure!(
+            self.sampler_horizon_secs > 0.0 && self.sampler_horizon_secs.is_finite(),
+            "sampler_horizon_secs must be positive and finite"
+        );
         anyhow::ensure!(self.population > 0, "population must be positive");
         anyhow::ensure!(
             self.concurrency > 0 && self.concurrency <= self.population,
@@ -324,5 +339,22 @@ mod tests {
         }
         c.strategy = "x".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sampler_validated_through_registry() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.sampler, "uniform", "uniform must stay the default");
+        for name in crate::coordinator::sampler::names() {
+            c.sampler = name.to_string();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        c.sampler = "x".into();
+        assert!(c.validate().is_err());
+        c.sampler = "uniform".into();
+        c.sampler_horizon_secs = 0.0;
+        assert!(c.validate().is_err(), "zero horizon must fail");
+        c.sampler_horizon_secs = f64::INFINITY;
+        assert!(c.validate().is_err(), "infinite horizon must fail");
     }
 }

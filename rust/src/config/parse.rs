@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 use super::RunConfig;
 use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityKind;
-use crate::coordinator::registry;
+use crate::coordinator::{registry, sampler};
 
 /// Parse one `key = value` line into an override on `cfg`.
 pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
@@ -15,6 +15,8 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
     match key.trim() {
         "model" => cfg.model = v.to_string(),
         "strategy" => cfg.strategy = registry::resolve(v)?.name.to_string(),
+        "sampler" => cfg.sampler = sampler::resolve(v)?.name.to_string(),
+        "sampler_horizon_secs" => cfg.sampler_horizon_secs = v.parse()?,
         "population" => cfg.population = v.parse()?,
         "concurrency" => cfg.concurrency = v.parse()?,
         "k_fraction" => cfg.k_fraction = v.parse()?,
@@ -77,6 +79,11 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
                 Some(v.to_string())
             }
         }
+        "avail_regions" => cfg.availability.regions = v.parse()?,
+        "avail_region_mtbf_secs" => cfg.availability.region_mtbf_secs = v.parse()?,
+        "avail_region_outage_secs" => cfg.availability.region_outage_secs = v.parse()?,
+        "avail_degrade_window_secs" => cfg.availability.degrade_window_secs = v.parse()?,
+        "avail_degrade_floor" => cfg.availability.degrade_floor = v.parse()?,
         "median_epoch_secs" => cfg.fleet.median_epoch_secs = v.parse()?,
         "compute_spread" => cfg.fleet.compute_spread = v.parse()?,
         "median_bandwidth" => cfg.fleet.median_bandwidth = v.parse()?,
@@ -215,6 +222,41 @@ mod tests {
         assert_eq!(cfg.model, "text");
         assert!(apply_cli(&mut cfg, "no_equals").is_err());
         assert!(apply_cli(&mut cfg, "bogus_key=1").is_err());
+    }
+
+    #[test]
+    fn sampler_and_correlated_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "sampler = stay-prob\n\
+             sampler_horizon_secs = 450\n\
+             availability = correlated\n\
+             avail_regions = 8\n\
+             avail_region_mtbf_secs = 3000\n\
+             avail_region_outage_secs = 600\n\
+             avail_degrade_window_secs = 240\n\
+             avail_degrade_floor = 0.4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sampler, "stay-prob");
+        assert_eq!(cfg.sampler_horizon_secs, 450.0);
+        assert_eq!(cfg.availability.kind, AvailabilityKind::Correlated);
+        assert_eq!(cfg.availability.regions, 8);
+        assert_eq!(cfg.availability.region_mtbf_secs, 3000.0);
+        assert_eq!(cfg.availability.region_outage_secs, 600.0);
+        assert_eq!(cfg.availability.degrade_window_secs, 240.0);
+        assert_eq!(cfg.availability.degrade_floor, 0.4);
+        cfg.validate().unwrap();
+        // Aliases canonicalize like strategies do.
+        apply_cli(&mut cfg, "sampler=survival").unwrap();
+        assert_eq!(cfg.sampler, "stay-prob");
+        apply_cli(&mut cfg, "sampler=DROP_AWARE").unwrap();
+        assert_eq!(cfg.sampler, "drop-aware");
+        apply_cli(&mut cfg, "availability=regional").unwrap();
+        assert_eq!(cfg.availability.kind, AvailabilityKind::Correlated);
+        let err = apply_cli(&mut cfg, "sampler=bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("uniform"), "error lists known samplers");
     }
 
     #[test]

@@ -43,9 +43,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::local_time::TimeTruth;
+use super::sampler::{self, ClientSampler, SamplerCtx};
 use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, TrainPlan};
 use super::{local_time, Recorder, Simulation};
 use crate::availability::{AvailabilityModel, SEED_SALT};
+use crate::devices::RoundConditions;
 use crate::metrics::events::{ClientWorkload, DropCause, EventSink, RunEvent};
 use crate::metrics::RunReport;
 use crate::model::{ParamVec, Update};
@@ -233,6 +236,19 @@ pub struct SimEngine<'a> {
     pub avail: AvailabilityModel,
     pub events: EventQueue<EngineEvent>,
     pub recorder: Recorder,
+    /// The sampling policy (`RunConfig::sampler`, resolved through
+    /// `coordinator::sampler`): every cohort draw and slot-refill pick
+    /// goes through it.
+    sampler: Box<dyn ClientSampler>,
+    /// Per-client decision score of the sampler's LAST consideration of
+    /// each client (1.0 until a weighted policy scores it); stamped onto
+    /// dispatch-carrying event records as `stay_prob`.
+    sampler_scores: Vec<f64>,
+    /// Drop ledger for the `drop-aware` policy: per-client dispatches that
+    /// ran to completion...
+    delivered: Vec<u64>,
+    /// ...and per-client dispatches lost to availability churn.
+    churned: Vec<u64>,
     busy: Vec<bool>,
     gens: Vec<u64>,
     /// Per-client stashed dispatch work (at most one — `busy` gates).
@@ -265,6 +281,7 @@ impl<'a> SimEngine<'a> {
         let client_rngs: Vec<Rng> = (0..cfg.population).map(|i| rng.fork(i as u64)).collect();
         let avail =
             AvailabilityModel::build(&cfg.availability, cfg.population, cfg.seed ^ SEED_SALT)?;
+        let sampler = (sampler::resolve(&cfg.sampler)?.build)();
         Ok(SimEngine {
             sim,
             rng,
@@ -272,6 +289,10 @@ impl<'a> SimEngine<'a> {
             avail,
             events: EventQueue::new(),
             recorder: Recorder::new(cfg.population),
+            sampler,
+            sampler_scores: vec![1.0; cfg.population],
+            delivered: vec![0; cfg.population],
+            churned: vec![0; cfg.population],
             busy: vec![false; cfg.population],
             gens: vec![0; cfg.population],
             pending: (0..cfg.population).map(|_| None).collect(),
@@ -316,12 +337,92 @@ impl<'a> SimEngine<'a> {
         }
     }
 
+    /// Draw a cohort of `want` distinct clients from `pool` (the
+    /// currently-online candidates) through the configured sampling
+    /// policy. Under `sampler = uniform` the RNG draws are exactly the
+    /// pre-seam partial Fisher–Yates, so always-on runs stay bit-identical.
+    pub fn sample_cohort(&mut self, now: SimTime, pool: &[usize], want: usize) -> Vec<usize> {
+        let SimEngine { sim, sampler, rng, avail, delivered, churned, sampler_scores, .. } = self;
+        let mut ctx = SamplerCtx {
+            now,
+            horizon: sim.cfg.sampler_horizon_secs,
+            rng,
+            avail,
+            delivered,
+            churned,
+            scores: sampler_scores,
+        };
+        sampler.sample(&mut ctx, pool, want)
+    }
+
+    /// Same, but drawing from a CLONE of the master stream (FedBuff's
+    /// historical start-cohort behaviour: the initial draw must not
+    /// advance the master RNG).
+    pub fn sample_cohort_detached(
+        &mut self,
+        now: SimTime,
+        pool: &[usize],
+        want: usize,
+    ) -> Vec<usize> {
+        let mut rng = self.rng.clone();
+        let SimEngine { sim, sampler, avail, delivered, churned, sampler_scores, .. } = self;
+        let mut ctx = SamplerCtx {
+            now,
+            horizon: sim.cfg.sampler_horizon_secs,
+            rng: &mut rng,
+            avail,
+            delivered,
+            churned,
+            scores: sampler_scores,
+        };
+        sampler.sample(&mut ctx, pool, want)
+    }
+
+    /// Pick one client from the non-empty `pool` through the configured
+    /// sampling policy (slot refills of event-driven strategies; uniform
+    /// draws exactly the historical `usize_below`).
+    pub fn pick_client(&mut self, now: SimTime, pool: &[usize]) -> usize {
+        debug_assert!(!pool.is_empty(), "pick_client from an empty pool");
+        let SimEngine { sim, sampler, rng, avail, delivered, churned, sampler_scores, .. } = self;
+        let mut ctx = SamplerCtx {
+            now,
+            horizon: sim.cfg.sampler_horizon_secs,
+            rng,
+            avail,
+            delivered,
+            churned,
+            scores: sampler_scores,
+        };
+        sampler.pick_one(&mut ctx, pool)
+    }
+
+    /// True unit times for `client` under `cond` at simulated time `now`,
+    /// with the availability model's degrade-before-drop coupling applied:
+    /// the correlated process scales effective throughput down as the
+    /// client's region approaches an outage (upload time divides by the
+    /// factor). Every other process reports a factor of exactly 1.0, so
+    /// the division is bit-exact and uncoupled runs are unchanged.
+    pub fn truth_at(&mut self, client: usize, cond: &RoundConditions, now: SimTime) -> TimeTruth {
+        let sim = self.sim;
+        let t = local_time::truth(&sim.fleet.devices[client], cond, sim.cfg.sim_model_bytes);
+        let factor = self.avail.bandwidth_factor(client, now);
+        TimeTruth {
+            t_cmp: t.t_cmp,
+            t_com: t.t_com / factor,
+        }
+    }
+
     /// Note one client's dispatched workload (Alg. 3's E_c / alpha_c as
     /// realized) for the next `round-complete` record. Only bookkept when a
     /// sink is attached — the telemetry must cost nothing on sink-less runs.
     fn note_workload(&mut self, client: usize, epochs: usize, alpha: f64) {
         if self.sink.is_some() {
-            self.workloads_pending.push(ClientWorkload { client, epochs, alpha });
+            self.workloads_pending.push(ClientWorkload {
+                client,
+                epochs,
+                alpha,
+                stay_prob: self.sampler_scores[client],
+            });
         }
     }
 
@@ -334,7 +435,10 @@ impl<'a> SimEngine<'a> {
 
     fn drop_client_inner(&mut self, client: usize, cause: DropCause, execution_avoided: bool) {
         match cause {
-            DropCause::Availability => self.avail_dropped_pending += 1,
+            DropCause::Availability => {
+                self.avail_dropped_pending += 1;
+                self.churned[client] += 1;
+            }
             DropCause::Deadline => self.dropped_pending += 1,
         }
         let ev = RunEvent::ClientDropped {
@@ -427,12 +531,7 @@ impl<'a> SimEngine<'a> {
                 continue;
             }
             let want = cfg.concurrency.min(online.len());
-            let sampled: Vec<usize> = self
-                .rng
-                .sample_without_replacement(online.len(), want)
-                .into_iter()
-                .map(|i| online[i])
-                .collect();
+            let sampled = self.sample_cohort(now, &online, want);
 
             let round = self.completed_rounds;
             let outcome = strat.run_round(&mut RoundCtx {
@@ -559,6 +658,7 @@ impl<'a> SimEngine<'a> {
         let pd = self.pending[client]
             .take()
             .expect("generation-valid finish without stashed work");
+        self.delivered[client] += 1;
         let base_version = pd.base_version;
         let (update, mean_loss) = match pd.work {
             PendingWork::Trained { update, mean_loss } => (update, mean_loss),
@@ -622,7 +722,7 @@ impl<'a> SimEngine<'a> {
         self.busy[client] = true;
         self.in_flight += 1;
         let cond = sim.fleet.round_conditions(&mut self.rng);
-        let t = local_time::truth(&sim.fleet.devices[client], &cond, cfg.sim_model_bytes);
+        let t = self.truth_at(client, &cond, self.events.now());
         // Compute scales with the nominal compiled ratio, upload with the
         // realized trainable fraction; both are exactly 1.0 for full-model
         // dispatches.
@@ -691,6 +791,9 @@ impl<'a> SimEngine<'a> {
         let sim = self.sim;
         self.recorder.wasted.on_dispatch();
         self.note_workload(client, epochs, ratio.ratio);
+        // Round protocols settle eligibility (incl. availability survival)
+        // before training, so reaching here means the dispatch completed.
+        self.delivered[client] += 1;
         let outcome = train_client(
             &sim.runtime,
             &sim.dataset,

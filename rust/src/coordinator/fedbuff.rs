@@ -59,14 +59,15 @@ impl FedBuff {
         eng.dispatch_full(client, &self.global.params, self.global.version)
     }
 
-    /// Uniform re-sampling over online idle clients keeps concurrency at n,
-    /// matching FedBuff's "training concurrency" definition; under churn
-    /// the pool can be momentarily empty — the slot refills when someone
-    /// comes back online.
+    /// Re-sampling over online idle clients keeps concurrency at n,
+    /// matching FedBuff's "training concurrency" definition; the pick goes
+    /// through the configured sampling policy (`uniform` reproduces the
+    /// historical draw exactly). Under churn the pool can be momentarily
+    /// empty — the slot refills when someone comes back online.
     fn refill_slot(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
         let idle = eng.idle_online_clients(now);
         if !idle.is_empty() {
-            let next = idle[eng.rng.usize_below(idle.len())];
+            let next = eng.pick_client(now, &idle);
             self.dispatch(eng, next)?;
         }
         Ok(())
@@ -85,14 +86,15 @@ impl Strategy for FedBuff {
 
 impl EventStrategy for FedBuff {
     fn on_start(&mut self, eng: &mut SimEngine) -> Result<()> {
-        // Start: n distinct currently-online clients training. Sampling
-        // from a CLONE of the master RNG (not the stream itself) is the
-        // seed behaviour — preserved for bit-identical runs.
+        // Start: n distinct currently-online clients training, drawn
+        // through the sampling policy from a CLONE of the master RNG (not
+        // the stream itself) — the seed behaviour, preserved for
+        // bit-identical runs.
         let online0 = eng.avail.online_clients(0.0);
         let want = eng.sim.cfg.concurrency.min(online0.len());
-        let picks = eng.rng.clone().sample_without_replacement(online0.len(), want);
-        for &i in &picks {
-            self.dispatch(eng, online0[i])?;
+        let cohort = eng.sample_cohort_detached(0.0, &online0, want);
+        for c in cohort {
+            self.dispatch(eng, c)?;
         }
         Ok(())
     }

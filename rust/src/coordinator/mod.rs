@@ -6,8 +6,10 @@
 //! [`registry`] (name → constructor) and driven by a shared
 //! [`engine::SimEngine`] that owns the run lifecycle: seeded RNG tree,
 //! availability model, one `simtime::EventQueue` clock, online-client
-//! sampling, drop attribution, eval/stop, and the machine-readable
-//! run-event stream (`metrics::events`).
+//! sampling (WHO gets dispatched is itself a pluggable policy —
+//! [`sampler::ClientSampler`], resolved through its own registry:
+//! `uniform` | `stay-prob` | `drop-aware`), drop attribution, eval/stop,
+//! and the machine-readable run-event stream (`metrics::events`).
 //!
 //! Client *training* is real (PJRT executions of the AOT artifacts); client
 //! *timing* is simulated from the device model — the same emulation
@@ -23,6 +25,7 @@ pub mod engine;
 pub mod fedbuff;
 pub mod local_time;
 pub mod registry;
+pub mod sampler;
 pub mod scheduler;
 pub mod semiasync;
 pub mod syncfl;
@@ -50,6 +53,7 @@ pub use engine::{
     Strategy,
 };
 pub use registry::{StrategyInfo, STRATEGIES};
+pub use sampler::{ClientSampler, SamplerCtx, SamplerInfo, SAMPLERS};
 
 /// Everything a strategy needs for one run.
 pub struct Simulation {

@@ -1,0 +1,434 @@
+//! Availability-aware client sampling: the `ClientSampler` trait, its
+//! registry, and the three shipped policies.
+//!
+//! TimelyFL adapts *how much* it asks of each client; the sampler seam
+//! decides *who* gets asked. Every strategy draws cohorts / refill picks
+//! through the engine (`SimEngine::sample_cohort` / `pick_client`), which
+//! delegates to the policy resolved from `RunConfig::sampler`:
+//!
+//! - **uniform** — the default: uniform over the currently-online pool,
+//!   reproducing the pre-seam RNG draws exactly (bit-compatible goldens).
+//! - **stay-prob** — weights each candidate by
+//!   `AvailabilityModel::survival_prob(c, now, horizon)`: the probability
+//!   it stays online through the sampling horizon
+//!   (`sampler_horizon_secs`), predicted per process (analytic
+//!   residual-dwell survival for Markov/correlated, exact 0/1 for the
+//!   deterministic processes). SEAFL-style selective participation,
+//!   without an oracle.
+//! - **drop-aware** — weights by a smoothed posterior survival estimate
+//!   from the run's own observed per-client drop ledger:
+//!   `(delivered + 1) / (delivered + churned + 1)` — no process model
+//!   needed, just history.
+//!
+//! **Equivalence contract**: when every candidate's weight is identical
+//! (always-on availability makes every survival exactly 1.0; a drop-free
+//! ledger likewise), the weighted policies take the *uniform code path* —
+//! the same RNG calls in the same order — so their runs are byte-identical
+//! to `sampler = uniform` (`rust/tests/sampler_equivalence.rs`). Weighted
+//! draws only happen once weights actually diverge.
+
+use anyhow::Result;
+
+use crate::availability::AvailabilityModel;
+use crate::simtime::SimTime;
+use crate::util::rng::Rng;
+
+/// Everything a policy may consult for one decision. Borrows disjoint
+/// engine fields; `scores` is the engine's per-client decision-score table
+/// (weighted policies overwrite the entries of the candidates they
+/// considered, and the engine stamps the chosen client's score onto its
+/// dispatch-carrying event records as `stay_prob`).
+pub struct SamplerCtx<'a> {
+    pub now: SimTime,
+    /// Horizon the stay-prob policy predicts survival over
+    /// (`RunConfig::sampler_horizon_secs`).
+    pub horizon: f64,
+    pub rng: &'a mut Rng,
+    pub avail: &'a mut AvailabilityModel,
+    /// Per-client dispatches that ran to completion (engine drop ledger).
+    pub delivered: &'a [u64],
+    /// Per-client dispatches lost to availability churn.
+    pub churned: &'a [u64],
+    pub scores: &'a mut [f64],
+}
+
+/// A pluggable client-sampling policy (one instance per run, built by the
+/// registry — stateless policies are the norm, but the trait allows state).
+pub trait ClientSampler {
+    /// Canonical display name (also the registry key and what config
+    /// canonicalizes `sampler = ...` to).
+    fn name(&self) -> &'static str;
+
+    /// Draw a cohort of `want` distinct clients from `pool` (the
+    /// currently-online candidates, ascending ids). `want <= pool.len()`.
+    fn sample(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize], want: usize) -> Vec<usize>;
+
+    /// Pick one client from the non-empty `pool` (slot refills of
+    /// event-driven strategies).
+    fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize;
+}
+
+/// Floor applied to weights in a non-degenerate weighted draw, so a
+/// zero-survival candidate keeps an epsilon of mass (categorical stays
+/// well-defined and no client is ever unreachable by sampling alone).
+const WEIGHT_FLOOR: f64 = 1e-6;
+
+/// All weights bit-identical? (The degenerate case that must take the
+/// uniform code path — see the module docs' equivalence contract.)
+fn degenerate(weights: &[f64]) -> bool {
+    weights.iter().all(|&w| w == weights[0])
+}
+
+/// The uniform cohort draw — partial Fisher–Yates over pool indices,
+/// exactly the pre-seam engine code (and the degenerate-weights path of
+/// every weighted policy).
+fn uniform_sample(rng: &mut Rng, pool: &[usize], want: usize) -> Vec<usize> {
+    rng.sample_without_replacement(pool.len(), want)
+        .into_iter()
+        .map(|i| pool[i])
+        .collect()
+}
+
+/// Weighted cohort draw: `want` successive categorical picks without
+/// replacement (weights floored at [`WEIGHT_FLOOR`]). Callers handle the
+/// degenerate case first.
+fn weighted_sample(rng: &mut Rng, pool: &[usize], want: usize, weights: &[f64]) -> Vec<usize> {
+    let mut remaining: Vec<usize> = (0..pool.len()).collect();
+    let mut picked = Vec::with_capacity(want);
+    for _ in 0..want {
+        let w: Vec<f64> = remaining.iter().map(|&i| weights[i].max(WEIGHT_FLOOR)).collect();
+        let j = rng.categorical(&w);
+        picked.push(pool[remaining[j]]);
+        remaining.swap_remove(j);
+    }
+    picked
+}
+
+/// Shared body of the two weighted policies: record scores, fall back to
+/// the uniform code path on degenerate weights, else draw weighted.
+fn sample_by_weight(
+    ctx: &mut SamplerCtx<'_>,
+    pool: &[usize],
+    want: usize,
+    weights: &[f64],
+) -> Vec<usize> {
+    for (i, &c) in pool.iter().enumerate() {
+        ctx.scores[c] = weights[i];
+    }
+    if degenerate(weights) {
+        uniform_sample(ctx.rng, pool, want)
+    } else {
+        weighted_sample(ctx.rng, pool, want, weights)
+    }
+}
+
+fn pick_by_weight(ctx: &mut SamplerCtx<'_>, pool: &[usize], weights: &[f64]) -> usize {
+    for (i, &c) in pool.iter().enumerate() {
+        ctx.scores[c] = weights[i];
+    }
+    if degenerate(weights) {
+        pool[ctx.rng.usize_below(pool.len())]
+    } else {
+        let w: Vec<f64> = weights.iter().map(|&x| x.max(WEIGHT_FLOOR)).collect();
+        pool[ctx.rng.categorical(&w)]
+    }
+}
+
+/// `uniform` — the availability-blind default (seed behaviour).
+struct Uniform;
+
+impl ClientSampler for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn sample(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize], want: usize) -> Vec<usize> {
+        uniform_sample(ctx.rng, pool, want)
+    }
+
+    fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize {
+        pool[ctx.rng.usize_below(pool.len())]
+    }
+}
+
+/// `stay-prob` — weight by predicted survival through the horizon.
+struct StayProb;
+
+impl StayProb {
+    fn weights(ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> Vec<f64> {
+        pool.iter()
+            .map(|&c| ctx.avail.survival_prob(c, ctx.now, ctx.horizon))
+            .collect()
+    }
+}
+
+impl ClientSampler for StayProb {
+    fn name(&self) -> &'static str {
+        "stay-prob"
+    }
+
+    fn sample(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize], want: usize) -> Vec<usize> {
+        let w = Self::weights(ctx, pool);
+        sample_by_weight(ctx, pool, want, &w)
+    }
+
+    fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize {
+        let w = Self::weights(ctx, pool);
+        pick_by_weight(ctx, pool, &w)
+    }
+}
+
+/// `drop-aware` — weight by the smoothed posterior survival rate from the
+/// observed per-client drop ledger: `(delivered + 1) / (delivered +
+/// churned + 1)`. Exactly 1.0 for every client until someone actually
+/// churns out (the pseudo-count sits on the survival side), so drop-free
+/// runs stay on the uniform path.
+struct DropAware;
+
+impl DropAware {
+    fn weights(ctx: &SamplerCtx<'_>, pool: &[usize]) -> Vec<f64> {
+        pool.iter()
+            .map(|&c| {
+                let s = ctx.delivered[c] as f64;
+                let d = ctx.churned[c] as f64;
+                (s + 1.0) / (s + d + 1.0)
+            })
+            .collect()
+    }
+}
+
+impl ClientSampler for DropAware {
+    fn name(&self) -> &'static str {
+        "drop-aware"
+    }
+
+    fn sample(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize], want: usize) -> Vec<usize> {
+        let w = Self::weights(ctx, pool);
+        sample_by_weight(ctx, pool, want, &w)
+    }
+
+    fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize {
+        let w = Self::weights(ctx, pool);
+        pick_by_weight(ctx, pool, &w)
+    }
+}
+
+/// One registered sampling policy (mirrors `registry::StrategyInfo`).
+pub struct SamplerInfo {
+    /// Canonical display name (what `RunConfig::sampler` carries).
+    pub name: &'static str,
+    /// Extra accepted spellings (lowercase); the canonical name matches
+    /// case-insensitively without being listed.
+    pub aliases: &'static [&'static str],
+    /// One-liner for `timelyfl samplers`.
+    pub summary: &'static str,
+    /// Build a fresh policy instance for one run.
+    pub build: fn() -> Box<dyn ClientSampler>,
+}
+
+/// All registered sampling policies, in listing order.
+pub static SAMPLERS: &[SamplerInfo] = &[
+    SamplerInfo {
+        name: "uniform",
+        aliases: &[],
+        summary: "availability-blind uniform sampling over the online pool (seed behaviour, default)",
+        build: || Box::new(Uniform),
+    },
+    SamplerInfo {
+        name: "stay-prob",
+        aliases: &["stay_prob", "stayprob", "survival"],
+        summary: "prefer clients predicted to stay online through the sampling horizon (per-process survival_prob)",
+        build: || Box::new(StayProb),
+    },
+    SamplerInfo {
+        name: "drop-aware",
+        aliases: &["drop_aware", "dropaware", "posterior"],
+        summary: "prefer clients with a good observed delivery record (smoothed posterior from the drop ledger)",
+        build: || Box::new(DropAware),
+    },
+];
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static SamplerInfo> {
+    let needle = name.to_ascii_lowercase();
+    SAMPLERS
+        .iter()
+        .find(|s| s.name.to_ascii_lowercase() == needle || s.aliases.contains(&needle.as_str()))
+}
+
+/// Like [`find`], but an actionable error listing the known policies.
+pub fn resolve(name: &str) -> Result<&'static SamplerInfo> {
+    find(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown sampler {name:?} (known: {})", names().join(", ")))
+}
+
+/// Canonical names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    SAMPLERS.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::availability::{AvailabilityConfig, AvailabilityKind};
+
+    fn always_on_ctx<'a>(
+        rng: &'a mut Rng,
+        avail: &'a mut AvailabilityModel,
+        delivered: &'a [u64],
+        churned: &'a [u64],
+        scores: &'a mut [f64],
+    ) -> SamplerCtx<'a> {
+        SamplerCtx {
+            now: 0.0,
+            horizon: 600.0,
+            rng,
+            avail,
+            delivered,
+            churned,
+            scores,
+        }
+    }
+
+    #[test]
+    fn registry_names_and_aliases_resolve_uniquely() {
+        let mut keys = std::collections::BTreeSet::new();
+        for s in SAMPLERS {
+            assert!(!s.name.is_empty() && !s.summary.is_empty());
+            assert!(keys.insert(s.name.to_ascii_lowercase()), "dup {}", s.name);
+            assert_eq!(find(s.name).unwrap().name, s.name);
+            assert_eq!(find(&s.name.to_ascii_uppercase()).unwrap().name, s.name);
+            assert_eq!((s.build)().name(), s.name, "built policy must match its entry");
+            for a in s.aliases {
+                assert!(keys.insert(a.to_string()), "alias {a} collides");
+                assert_eq!(find(a).unwrap().name, s.name, "alias {a} resolves elsewhere");
+            }
+        }
+        let err = resolve("bogus").unwrap_err().to_string();
+        for s in SAMPLERS {
+            assert!(err.contains(s.name), "error should list {}", s.name);
+        }
+        assert_eq!(names()[0], "uniform", "uniform is the default and lists first");
+    }
+
+    #[test]
+    fn degenerate_weights_take_the_uniform_rng_path() {
+        // The equivalence contract at unit scale: with all-equal weights,
+        // every policy must consume the SAME rng draws and return the SAME
+        // cohort as uniform.
+        let pool: Vec<usize> = (0..10).collect();
+        let (delivered, churned) = (vec![5u64; 10], vec![0u64; 10]);
+        for info in SAMPLERS {
+            let mut uni_rng = Rng::seed_from(99);
+            let mut avail = AvailabilityModel::always_on(10);
+            let mut scores = vec![1.0; 10];
+            let mut ctx = always_on_ctx(&mut uni_rng, &mut avail, &delivered, &churned, &mut scores);
+            let reference = Uniform.sample(&mut ctx, &pool, 4);
+
+            let mut rng = Rng::seed_from(99);
+            let mut avail = AvailabilityModel::always_on(10);
+            let mut scores = vec![1.0; 10];
+            let mut ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+            let mut policy = (info.build)();
+            let got = policy.sample(&mut ctx, &pool, 4);
+            assert_eq!(got, reference, "{} diverged on degenerate weights", info.name);
+            // The post-draw rng states must also agree (downstream draws
+            // are what the byte-identity tests actually observe).
+            assert_eq!(rng.next_u64(), uni_rng.next_u64(), "{}: rng desync", info.name);
+
+            let mut uni_rng = Rng::seed_from(7);
+            let mut avail = AvailabilityModel::always_on(10);
+            let mut scores = vec![1.0; 10];
+            let mut ctx = always_on_ctx(&mut uni_rng, &mut avail, &delivered, &churned, &mut scores);
+            let ref_pick = Uniform.pick_one(&mut ctx, &pool);
+            let mut rng = Rng::seed_from(7);
+            let mut avail = AvailabilityModel::always_on(10);
+            let mut scores = vec![1.0; 10];
+            let mut ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+            let mut policy = (info.build)();
+            assert_eq!(policy.pick_one(&mut ctx, &pool), ref_pick, "{}", info.name);
+            assert_eq!(rng.next_u64(), uni_rng.next_u64(), "{}: pick rng desync", info.name);
+        }
+    }
+
+    #[test]
+    fn drop_aware_weights_are_one_until_someone_churns() {
+        let delivered = vec![0u64, 3, 100, 7];
+        let churned = vec![0u64; 4];
+        let mut rng = Rng::seed_from(1);
+        let mut avail = AvailabilityModel::always_on(4);
+        let mut scores = vec![1.0; 4];
+        let ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+        let w = DropAware::weights(&ctx, &[0, 1, 2, 3]);
+        assert!(w.iter().all(|&x| x == 1.0), "drop-free ledger must be degenerate: {w:?}");
+        // One churn drop breaks the tie, and more drops weigh heavier.
+        let churned = vec![0u64, 1, 0, 4];
+        let ctx2 = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+        let w = DropAware::weights(&ctx2, &[0, 1, 2, 3]);
+        assert!(!degenerate(&w));
+        assert_eq!(w[0], 1.0);
+        assert!((w[1] - 4.0 / 5.0).abs() < 1e-12);
+        assert!(w[3] < w[1], "more churn -> lower weight");
+    }
+
+    #[test]
+    fn weighted_draw_prefers_heavy_clients() {
+        // Deterministic frequency check: weight 9:1 between two clients.
+        let mut rng = Rng::seed_from(5);
+        let pool = [0usize, 1];
+        let weights = [0.9, 0.1];
+        let mut first = [0usize; 2];
+        for _ in 0..2000 {
+            let picked = weighted_sample(&mut rng, &pool, 1, &weights);
+            first[picked[0]] += 1;
+        }
+        let frac = first[0] as f64 / 2000.0;
+        assert!((frac - 0.9).abs() < 0.03, "heavy client picked {frac} of draws");
+        // Without replacement: both clients appear when want == pool size.
+        let both = weighted_sample(&mut rng, &pool, 2, &weights);
+        let mut sorted = both.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1]);
+    }
+
+    #[test]
+    fn stay_prob_records_scores_and_skews_under_churn() {
+        // A trace where client 1 drops inside the horizon while client 0
+        // stays: stay-prob must weight 0 over 1 and write both scores.
+        use crate::availability::TraceEvent;
+        let trace = "{\"at\":100.0,\"client\":1,\"online\":false}\n";
+        let events: Vec<TraceEvent> = crate::availability::parse_trace(trace).unwrap();
+        assert_eq!(events.len(), 1);
+        let dir = std::env::temp_dir().join("timelyfl_sampler_test_trace.jsonl");
+        std::fs::write(&dir, trace).unwrap();
+        let cfg = AvailabilityConfig {
+            kind: AvailabilityKind::Trace,
+            trace_path: Some(dir.to_string_lossy().into_owned()),
+            ..AvailabilityConfig::default()
+        };
+        let mut avail = AvailabilityModel::build(&cfg, 2, 1).unwrap();
+        let mut rng = Rng::seed_from(3);
+        let (delivered, churned) = (vec![0u64; 2], vec![0u64; 2]);
+        let mut scores = vec![1.0; 2];
+        let mut ctx = SamplerCtx {
+            now: 0.0,
+            horizon: 600.0,
+            rng: &mut rng,
+            avail: &mut avail,
+            delivered: &delivered,
+            churned: &churned,
+            scores: &mut scores,
+        };
+        let mut policy = StayProb;
+        let mut zero_picked = 0;
+        for _ in 0..200 {
+            if policy.pick_one(&mut ctx, &[0, 1]) == 0 {
+                zero_picked += 1;
+            }
+        }
+        assert!(zero_picked > 190, "doomed client over-picked: {zero_picked}/200");
+        assert_eq!(scores[0], 1.0);
+        assert_eq!(scores[1], 0.0, "doomed client's score must be recorded as 0");
+        let _ = std::fs::remove_file(&dir);
+    }
+}

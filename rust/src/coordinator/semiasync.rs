@@ -61,6 +61,9 @@ impl SemiAsync {
     /// preferring those predicted to stay online through their own round.
     /// (Selection reduces churn cancellations; deferred dispatch execution
     /// in the engine makes the remaining ones free on the accelerator.)
+    /// The final pick within the filtered pool goes through the configured
+    /// sampling policy, so SemiAsync's protocol-level filter composes with
+    /// e.g. `stay-prob` weighting (uniform reproduces the historical draw).
     fn select_and_dispatch(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
         let idle = eng.idle_online_clients(now);
         if idle.is_empty() {
@@ -72,7 +75,7 @@ impl SemiAsync {
             .filter(|&c| eng.avail.online_through(c, now, now + self.expected_secs[c]))
             .collect();
         let pool = if safe.is_empty() { &idle } else { &safe };
-        let next = pool[eng.rng.usize_below(pool.len())];
+        let next = eng.pick_client(now, pool);
         eng.dispatch_full(next, &self.global.params, self.global.version)
     }
 

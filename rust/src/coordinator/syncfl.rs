@@ -16,7 +16,6 @@
 use anyhow::Result;
 
 use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
-use super::local_time::truth;
 use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
 use crate::metrics::events::DropCause;
@@ -68,7 +67,9 @@ impl RoundStrategy for SyncFl {
         let mut round_secs = 0.0f64;
         for &c in ctx.sampled {
             let cond = sim.fleet.round_conditions(&mut eng.rng);
-            let t = truth(&sim.fleet.devices[c], &cond, cfg.sim_model_bytes);
+            // truth_at folds in the correlated process's
+            // degrade-before-drop bandwidth factor (exactly 1.0 elsewhere).
+            let t = eng.truth_at(c, &cond, now);
             let duration = t.round_secs(epochs as f64, 1.0, 1.0);
             // The server waits for the slowest sampled client whether or
             // not it delivers (timeout-and-discard).

@@ -28,7 +28,7 @@
 use anyhow::Result;
 
 use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
-use super::local_time::{local_time_update, truth};
+use super::local_time::local_time_update;
 use super::scheduler::{aggregation_interval, schedule, Workload};
 use super::Simulation;
 use crate::aggregation::{average_delta, Contribution, ServerOpt};
@@ -119,8 +119,12 @@ impl RoundStrategy for TimelyFl {
             // Actual wall time with TRUE unit times and the scheduled
             // workload. Compute scales with the nominal compiled ratio
             // (paper's linear model); upload with the realized trainable
-            // fraction (that is what goes over the wire).
-            let t = truth(&sim.fleet.devices[*c], cond, cfg.sim_model_bytes);
+            // fraction (that is what goes over the wire). The engine
+            // applies the correlated process's degrade-before-drop
+            // bandwidth factor here — the probe estimated NOMINAL
+            // throughput, so a destabilizing region shows up as deadline
+            // misses the scheduler could not see coming.
+            let t = eng.truth_at(*c, cond, now);
             let actual = t.round_secs(w.epochs as f64, ratio.ratio, ratio.trainable_fraction);
             let landed = actual <= t_k * (1.0 + cfg.deadline_grace);
             // Failure injection: finished but never delivered.

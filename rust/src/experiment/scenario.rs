@@ -131,6 +131,24 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         ],
     },
     ScenarioSpec {
+        name: "cifar_regional",
+        aliases: &["regional"],
+        summary: "CIFAR under correlated regional churn (8 regions flipping together, \
+                  bandwidth degrading before drops) — the availability-aware-sampler testbed",
+        preset: Some("cifar_fedavg"),
+        overrides: &[
+            ("availability", "correlated"),
+            ("avail_regions", "8"),
+            ("avail_region_mtbf_secs", "2400"),
+            ("avail_region_outage_secs", "800"),
+            ("avail_mean_online_secs", "2400"),
+            ("avail_mean_offline_secs", "600"),
+            ("avail_degrade_window_secs", "300"),
+            ("avail_degrade_floor", "0.25"),
+            ("sampler_horizon_secs", "400"),
+        ],
+    },
+    ScenarioSpec {
         name: "cifar_noniid",
         aliases: &["noniid"],
         summary: "CIFAR at severe non-iid (Dirichlet alpha 0.05) — where inclusiveness \
@@ -237,6 +255,13 @@ mod tests {
         assert_eq!(churn.availability.kind, AvailabilityKind::Markov);
         assert_eq!(churn.availability.mean_online_secs, 400.0);
         assert_eq!(churn.availability.mean_offline_secs, 800.0);
+
+        let regional = resolve("regional").unwrap().config().unwrap();
+        assert_eq!(regional.availability.kind, AvailabilityKind::Correlated);
+        assert_eq!(regional.availability.regions, 8);
+        assert_eq!(regional.availability.degrade_window_secs, 300.0);
+        assert_eq!(regional.sampler, "uniform", "sampler stays an explicit axis");
+        assert_eq!(regional.sampler_horizon_secs, 400.0);
 
         let smoke = resolve("smoke").unwrap().config().unwrap();
         assert_eq!(smoke.model, "kws_lite");

@@ -58,6 +58,31 @@ pub struct TargetStat {
     pub hours: Option<MeanStd>,
 }
 
+impl TargetStat {
+    /// Aggregate `target` over seed replicates (also the table benches'
+    /// per-target aggregation — one implementation of "reached + hours").
+    pub fn of(reports: &[RunReport], target: f64, higher_better: bool) -> TargetStat {
+        let hit: Vec<f64> = reports
+            .iter()
+            .filter_map(|r| r.time_to_target(target, higher_better))
+            .collect();
+        TargetStat {
+            target,
+            reached: hit.len(),
+            hours: (!hit.is_empty()).then(|| MeanStd::of(&hit)),
+        }
+    }
+
+    /// Mean-hours ratio of `self` relative to `base` (`None` when either
+    /// side never reached its target): the "Nx slower" annotation.
+    pub fn ratio_vs(&self, base: &TargetStat) -> Option<f64> {
+        match (&base.hours, &self.hours) {
+            (Some(a), Some(b)) if a.mean > 0.0 => Some(b.mean / a.mean),
+            _ => None,
+        }
+    }
+}
+
 /// Seed-aggregated result of one grid cell. Wall-clock-free by design (see
 /// module docs); counts are aggregated as means over seeds.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,17 +118,10 @@ impl CellSummary {
             let xs: Vec<f64> = reports.iter().filter_map(f).collect();
             (!xs.is_empty()).then(|| MeanStd::of(&xs))
         };
-        let time_to_target = cell.cfg.target_metric.map(|target| {
-            let hit: Vec<f64> = reports
-                .iter()
-                .filter_map(|r| r.time_to_target(target, higher_better))
-                .collect();
-            TargetStat {
-                target,
-                reached: hit.len(),
-                hours: (!hit.is_empty()).then(|| MeanStd::of(&hit)),
-            }
-        });
+        let time_to_target = cell
+            .cfg
+            .target_metric
+            .map(|target| TargetStat::of(reports, target, higher_better));
         CellSummary {
             label: cell.label(),
             settings: cell.settings.clone(),

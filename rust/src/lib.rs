@@ -13,8 +13,11 @@
 //!   machine-readable run-event stream (`metrics::events`), and an
 //!   event-driven heterogeneous-device simulator with a first-class client
 //!   availability & churn subsystem (`availability`: always-on / Markov
-//!   on-off / diurnal / trace-driven processes whose transitions are
-//!   `simtime` events). See `docs/architecture.md`. The evaluation surface
+//!   on-off / diurnal / trace-driven / correlated-regional processes whose
+//!   transitions are `simtime` events, with degrade-before-drop bandwidth
+//!   coupling) plus availability-aware client sampling
+//!   (`coordinator::sampler`: uniform / stay-prob / drop-aware policies
+//!   behind a registry). See `docs/architecture.md`. The evaluation surface
 //!   is declarative: named scenarios × sweep grids × a thread-parallel
 //!   multi-seed runner (`experiment`; `timelyfl sweep`,
 //!   `docs/experiments.md`).

@@ -1,7 +1,7 @@
 //! `timelyfl` CLI — launcher for simulated federated-learning runs.
 //!
 //! ```text
-//! timelyfl run        --preset cifar_fedavg [--strategy NAME] [--set k=v ...]
+//! timelyfl run        --preset cifar_fedavg [--strategy NAME] [--sampler NAME] [--set k=v ...]
 //!                     [--events FILE]                # JSONL run-event stream
 //!                     [--eager-train]                # A/B: train at dispatch, not at finish
 //! timelyfl compare    --preset cifar_fedavg [--set k=v ...]  # every registered strategy
@@ -9,6 +9,7 @@
 //!                     [--out FILE]                   # machine-readable sweep manifest
 //!                     [--events DIR]                 # per-run JSONL event streams
 //! timelyfl strategies                                 # dump the strategy registry
+//! timelyfl samplers                                   # dump the sampler registry
 //! timelyfl scenarios                                  # dump the scenario registry
 //! timelyfl presets                                    # dump the paper presets
 //! timelyfl trace record [--set avail_*=..] [--horizon SECS] [--out FILE]
@@ -32,7 +33,7 @@ use anyhow::{Context, Result};
 
 use timelyfl::availability::{write_trace, AvailabilityModel, TraceEvent, SEED_SALT};
 use timelyfl::config::{self, parse as cfgparse, RunConfig};
-use timelyfl::coordinator::{registry, Simulation};
+use timelyfl::coordinator::{registry, sampler, Simulation};
 use timelyfl::experiment::{scenario, ExperimentRunner, SweepGrid};
 use timelyfl::metrics::events::JsonlSink;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
@@ -46,6 +47,8 @@ struct Args {
     subcommand: Option<String>,
     preset: Option<String>,
     strategy: Option<String>,
+    /// `--sampler NAME`: client-sampling policy (registry-resolved).
+    sampler: Option<String>,
     config_file: Option<String>,
     sets: Vec<String>,
     artifacts: String,
@@ -72,6 +75,7 @@ fn parse_args() -> Result<Args> {
         subcommand: None,
         preset: None,
         strategy: None,
+        sampler: None,
         config_file: None,
         sets: Vec::new(),
         artifacts: "artifacts".into(),
@@ -94,6 +98,7 @@ fn parse_args() -> Result<Args> {
         match a.as_str() {
             "--preset" => args.preset = Some(need("--preset")?),
             "--strategy" => args.strategy = Some(need("--strategy")?),
+            "--sampler" => args.sampler = Some(need("--sampler")?),
             "--config" => args.config_file = Some(need("--config")?),
             "--set" => args.sets.push(need("--set")?),
             "--artifacts" => args.artifacts = need("--artifacts")?,
@@ -137,6 +142,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(s) = &args.strategy {
         cfg.strategy = registry::resolve(s)?.name.to_string();
+    }
+    if let Some(s) = &args.sampler {
+        cfg.sampler = sampler::resolve(s)?.name.to_string();
     }
     if let Some(t) = args.target {
         cfg.target_metric = Some(t);
@@ -255,6 +263,19 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_strategies() -> Result<()> {
     let mut t = Table::new(&["name", "aliases", "summary"]);
     for info in registry::STRATEGIES {
+        t.row(vec![
+            info.name.to_string(),
+            info.aliases.join(", "),
+            info.summary.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_samplers() -> Result<()> {
+    let mut t = Table::new(&["name", "aliases", "summary"]);
+    for info in sampler::SAMPLERS {
         t.row(vec![
             info.name.to_string(),
             info.aliases.join(", "),
@@ -451,13 +472,15 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn usage() -> String {
     format!(
-        "usage: timelyfl <run|compare|sweep|strategies|scenarios|presets|trace record|inspect> \
-         [--preset P] [--scenario S] [--strategy S] [--config FILE] [--set k=v]... \
+        "usage: timelyfl <run|compare|sweep|strategies|samplers|scenarios|presets|trace record|inspect> \
+         [--preset P] [--scenario S] [--strategy S] [--sampler S] [--config FILE] [--set k=v]... \
          [--axis k=v1,v2]... [--seeds N] [--jobs J] [--artifacts DIR] [--out FILE] \
          [--target X] [--events FILE|DIR] [--horizon SECS] [--eager-train]\n\
          strategies: {}\n\
+         samplers:   {}\n\
          scenarios:  {}",
         registry::names().join(", "),
+        sampler::names().join(", "),
         scenario::names().join(", ")
     )
 }
@@ -479,6 +502,7 @@ fn main() -> Result<()> {
         "compare" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
         "strategies" => cmd_strategies(),
+        "samplers" => cmd_samplers(),
         "scenarios" => cmd_scenarios(),
         "presets" => cmd_presets(),
         "trace" => cmd_trace(&args),

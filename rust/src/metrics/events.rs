@@ -9,7 +9,7 @@
 //! ```text
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
 //!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83,
-//!  "workloads":[{"alpha":0.75,"client":4,"epochs":2}]}
+//!  "workloads":[{"alpha":0.75,"client":4,"epochs":2,"stay_prob":0.93}]}
 //! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
 //! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability",
 //!  "execution_avoided":true}
@@ -58,7 +58,10 @@ impl DropCause {
 /// i.e. the fraction that really ran, not the scheduler's continuous
 /// pre-quantization value. Event-driven protocols always dispatch the full
 /// model (`alpha = 1.0`, fixed epochs); TimelyFL carries its per-round
-/// adaptive assignments here.
+/// adaptive assignments here. `stay_prob` is the sampler's decision score
+/// for the client at its most recent sampling (survival estimate for the
+/// weighted policies; 1.0 under `uniform`), so event streams expose WHY a
+/// client was picked alongside what it was asked to do.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClientWorkload {
     pub client: usize,
@@ -66,6 +69,8 @@ pub struct ClientWorkload {
     pub epochs: usize,
     /// Realized partial-training ratio alpha_c in (0, 1].
     pub alpha: f64,
+    /// Sampler decision score in [0, 1] (`coordinator::sampler`).
+    pub stay_prob: f64,
 }
 
 impl ClientWorkload {
@@ -74,6 +79,7 @@ impl ClientWorkload {
             ("client", Json::num(self.client as f64)),
             ("epochs", Json::num(self.epochs as f64)),
             ("alpha", Json::num(self.alpha)),
+            ("stay_prob", Json::num(self.stay_prob)),
         ])
     }
 
@@ -82,6 +88,7 @@ impl ClientWorkload {
             client: v.expect("client")?.as_usize()?,
             epochs: v.expect("epochs")?.as_usize()?,
             alpha: v.expect("alpha")?.as_f64()?,
+            stay_prob: v.expect("stay_prob")?.as_f64()?,
         })
     }
 }
@@ -342,8 +349,8 @@ mod tests {
                 avail_dropped: 2,
                 mean_train_loss: Some(1.83),
                 workloads: vec![
-                    ClientWorkload { client: 4, epochs: 2, alpha: 0.75 },
-                    ClientWorkload { client: 9, epochs: 1, alpha: 1.0 },
+                    ClientWorkload { client: 4, epochs: 2, alpha: 0.75, stay_prob: 0.93 },
+                    ClientWorkload { client: 9, epochs: 1, alpha: 1.0, stay_prob: 1.0 },
                 ],
             },
             RunEvent::RoundComplete {
@@ -429,6 +436,7 @@ mod tests {
         assert!(line.contains("\"workloads\":["));
         assert!(line.contains("\"alpha\":0.75"));
         assert!(line.contains("\"epochs\":2"));
+        assert!(line.contains("\"stay_prob\":0.93"));
         let back = RunEvent::parse_line(&line).unwrap();
         assert_eq!(back, samples()[0]);
         // Workload entries missing an Alg. 3 field are malformed — the
@@ -437,6 +445,13 @@ mod tests {
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\
              \"workloads\":[{\"client\":1,\"epochs\":2}]}"
+        )
+        .is_err());
+        // Same for the sampler-decision field.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\
+             \"workloads\":[{\"client\":1,\"epochs\":2,\"alpha\":1.0}]}"
         )
         .is_err());
     }

@@ -49,6 +49,37 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Error function via the Abramowitz & Stegun 7.1.26 rational
+/// approximation (|error| < 1.5e-7 — far below any tolerance the
+/// availability-survival estimates care about; no libm `erf` in the
+/// offline vendor set).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Survival function of LogNormal(mu, sigma): P(X > x). 1.0 for x <= 0;
+/// degenerates to the deterministic point mass exp(mu) at sigma = 0.
+pub fn lognormal_survival(x: f64, mu: f64, sigma: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    if sigma <= 0.0 {
+        return if x < mu.exp() { 1.0 } else { 0.0 };
+    }
+    1.0 - normal_cdf((x.ln() - mu) / sigma)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,5 +100,41 @@ mod tests {
     fn std_dev_known() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values (Abramowitz & Stegun tables).
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.5, 0.520_499_878),
+            (1.0, 0.842_700_793),
+            (2.0, 0.995_322_265),
+        ] {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x}) = {}", erf(x));
+            assert!((erf(-x) + want).abs() < 2e-7, "erf is odd");
+        }
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.959_964) - 0.975).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lognormal_survival_basics() {
+        // Median of LogNormal(mu, sigma) is exp(mu): survival there is 0.5.
+        let mu = 6.0f64;
+        assert!((lognormal_survival(mu.exp(), mu, 0.5) - 0.5).abs() < 1e-6);
+        // Monotone decreasing in x, bounded in [0, 1].
+        let mut prev = 1.0;
+        for i in 0..50 {
+            let s = lognormal_survival(10.0 * (i + 1) as f64, 4.0, 0.7);
+            assert!((0.0..=1.0).contains(&s));
+            assert!(s <= prev + 1e-12, "survival must decrease");
+            prev = s;
+        }
+        assert_eq!(lognormal_survival(0.0, 1.0, 0.5), 1.0);
+        assert_eq!(lognormal_survival(-3.0, 1.0, 0.5), 1.0);
+        // sigma = 0: deterministic dwell of exp(mu).
+        assert_eq!(lognormal_survival(1.0, 1.0, 0.0), 1.0);
+        assert_eq!(lognormal_survival(3.0, 1.0, 0.0), 0.0);
     }
 }

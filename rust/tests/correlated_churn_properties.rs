@@ -1,0 +1,201 @@
+//! Artifact-free properties of the correlated-churn availability process
+//! (`availability/correlated.rs`) — pure process logic, no PJRT, wired
+//! into `scripts/check.sh` alongside the other property suites.
+//!
+//! Locked here:
+//! - **flip-together**: during every regional outage window, every client
+//!   of that region is offline — the whole point of correlated churn;
+//! - **marginal calibration**: each client's long-run online fraction
+//!   tracks (personal Markov steady state) × (region uptime) within
+//!   tolerance, and the population mean tracks it tightly;
+//! - **seeded determinism**: same seed ⇒ identical schedules, different
+//!   seed ⇒ different schedules, through the public facade;
+//! - **degrade-before-drop**: the bandwidth factor ramps monotonically
+//!   down into an outage, never leaves `[floor, 1]`, is exactly 1.0
+//!   outside the window, and is exactly 1.0 for every OTHER process kind
+//!   (the strictly-additive contract).
+
+use timelyfl::availability::{
+    AvailabilityConfig, AvailabilityKind, AvailabilityModel, CorrelatedModel,
+};
+
+fn cfg() -> AvailabilityConfig {
+    AvailabilityConfig {
+        kind: AvailabilityKind::Correlated,
+        mean_online_secs: 1200.0,
+        mean_offline_secs: 400.0,
+        dwell_sigma: 0.4,
+        regions: 4,
+        region_mtbf_secs: 2000.0,
+        region_outage_secs: 500.0,
+        degrade_window_secs: 300.0,
+        degrade_floor: 0.25,
+        ..AvailabilityConfig::default()
+    }
+}
+
+#[test]
+fn all_clients_in_a_region_flip_together_on_outages() {
+    let population = 16;
+    let mut direct = CorrelatedModel::build(&cfg(), population, 77);
+    let mut facade = AvailabilityModel::build(&cfg(), population, 77).unwrap();
+    let horizon = 60_000.0;
+    let mut outages_seen = 0;
+    for r in 0..4 {
+        let windows = direct.outage_windows(r, horizon);
+        assert!(!windows.is_empty(), "region {r} never failed over {horizon}s");
+        outages_seen += windows.len();
+        for &(start, end) in &windows {
+            assert!(end > start, "degenerate window [{start}, {end})");
+            // Sample through the window: every client of the region must be
+            // offline through BOTH surfaces (direct model and facade).
+            for i in 0..5 {
+                let t = start + (end - start) * (2 * i + 1) as f64 / 10.0;
+                for c in (0..population).filter(|&c| c % 4 == r) {
+                    assert!(!direct.is_available(c, t), "client {c} up in outage at {t}");
+                    assert!(!facade.is_available(c, t), "facade disagrees at {t}");
+                }
+            }
+        }
+    }
+    assert!(outages_seen >= 8, "only {outages_seen} outages — config too calm to test");
+}
+
+#[test]
+fn marginal_online_fraction_tracks_the_configured_target() {
+    let c = cfg();
+    let population = 32;
+    let mut m = AvailabilityModel::build(&c, population, 3).unwrap();
+    let horizon = 400_000.0;
+    let region_up = c.region_mtbf_secs / (c.region_mtbf_secs + c.region_outage_secs);
+    let expected = c.markov_steady_state() * region_up;
+    let fractions: Vec<f64> = (0..population).map(|cl| m.online_fraction(cl, horizon)).collect();
+    for (cl, &f) in fractions.iter().enumerate() {
+        assert!(
+            (f - expected).abs() < 0.15,
+            "client {cl}: fraction {f} vs expected {expected}"
+        );
+    }
+    let mean = fractions.iter().sum::<f64>() / population as f64;
+    assert!(
+        (mean - expected).abs() < 0.05,
+        "population mean {mean} vs expected {expected}"
+    );
+}
+
+#[test]
+fn facade_schedules_are_seed_deterministic() {
+    let mut a = AvailabilityModel::build(&cfg(), 8, 123).unwrap();
+    let mut b = AvailabilityModel::build(&cfg(), 8, 123).unwrap();
+    for c in 0..8 {
+        let mut t = 0.0;
+        for _ in 0..60 {
+            let ta = a.next_transition(c, t).expect("correlated keeps flipping");
+            let tb = b.next_transition(c, t).unwrap();
+            assert_eq!(ta, tb, "same seed must give identical schedules");
+            assert_eq!(a.is_available(c, ta), b.is_available(c, ta));
+            assert_eq!(a.bandwidth_factor(c, t), b.bandwidth_factor(c, t));
+            assert_eq!(a.survival_prob(c, t, 300.0), b.survival_prob(c, t, 300.0));
+            t = ta;
+        }
+    }
+    let mut other = AvailabilityModel::build(&cfg(), 8, 124).unwrap();
+    assert_ne!(
+        a.next_transition(0, 0.0),
+        other.next_transition(0, 0.0),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn degrade_before_drop_is_monotone_and_bounded() {
+    let c = cfg();
+    let mut direct = CorrelatedModel::build(&c, 8, 55);
+    let mut checked = 0;
+    for r in 0..4 {
+        let windows = direct.outage_windows(r, 120_000.0);
+        // Only outages whose preceding up-gap covers the whole ramp give a
+        // clean monotone approach (otherwise the earlier outage's own
+        // degradation overlaps).
+        for w in windows.windows(2) {
+            let gap = w[1].0 - w[0].1;
+            if gap <= c.degrade_window_secs + 50.0 {
+                continue;
+            }
+            let start = w[1].0;
+            let mut prev = f64::INFINITY;
+            for i in 0..=30 {
+                let t = start - c.degrade_window_secs + i as f64 * (c.degrade_window_secs / 30.0)
+                    - 1e-6;
+                let f = direct.bandwidth_factor(r, t); // client r sits in region r
+                assert!(
+                    (c.degrade_floor..=1.0).contains(&f),
+                    "factor {f} outside [floor, 1]"
+                );
+                assert!(f <= prev + 1e-12, "factor recovered approaching the outage");
+                prev = f;
+            }
+            assert_eq!(
+                direct.bandwidth_factor(r, start - c.degrade_window_secs - 10.0),
+                1.0,
+                "factor must be exactly 1.0 outside the window"
+            );
+            assert!(
+                direct.bandwidth_factor(r, start - 1.0) < c.degrade_floor + 0.05,
+                "factor must approach the floor at the outage edge"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 3, "only {checked} clean approaches found — config too noisy");
+}
+
+#[test]
+fn bandwidth_factor_is_exactly_one_for_every_other_process() {
+    let kinds = [
+        AvailabilityConfig::default(), // always-on
+        AvailabilityConfig {
+            kind: AvailabilityKind::Markov,
+            ..AvailabilityConfig::default()
+        },
+        AvailabilityConfig {
+            kind: AvailabilityKind::Diurnal,
+            ..AvailabilityConfig::default()
+        },
+    ];
+    for c in kinds {
+        let mut m = AvailabilityModel::build(&c, 4, 1).unwrap();
+        for client in 0..4 {
+            for t in [0.0, 1234.5, 98_765.0] {
+                assert_eq!(
+                    m.bandwidth_factor(client, t),
+                    1.0,
+                    "{:?}: degrade coupling must be correlated-only",
+                    c.kind
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn composite_survival_is_zero_when_offline_and_interior_when_stochastic() {
+    let mut m = AvailabilityModel::build(&cfg(), 16, 9).unwrap();
+    let mut interior = 0;
+    for c in 0..16 {
+        let s = m.survival_prob(c, 0.0, 300.0);
+        assert!((0.0..=1.0).contains(&s));
+        if m.is_available(c, 0.0) {
+            assert!(s > 0.0, "online client with zero survival estimate");
+            if s < 1.0 {
+                interior += 1;
+            }
+        } else {
+            assert_eq!(s, 0.0, "offline client must have zero survival");
+        }
+    }
+    assert!(
+        interior > 0,
+        "every survival estimate was 0/1 — the correlated predictor is an oracle"
+    );
+}

@@ -104,6 +104,23 @@ fn cell_configs_round_trip_through_config_parse() {
 }
 
 #[test]
+fn sampler_axis_expands_and_canonicalizes() {
+    // The sampler axis goes through the same config/parse + registry
+    // canonicalization as strategies, so aliases land canonical in cells.
+    let grid = SweepGrid::new(RunConfig::default())
+        .axis("sampler", &["uniform", "survival", "drop_aware"]);
+    let cells = grid.cells().unwrap();
+    let names: Vec<&str> = cells.iter().map(|c| c.cfg.sampler.as_str()).collect();
+    assert_eq!(names, ["uniform", "stay-prob", "drop-aware"]);
+    assert_eq!(cells[1].label(), "sampler=survival", "labels keep the declared spelling");
+    // The packaged correlated-churn scenario composes with the axis.
+    let regional = scenario::resolve("cifar_regional").unwrap().config().unwrap();
+    assert_eq!(regional.availability.kind, AvailabilityKind::Correlated);
+    let grid = SweepGrid::new(regional).axis("sampler", &["uniform", "stay-prob"]);
+    assert_eq!(grid.cells().unwrap().len(), 2);
+}
+
+#[test]
 fn invalid_cells_fail_with_cell_context() {
     let err = format!(
         "{:#}",

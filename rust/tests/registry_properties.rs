@@ -5,8 +5,28 @@
 //! `strategies_integration.rs`).
 
 use timelyfl::config::{parse as cfgparse, RunConfig};
-use timelyfl::coordinator::registry;
+use timelyfl::coordinator::{registry, sampler};
 use timelyfl::metrics::events::{self, ClientWorkload, DropCause, RunEvent};
+
+#[test]
+fn every_registered_sampler_is_listed_and_canonicalizes_through_config() {
+    assert!(sampler::SAMPLERS.len() >= 3, "uniform + stay-prob + drop-aware");
+    for info in sampler::SAMPLERS {
+        let mut cfg = RunConfig::default();
+        cfgparse::apply_cli(&mut cfg, &format!("sampler={}", info.name)).unwrap();
+        assert_eq!(cfg.sampler, info.name);
+        cfg.validate().unwrap();
+        for alias in info.aliases {
+            cfgparse::apply_cli(&mut cfg, &format!("sampler={alias}")).unwrap();
+            assert_eq!(cfg.sampler, info.name, "alias {alias} not canonicalized");
+        }
+    }
+    // Unknown samplers fail at parse AND at validate.
+    let mut cfg = RunConfig::default();
+    assert!(cfgparse::apply_cli(&mut cfg, "sampler=roulette").is_err());
+    cfg.sampler = "roulette".into();
+    assert!(cfg.validate().is_err());
+}
 
 #[test]
 fn every_registered_strategy_is_listed_and_resolvable() {
@@ -63,8 +83,8 @@ fn event_schema_round_trips_through_util_json() {
             avail_dropped: 1,
             mean_train_loss: Some(2.5),
             workloads: vec![
-                ClientWorkload { client: 0, epochs: 3, alpha: 1.0 },
-                ClientWorkload { client: 5, epochs: 1, alpha: 0.5 },
+                ClientWorkload { client: 0, epochs: 3, alpha: 1.0, stay_prob: 1.0 },
+                ClientWorkload { client: 5, epochs: 1, alpha: 0.5, stay_prob: 0.75 },
             ],
         },
         RunEvent::RoundComplete {

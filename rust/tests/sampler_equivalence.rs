@@ -1,0 +1,145 @@
+//! The sampler seam's headline suite: under `always-on` availability every
+//! client's survival probability is trivially 1.0 and the drop ledger
+//! never records a churn loss, so the `stay-prob` and `drop-aware`
+//! policies MUST take the uniform code path — same RNG calls, same order —
+//! and produce byte-identical semantic `RunReport` JSON to
+//! `sampler = uniform`, for every registered strategy. Any divergence is
+//! an RNG-ordering bug in the seam, not a policy difference.
+//!
+//! A second group locks the seam under real correlated churn: weighted
+//! sampling must stay seed-deterministic and sane (the *benefit* of the
+//! policies is measured by `benches/sampler_regional_churn.rs`, not
+//! asserted here — a property test should not encode a tuning claim).
+//!
+//! Needs the AOT artifacts (real PJRT training), like
+//! `strategies_integration.rs`.
+
+use timelyfl::availability::AvailabilityKind;
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::{registry, sampler, Simulation};
+use timelyfl::metrics::RunReport;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn tiny_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "kws_lite".into();
+    cfg.strategy = strategy.to_string();
+    cfg.sampler = sampler_name.to_string();
+    cfg.population = 12;
+    cfg.concurrency = 6;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.max_local_epochs = 2;
+    cfg.sim_model_bytes = 3.2e5;
+    cfg
+}
+
+fn regional_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = tiny_cfg(strategy, sampler_name);
+    cfg.availability.kind = AvailabilityKind::Correlated;
+    cfg.availability.regions = 3;
+    cfg.availability.region_mtbf_secs = 500.0;
+    cfg.availability.region_outage_secs = 250.0;
+    cfg.availability.mean_online_secs = 600.0;
+    cfg.availability.mean_offline_secs = 200.0;
+    cfg.availability.degrade_window_secs = 120.0;
+    cfg.sampler_horizon_secs = 200.0;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunReport {
+    Simulation::new(cfg, ARTIFACTS)
+        .expect("build simulation (run `make artifacts` first)")
+        .run()
+        .expect("run simulation")
+}
+
+/// Report JSON with the only legitimately nondeterministic field zeroed.
+/// Everything else — round schedule, participants, drops, learning curve,
+/// simulated clock, event counts, wasted-work ledger — participates in the
+/// byte-for-byte comparison.
+fn semantic_json(r: &RunReport) -> String {
+    let mut r = r.clone();
+    r.wall_secs = 0.0;
+    r.to_json().to_string()
+}
+
+#[test]
+fn weighted_samplers_are_bit_identical_to_uniform_under_always_on() {
+    for info in registry::STRATEGIES {
+        let reference = semantic_json(&run(tiny_cfg(info.name, "uniform")));
+        for policy in ["stay-prob", "drop-aware"] {
+            let got = semantic_json(&run(tiny_cfg(info.name, policy)));
+            assert_eq!(
+                got, reference,
+                "{} + {policy}: always-on run diverged from uniform — \
+                 an RNG-ordering bug in the sampler seam",
+                info.name
+            );
+        }
+    }
+}
+
+#[test]
+fn sampler_aliases_resolve_to_the_same_run() {
+    // `survival` is an alias of `stay-prob`: same canonical policy, same
+    // bytes (exercises the registry canonicalization end to end).
+    let canonical = semantic_json(&run(tiny_cfg("TimelyFL", "stay-prob")));
+    let mut cfg = tiny_cfg("TimelyFL", "uniform");
+    cfg.sampler = sampler::resolve("survival").unwrap().name.to_string();
+    assert_eq!(semantic_json(&run(cfg)), canonical);
+}
+
+#[test]
+fn weighted_samplers_are_seed_deterministic_under_correlated_churn() {
+    for policy in ["uniform", "stay-prob", "drop-aware"] {
+        let a = run(regional_cfg("TimelyFL", policy));
+        let b = run(regional_cfg("TimelyFL", policy));
+        assert_eq!(
+            semantic_json(&a),
+            semantic_json(&b),
+            "{policy}: correlated-churn run not reproducible"
+        );
+    }
+}
+
+#[test]
+fn every_strategy_survives_correlated_churn_with_every_sampler() {
+    for info in registry::STRATEGIES {
+        for policy in ["uniform", "stay-prob", "drop-aware"] {
+            let cfg = regional_cfg(info.name, policy);
+            let r = run(cfg.clone());
+            assert!(r.total_rounds > 0, "{} + {policy}: no rounds", info.name);
+            assert_eq!(r.participation.len(), cfg.population);
+            for &p in &r.participation {
+                assert!((0.0..=1.0).contains(&p));
+            }
+            assert!(
+                r.mean_online_fraction() < 1.0,
+                "{} + {policy}: correlated churn never engaged",
+                info.name
+            );
+            for p in &r.eval_points {
+                assert!(p.mean_loss.is_finite() && p.metric.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn stay_prob_under_correlated_churn_diverges_from_uniform() {
+    // The opposite anchor of the always-on equivalence: once survival
+    // probabilities actually differ, the weighted policy must make
+    // different choices at the same seed (otherwise the seam is wired to
+    // the degenerate path unconditionally). Participation vectors are the
+    // most sensitive observable.
+    let uniform = run(regional_cfg("TimelyFL", "uniform"));
+    let weighted = run(regional_cfg("TimelyFL", "stay-prob"));
+    assert_ne!(
+        uniform.participation, weighted.participation,
+        "stay-prob made identical choices to uniform under heavy correlated churn"
+    );
+}

@@ -633,10 +633,33 @@ fn golden_reports_bit_identical() {
     };
     let write = std::env::var("TIMELYFL_WRITE_GOLDENS").is_ok();
     let require = std::env::var("TIMELYFL_REQUIRE_GOLDENS").is_ok();
-    for name in ["TimelyFL", "FedBuff", "SyncFL", "SemiAsync"] {
-        let r = run(tiny_cfg(name));
+    // Every registered strategy under the always-on default, plus one
+    // sampler × correlated-churn configuration so the committed-goldens
+    // gate also protects the sampling subsystem and the correlated
+    // process (any RNG-order or schedule change there shows up here).
+    let mut cases: Vec<(String, RunConfig)> = ["TimelyFL", "FedBuff", "SyncFL", "SemiAsync"]
+        .iter()
+        .map(|&name| (name.to_lowercase(), tiny_cfg(name)))
+        .collect();
+    let mut regional = tiny_cfg("TimelyFL");
+    regional.sampler = "stay-prob".into();
+    regional.sampler_horizon_secs = 200.0;
+    {
+        use timelyfl::availability::AvailabilityKind;
+        let a = &mut regional.availability;
+        a.kind = AvailabilityKind::Correlated;
+        a.regions = 3;
+        a.region_mtbf_secs = 500.0;
+        a.region_outage_secs = 250.0;
+        a.mean_online_secs = 600.0;
+        a.mean_offline_secs = 200.0;
+        a.degrade_window_secs = 120.0;
+    }
+    cases.push(("timelyfl_stayprob_correlated".into(), regional));
+    for (stem, cfg) in cases {
+        let r = run(cfg);
         let fp = fingerprint(&r);
-        let path = dir.join(format!("{}.golden.txt", name.to_lowercase()));
+        let path = dir.join(format!("{stem}.golden.txt"));
         if write {
             std::fs::create_dir_all(&dir).expect("create goldens dir");
             std::fs::write(&path, &fp).expect("write golden");
@@ -646,7 +669,7 @@ fn golden_reports_bit_identical() {
         match std::fs::read_to_string(&path) {
             Ok(want) => assert_eq!(
                 fp, want,
-                "{name}: report diverged from its golden — an engine change broke \
+                "{stem}: report diverged from its golden — an engine change broke \
                  seed-identity (regenerate with TIMELYFL_WRITE_GOLDENS=1 only if intentional)"
             ),
             Err(_) if require => panic!(

@@ -39,6 +39,7 @@ else
     cargo test -q --lib
     cargo test -q --test coordinator_properties
     cargo test -q --test availability_properties
+    cargo test -q --test correlated_churn_properties
     cargo test -q --test registry_properties
     cargo test -q --test wasted_work_properties
     cargo test -q --test experiment_properties
