@@ -1,0 +1,122 @@
+//! Fleet-scale bench — clients vs wall-time and peak RSS for the lazy,
+//! indexed sim core against the historical eager core.
+//!
+//! The claim being measured: with `fleet_core = lazy` the per-round cost is
+//! O(active + transitions·log n) instead of O(population), so wall-time
+//! stays near-flat as the fleet grows from 10^3 to 10^6 clients while the
+//! eager core degrades linearly. Training load is held CONSTANT across
+//! scale points (same concurrency, same rounds, same tiny KWS model), so
+//! any wall-time growth is sim-core overhead by construction.
+//!
+//! Output: an aligned table on stdout plus `results/BENCH_fleet.json`
+//! recording the full curve (population, core, wall seconds, simulated
+//! seconds, rounds, events, peak RSS) for EXPERIMENTS.md and CI trending.
+//! Peak RSS is the process high-water mark (`VmHWM` from
+//! `/proc/self/status`) sampled after each point — monotone by definition,
+//! so the meaningful reading is the value at each population's FIRST
+//! appearance in the run order (ascending, lazy before eager).
+
+use std::time::Instant;
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::experiment::scenario;
+use timelyfl::fleet::FleetCore;
+use timelyfl::metrics::report::Table;
+use timelyfl::util::json::Json;
+
+/// Process peak-RSS high-water mark in kB (Linux; None elsewhere).
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "fleet_scale",
+        "fleet subsystem scaling (lazy vs eager sim core, 10^3..10^6 clients)",
+    );
+    let bench = Bench::new()?;
+
+    // Ascending fleet sizes; the eager core is only run up to the cutoff
+    // where its O(population)-per-round scans stay affordable — the last
+    // point is exactly the regime the lazy core exists for.
+    let populations: &[usize] = if bench.scale.fast {
+        &[1_000, 10_000, 100_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    let eager_cutoff = 100_000;
+    let base = scenario::resolve("fleet_1m")?.config()?;
+
+    let mut table = Table::new(&[
+        "population",
+        "core",
+        "wall_secs",
+        "sim_hours",
+        "rounds",
+        "events",
+        "peak_rss_mb",
+    ]);
+    let mut points = Vec::new();
+
+    for &population in populations {
+        for core in [FleetCore::Lazy, FleetCore::Eager] {
+            if core == FleetCore::Eager && population > eager_cutoff {
+                eprintln!("  {population} / eager: skipped (cutoff {eager_cutoff})");
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.population = population;
+            // Constant training load across points: fixed concurrency and
+            // round budget, so the x-axis varies ONLY the idle fleet.
+            cfg.concurrency = 64;
+            cfg.rounds = bench.scale.rounds(4).min(4);
+            cfg.eval_every = cfg.rounds;
+            cfg.fleet_core = core;
+            eprintln!("  {population} / {} ...", core.name());
+            let start = Instant::now();
+            let report = bench.run(cfg)?;
+            let wall = start.elapsed().as_secs_f64();
+            let rss_kb = peak_rss_kb();
+            table.row(vec![
+                population.to_string(),
+                core.name().into(),
+                format!("{wall:.2}"),
+                format!("{:.2}", report.sim_secs / 3600.0),
+                report.total_rounds.to_string(),
+                report.events_processed.to_string(),
+                rss_kb.map_or("-".into(), |kb| format!("{:.1}", kb as f64 / 1024.0)),
+            ]);
+            points.push(Json::obj(vec![
+                ("population", Json::num(population as f64)),
+                ("core", Json::str(core.name())),
+                ("wall_secs", Json::num(wall)),
+                ("sim_secs", Json::num(report.sim_secs)),
+                ("rounds", Json::num(report.total_rounds as f64)),
+                ("events_processed", Json::num(report.events_processed as f64)),
+                ("peak_rss_kb", rss_kb.map_or(Json::Null, |kb| Json::num(kb as f64))),
+            ]));
+        }
+    }
+
+    let rendered = table.render();
+    println!("{rendered}");
+    println!(
+        "shape target: lazy wall-time near-flat in population at fixed concurrency;\n\
+         eager grows with the idle fleet it keeps scanning."
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet_scale")),
+        ("scenario", Json::str("fleet_1m")),
+        ("concurrency", Json::num(64.0)),
+        ("points", Json::arr(points)),
+    ]);
+    benchkit::write_result("BENCH_fleet.json", &json.to_string());
+    benchkit::write_result("fleet_scale.txt", &rendered);
+    Ok(())
+}

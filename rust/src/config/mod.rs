@@ -8,6 +8,7 @@ pub mod parse;
 use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityConfig;
 use crate::devices::FleetConfig;
+use crate::fleet::{FleetCore, HierarchyConfig};
 
 /// Full specification of one simulated FL run.
 #[derive(Clone, Debug)]
@@ -85,6 +86,16 @@ pub struct RunConfig {
     /// balance; see DESIGN.md §3).
     pub sim_model_bytes: f64,
 
+    /// Sim-core implementation (`fleet_core = eager | lazy`). `lazy` swaps
+    /// the engine's O(n) availability scans for the indexed
+    /// `fleet::LazyAvailability` core — byte-identical `RunReport` JSON,
+    /// wall-clock independent of idle fleet size (the 10^6-client switch).
+    pub fleet_core: FleetCore,
+    /// Aggregation topology between clients and the root coordinator
+    /// (`hierarchy = flat | two-tier` + `hier_regions` / `hier_fan_in` /
+    /// `hier_forward`). Flat is the historical path.
+    pub hierarchy: HierarchyConfig,
+
     /// Escape hatch for A/B-measuring the deferred dispatch path: run a
     /// dispatched client's PJRT training at dispatch time (the historical
     /// behaviour) instead of deferring it to the generation-validated
@@ -141,6 +152,8 @@ impl Default for RunConfig {
             fleet: FleetConfig::default(),
             availability: AvailabilityConfig::default(),
             sim_model_bytes: 1.09e6, // ResNet-20 f32 ~ 1.09 MB
+            fleet_core: FleetCore::Eager,
+            hierarchy: HierarchyConfig::default(),
             eager_train: false,
             eval_every: 10,
             eval_batches: 4,
@@ -284,6 +297,7 @@ impl RunConfig {
         anyhow::ensure!(self.sim_model_bytes > 0.0, "sim_model_bytes > 0");
         anyhow::ensure!(self.eval_every > 0, "eval_every >= 1");
         self.availability.validate()?;
+        self.hierarchy.validate()?;
         Ok(())
     }
 }

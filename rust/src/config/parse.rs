@@ -8,6 +8,69 @@ use super::RunConfig;
 use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityKind;
 use crate::coordinator::{registry, sampler};
+use crate::fleet::{FleetCore, ForwardPolicy, Topology};
+
+/// Every key `apply_override` accepts, in match-arm order — the single
+/// source for the unknown-key error (same courtesy the preset, strategy
+/// and sampler registries give for unknown names) and for `--axis`
+/// validation in sweeps. A sync test asserts every listed key actually
+/// parses.
+pub const KNOWN_KEYS: &[&str] = &[
+    "model",
+    "strategy",
+    "sampler",
+    "sampler_horizon_secs",
+    "population",
+    "concurrency",
+    "k_fraction",
+    "rounds",
+    "sim_time_budget",
+    "client_lr",
+    "server_opt",
+    "server_lr",
+    "steps_per_epoch",
+    "max_local_epochs",
+    "fedbuff_local_epochs",
+    "max_staleness",
+    "adaptive",
+    "deadline_grace",
+    "estimate_noise",
+    "dropout_prob",
+    "dirichlet_alpha",
+    "data_seed",
+    "template_scale",
+    "lm_noise",
+    "availability",
+    "avail_frac",
+    "avail_mean_online_secs",
+    "avail_mean_offline_secs",
+    "avail_dwell_sigma",
+    "avail_diurnal_period_secs",
+    "avail_diurnal_duty",
+    "avail_diurnal_shards",
+    "avail_trace_path",
+    "avail_regions",
+    "avail_region_mtbf_secs",
+    "avail_region_outage_secs",
+    "avail_degrade_window_secs",
+    "avail_degrade_floor",
+    "median_epoch_secs",
+    "compute_spread",
+    "median_bandwidth",
+    "bandwidth_spread",
+    "sim_model_bytes",
+    "fleet_core",
+    "hierarchy",
+    "hier_regions",
+    "hier_fan_in",
+    "hier_forward",
+    "eager_train",
+    "eval_every",
+    "eval_batches",
+    "target_metric",
+    "seed",
+    "init_seed",
+];
 
 /// Parse one `key = value` line into an override on `cfg`.
 pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
@@ -89,6 +152,11 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "median_bandwidth" => cfg.fleet.median_bandwidth = v.parse()?,
         "bandwidth_spread" => cfg.fleet.bandwidth_spread = v.parse()?,
         "sim_model_bytes" => cfg.sim_model_bytes = v.parse()?,
+        "fleet_core" => cfg.fleet_core = FleetCore::parse(v)?,
+        "hierarchy" => cfg.hierarchy.topology = Topology::parse(v)?,
+        "hier_regions" => cfg.hierarchy.regions = v.parse()?,
+        "hier_fan_in" => cfg.hierarchy.fan_in = v.parse()?,
+        "hier_forward" => cfg.hierarchy.forward = ForwardPolicy::parse(v)?,
         "eager_train" => cfg.eager_train = parse_bool(v)?,
         "eval_every" => cfg.eval_every = v.parse()?,
         "eval_batches" => cfg.eval_batches = v.parse()?,
@@ -101,7 +169,10 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         }
         "seed" => cfg.seed = v.parse()?,
         "init_seed" => cfg.init_seed = v.parse()?,
-        other => anyhow::bail!("unknown config key {other:?}"),
+        other => anyhow::bail!(
+            "unknown config key {other:?} (known: {})",
+            KNOWN_KEYS.join(", ")
+        ),
     }
     Ok(())
 }
@@ -222,6 +293,58 @@ mod tests {
         assert_eq!(cfg.model, "text");
         assert!(apply_cli(&mut cfg, "no_equals").is_err());
         assert!(apply_cli(&mut cfg, "bogus_key=1").is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_known_keys() {
+        // The sweep `--axis` / `--set` idiom: a typo'd key gets the full
+        // catalogue, like unknown presets and unknown strategies do.
+        let mut cfg = RunConfig::default();
+        let err = format!("{:#}", apply_cli(&mut cfg, "populaton=64").unwrap_err());
+        for key in ["population", "avail_frac", "fleet_core", "hierarchy", "seed"] {
+            assert!(err.contains(key), "error should list {key}: {err}");
+        }
+    }
+
+    #[test]
+    fn known_keys_catalogue_stays_in_sync_with_the_match() {
+        // Every advertised key must reach a real match arm: applying it may
+        // fail on the VALUE, but never as an unknown KEY.
+        for key in KNOWN_KEYS {
+            let mut cfg = RunConfig::default();
+            if let Err(e) = apply_override(&mut cfg, key, "1") {
+                let msg = format!("{e:#}");
+                assert!(
+                    !msg.contains("unknown config key"),
+                    "{key} is listed in KNOWN_KEYS but has no match arm: {msg}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "fleet_core = lazy\n\
+             hierarchy = two-tier\n\
+             hier_regions = 32\n\
+             hier_fan_in = 64\n\
+             hier_forward = uniform\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet_core, crate::fleet::FleetCore::Lazy);
+        assert_eq!(cfg.hierarchy.topology, crate::fleet::Topology::TwoTier);
+        assert_eq!(cfg.hierarchy.regions, 32);
+        assert_eq!(cfg.hierarchy.fan_in, 64);
+        assert_eq!(cfg.hierarchy.forward, crate::fleet::ForwardPolicy::Uniform);
+        cfg.validate().unwrap();
+        apply_cli(&mut cfg, "hierarchy=flat").unwrap();
+        assert_eq!(cfg.hierarchy.topology, crate::fleet::Topology::Flat);
+        assert!(apply_cli(&mut cfg, "fleet_core=turbo").is_err());
+        assert!(apply_cli(&mut cfg, "hierarchy=ring").is_err());
+        assert!(apply_cli(&mut cfg, "hier_forward=median").is_err());
     }
 
     #[test]

@@ -49,6 +49,7 @@ use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, Trai
 use super::{local_time, Recorder, Simulation};
 use crate::availability::{AvailabilityModel, SEED_SALT};
 use crate::devices::RoundConditions;
+use crate::fleet::{ClientTables, FleetCore, LazyAvailability};
 use crate::metrics::events::{ClientWorkload, DropCause, EventSink, RunEvent};
 use crate::metrics::RunReport;
 use crate::model::{ParamVec, Update};
@@ -65,7 +66,7 @@ use crate::util::rng::Rng;
 /// client's generation, invalidating the pending finish.
 pub struct ClientFinish {
     pub client: usize,
-    pub gen: u64,
+    pub gen: u32,
     /// Global model version the client trained against (for staleness).
     pub base_version: u64,
     pub update: Update,
@@ -84,7 +85,7 @@ pub enum EngineEvent {
     Transition { client: usize },
     /// A dispatched client's simulated local training completes. Valid iff
     /// `gen` still matches the client's dispatch generation.
-    Finish { client: usize, gen: u64 },
+    Finish { client: usize, gen: u32 },
     /// A strategy-scheduled timer (deadline-gated protocols re-arm it from
     /// [`EventStrategy::on_alarm`]).
     Alarm,
@@ -240,19 +241,17 @@ pub struct SimEngine<'a> {
     /// `coordinator::sampler`): every cohort draw and slot-refill pick
     /// goes through it.
     sampler: Box<dyn ClientSampler>,
-    /// Per-client decision score of the sampler's LAST consideration of
-    /// each client (1.0 until a weighted policy scores it); stamped onto
-    /// dispatch-carrying event records as `stay_prob`.
-    sampler_scores: Vec<f64>,
-    /// Drop ledger for the `drop-aware` policy: per-client dispatches that
-    /// ran to completion...
-    delivered: Vec<u64>,
-    /// ...and per-client dispatches lost to availability churn.
-    churned: Vec<u64>,
-    busy: Vec<bool>,
-    gens: Vec<u64>,
-    /// Per-client stashed dispatch work (at most one — `busy` gates).
-    pending: Vec<Option<PendingDispatch>>,
+    /// Per-client ledgers (sampler scores, delivered/churned counts, busy
+    /// flags, dispatch generations), struct-of-arrays (`fleet::ClientTables`).
+    tables: ClientTables,
+    /// The lazy sim core (`fleet_core = lazy`): incrementally-maintained
+    /// online-set index + next-transition agenda. `None` keeps the
+    /// historical eager scans.
+    lazy: Option<LazyAvailability>,
+    /// Per-client stashed dispatch work (at most one — the busy flag
+    /// gates), keyed sparsely so memory tracks in-flight concurrency
+    /// rather than fleet size.
+    pending: BTreeMap<usize, PendingDispatch>,
     snapshots: SnapshotStore,
     in_flight: usize,
     completed_rounds: usize,
@@ -279,9 +278,16 @@ impl<'a> SimEngine<'a> {
         let cfg = &sim.cfg;
         let mut rng = Rng::seed_from(cfg.seed);
         let client_rngs: Vec<Rng> = (0..cfg.population).map(|i| rng.fork(i as u64)).collect();
-        let avail =
+        let mut avail =
             AvailabilityModel::build(&cfg.availability, cfg.population, cfg.seed ^ SEED_SALT)?;
         let sampler = (sampler::resolve(&cfg.sampler)?.build)();
+        // The lazy core's seeding pass queries the availability model in
+        // client order at t=0 — the same order (and therefore the same
+        // markov timeline materialisations) as the eager paths' first scan.
+        let lazy = match cfg.fleet_core {
+            FleetCore::Lazy => Some(LazyAvailability::new(&mut avail)),
+            FleetCore::Eager => None,
+        };
         Ok(SimEngine {
             sim,
             rng,
@@ -290,12 +296,9 @@ impl<'a> SimEngine<'a> {
             events: EventQueue::new(),
             recorder: Recorder::new(cfg.population),
             sampler,
-            sampler_scores: vec![1.0; cfg.population],
-            delivered: vec![0; cfg.population],
-            churned: vec![0; cfg.population],
-            busy: vec![false; cfg.population],
-            gens: vec![0; cfg.population],
-            pending: (0..cfg.population).map(|_| None).collect(),
+            tables: ClientTables::new(cfg.population),
+            lazy,
+            pending: BTreeMap::new(),
             snapshots: SnapshotStore::default(),
             in_flight: 0,
             completed_rounds: 0,
@@ -317,7 +320,7 @@ impl<'a> SimEngine<'a> {
 
     /// Is `client` currently dispatched?
     pub fn is_busy(&self, client: usize) -> bool {
-        self.busy[client]
+        self.tables.is_busy(client)
     }
 
     /// Clients currently training (bounded by `cfg.concurrency`).
@@ -342,15 +345,15 @@ impl<'a> SimEngine<'a> {
     /// policy. Under `sampler = uniform` the RNG draws are exactly the
     /// pre-seam partial Fisher–Yates, so always-on runs stay bit-identical.
     pub fn sample_cohort(&mut self, now: SimTime, pool: &[usize], want: usize) -> Vec<usize> {
-        let SimEngine { sim, sampler, rng, avail, delivered, churned, sampler_scores, .. } = self;
+        let SimEngine { sim, sampler, rng, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
             horizon: sim.cfg.sampler_horizon_secs,
             rng,
             avail,
-            delivered,
-            churned,
-            scores: sampler_scores,
+            delivered: &tables.delivered,
+            churned: &tables.churned,
+            scores: &mut tables.scores,
         };
         sampler.sample(&mut ctx, pool, want)
     }
@@ -365,15 +368,15 @@ impl<'a> SimEngine<'a> {
         want: usize,
     ) -> Vec<usize> {
         let mut rng = self.rng.clone();
-        let SimEngine { sim, sampler, avail, delivered, churned, sampler_scores, .. } = self;
+        let SimEngine { sim, sampler, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
             horizon: sim.cfg.sampler_horizon_secs,
             rng: &mut rng,
             avail,
-            delivered,
-            churned,
-            scores: sampler_scores,
+            delivered: &tables.delivered,
+            churned: &tables.churned,
+            scores: &mut tables.scores,
         };
         sampler.sample(&mut ctx, pool, want)
     }
@@ -383,15 +386,15 @@ impl<'a> SimEngine<'a> {
     /// draws exactly the historical `usize_below`).
     pub fn pick_client(&mut self, now: SimTime, pool: &[usize]) -> usize {
         debug_assert!(!pool.is_empty(), "pick_client from an empty pool");
-        let SimEngine { sim, sampler, rng, avail, delivered, churned, sampler_scores, .. } = self;
+        let SimEngine { sim, sampler, rng, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
             horizon: sim.cfg.sampler_horizon_secs,
             rng,
             avail,
-            delivered,
-            churned,
-            scores: sampler_scores,
+            delivered: &tables.delivered,
+            churned: &tables.churned,
+            scores: &mut tables.scores,
         };
         sampler.pick_one(&mut ctx, pool)
     }
@@ -421,7 +424,7 @@ impl<'a> SimEngine<'a> {
                 client,
                 epochs,
                 alpha,
-                stay_prob: self.sampler_scores[client],
+                stay_prob: self.tables.scores[client],
             });
         }
     }
@@ -437,7 +440,7 @@ impl<'a> SimEngine<'a> {
         match cause {
             DropCause::Availability => {
                 self.avail_dropped_pending += 1;
-                self.churned[client] += 1;
+                self.tables.churned[client] += 1;
             }
             DropCause::Deadline => self.dropped_pending += 1,
         }
@@ -453,8 +456,19 @@ impl<'a> SimEngine<'a> {
     /// When the whole population is momentarily offline, advance the clock
     /// (as an event) to the next availability transition. `false` = no
     /// transition will ever come — permanently offline, end gracefully.
+    /// The lazy core peeks its agenda (O(1)) where the eager core scans
+    /// every client; both see the same earliest timestamp, and the wait is
+    /// a popped Tick either way, so `events_processed` agrees.
     fn idle_until_transition(&mut self) -> bool {
-        let Some(t) = self.avail.earliest_transition(self.events.now()) else {
+        let now = self.events.now();
+        let next = match self.lazy.as_mut() {
+            Some(lazy) => {
+                lazy.advance_to(&mut self.avail, now);
+                lazy.earliest_transition()
+            }
+            None => self.avail.earliest_transition(now),
+        };
+        let Some(t) = next else {
             return false;
         };
         self.events.schedule_at(t, EngineEvent::Tick);
@@ -518,20 +532,15 @@ impl<'a> SimEngine<'a> {
         let cfg = &sim.cfg;
         while self.completed_rounds < cfg.rounds {
             let now = self.events.now();
-            // When everyone is online, `online` is exactly 0..population and
-            // index-sampling from it is bit-identical to sampling the whole
-            // population (the always-on compatibility path).
-            let online = self.avail.online_clients(now);
-            if online.is_empty() {
+            let Some(sampled) = self.sample_round_cohort(now) else {
+                // Whole population offline right now.
                 if !self.idle_until_transition()
                     || self.recorder.should_stop(sim, self.events.now())
                 {
                     break;
                 }
                 continue;
-            }
-            let want = cfg.concurrency.min(online.len());
-            let sampled = self.sample_cohort(now, &online, want);
+            };
 
             let round = self.completed_rounds;
             let outcome = strat.run_round(&mut RoundCtx {
@@ -556,6 +565,69 @@ impl<'a> SimEngine<'a> {
             }
         }
         Ok(())
+    }
+
+    /// Draw one round's cohort from the currently-online population, or
+    /// `None` when nobody is online. This is the round drivers' only
+    /// cohort source, and where the two sim cores fork:
+    ///
+    /// - **eager** scans all N clients (`online_clients`) and samples from
+    ///   the materialised ascending pool — when everyone is online that
+    ///   pool is exactly `0..population`, the always-on compatibility path;
+    /// - **lazy** sweeps elapsed transitions off its agenda and, for a
+    ///   uniform-equivalent sampler, draws straight from the online-set
+    ///   index with the **same RNG stream** (`OnlineSetIndex::sample_distinct`
+    ///   replays `sample_without_replacement`'s draws), never touching all
+    ///   N. Weighted samplers score every candidate, so they still get the
+    ///   materialised (ascending, therefore identical) pool.
+    fn sample_round_cohort(&mut self, now: SimTime) -> Option<Vec<usize>> {
+        let cap = self.sim.cfg.concurrency;
+        match self.lazy.as_mut() {
+            Some(lazy) => {
+                lazy.advance_to(&mut self.avail, now);
+                if lazy.online().is_empty() {
+                    return None;
+                }
+                let want = cap.min(lazy.online().len());
+                if self.sampler.uniform_equivalent() {
+                    Some(lazy.online().sample_distinct(&mut self.rng, want))
+                } else {
+                    let pool = lazy.online().to_vec();
+                    Some(self.sample_cohort(now, &pool, want))
+                }
+            }
+            None => {
+                let online = self.avail.online_clients(now);
+                if online.is_empty() {
+                    return None;
+                }
+                let want = cap.min(online.len());
+                Some(self.sample_cohort(now, &online, want))
+            }
+        }
+    }
+
+    /// Pick one idle-online client for an event-driven slot refill, or
+    /// `None` when nobody is eligible. Lazy core + uniform-equivalent
+    /// sampler: one O(log n) indexed draw consuming the exact
+    /// `usize_below(pool.len())` the eager path spends on
+    /// `pool[rng.usize_below(..)]`. Everything else materialises the
+    /// idle-online pool and routes through the policy.
+    pub fn refill_pick(&mut self, now: SimTime) -> Option<usize> {
+        if self.sampler.uniform_equivalent() {
+            if let Some(lazy) = self.lazy.as_ref() {
+                if lazy.online().is_empty() {
+                    return None;
+                }
+                return Some(lazy.online().sample_one(&mut self.rng));
+            }
+        }
+        let idle = self.idle_online_clients(now);
+        if idle.is_empty() {
+            None
+        } else {
+            Some(self.pick_client(now, &idle))
+        }
     }
 
     /// The shared event-driven loop: seeds + chains availability
@@ -619,9 +691,16 @@ impl<'a> SimEngine<'a> {
                         sim_secs: now,
                         online: online_now,
                     });
+                    // Event mode keeps every transition on the main queue
+                    // (`events_processed` is part of the report); the lazy
+                    // core's index rides along as the idle-online refill
+                    // pool, maintained right here.
+                    if let Some(lazy) = self.lazy.as_mut() {
+                        lazy.note_event_transition(client, online_now, self.tables.is_busy(client));
+                    }
                     if online_now {
                         strat.on_client_online(self, client)?;
-                    } else if self.busy[client] {
+                    } else if self.tables.is_busy(client) {
                         // Went offline mid-training: the in-flight update is
                         // lost with it (and its deferred execution skipped).
                         self.cancel_in_flight(client);
@@ -629,12 +708,17 @@ impl<'a> SimEngine<'a> {
                     }
                 }
                 EngineEvent::Finish { client, gen } => {
-                    if gen != self.gens[client] {
+                    if gen != self.tables.gen(client) {
                         continue; // cancelled by an offline transition
                     }
                     let fin = self.resolve_finish(client, gen)?;
-                    self.busy[client] = false;
+                    self.tables.set_busy(client, false);
                     self.in_flight -= 1;
+                    if let Some(lazy) = self.lazy.as_mut() {
+                        // A gen-valid finish means the client stayed online
+                        // throughout — it rejoins the idle-online pool.
+                        lazy.note_idle(client);
+                    }
                     strat.on_finish(self, now, fin)?;
                     if self.stop {
                         break;
@@ -654,11 +738,12 @@ impl<'a> SimEngine<'a> {
     /// Turn a generation-valid finish marker into the hook payload: unstash
     /// an eager outcome, or run the deferred plan's PJRT executions now —
     /// the only point where the deferred path touches the accelerator.
-    fn resolve_finish(&mut self, client: usize, gen: u64) -> Result<ClientFinish> {
-        let pd = self.pending[client]
-            .take()
+    fn resolve_finish(&mut self, client: usize, gen: u32) -> Result<ClientFinish> {
+        let pd = self
+            .pending
+            .remove(&client)
             .expect("generation-valid finish without stashed work");
-        self.delivered[client] += 1;
+        self.tables.delivered[client] += 1;
         let base_version = pd.base_version;
         let (update, mean_loss) = match pd.work {
             PendingWork::Trained { update, mean_loss } => (update, mean_loss),
@@ -684,10 +769,10 @@ impl<'a> SimEngine<'a> {
     /// the accelerator — return its concurrency slot, and attribute the
     /// loss to availability churn.
     fn cancel_in_flight(&mut self, client: usize) {
-        self.gens[client] += 1;
-        self.busy[client] = false;
+        self.tables.bump_gen(client);
+        self.tables.set_busy(client, false);
         self.in_flight -= 1;
-        let execution_avoided = match self.pending[client].take() {
+        let execution_avoided = match self.pending.remove(&client) {
             Some(PendingDispatch {
                 base_version,
                 work: PendingWork::Planned { .. },
@@ -718,8 +803,11 @@ impl<'a> SimEngine<'a> {
     ) -> Result<()> {
         let sim = self.sim;
         let cfg = &sim.cfg;
-        debug_assert!(!self.busy[client], "client {client} dispatched twice");
-        self.busy[client] = true;
+        debug_assert!(!self.tables.is_busy(client), "client {client} dispatched twice");
+        self.tables.set_busy(client, true);
+        if let Some(lazy) = self.lazy.as_mut() {
+            lazy.note_busy(client);
+        }
         self.in_flight += 1;
         let cond = sim.fleet.round_conditions(&mut self.rng);
         let t = self.truth_at(client, &cond, self.events.now());
@@ -748,12 +836,12 @@ impl<'a> SimEngine<'a> {
             let base = self.snapshots.retain(base_version, base);
             PendingWork::Planned { plan, base }
         };
-        self.pending[client] = Some(PendingDispatch { base_version, work });
+        self.pending.insert(client, PendingDispatch { base_version, work });
         self.events.schedule_in(
             duration,
             EngineEvent::Finish {
                 client,
-                gen: self.gens[client],
+                gen: self.tables.gen(client),
             },
         );
         Ok(())
@@ -793,7 +881,7 @@ impl<'a> SimEngine<'a> {
         self.note_workload(client, epochs, ratio.ratio);
         // Round protocols settle eligibility (incl. availability survival)
         // before training, so reaching here means the dispatch completed.
-        self.delivered[client] += 1;
+        self.tables.delivered[client] += 1;
         let outcome = train_client(
             &sim.runtime,
             &sim.dataset,
@@ -810,10 +898,15 @@ impl<'a> SimEngine<'a> {
     }
 
     /// Currently-idle, currently-online clients — the slot-refill pool for
-    /// event-driven dispatch policies.
+    /// event-driven dispatch policies. Under the lazy core this is the
+    /// incrementally-maintained index materialised (same ascending order);
+    /// the eager core scans all N.
     pub fn idle_online_clients(&mut self, now: SimTime) -> Vec<usize> {
+        if let Some(lazy) = self.lazy.as_ref() {
+            return lazy.online().to_vec();
+        }
         (0..self.sim.cfg.population)
-            .filter(|&i| !self.busy[i] && self.avail.is_available(i, now))
+            .filter(|&i| !self.tables.is_busy(i) && self.avail.is_available(i, now))
             .collect()
     }
 
@@ -833,7 +926,7 @@ impl<'a> SimEngine<'a> {
             avail_dropped_pending,
             ..
         } = self;
-        for pd in pending.into_iter().flatten() {
+        for pd in pending.into_values() {
             if matches!(pd.work, PendingWork::Planned { .. }) {
                 recorder.wasted.on_avoid();
             }

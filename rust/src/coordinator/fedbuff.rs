@@ -24,7 +24,8 @@ use anyhow::Result;
 
 use super::engine::{ClientFinish, EventStrategy, SimEngine, Strategy};
 use super::Simulation;
-use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::aggregation::{Contribution, ServerOpt};
+use crate::fleet::HierarchyConfig;
 use crate::metrics::events::DropCause;
 use crate::model::VersionedParams;
 use crate::simtime::SimTime;
@@ -35,6 +36,9 @@ pub struct FedBuff {
     buffer: Vec<Contribution>,
     buffer_losses: Vec<f64>,
     k_goal: usize,
+    /// Aggregation topology (`hierarchy = flat` reproduces `average_delta`
+    /// verbatim; `two-tier` routes the flush through regional edges).
+    hierarchy: HierarchyConfig,
 }
 
 /// Registry constructor.
@@ -48,6 +52,7 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
         buffer: Vec::new(),
         buffer_losses: Vec::new(),
         k_goal: sim.cfg.k_target(),
+        hierarchy: sim.cfg.hierarchy.clone(),
     }))
 }
 
@@ -65,9 +70,7 @@ impl FedBuff {
     /// historical draw exactly). Under churn the pool can be momentarily
     /// empty — the slot refills when someone comes back online.
     fn refill_slot(&self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
-        let idle = eng.idle_online_clients(now);
-        if !idle.is_empty() {
-            let next = eng.pick_client(now, &idle);
+        if let Some(next) = eng.refill_pick(now) {
             self.dispatch(eng, next)?;
         }
         Ok(())
@@ -136,7 +139,7 @@ impl EventStrategy for FedBuff {
         if self.buffer.len() >= self.k_goal {
             let participant_ids: Vec<usize> =
                 self.buffer.iter().map(|c| c.client_id).collect();
-            let avg = average_delta(&self.global.params, &self.buffer, true);
+            let avg = self.hierarchy.aggregate(&self.global.params, &self.buffer, true);
             let mut params = self.global.params.clone();
             self.server_opt.apply(&mut params, &avg);
             self.global = VersionedParams {

@@ -5,6 +5,12 @@
 //! resolves through this table instead. Adding a strategy is three steps
 //! (see `docs/architecture.md`): write the module, implement the hook
 //! trait(s) + [`Strategy`], and append one [`StrategyInfo`] entry here.
+//!
+//! The fleet subsystem composes *over* this table, not into it: the
+//! hierarchical aggregation tier (`fleet::HierarchyConfig`) sits behind
+//! each strategy's aggregation call, and the lazy sim core sits behind the
+//! engine's sampling/idle seams — every registered strategy runs unmodified
+//! under `hierarchy = two-tier` and `fleet_core = lazy`.
 
 use anyhow::Result;
 

@@ -46,9 +46,9 @@ pub struct SamplerCtx<'a> {
     pub rng: &'a mut Rng,
     pub avail: &'a mut AvailabilityModel,
     /// Per-client dispatches that ran to completion (engine drop ledger).
-    pub delivered: &'a [u64],
+    pub delivered: &'a [u32],
     /// Per-client dispatches lost to availability churn.
-    pub churned: &'a [u64],
+    pub churned: &'a [u32],
     pub scores: &'a mut [f64],
 }
 
@@ -66,6 +66,17 @@ pub trait ClientSampler {
     /// Pick one client from the non-empty `pool` (slot refills of
     /// event-driven strategies).
     fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize;
+
+    /// True iff this policy's draws depend only on the pool's size and
+    /// ordering — never on per-client weights or scores — so the lazy sim
+    /// core may sample directly from its online-set index
+    /// (`fleet::OnlineSetIndex`) without materialising the pool. Weighted
+    /// policies must keep the default `false`: they score every candidate
+    /// (even when the weights turn out degenerate), so they genuinely need
+    /// the materialised pool.
+    fn uniform_equivalent(&self) -> bool {
+        false
+    }
 }
 
 /// Floor applied to weights in a non-degenerate weighted draw, so a
@@ -148,6 +159,10 @@ impl ClientSampler for Uniform {
 
     fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize {
         pool[ctx.rng.usize_below(pool.len())]
+    }
+
+    fn uniform_equivalent(&self) -> bool {
+        true
     }
 }
 
@@ -275,8 +290,8 @@ mod tests {
     fn always_on_ctx<'a>(
         rng: &'a mut Rng,
         avail: &'a mut AvailabilityModel,
-        delivered: &'a [u64],
-        churned: &'a [u64],
+        delivered: &'a [u32],
+        churned: &'a [u32],
         scores: &'a mut [f64],
     ) -> SamplerCtx<'a> {
         SamplerCtx {
@@ -312,12 +327,26 @@ mod tests {
     }
 
     #[test]
+    fn only_uniform_declares_itself_index_sampleable() {
+        // The weighted policies score every candidate, so they must keep
+        // forcing the lazy core to materialise the pool.
+        for s in SAMPLERS {
+            assert_eq!(
+                (s.build)().uniform_equivalent(),
+                s.name == "uniform",
+                "{} has the wrong uniform_equivalent flag",
+                s.name
+            );
+        }
+    }
+
+    #[test]
     fn degenerate_weights_take_the_uniform_rng_path() {
         // The equivalence contract at unit scale: with all-equal weights,
         // every policy must consume the SAME rng draws and return the SAME
         // cohort as uniform.
         let pool: Vec<usize> = (0..10).collect();
-        let (delivered, churned) = (vec![5u64; 10], vec![0u64; 10]);
+        let (delivered, churned) = (vec![5u32; 10], vec![0u32; 10]);
         for info in SAMPLERS {
             let mut uni_rng = Rng::seed_from(99);
             let mut avail = AvailabilityModel::always_on(10);
@@ -353,8 +382,8 @@ mod tests {
 
     #[test]
     fn drop_aware_weights_are_one_until_someone_churns() {
-        let delivered = vec![0u64, 3, 100, 7];
-        let churned = vec![0u64; 4];
+        let delivered = vec![0u32, 3, 100, 7];
+        let churned = vec![0u32; 4];
         let mut rng = Rng::seed_from(1);
         let mut avail = AvailabilityModel::always_on(4);
         let mut scores = vec![1.0; 4];
@@ -362,7 +391,7 @@ mod tests {
         let w = DropAware::weights(&ctx, &[0, 1, 2, 3]);
         assert!(w.iter().all(|&x| x == 1.0), "drop-free ledger must be degenerate: {w:?}");
         // One churn drop breaks the tie, and more drops weigh heavier.
-        let churned = vec![0u64, 1, 0, 4];
+        let churned = vec![0u32, 1, 0, 4];
         let ctx2 = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
         let w = DropAware::weights(&ctx2, &[0, 1, 2, 3]);
         assert!(!degenerate(&w));
@@ -408,7 +437,7 @@ mod tests {
         };
         let mut avail = AvailabilityModel::build(&cfg, 2, 1).unwrap();
         let mut rng = Rng::seed_from(3);
-        let (delivered, churned) = (vec![0u64; 2], vec![0u64; 2]);
+        let (delivered, churned) = (vec![0u32; 2], vec![0u32; 2]);
         let mut scores = vec![1.0; 2];
         let mut ctx = SamplerCtx {
             now: 0.0,

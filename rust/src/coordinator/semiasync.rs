@@ -24,7 +24,8 @@ use anyhow::Result;
 use super::engine::{ClientFinish, EngineEvent, EventStrategy, SimEngine, Strategy};
 use super::local_time::truth;
 use super::Simulation;
-use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::aggregation::{Contribution, ServerOpt};
+use crate::fleet::HierarchyConfig;
 use crate::metrics::events::DropCause;
 use crate::model::VersionedParams;
 use crate::simtime::SimTime;
@@ -39,6 +40,8 @@ pub struct SemiAsync {
     deadline_secs: f64,
     /// Per-client expected full-round seconds — the selection horizon.
     expected_secs: Vec<f64>,
+    /// Aggregation topology (flat reproduces `average_delta` verbatim).
+    hierarchy: HierarchyConfig,
 }
 
 /// Registry constructor.
@@ -53,6 +56,7 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
         buffer_losses: Vec::new(),
         deadline_secs: 0.0,
         expected_secs: Vec::new(),
+        hierarchy: sim.cfg.hierarchy.clone(),
     }))
 }
 
@@ -87,7 +91,7 @@ impl SemiAsync {
         let mut participant_ids: Vec<usize> = self.buffer.iter().map(|c| c.client_id).collect();
         participant_ids.sort_unstable();
         participant_ids.dedup();
-        let avg = average_delta(&self.global.params, &self.buffer, true);
+        let avg = self.hierarchy.aggregate(&self.global.params, &self.buffer, true);
         let mut params = self.global.params.clone();
         self.server_opt.apply(&mut params, &avg);
         self.global = VersionedParams {

@@ -17,13 +17,16 @@ use anyhow::Result;
 
 use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::Simulation;
-use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::aggregation::{Contribution, ServerOpt};
+use crate::fleet::HierarchyConfig;
 use crate::metrics::events::DropCause;
 use crate::model::ParamVec;
 
 pub struct SyncFl {
     global: ParamVec,
     server_opt: ServerOpt,
+    /// Aggregation topology (flat reproduces `average_delta` verbatim).
+    hierarchy: HierarchyConfig,
 }
 
 /// Registry constructor.
@@ -31,6 +34,7 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
     Ok(Box::new(SyncFl {
         global: sim.runtime.init_params(sim.cfg.init_seed)?,
         server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        hierarchy: sim.cfg.hierarchy.clone(),
     }))
 }
 
@@ -102,7 +106,7 @@ impl RoundStrategy for SyncFl {
         }
 
         if !contributions.is_empty() {
-            let avg = average_delta(&self.global, &contributions, false);
+            let avg = self.hierarchy.aggregate(&self.global, &contributions, false);
             self.server_opt.apply(&mut self.global, &avg);
         }
         let mean_train_loss = if participant_ids.is_empty() {

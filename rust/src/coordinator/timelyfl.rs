@@ -31,7 +31,8 @@ use super::engine::{RoundCtx, RoundOutcome, RoundStrategy, SimEngine, Strategy};
 use super::local_time::local_time_update;
 use super::scheduler::{aggregation_interval, schedule, Workload};
 use super::Simulation;
-use crate::aggregation::{average_delta, Contribution, ServerOpt};
+use crate::aggregation::{Contribution, ServerOpt};
+use crate::fleet::HierarchyConfig;
 use crate::metrics::events::DropCause;
 use crate::model::ParamVec;
 
@@ -41,6 +42,8 @@ pub struct TimelyFl {
     /// Fig. 7 ablation state: frozen (T_k, workload) per client.
     frozen_tk: Option<f64>,
     frozen_workload: Vec<Option<Workload>>,
+    /// Aggregation topology (flat reproduces `average_delta` verbatim).
+    hierarchy: HierarchyConfig,
 }
 
 /// Registry constructor.
@@ -50,6 +53,7 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
         server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
         frozen_tk: None,
         frozen_workload: vec![None; sim.cfg.population],
+        hierarchy: sim.cfg.hierarchy.clone(),
     }))
 }
 
@@ -157,7 +161,7 @@ impl RoundStrategy for TimelyFl {
 
         // (6) aggregate; the engine advances the shared clock by T_k
         if !contributions.is_empty() {
-            let avg = average_delta(&self.global, &contributions, false);
+            let avg = self.hierarchy.aggregate(&self.global, &contributions, false);
             self.server_opt.apply(&mut self.global, &avg);
         }
         let mean_train_loss = if participant_ids.is_empty() {

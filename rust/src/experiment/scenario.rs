@@ -180,6 +180,53 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
             ("sim_model_bytes", "3.2e5"),
         ],
     },
+    ScenarioSpec {
+        name: "fleet_1m",
+        aliases: &["fleet1m", "million"],
+        summary: "million-client KWS fleet under Markov churn on the lazy, indexed sim core \
+                  with two-tier aggregation (32 regions, fan-in 64) — the Table 1-style \
+                  four-strategy comparison at planetary scale",
+        preset: Some("kws_fedavg"),
+        overrides: &[
+            ("population", "1000000"),
+            ("concurrency", "256"),
+            ("rounds", "4"),
+            ("eval_every", "4"),
+            ("eval_batches", "1"),
+            ("steps_per_epoch", "1"),
+            ("max_local_epochs", "2"),
+            ("sim_model_bytes", "3.2e5"),
+            ("availability", "markov"),
+            ("avail_mean_online_secs", "14400"),
+            ("avail_mean_offline_secs", "7200"),
+            ("fleet_core", "lazy"),
+            ("hierarchy", "two-tier"),
+            ("hier_regions", "32"),
+            ("hier_fan_in", "64"),
+        ],
+    },
+    ScenarioSpec {
+        name: "fleet_50k",
+        aliases: &["fleet50k"],
+        summary: "50k-client downscale of fleet_1m (2 regions, unbounded fan-in) — the \
+                  CI-sized hierarchical smoke; `--set fleet_core=eager` flips it to the \
+                  byte-identical reference path",
+        preset: Some("kws_fedavg"),
+        overrides: &[
+            ("population", "50000"),
+            ("concurrency", "64"),
+            ("rounds", "4"),
+            ("eval_every", "4"),
+            ("eval_batches", "1"),
+            ("steps_per_epoch", "1"),
+            ("max_local_epochs", "2"),
+            ("sim_model_bytes", "3.2e5"),
+            ("availability", "markov"),
+            ("fleet_core", "lazy"),
+            ("hierarchy", "two-tier"),
+            ("hier_regions", "2"),
+        ],
+    },
 ];
 
 /// Case-insensitive lookup by canonical name or alias.
@@ -270,5 +317,23 @@ mod tests {
 
         let fleet = resolve("fleet_hetero").unwrap().config().unwrap();
         assert_eq!(fleet.population, 1000);
+    }
+
+    #[test]
+    fn fleet_scenarios_select_the_lazy_core_and_the_tier() {
+        use crate::fleet::{FleetCore, Topology};
+        let big = resolve("million").unwrap().config().unwrap();
+        assert_eq!(big.population, 1_000_000);
+        assert_eq!(big.fleet_core, FleetCore::Lazy);
+        assert_eq!(big.hierarchy.topology, Topology::TwoTier);
+        assert_eq!(big.hierarchy.regions, 32);
+        assert_eq!(big.hierarchy.fan_in, 64);
+        assert_eq!(big.availability.kind, AvailabilityKind::Markov);
+
+        let small = resolve("fleet_50k").unwrap().config().unwrap();
+        assert_eq!(small.population, 50_000);
+        assert_eq!(small.fleet_core, FleetCore::Lazy);
+        assert_eq!(small.hierarchy.regions, 2);
+        assert_eq!(small.hierarchy.fan_in, 0, "unbounded fan-in");
     }
 }

@@ -1,0 +1,429 @@
+//! Hierarchical aggregation tier: regional/edge aggregators between the
+//! clients and the root coordinator (Papaya-style, see PAPERS.md).
+//!
+//! The tier is a pure composition over the aggregation algebra: strategies
+//! keep collecting [`Contribution`]s exactly as before and hand the batch
+//! to [`HierarchyConfig::aggregate`] instead of calling
+//! [`average_delta`] directly. With the default flat topology that call
+//! *is* `average_delta`; with `hierarchy = two-tier` the contributions are
+//! routed through per-region edge aggregators (region = `client_id %
+//! regions`, the same assignment correlated churn uses), each edge buffers
+//! at most `fan_in` updates into a [`PartialAggregate`], and the root
+//! merges the partials. All four registered strategies run unmodified
+//! beneath the tier.
+//!
+//! Determinism notes:
+//! - A **single** edge group (`hier_regions = 1`, `hier_fan_in = 0`)
+//!   reduces to flat aggregation **bit-exactly**: the edge accumulation
+//!   loop mirrors `average_delta`'s operation order f32-for-f32, and the
+//!   root merge of one partial is a move, not a re-accumulation.
+//! - Two or more groups under the `weighted` forward policy compute the
+//!   same per-tensor weighted mean but in a different floating-point
+//!   summation order — equal to a few ulps, not bitwise.
+//! - The `uniform` forward policy is deliberately *different semantics*:
+//!   each edge forwards its normalised partial mean and the root averages
+//!   the partial means per covered tensor, so every edge counts equally
+//!   regardless of how many clients reported through it.
+
+use anyhow::Result;
+
+use crate::aggregation::{average_delta, staleness_discount, Contribution};
+use crate::model::{ParamVec, Update};
+
+/// Aggregation topology between clients and the root coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every contribution goes straight to the root (the historical path).
+    Flat,
+    /// Contributions buffer in per-region edge aggregators that forward
+    /// partial aggregates to the root.
+    TwoTier,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Ok(Topology::Flat),
+            "two-tier" | "two_tier" | "twotier" => Ok(Topology::TwoTier),
+            other => anyhow::bail!("unknown hierarchy topology {other:?} (known: flat, two-tier)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::TwoTier => "two-tier",
+        }
+    }
+}
+
+/// How an edge aggregator forwards its buffered updates to the root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardPolicy {
+    /// Forward per-tensor weighted sums + weight totals; the root's merge
+    /// is mathematically identical to flat aggregation (same weighted
+    /// mean, floating-point summation order aside).
+    Weighted,
+    /// Forward the edge's normalised partial mean; the root averages the
+    /// partial means per covered tensor, so each edge counts equally.
+    Uniform,
+}
+
+impl ForwardPolicy {
+    pub fn parse(s: &str) -> Result<ForwardPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "weighted" => Ok(ForwardPolicy::Weighted),
+            "uniform" => Ok(ForwardPolicy::Uniform),
+            other => {
+                anyhow::bail!("unknown hierarchy forward policy {other:?} (known: weighted, uniform)")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForwardPolicy::Weighted => "weighted",
+            ForwardPolicy::Uniform => "uniform",
+        }
+    }
+}
+
+/// Config surface of the aggregation tier (`hierarchy=`, `hier_regions=`,
+/// `hier_fan_in=`, `hier_forward=` overrides).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierarchyConfig {
+    pub topology: Topology,
+    /// Edge aggregator count; a client reports to edge `client_id % regions`.
+    pub regions: usize,
+    /// Max contributions one edge buffers into a single partial aggregate
+    /// before cutting the next one; 0 = unbounded (one partial per edge).
+    pub fan_in: usize,
+    pub forward: ForwardPolicy,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig {
+            topology: Topology::Flat,
+            regions: 4,
+            fan_in: 0,
+            forward: ForwardPolicy::Weighted,
+        }
+    }
+}
+
+impl HierarchyConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.regions >= 1, "hier_regions must be >= 1");
+        Ok(())
+    }
+
+    pub fn is_tiered(&self) -> bool {
+        self.topology == Topology::TwoTier
+    }
+
+    /// Aggregate a round's contributions through the configured topology.
+    /// Flat delegates to [`average_delta`]; two-tier groups by region,
+    /// chunks by fan-in, edge-aggregates each chunk and root-merges the
+    /// partials. Returns a full-shape `Update` with `boundary = 0`.
+    pub fn aggregate(
+        &self,
+        template: &ParamVec,
+        contributions: &[Contribution],
+        discount_staleness: bool,
+    ) -> Update {
+        if !self.is_tiered() {
+            return average_delta(template, contributions, discount_staleness);
+        }
+        // Route every contribution to its edge, preserving arrival order
+        // within a region (edges see uploads in the order they landed).
+        let regions = self.regions;
+        let mut groups: Vec<Vec<&Contribution>> = vec![Vec::new(); regions];
+        for c in contributions {
+            groups[c.client_id % regions].push(c);
+        }
+        let mut partials = Vec::new();
+        for group in &groups {
+            if group.is_empty() {
+                continue;
+            }
+            let chunk_len = if self.fan_in == 0 { group.len() } else { self.fan_in };
+            for chunk in group.chunks(chunk_len) {
+                partials.push(edge_aggregate(
+                    template,
+                    chunk,
+                    discount_staleness,
+                    self.forward,
+                ));
+            }
+        }
+        root_merge(template, partials)
+    }
+}
+
+/// What one edge forwards to the root: per-tensor f32 accumulators plus a
+/// per-tensor f64 normaliser. Under [`ForwardPolicy::Weighted`] these are
+/// weighted sums and weight totals; under [`ForwardPolicy::Uniform`] the
+/// sums are already normalised partial means and the normaliser is a
+/// coverage count (1.0 per covered tensor). Either way the root's merge is
+/// the same: add everything, divide each tensor by its normaliser.
+#[derive(Clone, Debug)]
+pub struct PartialAggregate {
+    pub sums: Vec<Vec<f32>>,
+    pub wsums: Vec<f64>,
+}
+
+/// Buffer one edge chunk into a partial aggregate. The accumulation loop
+/// mirrors [`average_delta`] operation-for-operation (same skip rule, same
+/// normaliser choice, same f32 multiply-accumulate) so a single-chunk
+/// hierarchy reduces to the flat path bit-exactly.
+pub fn edge_aggregate(
+    template: &ParamVec,
+    chunk: &[&Contribution],
+    discount_staleness: bool,
+    forward: ForwardPolicy,
+) -> PartialAggregate {
+    let n_tensors = template.tensors.len();
+    let mut sums: Vec<Vec<f32>> = template
+        .tensors
+        .iter()
+        .map(|t| vec![0.0f32; t.len()])
+        .collect();
+    let mut wsums = vec![0.0f64; n_tensors];
+
+    for c in chunk {
+        let w = if discount_staleness {
+            c.weight * staleness_discount(c.staleness)
+        } else {
+            c.weight
+        };
+        if w <= 0.0 {
+            continue;
+        }
+        for (i, u) in c.update.tensors.iter().enumerate() {
+            let j = c.update.boundary + i;
+            // Same normaliser rule as `average_delta`: FedBuff's published
+            // discount divides by the undiscounted buffer weight.
+            wsums[j] += if discount_staleness { c.weight } else { w };
+            let dst = &mut sums[j];
+            debug_assert_eq!(dst.len(), u.len());
+            let wf = w as f32;
+            for (a, b) in dst.iter_mut().zip(u) {
+                *a += wf * b;
+            }
+        }
+    }
+
+    if forward == ForwardPolicy::Uniform {
+        // Normalise at the edge; the root then averages partial MEANS per
+        // covered tensor instead of re-weighting by client count.
+        for (t, w) in sums.iter_mut().zip(wsums.iter_mut()) {
+            if *w > 0.0 {
+                let inv = (1.0 / *w) as f32;
+                for v in t.iter_mut() {
+                    *v *= inv;
+                }
+                *w = 1.0;
+            }
+        }
+    }
+
+    PartialAggregate { sums, wsums }
+}
+
+/// Root merge: sum the partials' accumulators and normalisers, then divide
+/// each covered tensor — the identical finishing division `average_delta`
+/// performs. A single partial is moved, not re-accumulated, keeping the
+/// one-group case bit-exact.
+pub fn root_merge(template: &ParamVec, partials: Vec<PartialAggregate>) -> Update {
+    let mut iter = partials.into_iter();
+    let Some(mut acc) = iter.next() else {
+        return Update {
+            boundary: 0,
+            tensors: template.tensors.iter().map(|t| vec![0.0f32; t.len()]).collect(),
+        };
+    };
+    for p in iter {
+        for (dst, src) in acc.sums.iter_mut().zip(&p.sums) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+        for (a, b) in acc.wsums.iter_mut().zip(&p.wsums) {
+            *a += b;
+        }
+    }
+    for (t, &w) in acc.sums.iter_mut().zip(&acc.wsums) {
+        if w > 0.0 {
+            let inv = (1.0 / w) as f32;
+            for v in t.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+    Update {
+        boundary: 0,
+        tensors: acc.sums,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(tensors: Vec<Vec<f32>>) -> ParamVec {
+        ParamVec { tensors }
+    }
+
+    fn contrib(
+        client_id: usize,
+        boundary: usize,
+        tensors: Vec<Vec<f32>>,
+        weight: f64,
+        staleness: u64,
+    ) -> Contribution {
+        Contribution {
+            client_id,
+            update: Update { boundary, tensors },
+            weight,
+            staleness,
+        }
+    }
+
+    fn two_tier(regions: usize, fan_in: usize, forward: ForwardPolicy) -> HierarchyConfig {
+        HierarchyConfig {
+            topology: Topology::TwoTier,
+            regions,
+            fan_in,
+            forward,
+        }
+    }
+
+    fn mixed_contributions() -> Vec<Contribution> {
+        vec![
+            contrib(0, 0, vec![vec![2.0, -1.0], vec![4.0]], 1.0, 0),
+            contrib(1, 0, vec![vec![0.5, 2.0], vec![0.25]], 3.0, 1),
+            contrib(2, 1, vec![vec![6.0]], 1.0, 2),
+            contrib(3, 0, vec![vec![-1.5, 0.75], vec![1.0]], 2.0, 0),
+            contrib(7, 1, vec![vec![0.125]], 1.0, 5),
+        ]
+    }
+
+    #[test]
+    fn flat_topology_is_average_delta() {
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = mixed_contributions();
+        for discount in [false, true] {
+            let flat = HierarchyConfig::default().aggregate(&template, &cs, discount);
+            assert_eq!(flat, average_delta(&template, &cs, discount));
+        }
+    }
+
+    #[test]
+    fn single_group_two_tier_is_bit_exact_to_flat() {
+        // The acceptance-criterion reduction: regions = 1, unbounded
+        // fan-in. This runs the REAL two-tier code path (edge + root), not
+        // a structural shortcut, and must still match bitwise.
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = mixed_contributions();
+        for discount in [false, true] {
+            let tiered =
+                two_tier(1, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, discount);
+            let flat = average_delta(&template, &cs, discount);
+            assert_eq!(tiered.boundary, flat.boundary);
+            for (a, b) in tiered.tensors.iter().zip(&flat.tensors) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "single-group tier must be bit-exact");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_forward_matches_flat_mean_up_to_rounding() {
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = mixed_contributions();
+        let flat = average_delta(&template, &cs, true);
+        for (regions, fan_in) in [(2, 0), (3, 0), (4, 1), (2, 2)] {
+            let tiered =
+                two_tier(regions, fan_in, ForwardPolicy::Weighted).aggregate(&template, &cs, true);
+            for (a, b) in tiered.tensors.iter().zip(&flat.tensors) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                        "weighted tier diverged from flat: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fan_in_chunking_preserves_the_weighted_mean() {
+        // fan_in = 1 degenerates to one partial per contribution; the
+        // weighted merge must still recover the same mean.
+        let template = pv(vec![vec![0.0]]);
+        let cs = vec![
+            contrib(0, 0, vec![vec![1.0]], 3.0, 0),
+            contrib(2, 0, vec![vec![5.0]], 1.0, 0),
+        ];
+        let tiered = two_tier(2, 1, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
+        assert!((tiered.tensors[0][0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_forward_counts_each_edge_equally() {
+        // Region 0 holds two clients saying +1, region 1 one client saying
+        // +4. Weighted mean = 2.0; uniform-across-edges mean = 2.5.
+        let template = pv(vec![vec![0.0]]);
+        let cs = vec![
+            contrib(0, 0, vec![vec![1.0]], 1.0, 0),
+            contrib(2, 0, vec![vec![1.0]], 1.0, 0),
+            contrib(1, 0, vec![vec![4.0]], 1.0, 0),
+        ];
+        let weighted = two_tier(2, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
+        let uniform = two_tier(2, 0, ForwardPolicy::Uniform).aggregate(&template, &cs, false);
+        assert!((weighted.tensors[0][0] - 2.0).abs() < 1e-6);
+        assert!((uniform.tensors[0][0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_tensor_normalizer_survives_the_tier() {
+        // A partially-trained client must not dilute tensors it froze,
+        // even when its region's partial aggregate covers them.
+        let template = pv(vec![vec![0.0], vec![0.0]]);
+        let cs = vec![
+            contrib(0, 0, vec![vec![2.0], vec![2.0]], 1.0, 0),
+            contrib(1, 1, vec![vec![6.0]], 1.0, 0),
+        ];
+        for forward in [ForwardPolicy::Weighted, ForwardPolicy::Uniform] {
+            let tiered = two_tier(2, 0, forward).aggregate(&template, &cs, false);
+            assert_eq!(tiered.tensors[0], vec![2.0], "{forward:?}");
+            assert_eq!(tiered.tensors[1], vec![4.0], "{forward:?}");
+        }
+    }
+
+    #[test]
+    fn empty_contributions_give_zero_delta() {
+        let template = pv(vec![vec![0.0, 0.0]]);
+        let tiered = two_tier(3, 2, ForwardPolicy::Weighted).aggregate(&template, &[], false);
+        assert_eq!(tiered.tensors, vec![vec![0.0, 0.0]]);
+        assert_eq!(tiered.boundary, 0);
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_unknowns() {
+        for t in [Topology::Flat, Topology::TwoTier] {
+            assert_eq!(Topology::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(Topology::parse("two_tier").unwrap(), Topology::TwoTier);
+        assert!(Topology::parse("ring").is_err());
+        for f in [ForwardPolicy::Weighted, ForwardPolicy::Uniform] {
+            assert_eq!(ForwardPolicy::parse(f.name()).unwrap(), f);
+        }
+        assert!(ForwardPolicy::parse("median").is_err());
+        assert!(two_tier(0, 0, ForwardPolicy::Weighted).validate().is_err());
+        assert!(HierarchyConfig::default().validate().is_ok());
+    }
+}

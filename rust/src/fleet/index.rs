@@ -1,0 +1,256 @@
+//! O(1)-sample online-set index: a word bitset with a Fenwick tree over
+//! per-word popcounts.
+//!
+//! The engine historically materialised its candidate pools with linear
+//! scans (`AvailabilityModel::online_clients`, `idle_online_clients`) and
+//! then sampled positions out of the resulting ascending `Vec<usize>`.
+//! This index keeps the same *set* incrementally and answers the two
+//! queries those pools existed for without ever materialising them:
+//!
+//! - [`OnlineSetIndex::select`]\(k\) — the k-th smallest member, in
+//!   O(log n) via a binary-lifting descent of the Fenwick tree followed by
+//!   a popcount walk inside one 64-bit word;
+//! - [`OnlineSetIndex::sample_one`] / [`OnlineSetIndex::sample_distinct`]
+//!   — uniform draws that consume **exactly the same RNG stream** as
+//!   indexing into the ascending pool (`pool[rng.usize_below(pool.len())]`
+//!   and `Rng::sample_without_replacement` respectively), which is what
+//!   makes the lazy/indexed sim core byte-identical to the eager one.
+//!
+//! Ascending iteration ([`OnlineSetIndex::iter`] / `to_vec`) reproduces the
+//! historical pool ordering for the weighted samplers, which genuinely need
+//! to score every candidate.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+/// A dynamic subset of `[0, capacity)` supporting O(log n) rank-select
+/// sampling. Insert/remove are idempotent (important for correlated-churn
+/// transition events that do not flip a client's effective state).
+#[derive(Clone, Debug)]
+pub struct OnlineSetIndex {
+    /// Membership bitset, 64 ids per word.
+    words: Vec<u64>,
+    /// Fenwick tree (1-based) over per-word popcounts.
+    fen: Vec<u32>,
+    len: usize,
+    capacity: usize,
+}
+
+impl OnlineSetIndex {
+    pub fn new(capacity: usize) -> OnlineSetIndex {
+        let nwords = capacity.div_ceil(64);
+        OnlineSetIndex {
+            words: vec![0; nwords],
+            fen: vec![0; nwords + 1],
+            len: 0,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        debug_assert!(id < self.capacity);
+        self.words[id >> 6] & (1u64 << (id & 63)) != 0
+    }
+
+    /// Add `id`; returns false (and changes nothing) if already a member.
+    pub fn insert(&mut self, id: usize) -> bool {
+        debug_assert!(id < self.capacity);
+        let (w, bit) = (id >> 6, 1u64 << (id & 63));
+        if self.words[w] & bit != 0 {
+            return false;
+        }
+        self.words[w] |= bit;
+        self.len += 1;
+        self.fen_add(w, 1);
+        true
+    }
+
+    /// Remove `id`; returns false (and changes nothing) if not a member.
+    pub fn remove(&mut self, id: usize) -> bool {
+        debug_assert!(id < self.capacity);
+        let (w, bit) = (id >> 6, 1u64 << (id & 63));
+        if self.words[w] & bit == 0 {
+            return false;
+        }
+        self.words[w] &= !bit;
+        self.len -= 1;
+        self.fen_add(w, -1);
+        true
+    }
+
+    fn fen_add(&mut self, word: usize, delta: i32) {
+        let mut i = word + 1;
+        while i < self.fen.len() {
+            self.fen[i] = (self.fen[i] as i32 + delta) as u32;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// k-th smallest member (0-based rank). Panics when `k >= len()`.
+    pub fn select(&self, k: usize) -> usize {
+        assert!(k < self.len, "select({k}) of a {}-member set", self.len);
+        let nwords = self.words.len();
+        // Binary-lifting descent: largest word-prefix whose popcount <= k.
+        let mut rem = k as u32;
+        let mut pos = 0usize;
+        let mut step = 1usize << (usize::BITS - 1 - nwords.leading_zeros());
+        while step != 0 {
+            let next = pos + step;
+            if next <= nwords && self.fen[next] <= rem {
+                pos = next;
+                rem -= self.fen[next];
+            }
+            step >>= 1;
+        }
+        // `pos` words are fully before the target; clear `rem` low set bits
+        // inside the target word to land on the answer.
+        let mut w = self.words[pos];
+        debug_assert!(rem < w.count_ones());
+        for _ in 0..rem {
+            w &= w - 1;
+        }
+        (pos << 6) + w.trailing_zeros() as usize
+    }
+
+    /// One uniform member. Consumes the same single `usize_below(len)` draw
+    /// as `pool[rng.usize_below(pool.len())]` over the ascending pool.
+    pub fn sample_one(&self, rng: &mut Rng) -> usize {
+        self.select(rng.usize_below(self.len))
+    }
+
+    /// `want` distinct uniform members, in draw order. A sparse partial
+    /// Fisher–Yates over ranks: same `usize_below(n - i)` draws, in the
+    /// same order, as `Rng::sample_without_replacement(len, want)` mapped
+    /// through the ascending pool — but O(want log n) instead of O(len).
+    pub fn sample_distinct(&self, rng: &mut Rng, want: usize) -> Vec<usize> {
+        let n = self.len;
+        assert!(want <= n, "cannot sample {want} from {n}");
+        // Displaced ranks of the virtual `(0..n)` array; untouched
+        // positions hold their own index. (Only read by key, so HashMap
+        // iteration order never matters for determinism.)
+        let mut moved: HashMap<usize, usize> = HashMap::new();
+        let mut out = Vec::with_capacity(want);
+        for i in 0..want {
+            let j = i + rng.usize_below(n - i);
+            let vi = *moved.get(&i).unwrap_or(&i);
+            let vj = *moved.get(&j).unwrap_or(&j);
+            moved.insert(i, vj);
+            moved.insert(j, vi);
+            out.push(self.select(vj));
+        }
+        out
+    }
+
+    /// Members in ascending order — the historical pool ordering.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some((wi << 6) + b)
+                }
+            })
+        })
+    }
+
+    /// Materialise the ascending pool (for the weighted samplers, which
+    /// score every candidate and so are inherently O(pool)).
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference(idx: &OnlineSetIndex) -> Vec<usize> {
+        (0..idx.capacity()).filter(|&i| idx.contains(i)).collect()
+    }
+
+    #[test]
+    fn insert_remove_select_match_linear_scan() {
+        let mut idx = OnlineSetIndex::new(300);
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..2000 {
+            let id = rng.usize_below(300);
+            if rng.f64() < 0.5 {
+                idx.insert(id);
+            } else {
+                idx.remove(id);
+            }
+            let want = reference(&idx);
+            assert_eq!(idx.len(), want.len());
+            assert_eq!(idx.to_vec(), want);
+            for (k, &id) in want.iter().enumerate() {
+                assert_eq!(idx.select(k), id);
+            }
+        }
+    }
+
+    #[test]
+    fn insert_and_remove_are_idempotent() {
+        let mut idx = OnlineSetIndex::new(70);
+        assert!(idx.insert(65));
+        assert!(!idx.insert(65));
+        assert_eq!(idx.len(), 1);
+        assert!(idx.remove(65));
+        assert!(!idx.remove(65));
+        assert!(idx.is_empty());
+        assert!(!idx.remove(3));
+    }
+
+    #[test]
+    fn sample_one_matches_pool_indexing() {
+        let mut idx = OnlineSetIndex::new(200);
+        for i in (0..200).step_by(3) {
+            idx.insert(i);
+        }
+        let pool = idx.to_vec();
+        let mut a = Rng::seed_from(9);
+        let mut b = a.clone();
+        for _ in 0..500 {
+            assert_eq!(idx.sample_one(&mut a), pool[b.usize_below(pool.len())]);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG streams must stay in sync");
+    }
+
+    #[test]
+    fn sample_distinct_matches_sample_without_replacement() {
+        let mut idx = OnlineSetIndex::new(257);
+        let mut seed_rng = Rng::seed_from(4);
+        for _ in 0..120 {
+            idx.insert(seed_rng.usize_below(257));
+        }
+        let pool = idx.to_vec();
+        for want in [0, 1, 2, pool.len() / 2, pool.len()] {
+            let mut a = Rng::seed_from(1000 + want as u64);
+            let mut b = a.clone();
+            let got = idx.sample_distinct(&mut a, want);
+            let expect: Vec<usize> = b
+                .sample_without_replacement(pool.len(), want)
+                .into_iter()
+                .map(|i| pool[i])
+                .collect();
+            assert_eq!(got, expect);
+            assert_eq!(a.next_u64(), b.next_u64(), "RNG streams must stay in sync");
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Lazy availability: materialise a client's next transition only when the
+//! clock actually reaches it, instead of queueing every client's full
+//! schedule (or scanning all N clients per idle wait).
+//!
+//! The structure is a private agenda ([`crate::simtime::Agenda`]) holding
+//! **one** chained entry per client — its next pending transition — plus an
+//! [`OnlineSetIndex`] of the clients currently online. Advancing to `now`
+//! pops only the transitions that actually elapsed; each pop asks the
+//! underlying [`AvailabilityModel`] for that client's next transition and
+//! re-chains it. Markov timelines already extend themselves on demand from
+//! per-client forked RNG streams, so the sweep touches exactly the clients
+//! whose state could have changed — per-round cost is O(transitions since
+//! last sweep · log n), independent of fleet size.
+//!
+//! Determinism contract (locked by `tests/fleet_equivalence.rs` and the
+//! property suite):
+//! - after `advance_to(now)`, [`LazyAvailability::online`] holds exactly
+//!   `AvailabilityModel::online_clients(now)` (ascending iteration
+//!   reproduces the historical pool byte-for-byte), and
+//!   [`LazyAvailability::earliest_transition`] equals the eager O(n)
+//!   `AvailabilityModel::earliest_transition(now)` scan;
+//! - state at a popped transition is read at the midpoint of the
+//!   surrounding segment — the same read the event driver performs — so
+//!   correlated transitions that do not flip the effective state stay
+//!   no-ops;
+//! - the round drivers never enqueue availability transitions into the
+//!   main `EventQueue`, so replacing their scans with this sweep leaves
+//!   `events_processed` (and therefore the `RunReport` JSON) untouched.
+//!
+//! In the event-driven mode ([`SimEngine::drive_events`]) the main queue
+//! must keep carrying every transition — `events_processed` is part of the
+//! report — so the agenda is unused there; the engine instead maintains
+//! the index incrementally from the popped Transition/Finish/dispatch
+//! events as an idle-online refill pool ([`LazyAvailability::note_event_transition`],
+//! [`note_busy`](LazyAvailability::note_busy) /
+//! [`note_idle`](LazyAvailability::note_idle)).
+//!
+//! [`SimEngine::drive_events`]: crate::coordinator::SimEngine
+
+use crate::availability::AvailabilityModel;
+use crate::simtime::{Agenda, SimTime};
+
+use super::index::OnlineSetIndex;
+
+/// Incrementally-maintained online set + per-client next-transition agenda.
+#[derive(Clone, Debug)]
+pub struct LazyAvailability {
+    agenda: Agenda<usize>,
+    online: OnlineSetIndex,
+}
+
+impl LazyAvailability {
+    /// One O(n) pass at t = 0 seeds the initial state; everything after is
+    /// incremental.
+    pub fn new(avail: &mut AvailabilityModel) -> LazyAvailability {
+        let n = avail.population();
+        let mut online = OnlineSetIndex::new(n);
+        let mut agenda = Agenda::new();
+        for c in 0..n {
+            if avail.is_available(c, 0.0) {
+                online.insert(c);
+            }
+            if let Some(t) = avail.next_transition(c, 0.0) {
+                agenda.push(t, c);
+            }
+        }
+        LazyAvailability { agenda, online }
+    }
+
+    /// Sweep all transitions with time <= `now` (round-driver mode). Each
+    /// popped client re-chains its next transition and flips its index
+    /// membership to its state just after the pop — read at the segment
+    /// midpoint, exactly like the event driver's Transition arm.
+    pub fn advance_to(&mut self, avail: &mut AvailabilityModel, now: SimTime) {
+        while let Some((t, c)) = self.agenda.pop_until(now) {
+            let next = avail.next_transition(c, t);
+            let online_now = match next {
+                Some(tn) => avail.is_available(c, (t + tn) / 2.0),
+                None => avail.is_available(c, t),
+            };
+            if let Some(tn) = next {
+                self.agenda.push(tn, c);
+            }
+            if online_now {
+                self.online.insert(c);
+            } else {
+                self.online.remove(c);
+            }
+        }
+    }
+
+    /// The set this structure maintains: all online clients in round-driver
+    /// mode (after [`advance_to`](Self::advance_to)), the idle-online
+    /// refill pool in event-driver mode.
+    pub fn online(&self) -> &OnlineSetIndex {
+        &self.online
+    }
+
+    /// Earliest pending transition strictly after the last
+    /// [`advance_to`](Self::advance_to) sweep — the lazy replacement for
+    /// the eager O(n) `AvailabilityModel::earliest_transition` scan in the
+    /// round drivers' idle waits.
+    pub fn earliest_transition(&self) -> Option<SimTime> {
+        self.agenda.peek_time()
+    }
+
+    /// Event-driver maintenance: a Transition event for `client` was
+    /// popped from the main queue with effective state `online_now`.
+    /// Idempotent on purpose — correlated-churn transitions that do not
+    /// flip the effective state (e.g. a personal-layer flip while the
+    /// region is down) arrive here too.
+    pub fn note_event_transition(&mut self, client: usize, online_now: bool, busy: bool) {
+        if online_now {
+            if !busy {
+                self.online.insert(client);
+            }
+        } else {
+            self.online.remove(client);
+        }
+    }
+
+    /// Event-driver maintenance: `client` was dispatched (left the idle
+    /// pool).
+    pub fn note_busy(&mut self, client: usize) {
+        self.online.remove(client);
+    }
+
+    /// Event-driver maintenance: `client` finished with a valid generation
+    /// (a gen-valid finish implies it stayed online throughout) and is
+    /// idle again.
+    pub fn note_idle(&mut self, client: usize) {
+        self.online.insert(client);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::availability::{AvailabilityConfig, AvailabilityKind};
+
+    fn model(kind: AvailabilityKind, population: usize) -> AvailabilityModel {
+        let cfg = AvailabilityConfig {
+            kind,
+            mean_online_secs: 600.0,
+            mean_offline_secs: 200.0,
+            regions: 3,
+            region_mtbf_secs: 500.0,
+            region_outage_secs: 250.0,
+            degrade_window_secs: 120.0,
+            ..AvailabilityConfig::default()
+        };
+        AvailabilityModel::build(&cfg, population, 0xFEED).unwrap()
+    }
+
+    #[test]
+    fn lazy_sweep_tracks_eager_scans() {
+        for kind in [
+            AvailabilityKind::AlwaysOn,
+            AvailabilityKind::Markov,
+            AvailabilityKind::Correlated,
+        ] {
+            // Twin models on the same seed: one swept lazily, one scanned
+            // eagerly. (Queries mutate markov timelines, so twins keep the
+            // two access patterns from interleaving.)
+            let mut lazy_model = model(kind, 40);
+            let mut eager_model = model(kind, 40);
+            let mut lazy = LazyAvailability::new(&mut lazy_model);
+            for step in 0..200 {
+                let now = step as f64 * 37.5;
+                lazy.advance_to(&mut lazy_model, now);
+                assert_eq!(
+                    lazy.online().to_vec(),
+                    eager_model.online_clients(now),
+                    "{kind:?}: online set diverged at t={now}"
+                );
+                assert_eq!(
+                    lazy.earliest_transition(),
+                    eager_model.earliest_transition(now),
+                    "{kind:?}: earliest transition diverged at t={now}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn always_on_has_empty_agenda_and_full_index() {
+        let mut m = AvailabilityModel::always_on(17);
+        let mut lazy = LazyAvailability::new(&mut m);
+        assert_eq!(lazy.online().len(), 17);
+        assert_eq!(lazy.earliest_transition(), None);
+        lazy.advance_to(&mut m, 1e9);
+        assert_eq!(lazy.online().len(), 17);
+    }
+
+    #[test]
+    fn event_notes_are_idempotent() {
+        let mut m = AvailabilityModel::always_on(8);
+        let mut lazy = LazyAvailability::new(&mut m);
+        lazy.note_busy(3);
+        lazy.note_busy(3);
+        assert!(!lazy.online().contains(3));
+        // Non-flip transition while busy must NOT re-insert.
+        lazy.note_event_transition(3, true, true);
+        assert!(!lazy.online().contains(3));
+        lazy.note_idle(3);
+        lazy.note_event_transition(3, true, false);
+        assert!(lazy.online().contains(3));
+        lazy.note_event_transition(3, false, false);
+        assert!(!lazy.online().contains(3));
+    }
+}

@@ -1,0 +1,73 @@
+//! Million-client fleet support: the sim core that survives scale plus the
+//! hierarchical aggregation tier.
+//!
+//! Two halves (see `docs/architecture.md`, "The fleet subsystem"):
+//!
+//! - **Scale core** — [`OnlineSetIndex`] (O(log n) rank-select sampling
+//!   over the online set), [`LazyAvailability`] (per-client next-transition
+//!   agenda instead of eager full-schedule scans), and [`ClientTables`]
+//!   (compact SoA per-client engine state). Selected by the
+//!   `fleet_core = lazy` config override; the default `eager` core keeps
+//!   the historical linear-scan paths. Both cores are byte-identical in
+//!   `RunReport` JSON (locked by `tests/fleet_equivalence.rs`).
+//! - **Aggregation tier** — [`HierarchyConfig`] routes round contributions
+//!   through regional edge aggregators ([`PartialAggregate`]) before the
+//!   root merge, composing over the strategy registry: all four strategies
+//!   run unmodified beneath the tier.
+
+mod hierarchy;
+mod index;
+mod lazy;
+mod tables;
+
+pub use hierarchy::{
+    edge_aggregate, root_merge, ForwardPolicy, HierarchyConfig, PartialAggregate, Topology,
+};
+pub use index::OnlineSetIndex;
+pub use lazy::LazyAvailability;
+pub use tables::ClientTables;
+
+use anyhow::Result;
+
+/// Which sim-core implementation the engine runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FleetCore {
+    /// Historical paths: O(n) online scans, dense per-client state.
+    #[default]
+    Eager,
+    /// Lazy availability + indexed online sets + sparse pending table.
+    /// Byte-identical reports, wall-clock independent of idle fleet size.
+    Lazy,
+}
+
+impl FleetCore {
+    pub fn parse(s: &str) -> Result<FleetCore> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" => Ok(FleetCore::Eager),
+            "lazy" | "indexed" => Ok(FleetCore::Lazy),
+            other => anyhow::bail!("unknown fleet core {other:?} (known: eager, lazy)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetCore::Eager => "eager",
+            FleetCore::Lazy => "lazy",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_core_parse_round_trips() {
+        for core in [FleetCore::Eager, FleetCore::Lazy] {
+            assert_eq!(FleetCore::parse(core.name()).unwrap(), core);
+        }
+        assert_eq!(FleetCore::parse("indexed").unwrap(), FleetCore::Lazy);
+        assert_eq!(FleetCore::default(), FleetCore::Eager);
+        assert!(FleetCore::parse("turbo").is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Compact SoA per-client engine state.
+//!
+//! The engine used to carry five parallel `Vec`s (`sampler_scores`,
+//! `delivered`, `churned`, `busy`, `gens`) plus a dense
+//! `Vec<Option<PendingDispatch>>`. At 10^6 clients the ledgers dominated
+//! resident memory, so the hot per-client state lives here as
+//! struct-of-arrays with the narrowest types that cannot overflow in
+//! practice (`u32` counters: a client cannot deliver or churn 4 billion
+//! times inside any finite sim budget; dispatch generations bump once per
+//! churn cancellation). The busy flags pack into a bitset — they are read
+//! on every refill. The pending-dispatch table itself moved to a sparse
+//! `BTreeMap` in the engine (bounded by in-flight concurrency, not fleet
+//! size).
+
+use super::index::OnlineSetIndex;
+
+/// Per-client engine ledgers, struct-of-arrays.
+#[derive(Clone, Debug)]
+pub struct ClientTables {
+    /// Sampler decision scores, 1.0 until a weighted policy scores the
+    /// client (stamped onto dispatch records as `stay_prob`).
+    pub scores: Vec<f64>,
+    /// Updates delivered per client (drop-aware sampler posterior input).
+    pub delivered: Vec<u32>,
+    /// Churn losses per client (the other posterior input).
+    pub churned: Vec<u32>,
+    /// In-flight flags, one bit per client (an [`OnlineSetIndex`] used
+    /// purely for membership).
+    busy: OnlineSetIndex,
+    /// Dispatch generation per client; bumped on churn cancellation so a
+    /// stale Finish event can be recognised and discarded.
+    gens: Vec<u32>,
+}
+
+impl ClientTables {
+    pub fn new(population: usize) -> ClientTables {
+        ClientTables {
+            scores: vec![1.0; population],
+            delivered: vec![0; population],
+            churned: vec![0; population],
+            busy: OnlineSetIndex::new(population),
+            gens: vec![0; population],
+        }
+    }
+
+    pub fn is_busy(&self, client: usize) -> bool {
+        self.busy.contains(client)
+    }
+
+    pub fn set_busy(&mut self, client: usize, busy: bool) {
+        if busy {
+            self.busy.insert(client);
+        } else {
+            self.busy.remove(client);
+        }
+    }
+
+    pub fn gen(&self, client: usize) -> u32 {
+        self.gens[client]
+    }
+
+    pub fn bump_gen(&mut self, client: usize) {
+        self.gens[client] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_flags_and_gens() {
+        let mut t = ClientTables::new(100);
+        assert!(!t.is_busy(64));
+        t.set_busy(64, true);
+        assert!(t.is_busy(64));
+        t.set_busy(64, false);
+        t.set_busy(64, false);
+        assert!(!t.is_busy(64));
+        assert_eq!(t.gen(99), 0);
+        t.bump_gen(99);
+        t.bump_gen(99);
+        assert_eq!(t.gen(99), 2);
+        assert_eq!(t.delivered.len(), 100);
+        assert_eq!(t.churned.len(), 100);
+        assert_eq!(t.scores.len(), 100);
+        assert_eq!(t.scores[0], 1.0, "scores start at the engine's neutral 1.0");
+    }
+}

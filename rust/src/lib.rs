@@ -17,7 +17,10 @@
 //!   transitions are `simtime` events, with degrade-before-drop bandwidth
 //!   coupling) plus availability-aware client sampling
 //!   (`coordinator::sampler`: uniform / stay-prob / drop-aware policies
-//!   behind a registry). See `docs/architecture.md`. The evaluation surface
+//!   behind a registry) and million-client fleet support (`fleet`: a lazy,
+//!   indexed sim core plus a hierarchical aggregation tier, both
+//!   byte-identical to the flat/eager paths where they overlap). See
+//!   `docs/architecture.md`. The evaluation surface
 //!   is declarative: named scenarios × sweep grids × a thread-parallel
 //!   multi-seed runner (`experiment`; `timelyfl sweep`,
 //!   `docs/experiments.md`).
@@ -37,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod devices;
 pub mod experiment;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

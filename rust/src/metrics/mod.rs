@@ -212,6 +212,14 @@ impl RunReport {
         crate::util::stats::mean(&self.participation)
     }
 
+    /// Gini coefficient of the per-client participation rates — the
+    /// dispersion behind the paper's Fig. 1/5 participation-gap story in
+    /// one number: 0 = every client contributed equally, → 1 = a few fast
+    /// clients dominated the aggregations.
+    pub fn participation_gini(&self) -> f64 {
+        crate::util::stats::gini(&self.participation)
+    }
+
     /// Population-mean online fraction (1.0 under always-on).
     pub fn mean_online_fraction(&self) -> f64 {
         crate::util::stats::mean(&self.online_fraction)
@@ -331,6 +339,18 @@ mod tests {
         assert!(r.rounds.is_empty());
         assert_eq!(r.total_deadline_drops(), 2);
         assert_eq!(r.total_avail_drops(), 5);
+    }
+
+    #[test]
+    fn participation_gini_is_dispersion_of_the_rates() {
+        let mut r = report_with(vec![]);
+        assert_eq!(r.participation_gini(), 0.0, "no clients -> no dispersion");
+        r.participation = vec![0.5; 8];
+        assert_eq!(r.participation_gini(), 0.0, "equal rates -> 0");
+        r.participation = vec![0.0, 0.0, 0.0, 1.0];
+        assert!((r.participation_gini() - 0.75).abs() < 1e-12);
+        r.participation = vec![0.5, 1.0];
+        assert!((r.participation_gini() - 1.0 / 6.0).abs() < 1e-12);
     }
 
     #[test]

@@ -30,6 +30,10 @@ impl RunReport {
                 Json::num(self.mean_participation()),
             ),
             (
+                "participation_gini",
+                Json::num(self.participation_gini()),
+            ),
+            (
                 "participation",
                 Json::arr(self.participation.iter().map(|&r| Json::num(r)).collect()),
             ),
@@ -138,7 +142,8 @@ pub fn fmt_opt_loss(loss: Option<f64>) -> String {
 }
 
 /// Participation/availability summary across runs: the Fig. 1/5-style
-/// numbers with the availability columns that make them attributable
+/// numbers (mean rate plus its Gini dispersion — the participation gap in
+/// one column) with the availability columns that make them attributable
 /// (online-fraction, availability-drops vs deadline-drops) plus the
 /// wasted-work columns of the deferred dispatch path (accelerator
 /// executions run vs skipped).
@@ -146,6 +151,7 @@ pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
     let mut t = Table::new(&[
         "run",
         "mean_particip",
+        "particip_gini",
         "online_frac",
         "avail_drops",
         "deadline_drops",
@@ -157,6 +163,7 @@ pub fn participation_table(rows: &[(&str, &RunReport)]) -> Table {
         t.row(vec![
             label.to_string(),
             format!("{:.3}", r.mean_participation()),
+            format!("{:.3}", r.participation_gini()),
             format!("{:.3}", r.mean_online_fraction()),
             r.total_avail_drops().to_string(),
             r.total_deadline_drops().to_string(),
@@ -310,6 +317,11 @@ mod tests {
         assert!(
             (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
         );
+        // Gini of participation [0.5, 1.0] is 1/6.
+        assert!(
+            (parsed.get("participation_gini").unwrap().as_f64().unwrap() - 1.0 / 6.0).abs()
+                < 1e-12
+        );
     }
 
     #[test]
@@ -329,6 +341,8 @@ mod tests {
         let t = participation_table(&[("TimelyFL", &r)]);
         let s = t.render();
         assert!(s.contains("online_frac"));
+        assert!(s.contains("particip_gini"));
+        assert!(s.contains("0.167"), "gini of [0.5, 1.0] renders as 0.167: {s}");
         assert!(s.contains("avail_drops"));
         assert!(s.contains("deadline_drops"));
         assert!(s.contains("train_execs"));

@@ -17,7 +17,7 @@ pub type SimTime = f64;
 
 /// An event scheduled at a simulated timestamp. `seq` breaks ties FIFO so
 /// identical timestamps pop deterministically.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Scheduled<E> {
     at: SimTime,
     seq: u64,
@@ -123,6 +123,65 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// A bare min-heap agenda over the same deterministic ordering as
+/// [`EventQueue`] (earliest-first, FIFO tie-break) but with **no clock and
+/// no processed counter**: popping an agenda entry is bookkeeping, not a
+/// simulation event. `fleet::LazyAvailability` keeps per-client pending
+/// availability transitions here so the round drivers can sweep them
+/// without perturbing `events_processed()` in the `RunReport`.
+#[derive(Clone, Debug)]
+pub struct Agenda<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    seq: u64,
+}
+
+impl<T> Default for Agenda<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Agenda<T> {
+    pub fn new() -> Self {
+        Agenda {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, at: SimTime, item: T) {
+        debug_assert!(at.is_finite(), "non-finite agenda time");
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            event: item,
+        });
+        self.seq += 1;
+    }
+
+    /// Timestamp of the earliest pending entry.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    /// Pop the earliest entry if its time is <= `t`.
+    pub fn pop_until(&mut self, t: SimTime) -> Option<(SimTime, T)> {
+        if self.peek_time()? <= t {
+            self.heap.pop().map(|s| (s.at, s.event))
+        } else {
+            None
+        }
+    }
+}
+
 /// Seconds -> hours, for reporting in the paper's units.
 pub fn hours(secs: SimTime) -> f64 {
     secs / 3600.0
@@ -179,5 +238,21 @@ mod tests {
         let mut q: EventQueue<()> = EventQueue::new();
         q.advance_to(100.0);
         assert_eq!(q.now(), 100.0);
+    }
+
+    #[test]
+    fn agenda_pops_in_order_with_fifo_ties() {
+        let mut a = Agenda::new();
+        a.push(5.0, "late");
+        a.push(1.0, "first");
+        a.push(1.0, "second");
+        assert_eq!(a.peek_time(), Some(1.0));
+        assert_eq!(a.pop_until(1.0), Some((1.0, "first")));
+        assert_eq!(a.pop_until(1.0), Some((1.0, "second")));
+        assert_eq!(a.pop_until(4.9), None, "5.0 entry not yet due");
+        assert_eq!(a.peek_time(), Some(5.0));
+        assert_eq!(a.pop_until(5.0), Some((5.0, "late")));
+        assert!(a.is_empty());
+        assert_eq!(a.pop_until(f64::INFINITY), None);
     }
 }

@@ -49,6 +49,24 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Gini coefficient of a non-negative sample — the participation-dispersion
+/// metric (0 = perfectly even shares, → 1 = concentrated on few). Computed
+/// on a sorted copy via the rank formula
+/// `G = (2 Σ_i i·x_(i)) / (n Σ x) - (n + 1) / n` with 1-based ranks.
+/// 0.0 for an empty slice or a non-positive total (the dispersion of
+/// "nobody participated" is defined as none).
+pub fn gini(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    let total: f64 = xs.iter().sum();
+    if n == 0 || total <= 0.0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let weighted: f64 = v.iter().enumerate().map(|(i, x)| (i + 1) as f64 * x).sum();
+    (2.0 * weighted) / (n as f64 * total) - (n as f64 + 1.0) / n as f64
+}
+
 /// Error function via the Abramowitz & Stegun 7.1.26 rational
 /// approximation (|error| < 1.5e-7 — far below any tolerance the
 /// availability-survival estimates care about; no libm `erf` in the
@@ -94,6 +112,23 @@ mod tests {
         assert_eq!(median(&xs), 2.5);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn gini_known_values() {
+        // Perfect equality and the degenerate cases are exactly 0.
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0.0, 0.0]), 0.0);
+        assert_eq!(gini(&[0.7]), 0.0);
+        assert_eq!(gini(&[0.3, 0.3, 0.3, 0.3]), 0.0);
+        // One of n holding everything: G = (n - 1) / n.
+        assert!((gini(&[0.0, 0.0, 0.0, 5.0]) - 0.75).abs() < 1e-12);
+        // Hand-computed: [0.5, 1.0] -> 2*(0.5 + 2.0)/(2*1.5) - 3/2 = 1/6.
+        assert!((gini(&[1.0, 0.5]) - 1.0 / 6.0).abs() < 1e-12, "order must not matter");
+        // More concentration -> larger G.
+        assert!(gini(&[1.0, 1.0, 8.0]) > gini(&[2.0, 3.0, 5.0]));
+        // Scale invariance.
+        assert!((gini(&[1.0, 2.0, 3.0]) - gini(&[10.0, 20.0, 30.0])).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! The fleet subsystem's headline suite: the lazy, indexed sim core
+//! (`fleet_core = lazy`) must produce **byte-identical** semantic
+//! `RunReport` JSON to the historical eager core — for every registered
+//! strategy, every sampling policy, and both stochastic availability
+//! processes (Markov and correlated-regional). The lazy core replays the
+//! exact RNG draw sequence of the eager paths (indexed sampling consumes
+//! the same `usize_below` draws; the round drivers' agenda sweep never
+//! touches the main event queue), so any divergence is a determinism bug
+//! in the fleet seam, not an accuracy trade-off.
+//!
+//! A second group anchors the aggregation tier end-to-end: `two-tier` with
+//! one region and unbounded fan-in routes every contribution through a
+//! single edge whose partial the root *moves* (never re-accumulates), so
+//! the run is bit-exact to flat; and a genuinely regional tier (2 regions)
+//! stays seed-deterministic while producing finite learning curves.
+//!
+//! Needs the AOT artifacts (real PJRT training), like
+//! `strategies_integration.rs`.
+
+use timelyfl::availability::AvailabilityKind;
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::{registry, Simulation};
+use timelyfl::fleet::{FleetCore, ForwardPolicy, Topology};
+use timelyfl::metrics::RunReport;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn tiny_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "kws_lite".into();
+    cfg.strategy = strategy.to_string();
+    cfg.sampler = sampler_name.to_string();
+    cfg.population = 12;
+    cfg.concurrency = 6;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.max_local_epochs = 2;
+    cfg.sim_model_bytes = 3.2e5;
+    cfg
+}
+
+fn churn_cfg(strategy: &str, sampler_name: &str, kind: AvailabilityKind) -> RunConfig {
+    let mut cfg = tiny_cfg(strategy, sampler_name);
+    cfg.availability.kind = kind;
+    cfg.availability.regions = 3;
+    cfg.availability.region_mtbf_secs = 500.0;
+    cfg.availability.region_outage_secs = 250.0;
+    cfg.availability.mean_online_secs = 600.0;
+    cfg.availability.mean_offline_secs = 200.0;
+    cfg.availability.degrade_window_secs = 120.0;
+    cfg.sampler_horizon_secs = 200.0;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunReport {
+    Simulation::new(cfg, ARTIFACTS)
+        .expect("build simulation (run `make artifacts` first)")
+        .run()
+        .expect("run simulation")
+}
+
+/// Report JSON with the only legitimately nondeterministic field zeroed.
+/// Everything else — round schedule, participants, drops, learning curve,
+/// simulated clock, event counts, wasted-work ledger — participates in the
+/// byte-for-byte comparison.
+fn semantic_json(r: &RunReport) -> String {
+    let mut r = r.clone();
+    r.wall_secs = 0.0;
+    r.to_json().to_string()
+}
+
+#[test]
+fn lazy_core_is_byte_identical_to_eager_for_every_strategy_and_sampler() {
+    // The acceptance criterion: 4 strategies × 3 samplers × always-on +
+    // two stochastic availability processes, each compared byte-for-byte.
+    for info in registry::STRATEGIES {
+        for policy in ["uniform", "stay-prob", "drop-aware"] {
+            for kind in [
+                AvailabilityKind::AlwaysOn,
+                AvailabilityKind::Markov,
+                AvailabilityKind::Correlated,
+            ] {
+                let mut eager = churn_cfg(info.name, policy, kind);
+                eager.fleet_core = FleetCore::Eager;
+                let mut lazy = eager.clone();
+                lazy.fleet_core = FleetCore::Lazy;
+                assert_eq!(
+                    semantic_json(&run(lazy)),
+                    semantic_json(&run(eager)),
+                    "{} + {policy} + {kind:?}: lazy core diverged from eager",
+                    info.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_region_two_tier_is_bit_exact_to_flat_for_every_strategy() {
+    // 1 region + unbounded fan-in: one edge partial, moved (not re-added)
+    // into the root accumulator — f32-for-f32 the flat reduction. Run under
+    // churn so staleness discounting is exercised on the event strategies.
+    for info in registry::STRATEGIES {
+        let mut flat = churn_cfg(info.name, "uniform", AvailabilityKind::Markov);
+        flat.hierarchy.topology = Topology::Flat;
+        let mut tiered = flat.clone();
+        tiered.hierarchy.topology = Topology::TwoTier;
+        tiered.hierarchy.regions = 1;
+        tiered.hierarchy.fan_in = 0;
+        tiered.hierarchy.forward = ForwardPolicy::Weighted;
+        assert_eq!(
+            semantic_json(&run(tiered)),
+            semantic_json(&run(flat)),
+            "{}: single-region two-tier is not bit-exact to flat",
+            info.name
+        );
+    }
+}
+
+#[test]
+fn regional_two_tier_runs_are_seed_deterministic_and_finite() {
+    // A real tier (2 regions) reorders float accumulation, so it is NOT
+    // bit-compared against flat; what it must be is reproducible and sane.
+    for info in registry::STRATEGIES {
+        let mut cfg = churn_cfg(info.name, "uniform", AvailabilityKind::Correlated);
+        cfg.fleet_core = FleetCore::Lazy;
+        cfg.hierarchy.topology = Topology::TwoTier;
+        cfg.hierarchy.regions = 2;
+        cfg.hierarchy.fan_in = 3;
+        let a = run(cfg.clone());
+        let b = run(cfg.clone());
+        assert_eq!(
+            semantic_json(&a),
+            semantic_json(&b),
+            "{}: hierarchical run not reproducible",
+            info.name
+        );
+        assert!(a.total_rounds > 0, "{}: no rounds completed", info.name);
+        assert_eq!(a.participation.len(), cfg.population);
+        for p in &a.eval_points {
+            assert!(p.mean_loss.is_finite() && p.metric.is_finite(), "{}", info.name);
+        }
+        // The dispersion metric rides along on every report.
+        let g = a.participation_gini();
+        assert!((0.0..=1.0).contains(&g), "{}: gini {g} out of range", info.name);
+    }
+}
+
+#[test]
+fn uniform_forward_policy_changes_the_model_but_not_the_schedule() {
+    // `hier_forward = uniform` weights each edge equally regardless of how
+    // many clients it buffered — deliberately different aggregation
+    // semantics. The event schedule (clock, participants, drops) must stay
+    // identical; only the learning curve may move.
+    let mut weighted = churn_cfg("TimelyFL", "uniform", AvailabilityKind::Markov);
+    weighted.hierarchy.topology = Topology::TwoTier;
+    weighted.hierarchy.regions = 2;
+    weighted.hierarchy.forward = ForwardPolicy::Weighted;
+    let mut uniform = weighted.clone();
+    uniform.hierarchy.forward = ForwardPolicy::Uniform;
+    let w = run(weighted);
+    let u = run(uniform);
+    assert_eq!(w.total_rounds, u.total_rounds);
+    assert_eq!(w.events_processed, u.events_processed);
+    assert_eq!(w.participation, u.participation);
+    assert_eq!(w.sim_secs, u.sim_secs);
+}

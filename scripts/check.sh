@@ -43,6 +43,7 @@ else
     cargo test -q --test registry_properties
     cargo test -q --test wasted_work_properties
     cargo test -q --test experiment_properties
+    cargo test -q --test fleet_properties
 fi
 
 echo "check.sh: OK"
