@@ -1,0 +1,234 @@
+//! Network-dissemination bench — what the downlink leg costs, and what
+//! bandwidth-aware rebalancing buys back.
+//!
+//! Three claims from the network subsystem (`crate::network`), measured on
+//! a small correlated-churn fleet:
+//!
+//! 1. `network = free` is the historical behaviour: downlink-wait and
+//!    stale-start counters are exactly zero for every strategy.
+//! 2. `network = priced` makes every dispatch pay a downlink leg priced by
+//!    the client's *current* bandwidth factor, so the run-level
+//!    `downlink_wait_secs` is nonzero everywhere and the event-driven
+//!    strategies (FedBuff, SemiAsyncFL) additionally record stale starts —
+//!    dispatches whose transfer was overtaken by a newer global version.
+//! 3. With `net_rebalance = true`, TimelyFL's Alg. 3 schedules against the
+//!    *effective* (bandwidth-degraded) timeline, shrinking the mean E_c /
+//!    alpha_c it assigns versus the nominal schedule — trading workload for
+//!    deadline survival exactly as the adaptive partial-training story says.
+//!
+//! Output: an aligned table on stdout plus `results/BENCH_network.json`
+//! (schema in `results/README.md`) with one point per (strategy, network
+//! variant): downlink-wait seconds, stale starts, drop attribution, and the
+//! mean scheduled workload pulled from the run-event stream's per-round
+//! `workloads` records.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use timelyfl::availability::AvailabilityKind;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::registry;
+use timelyfl::metrics::events::{CollectSink, RunEvent};
+use timelyfl::metrics::report::Table;
+use timelyfl::network::StaleCorrection;
+use timelyfl::util::json::Json;
+
+/// Tiny correlated-churn fleet: regional outages plus the degrade-before-
+/// drop bandwidth ramp, so the priced downlink has real weather to price.
+fn base_cfg(strategy: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "kws_lite".into();
+    cfg.strategy = strategy.to_string();
+    cfg.population = 24;
+    cfg.concurrency = 8;
+    cfg.rounds = 12;
+    cfg.eval_every = 6;
+    cfg.eval_batches = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.max_local_epochs = 4;
+    cfg.sim_model_bytes = 3.2e5;
+    cfg.availability.kind = AvailabilityKind::Correlated;
+    cfg.availability.regions = 3;
+    cfg.availability.region_mtbf_secs = 500.0;
+    cfg.availability.region_outage_secs = 250.0;
+    cfg.availability.mean_online_secs = 600.0;
+    cfg.availability.mean_offline_secs = 200.0;
+    cfg.availability.degrade_window_secs = 120.0;
+    cfg.sampler_horizon_secs = 200.0;
+    cfg
+}
+
+/// One bench variant: a config mutation on top of `base_cfg` plus a label.
+struct Variant {
+    label: &'static str,
+    network: &'static str,
+    rebalance: bool,
+    stale_correction: StaleCorrection,
+}
+
+const VARIANTS: &[Variant] = &[
+    Variant {
+        label: "free",
+        network: "free",
+        rebalance: false,
+        stale_correction: StaleCorrection::None,
+    },
+    Variant {
+        label: "priced",
+        network: "priced",
+        rebalance: false,
+        stale_correction: StaleCorrection::None,
+    },
+];
+
+/// Extra TimelyFL-only variants: the rebalancing claim is about Alg. 3.
+const TIMELYFL_VARIANTS: &[Variant] = &[
+    Variant {
+        label: "priced+rebalance",
+        network: "priced",
+        rebalance: true,
+        stale_correction: StaleCorrection::None,
+    },
+    Variant {
+        label: "priced+rebalance+replay",
+        network: "priced",
+        rebalance: true,
+        stale_correction: StaleCorrection::DeltaReplay,
+    },
+];
+
+/// Mean scheduled workload over every dispatch in the event stream.
+fn mean_workload(events: &[RunEvent]) -> (f64, f64, usize) {
+    let mut epochs = 0.0;
+    let mut alpha = 0.0;
+    let mut n = 0usize;
+    for ev in events {
+        if let RunEvent::RoundComplete { workloads, .. } = ev {
+            for w in workloads {
+                epochs += w.epochs as f64;
+                alpha += w.alpha;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        (0.0, 0.0, 0)
+    } else {
+        (epochs / n as f64, alpha / n as f64, n)
+    }
+}
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "network_dissemination",
+        "downlink dissemination cost + bandwidth-aware rebalancing (Alg. 3 on the effective timeline)",
+    );
+    let bench = Bench::new()?;
+
+    let mut table = Table::new(&[
+        "strategy",
+        "variant",
+        "downlink_wait_s",
+        "stale_starts",
+        "mean_E_c",
+        "mean_alpha_c",
+        "avail_drops",
+        "deadline_drops",
+        "sim_hours",
+    ]);
+    let mut points = Vec::new();
+    // (mean_epochs, mean_alpha) for the TimelyFL priced-but-nominal
+    // schedule, to state the rebalancing delta explicitly at the end.
+    let mut timelyfl_nominal: Option<(f64, f64)> = None;
+    let mut timelyfl_rebalanced: Option<(f64, f64)> = None;
+
+    for info in registry::STRATEGIES {
+        let variants: Vec<&Variant> = if info.name == "TimelyFL" {
+            VARIANTS.iter().chain(TIMELYFL_VARIANTS).collect()
+        } else {
+            VARIANTS.iter().collect()
+        };
+        for v in variants {
+            let mut cfg = base_cfg(info.name);
+            cfg.rounds = bench.scale.rounds(cfg.rounds).min(cfg.rounds);
+            cfg.network.model = v.network.into();
+            // A substantial downlink (down_ratio 1.0: the model costs as
+            // much to receive as to upload) so transfer windows are long
+            // enough for newer globals to land mid-flight.
+            cfg.network.down_ratio = 1.0;
+            cfg.network.rebalance = v.rebalance;
+            cfg.network.stale_correction = v.stale_correction;
+            eprintln!("  {} / {} ...", info.name, v.label);
+            let sim = bench.simulation(cfg)?;
+            let mut sink = CollectSink::default();
+            let start = Instant::now();
+            let report = sim.run_with_sink(&mut sink)?;
+            let wall = start.elapsed().as_secs_f64();
+            let (mean_epochs, mean_alpha, dispatches) = mean_workload(&sink.events);
+            if info.name == "TimelyFL" {
+                match v.label {
+                    "priced" => timelyfl_nominal = Some((mean_epochs, mean_alpha)),
+                    "priced+rebalance" => {
+                        timelyfl_rebalanced = Some((mean_epochs, mean_alpha))
+                    }
+                    _ => {}
+                }
+            }
+            table.row(vec![
+                info.name.into(),
+                v.label.into(),
+                format!("{:.1}", report.downlink_wait_secs),
+                report.stale_starts.to_string(),
+                format!("{mean_epochs:.2}"),
+                format!("{mean_alpha:.3}"),
+                report.total_avail_drops().to_string(),
+                report.total_deadline_drops().to_string(),
+                format!("{:.2}", report.sim_secs / 3600.0),
+            ]);
+            points.push(Json::obj(vec![
+                ("strategy", Json::str(info.name)),
+                ("variant", Json::str(v.label)),
+                ("network", Json::str(v.network)),
+                ("rebalance", Json::Bool(v.rebalance)),
+                ("stale_correction", Json::str(v.stale_correction.name())),
+                ("downlink_wait_secs", Json::num(report.downlink_wait_secs)),
+                ("stale_starts", Json::num(report.stale_starts as f64)),
+                ("mean_epochs", Json::num(mean_epochs)),
+                ("mean_alpha", Json::num(mean_alpha)),
+                ("dispatches", Json::num(dispatches as f64)),
+                ("avail_drops", Json::num(report.total_avail_drops() as f64)),
+                ("deadline_drops", Json::num(report.total_deadline_drops() as f64)),
+                ("sim_secs", Json::num(report.sim_secs)),
+                ("rounds", Json::num(report.total_rounds as f64)),
+                ("wall_secs", Json::num(wall)),
+            ]));
+        }
+    }
+
+    let rendered = table.render();
+    println!("{rendered}");
+    if let (Some((ne, na)), Some((re, ra))) = (timelyfl_nominal, timelyfl_rebalanced) {
+        println!(
+            "rebalancing delta (TimelyFL, priced): mean E_c {ne:.2} -> {re:.2}, \
+             mean alpha_c {na:.3} -> {ra:.3}\n\
+             (scheduling against the degraded timeline must not INCREASE the \
+             assigned workload: `degraded()` only stretches the comm term, and \
+             Alg. 3 is monotone in the estimate)"
+        );
+    }
+    println!(
+        "shape target: free rows pin both counters to zero; priced rows pay a \
+         nonzero downlink everywhere,\nwith stale starts on the event-driven \
+         strategies whose transfers a newer global can overtake."
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::str("network_dissemination")),
+        ("fleet", Json::str("correlated 3-region, pop 24, conc 8")),
+        ("down_ratio", Json::num(1.0)),
+        ("points", Json::arr(points)),
+    ]);
+    benchkit::write_result("BENCH_network.json", &json.to_string());
+    benchkit::write_result("network_dissemination.txt", &rendered);
+    Ok(())
+}

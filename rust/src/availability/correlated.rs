@@ -29,6 +29,10 @@
 //! times by it). The
 //! factor is monotone non-increasing as the outage approaches and exactly
 //! 1.0 outside the window, so uncoupled configurations are bit-identical.
+//! The same ramp is the backing signal of the shared
+//! [`super::BandwidthSignal`] trait the network subsystem reads — priced
+//! model dissemination and TimelyFL's bandwidth-aware rebalancing consume
+//! it without touching this module (`crate::network`).
 
 use crate::simtime::SimTime;
 use crate::util::rng::Rng;

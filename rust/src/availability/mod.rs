@@ -33,11 +33,38 @@
 //! (the stay-prob policy's ranking signal) and `bandwidth_factor(client, t)`
 //! (the correlated process's degrade-before-drop coupling; exactly 1.0
 //! elsewhere).
+//!
+//! The bandwidth coupling is also exported as the [`BandwidthSignal`]
+//! trait so consumers outside the engine's private `truth_at` — the
+//! network subsystem's downlink pricing and the workload-rebalancing seam
+//! (`crate::network`) — share ONE signal instead of each re-deriving
+//! per-client link quality.
 
 pub mod correlated;
 pub mod process;
 pub mod trace;
 
+use crate::simtime::SimTime;
+
 pub use correlated::CorrelatedModel;
 pub use process::{AvailabilityConfig, AvailabilityKind, AvailabilityModel, SEED_SALT};
 pub use trace::{parse_trace, write_trace, TraceEvent};
+
+/// The shared per-client link-quality signal: a multiplicative factor in
+/// `(0, 1]` applied to a client's bandwidth at simulated time `t` (1.0 =
+/// nominal; the correlated-churn process ramps it toward its configured
+/// floor while a region degrades). Uplink pricing (`SimEngine::truth_at`),
+/// downlink pricing (`crate::network`), and bandwidth-aware workload
+/// rebalancing all consume this one trait, so every leg of a dispatch sees
+/// the same degraded link.
+pub trait BandwidthSignal {
+    fn bandwidth_factor(&mut self, client: usize, t: SimTime) -> f64;
+}
+
+impl BandwidthSignal for AvailabilityModel {
+    fn bandwidth_factor(&mut self, client: usize, t: SimTime) -> f64 {
+        // Delegates to the inherent facade method (which takes precedence
+        // at call sites, so this cannot recurse).
+        AvailabilityModel::bandwidth_factor(self, client, t)
+    }
+}

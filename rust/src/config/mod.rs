@@ -9,6 +9,7 @@ use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityConfig;
 use crate::devices::FleetConfig;
 use crate::fleet::{FleetCore, HierarchyConfig};
+use crate::network::NetworkConfig;
 
 /// Full specification of one simulated FL run.
 #[derive(Clone, Debug)]
@@ -95,6 +96,11 @@ pub struct RunConfig {
     /// (`hierarchy = flat | two-tier` + `hier_regions` / `hier_fan_in` /
     /// `hier_forward`). Flat is the historical path.
     pub hierarchy: HierarchyConfig,
+    /// Model-dissemination (downlink) pricing + bandwidth-aware workload
+    /// rebalancing (`network = free | priced` + `net_down_ratio` /
+    /// `net_stale_correction` / `net_rebalance`). `free` is the historical
+    /// path, bit-identical to pre-subsystem runs.
+    pub network: NetworkConfig,
 
     /// Escape hatch for A/B-measuring the deferred dispatch path: run a
     /// dispatched client's PJRT training at dispatch time (the historical
@@ -154,6 +160,7 @@ impl Default for RunConfig {
             sim_model_bytes: 1.09e6, // ResNet-20 f32 ~ 1.09 MB
             fleet_core: FleetCore::Eager,
             hierarchy: HierarchyConfig::default(),
+            network: NetworkConfig::default(),
             eager_train: false,
             eval_every: 10,
             eval_batches: 4,
@@ -298,6 +305,7 @@ impl RunConfig {
         anyhow::ensure!(self.eval_every > 0, "eval_every >= 1");
         self.availability.validate()?;
         self.hierarchy.validate()?;
+        self.network.validate()?;
         Ok(())
     }
 }
@@ -353,6 +361,21 @@ mod tests {
         }
         c.strategy = "x".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn network_validated_through_registry() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.network.model, "free", "free must stay the default");
+        for name in crate::network::names() {
+            c.network.model = name.to_string();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        c.network.model = "x".into();
+        assert!(c.validate().is_err());
+        c.network.model = "priced".into();
+        c.network.down_ratio = -1.0;
+        assert!(c.validate().is_err(), "negative down ratio must fail");
     }
 
     #[test]

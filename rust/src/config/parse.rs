@@ -64,6 +64,10 @@ pub const KNOWN_KEYS: &[&str] = &[
     "hier_regions",
     "hier_fan_in",
     "hier_forward",
+    "network",
+    "net_down_ratio",
+    "net_stale_correction",
+    "net_rebalance",
     "eager_train",
     "eval_every",
     "eval_batches",
@@ -157,6 +161,12 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "hier_regions" => cfg.hierarchy.regions = v.parse()?,
         "hier_fan_in" => cfg.hierarchy.fan_in = v.parse()?,
         "hier_forward" => cfg.hierarchy.forward = ForwardPolicy::parse(v)?,
+        "network" => cfg.network.model = crate::network::resolve(v)?.name.to_string(),
+        "net_down_ratio" => cfg.network.down_ratio = v.parse()?,
+        "net_stale_correction" => {
+            cfg.network.stale_correction = crate::network::StaleCorrection::parse(v)?
+        }
+        "net_rebalance" => cfg.network.rebalance = parse_bool(v)?,
         "eager_train" => cfg.eager_train = parse_bool(v)?,
         "eval_every" => cfg.eval_every = v.parse()?,
         "eval_batches" => cfg.eval_batches = v.parse()?,
@@ -380,6 +390,41 @@ mod tests {
         assert_eq!(cfg.availability.kind, AvailabilityKind::Correlated);
         let err = apply_cli(&mut cfg, "sampler=bogus").unwrap_err();
         assert!(format!("{err:#}").contains("uniform"), "error lists known samplers");
+    }
+
+    #[test]
+    fn network_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "network = priced\n\
+             net_down_ratio = 0.4\n\
+             net_stale_correction = delta-replay\n\
+             net_rebalance = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.network.model, "priced");
+        assert_eq!(cfg.network.down_ratio, 0.4);
+        assert_eq!(
+            cfg.network.stale_correction,
+            crate::network::StaleCorrection::DeltaReplay
+        );
+        assert!(cfg.network.rebalance);
+        cfg.validate().unwrap();
+        // Aliases canonicalize like strategies and samplers do.
+        apply_cli(&mut cfg, "network=downlink").unwrap();
+        assert_eq!(cfg.network.model, "priced");
+        apply_cli(&mut cfg, "network=INSTANT").unwrap();
+        assert_eq!(cfg.network.model, "free");
+        apply_cli(&mut cfg, "net_stale_correction=none").unwrap();
+        assert_eq!(
+            cfg.network.stale_correction,
+            crate::network::StaleCorrection::None
+        );
+        let err = apply_cli(&mut cfg, "network=bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("free"), "error lists known models");
+        assert!(apply_cli(&mut cfg, "net_stale_correction=rewind").is_err());
+        assert!(apply_cli(&mut cfg, "net_rebalance=maybe").is_err());
     }
 
     #[test]

@@ -47,12 +47,13 @@ use super::local_time::TimeTruth;
 use super::sampler::{self, ClientSampler, SamplerCtx};
 use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, TrainPlan};
 use super::{local_time, Recorder, Simulation};
-use crate::availability::{AvailabilityModel, SEED_SALT};
+use crate::availability::{AvailabilityModel, BandwidthSignal, SEED_SALT};
 use crate::devices::RoundConditions;
 use crate::fleet::{ClientTables, FleetCore, LazyAvailability};
 use crate::metrics::events::{ClientWorkload, DropCause, EventSink, RunEvent};
 use crate::metrics::RunReport;
 use crate::model::{ParamVec, Update};
+use crate::network::{self, NetworkModel, StaleCorrection};
 use crate::runtime::manifest::RatioMeta;
 use crate::simtime::{EventQueue, SimTime};
 use crate::util::rng::Rng;
@@ -185,6 +186,12 @@ enum PendingWork {
 
 struct PendingDispatch {
     base_version: u64,
+    /// Simulated time the dispatch's downlink transfer landed at the
+    /// client (equals the dispatch time under `network = free`).
+    arrival: SimTime,
+    /// The downlink leg's duration; strictly positive only for priced
+    /// dissemination — the gate on all stale-start bookkeeping.
+    down_secs: f64,
     work: PendingWork,
 }
 
@@ -263,6 +270,21 @@ pub struct SimEngine<'a> {
     /// `round-complete` event record so sweep JSONL output exposes the
     /// scheduler's per-client decisions.
     workloads_pending: Vec<ClientWorkload>,
+    /// The configured model-dissemination pricer (`crate::network`,
+    /// resolved from `cfg.network`). `free` prices every downlink at
+    /// exactly 0.0 and keeps all dissemination bookkeeping untouched.
+    net: Box<dyn NetworkModel>,
+    /// First simulated time each global version was seen on a dispatch — a
+    /// lower bound on its birth, enough for conservative stale-start
+    /// detection (`network::overtaken_by`). Only populated while downlinks
+    /// cost time, so `free` runs never grow it. Bounded by the number of
+    /// global versions.
+    version_born: BTreeMap<u64, SimTime>,
+    /// Downlink-wait seconds / stale starts accumulated since the last
+    /// completed round (drained onto the round-complete record and into
+    /// the Recorder's run totals).
+    downlink_wait_pending: f64,
+    stale_starts_pending: u64,
     stop: bool,
     sink: Option<&'a mut dyn EventSink>,
 }
@@ -288,6 +310,7 @@ impl<'a> SimEngine<'a> {
             FleetCore::Lazy => Some(LazyAvailability::new(&mut avail)),
             FleetCore::Eager => None,
         };
+        let net = cfg.network.build()?;
         Ok(SimEngine {
             sim,
             rng,
@@ -305,6 +328,10 @@ impl<'a> SimEngine<'a> {
             dropped_pending: 0,
             avail_dropped_pending: 0,
             workloads_pending: Vec::new(),
+            net,
+            version_born: BTreeMap::new(),
+            downlink_wait_pending: 0.0,
+            stale_starts_pending: 0,
             stop: false,
             sink,
         })
@@ -415,6 +442,32 @@ impl<'a> SimEngine<'a> {
         }
     }
 
+    /// The shared per-client link-quality signal
+    /// ([`crate::availability::BandwidthSignal`]) at `now` — the same
+    /// factor `truth_at` already folds into upload times, exposed for the
+    /// bandwidth-aware rebalancing seam (TimelyFL's Alg. 3 against the
+    /// *effective* timeline). Reading it never consumes engine RNG draws:
+    /// availability timelines are deterministic caches on their own salted
+    /// streams.
+    pub fn bandwidth_factor(&mut self, client: usize, now: SimTime) -> f64 {
+        BandwidthSignal::bandwidth_factor(&mut self.avail, client, now)
+    }
+
+    /// Price one dispatch's downlink leg (server → client transfer of the
+    /// global model) from the client's *effective* unit upload time, and
+    /// accrue it on the round's downlink-wait counter. Exactly 0.0 — with
+    /// zero bookkeeping — under the default `network = free`, which is what
+    /// keeps free runs bit-identical. Accrues for every dispatch, including
+    /// ones later cancelled by churn or dropped at the deadline: the model
+    /// bytes crossed the wire either way.
+    pub fn price_downlink(&mut self, effective_upload_secs: f64) -> f64 {
+        let down = self.net.downlink_secs(effective_upload_secs);
+        if down > 0.0 {
+            self.downlink_wait_pending += down;
+        }
+        down
+    }
+
     /// Note one client's dispatched workload (Alg. 3's E_c / alpha_c as
     /// realized) for the next `round-complete` record. Only bookkept when a
     /// sink is attached — the telemetry must cost nothing on sink-less runs.
@@ -492,6 +545,9 @@ impl<'a> SimEngine<'a> {
         let dropped = std::mem::take(&mut self.dropped_pending);
         let avail_dropped = std::mem::take(&mut self.avail_dropped_pending);
         let workloads = std::mem::take(&mut self.workloads_pending);
+        let downlink_wait_secs = std::mem::take(&mut self.downlink_wait_pending);
+        let stale_starts = std::mem::take(&mut self.stale_starts_pending);
+        self.recorder.note_network(downlink_wait_secs, stale_starts);
         self.recorder.record_round(
             round,
             clock,
@@ -506,6 +562,8 @@ impl<'a> SimEngine<'a> {
             participants: participant_ids.len(),
             dropped,
             avail_dropped,
+            downlink_wait_secs,
+            stale_starts,
             mean_train_loss,
             workloads,
         });
@@ -744,13 +802,29 @@ impl<'a> SimEngine<'a> {
             .remove(&client)
             .expect("generation-valid finish without stashed work");
         self.tables.delivered[client] += 1;
-        let base_version = pd.base_version;
+        // Stale-start detection: did a newer global version land while this
+        // dispatch's downlink was still in the air? Under `network = free`
+        // `down_secs` is 0.0 and this is a guaranteed None. With
+        // delta-replay correction the delivered update is *accounted* as if
+        // rebased onto the version at arrival (the Jia et al. update-replay
+        // approximation) — the executed plan still ran against the ORIGINAL
+        // snapshot, which is also what the snapshot store must release.
+        let snapshot_version = pd.base_version;
+        let mut base_version = pd.base_version;
+        if let Some(newer) =
+            network::overtaken_by(pd.down_secs, pd.base_version, pd.arrival, &self.version_born)
+        {
+            self.stale_starts_pending += 1;
+            if self.sim.cfg.network.stale_correction == StaleCorrection::DeltaReplay {
+                base_version = newer;
+            }
+        }
         let (update, mean_loss) = match pd.work {
             PendingWork::Trained { update, mean_loss } => (update, mean_loss),
             PendingWork::Planned { plan, base } => {
                 let outcome =
                     execute_plan(&self.sim.runtime, &plan, &base, self.sim.cfg.client_lr)?;
-                self.snapshots.release(base_version);
+                self.snapshots.release(snapshot_version);
                 self.recorder.wasted.on_execute();
                 (outcome.update, outcome.mean_loss)
             }
@@ -776,6 +850,7 @@ impl<'a> SimEngine<'a> {
             Some(PendingDispatch {
                 base_version,
                 work: PendingWork::Planned { .. },
+                ..
             }) => {
                 self.snapshots.release(base_version);
                 self.recorder.wasted.on_avoid();
@@ -809,12 +884,24 @@ impl<'a> SimEngine<'a> {
             lazy.note_busy(client);
         }
         self.in_flight += 1;
+        let now = self.events.now();
         let cond = sim.fleet.round_conditions(&mut self.rng);
-        let t = self.truth_at(client, &cond, self.events.now());
+        let t = self.truth_at(client, &cond, now);
+        // Model dissemination first: the global version rides the downlink
+        // before any training starts. 0.0 under `network = free`, so the
+        // scheduled finish time is unchanged there bit-for-bit.
+        let down = self.price_downlink(t.t_com);
+        if down > 0.0 {
+            // Note the version's birth (first time it is seen leaving the
+            // server) so later-arriving transfers can detect being
+            // overtaken. Gated on a real transfer: free dissemination can
+            // never be overtaken, so it never pays for the map.
+            self.version_born.entry(base_version).or_insert(now);
+        }
         // Compute scales with the nominal compiled ratio, upload with the
         // realized trainable fraction; both are exactly 1.0 for full-model
         // dispatches.
-        let duration = t.round_secs(epochs as f64, ratio.ratio, ratio.trainable_fraction);
+        let duration = down + t.round_secs(epochs as f64, ratio.ratio, ratio.trainable_fraction);
         let plan = plan_client(
             &sim.dataset,
             client,
@@ -836,7 +923,15 @@ impl<'a> SimEngine<'a> {
             let base = self.snapshots.retain(base_version, base);
             PendingWork::Planned { plan, base }
         };
-        self.pending.insert(client, PendingDispatch { base_version, work });
+        self.pending.insert(
+            client,
+            PendingDispatch {
+                base_version,
+                arrival: now + down,
+                down_secs: down,
+                work,
+            },
+        );
         self.events.schedule_in(
             duration,
             EngineEvent::Finish {
@@ -924,6 +1019,8 @@ impl<'a> SimEngine<'a> {
             completed_rounds,
             dropped_pending,
             avail_dropped_pending,
+            downlink_wait_pending,
+            stale_starts_pending,
             ..
         } = self;
         for pd in pending.into_values() {
@@ -932,6 +1029,9 @@ impl<'a> SimEngine<'a> {
             }
         }
         recorder.absorb_tail_drops(dropped_pending, avail_dropped_pending);
+        // Downlink waits / stale starts accrued after the last completed
+        // round fold into the run totals (no round record to carry them).
+        recorder.note_network(downlink_wait_pending, stale_starts_pending);
         recorder.finish(
             strategy_name,
             sim,

@@ -28,6 +28,26 @@ impl TimeEstimate {
     pub fn t_total(&self) -> f64 {
         self.t_cmp + self.t_com
     }
+
+    /// The estimate re-priced under a degraded link: the communication
+    /// term stretches by `1 / factor` (the same transform the engine's
+    /// ground truth applies in `SimEngine::truth_at`), compute untouched.
+    /// This is what the bandwidth-aware rebalancing seam feeds Alg. 3 —
+    /// scheduling against the *effective* timeline instead of the nominal
+    /// probe — so a degrading region shrinks E_c / alpha_c instead of
+    /// merely missing the deadline. `factor >= 1` (or a non-positive
+    /// factor, which only an always-on model would produce as 1.0) leaves
+    /// the estimate unchanged or faster, never slower.
+    pub fn degraded(self, factor: f64) -> TimeEstimate {
+        if factor > 0.0 {
+            TimeEstimate {
+                t_cmp: self.t_cmp,
+                t_com: self.t_com / factor,
+            }
+        } else {
+            self
+        }
+    }
 }
 
 /// Ground-truth unit times for the same round (used for the actual
@@ -122,6 +142,30 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((mean - 110.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn degraded_stretches_only_the_comm_term() {
+        let e = TimeEstimate {
+            t_cmp: 110.0,
+            t_com: 2.0,
+        };
+        let d = e.degraded(0.25);
+        assert!((d.t_cmp - 110.0).abs() < 1e-12, "compute untouched");
+        assert!((d.t_com - 8.0).abs() < 1e-12, "comm / factor");
+        let full = e.degraded(1.0);
+        assert!((full.t_cmp - e.t_cmp).abs() < 1e-12);
+        assert!((full.t_com - e.t_com).abs() < 1e-12);
+        // Degenerate factor: no change rather than a NaN/inf estimate.
+        let z = e.degraded(0.0);
+        assert!((z.t_com - e.t_com).abs() < 1e-12);
+        // Monotone: worse link => never-smaller total.
+        let mut prev = f64::INFINITY;
+        for i in 1..=10 {
+            let t = e.degraded(i as f64 / 10.0).t_total();
+            assert!(t <= prev);
+            prev = t;
+        }
     }
 
     #[test]

@@ -145,6 +145,13 @@ pub struct Recorder {
     /// silently undercount.
     tail_dropped: usize,
     tail_avail_dropped: usize,
+    /// Model-dissemination totals (`crate::network`): simulated seconds
+    /// dispatches spent on the downlink, and dispatches that started on a
+    /// stale version. The engine drains its pending per-round counters in
+    /// here at each round completion (and folds the tail at run end); both
+    /// stay exactly zero under `network = free`.
+    downlink_wait_secs: f64,
+    stale_starts: u64,
 }
 
 impl Recorder {
@@ -158,7 +165,16 @@ impl Recorder {
             wasted: WastedWork::default(),
             tail_dropped: 0,
             tail_avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
         }
+    }
+
+    /// Accumulate dissemination totals (downlink-wait seconds + stale
+    /// starts) into the run-level counters.
+    pub fn note_network(&mut self, wait_secs: f64, stale: u64) {
+        self.downlink_wait_secs += wait_secs;
+        self.stale_starts += stale;
     }
 
     /// Record one aggregation round's participants + stats. Deadline /
@@ -279,6 +295,8 @@ impl Recorder {
             trainings_avoided: self.wasted.avoided,
             tail_dropped: self.tail_dropped,
             tail_avail_dropped: self.tail_avail_dropped,
+            downlink_wait_secs: self.downlink_wait_secs,
+            stale_starts: self.stale_starts,
         }
     }
 }

@@ -74,7 +74,10 @@ impl RoundStrategy for SyncFl {
             // truth_at folds in the correlated process's
             // degrade-before-drop bandwidth factor (exactly 1.0 elsewhere).
             let t = eng.truth_at(c, &cond, now);
-            let duration = t.round_secs(epochs as f64, 1.0, 1.0);
+            // Downlink dissemination leg first (0.0 under `network = free`):
+            // the slowest client's wait now includes receiving the model.
+            let down = eng.price_downlink(t.t_com);
+            let duration = down + t.round_secs(epochs as f64, 1.0, 1.0);
             // The server waits for the slowest sampled client whether or
             // not it delivers (timeout-and-discard).
             round_secs = round_secs.max(duration);

@@ -113,7 +113,23 @@ impl RoundStrategy for TimelyFl {
 
         for (c, cond, est) in &probes {
             let w = if cfg.adaptive {
-                schedule(t_k, est, cfg.max_local_epochs)
+                // Bandwidth-aware rebalancing (`net_rebalance`): schedule
+                // against the *effective* timeline — the probe's estimate
+                // with the shared bandwidth signal folded into its comm
+                // term — so clients in degrading regions get their E_c /
+                // alpha_c shrunk to what the degraded link can still land,
+                // instead of being scheduled for the nominal link and
+                // missing the deadline. T_k stays computed from the
+                // nominal probes (the server's interval should not chase
+                // regional weather). Off by default: the nominal estimate
+                // reproduces the historical schedule exactly, and reading
+                // the signal consumes no RNG draws either way.
+                let est = if cfg.network.rebalance {
+                    est.degraded(eng.bandwidth_factor(*c, now))
+                } else {
+                    *est
+                };
+                schedule(t_k, &est, cfg.max_local_epochs)
             } else {
                 *self.frozen_workload[*c]
                     .get_or_insert_with(|| schedule(t_k, est, cfg.max_local_epochs))
@@ -129,7 +145,15 @@ impl RoundStrategy for TimelyFl {
             // throughput, so a destabilizing region shows up as deadline
             // misses the scheduler could not see coming.
             let t = eng.truth_at(*c, cond, now);
-            let actual = t.round_secs(w.epochs as f64, ratio.ratio, ratio.trainable_fraction);
+            // Model dissemination: the round's global version rides the
+            // downlink before training starts (full model even for partial
+            // training — partial ratios prune what the CLIENT uploads, not
+            // what the server sends), so the transfer counts against the
+            // deadline and the client's online window. 0.0 under the
+            // default `network = free`.
+            let down = eng.price_downlink(t.t_com);
+            let actual =
+                down + t.round_secs(w.epochs as f64, ratio.ratio, ratio.trainable_fraction);
             let landed = actual <= t_k * (1.0 + cfg.deadline_grace);
             // Failure injection: finished but never delivered.
             let lost = cfg.dropout_prob > 0.0 && eng.rng.f64() < cfg.dropout_prob;

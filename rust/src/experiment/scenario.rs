@@ -149,6 +149,28 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
         ],
     },
     ScenarioSpec {
+        name: "cifar_downlink",
+        aliases: &["downlink"],
+        summary: "cifar_regional plus priced model dissemination (asymmetric downlink, \
+                  bandwidth-aware workload rebalancing) — the network-subsystem testbed; \
+                  sweep `network=free,priced` to isolate the dissemination cost",
+        preset: Some("cifar_fedavg"),
+        overrides: &[
+            ("availability", "correlated"),
+            ("avail_regions", "8"),
+            ("avail_region_mtbf_secs", "2400"),
+            ("avail_region_outage_secs", "800"),
+            ("avail_mean_online_secs", "2400"),
+            ("avail_mean_offline_secs", "600"),
+            ("avail_degrade_window_secs", "300"),
+            ("avail_degrade_floor", "0.25"),
+            ("sampler_horizon_secs", "400"),
+            ("network", "priced"),
+            ("net_down_ratio", "0.25"),
+            ("net_rebalance", "true"),
+        ],
+    },
+    ScenarioSpec {
         name: "cifar_noniid",
         aliases: &["noniid"],
         summary: "CIFAR at severe non-iid (Dirichlet alpha 0.05) — where inclusiveness \
@@ -309,6 +331,17 @@ mod tests {
         assert_eq!(regional.availability.degrade_window_secs, 300.0);
         assert_eq!(regional.sampler, "uniform", "sampler stays an explicit axis");
         assert_eq!(regional.sampler_horizon_secs, 400.0);
+
+        let downlink = resolve("downlink").unwrap().config().unwrap();
+        assert_eq!(downlink.availability.kind, AvailabilityKind::Correlated);
+        assert_eq!(downlink.network.model, "priced");
+        assert_eq!(downlink.network.down_ratio, 0.25);
+        assert!(downlink.network.rebalance);
+        assert_eq!(
+            downlink.network.stale_correction,
+            crate::network::StaleCorrection::None,
+            "stale correction stays an explicit axis"
+        );
 
         let smoke = resolve("smoke").unwrap().config().unwrap();
         assert_eq!(smoke.model, "kws_lite");

@@ -43,6 +43,7 @@ pub mod experiment;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod network;
 pub mod runtime;
 pub mod simtime;
 pub mod util;

@@ -10,6 +10,7 @@
 //!                     [--events DIR]                 # per-run JSONL event streams
 //! timelyfl strategies                                 # dump the strategy registry
 //! timelyfl samplers                                   # dump the sampler registry
+//! timelyfl networks                                   # dump the network-model registry
 //! timelyfl scenarios                                  # dump the scenario registry
 //! timelyfl presets                                    # dump the paper presets
 //! timelyfl trace record [--set avail_*=..] [--horizon SECS] [--out FILE]
@@ -38,6 +39,7 @@ use timelyfl::experiment::{scenario, ExperimentRunner, SweepGrid};
 use timelyfl::metrics::events::JsonlSink;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
 use timelyfl::metrics::RunReport;
+use timelyfl::network;
 use timelyfl::runtime::{Manifest, Task};
 use timelyfl::simtime::hours;
 
@@ -286,6 +288,19 @@ fn cmd_samplers() -> Result<()> {
     Ok(())
 }
 
+fn cmd_networks() -> Result<()> {
+    let mut t = Table::new(&["name", "aliases", "summary"]);
+    for info in network::NETWORKS {
+        t.row(vec![
+            info.name.to_string(),
+            info.aliases.join(", "),
+            info.summary.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_scenarios() -> Result<()> {
     let mut t = Table::new(&["name", "aliases", "preset", "summary"]);
     for s in scenario::SCENARIOS {
@@ -472,15 +487,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn usage() -> String {
     format!(
-        "usage: timelyfl <run|compare|sweep|strategies|samplers|scenarios|presets|trace record|inspect> \
+        "usage: timelyfl <run|compare|sweep|strategies|samplers|networks|scenarios|presets|trace record|inspect> \
          [--preset P] [--scenario S] [--strategy S] [--sampler S] [--config FILE] [--set k=v]... \
          [--axis k=v1,v2]... [--seeds N] [--jobs J] [--artifacts DIR] [--out FILE] \
          [--target X] [--events FILE|DIR] [--horizon SECS] [--eager-train]\n\
          strategies: {}\n\
          samplers:   {}\n\
+         networks:   {}\n\
          scenarios:  {}",
         registry::names().join(", "),
         sampler::names().join(", "),
+        network::names().join(", "),
         scenario::names().join(", ")
     )
 }
@@ -503,6 +520,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "strategies" => cmd_strategies(),
         "samplers" => cmd_samplers(),
+        "networks" => cmd_networks(),
         "scenarios" => cmd_scenarios(),
         "presets" => cmd_presets(),
         "trace" => cmd_trace(&args),

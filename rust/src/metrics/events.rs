@@ -8,7 +8,8 @@
 //!
 //! ```text
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
-//!  "dropped":1,"avail_dropped":2,"mean_train_loss":1.83,
+//!  "dropped":1,"avail_dropped":2,"downlink_wait_secs":37.5,"stale_starts":1,
+//!  "mean_train_loss":1.83,
 //!  "workloads":[{"alpha":0.75,"client":4,"epochs":2,"stay_prob":0.93}]}
 //! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
 //! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability",
@@ -109,6 +110,14 @@ pub enum RunEvent {
         participants: usize,
         dropped: usize,
         avail_dropped: usize,
+        /// Seconds the dispatches since the previous round-complete spent
+        /// waiting on the model-dissemination downlink (`crate::network`);
+        /// 0.0 under the default `network = free`.
+        downlink_wait_secs: f64,
+        /// Dispatches since the previous round-complete whose downlink was
+        /// overtaken by a newer global version (stale starts); 0 under
+        /// `network = free`.
+        stale_starts: u64,
         mean_train_loss: Option<f64>,
         workloads: Vec<ClientWorkload>,
     },
@@ -160,6 +169,8 @@ impl RunEvent {
                 participants,
                 dropped,
                 avail_dropped,
+                downlink_wait_secs,
+                stale_starts,
                 mean_train_loss,
                 workloads,
             } => {
@@ -168,6 +179,8 @@ impl RunEvent {
                 pairs.push(("participants", Json::num(*participants as f64)));
                 pairs.push(("dropped", Json::num(*dropped as f64)));
                 pairs.push(("avail_dropped", Json::num(*avail_dropped as f64)));
+                pairs.push(("downlink_wait_secs", Json::num(*downlink_wait_secs)));
+                pairs.push(("stale_starts", Json::num(*stale_starts as f64)));
                 pairs.push((
                     "mean_train_loss",
                     mean_train_loss.map_or(Json::Null, Json::num),
@@ -221,6 +234,8 @@ impl RunEvent {
                 participants: v.expect("participants")?.as_usize()?,
                 dropped: v.expect("dropped")?.as_usize()?,
                 avail_dropped: v.expect("avail_dropped")?.as_usize()?,
+                downlink_wait_secs: v.expect("downlink_wait_secs")?.as_f64()?,
+                stale_starts: v.expect("stale_starts")?.as_usize()? as u64,
                 mean_train_loss: match v.expect("mean_train_loss")? {
                     Json::Null => None,
                     other => Some(other.as_f64()?),
@@ -347,6 +362,8 @@ mod tests {
                 participants: 14,
                 dropped: 1,
                 avail_dropped: 2,
+                downlink_wait_secs: 37.5,
+                stale_starts: 1,
                 mean_train_loss: Some(1.83),
                 workloads: vec![
                     ClientWorkload { client: 4, epochs: 2, alpha: 0.75, stay_prob: 0.93 },
@@ -359,6 +376,8 @@ mod tests {
                 participants: 0,
                 dropped: 0,
                 avail_dropped: 6,
+                downlink_wait_secs: 0.0,
+                stale_starts: 0,
                 mean_train_loss: None,
                 workloads: vec![],
             },
@@ -421,6 +440,8 @@ mod tests {
             participants: 0,
             dropped: 0,
             avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
         };
@@ -443,15 +464,23 @@ mod tests {
         // schema is versioned by its field set.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
-             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\
+             \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
+             \"mean_train_loss\":null,\
              \"workloads\":[{\"client\":1,\"epochs\":2}]}"
         )
         .is_err());
         // Same for the sampler-decision field.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
-             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\
+             \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
+             \"mean_train_loss\":null,\
              \"workloads\":[{\"client\":1,\"epochs\":2,\"alpha\":1.0}]}"
+        )
+        .is_err());
+        // A round-complete without the dissemination counters is malformed.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\"workloads\":[]}"
         )
         .is_err());
     }

@@ -176,6 +176,16 @@ pub struct RunReport {
     pub tail_dropped: usize,
     /// Same, for availability-churn drops (`total_avail_drops()`).
     pub tail_avail_dropped: usize,
+    /// Total simulated seconds dispatched clients spent waiting on the
+    /// model-dissemination downlink (`crate::network`): the sum of every
+    /// dispatch's server → client transfer duration. Exactly 0.0 under the
+    /// default `network = free`.
+    pub downlink_wait_secs: f64,
+    /// Dispatches whose downlink was overtaken: a newer global version was
+    /// born before the client's transfer landed, so training started on a
+    /// stale model (whether that is corrected is `net_stale_correction`'s
+    /// call). Exactly 0 under `network = free`.
+    pub stale_starts: u64,
 }
 
 impl RunReport {
@@ -299,6 +309,8 @@ mod tests {
             trainings_avoided: 0,
             tail_dropped: 0,
             tail_avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
         }
     }
 

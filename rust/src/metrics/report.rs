@@ -55,6 +55,8 @@ impl RunReport {
                 "tail_avail_dropped",
                 Json::num(self.tail_avail_dropped as f64),
             ),
+            ("downlink_wait_secs", Json::num(self.downlink_wait_secs)),
+            ("stale_starts", Json::num(self.stale_starts as f64)),
             (
                 "eval_points",
                 Json::arr(
@@ -288,6 +290,8 @@ mod tests {
             trainings_avoided: 4,
             tail_dropped: 0,
             tail_avail_dropped: 1,
+            downlink_wait_secs: 12.5,
+            stale_starts: 2,
         }
     }
 
@@ -314,6 +318,11 @@ mod tests {
             4.0
         );
         assert_eq!(parsed.get("tail_avail_dropped").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            parsed.get("downlink_wait_secs").unwrap().as_f64().unwrap(),
+            12.5
+        );
+        assert_eq!(parsed.get("stale_starts").unwrap().as_f64().unwrap(), 2.0);
         assert!(
             (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
         );

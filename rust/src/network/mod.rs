@@ -1,0 +1,390 @@
+//! Network subsystem: priced model *distribution* (the downlink leg).
+//!
+//! The sim has always priced the uplink — a client's update travels at its
+//! device bandwidth, degraded by the availability model's
+//! `bandwidth_factor` — but model distribution was free and instantaneous,
+//! which hides a real bottleneck: "Efficient Federated Learning with Timely
+//! Update Dissemination" (Jia et al.) shows downlink dissemination has its
+//! own asynchronous dynamics and staleness consequences, and Papaya (Huba
+//! et al. 2022) reports that at production scale the communication fabric,
+//! not compute, dominates round time.
+//!
+//! A [`NetworkModel`] prices the server → client transfer of one global
+//! model, given the client's current *effective* unit upload time (already
+//! bandwidth-degraded — both directions ride the same
+//! [`crate::availability::BandwidthSignal`]). Two registered models:
+//!
+//! - **free** — the default and the historical behaviour: every downlink
+//!   is 0.0 seconds. Consumes no RNG draws and touches no counters, so
+//!   `network = free` runs are byte-identical to pre-subsystem reports
+//!   (locked by `rust/tests/network_equivalence.rs`).
+//! - **priced** — the downlink costs `effective_upload_secs * down_ratio`
+//!   (asymmetric up/down via `net_down_ratio`; consumer links are usually
+//!   downlink-faster, so the default ratio is 0.25). A dispatch's training
+//!   starts only after the transfer lands, and if a newer global version
+//!   was born mid-transfer the client has *started stale* — what it trains
+//!   against is decided by [`StaleCorrection`].
+//!
+//! The registry mirrors `coordinator::registry` / `coordinator::sampler`:
+//! adding a model is three steps (see `docs/architecture.md`).
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+use anyhow::Result;
+
+use crate::simtime::SimTime;
+
+/// What a stale-started client trains against (Jia et al. idiom).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StaleCorrection {
+    /// Count the stale start but change nothing: the client trained
+    /// against the version it was sent, and staleness-aware aggregators
+    /// (FedBuff's discounting) see the original base version.
+    #[default]
+    None,
+    /// Update-replay accounting: treat the update as if rebased onto the
+    /// newest version that had landed by the client's transfer-arrival
+    /// time. The executed plan still ran against the ORIGINAL snapshot —
+    /// the correction is applied at the staleness-accounting level (the
+    /// rewritten `base_version` feeds FedBuff's cap and discounting), the
+    /// same approximation Jia et al.'s delta-replay makes server-side.
+    DeltaReplay,
+}
+
+impl StaleCorrection {
+    pub fn name(self) -> &'static str {
+        match self {
+            StaleCorrection::None => "none",
+            StaleCorrection::DeltaReplay => "delta-replay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StaleCorrection> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(StaleCorrection::None),
+            "delta-replay" | "delta_replay" | "replay" => Ok(StaleCorrection::DeltaReplay),
+            other => anyhow::bail!(
+                "unknown stale correction {other:?} (known: none, delta-replay)"
+            ),
+        }
+    }
+}
+
+/// The network half of a [`crate::config::RunConfig`].
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    /// Dissemination model name, resolved through this module's registry
+    /// (`free` | `priced`, aliases accepted; the parser canonicalizes).
+    pub model: String,
+    /// Downlink duration as a fraction of the effective unit upload time
+    /// (only the `priced` model reads it).
+    pub down_ratio: f64,
+    /// What a stale-started client trains against (priced model only).
+    pub stale_correction: StaleCorrection,
+    /// Region-aware workload rebalancing: TimelyFL's Alg. 3 schedules
+    /// against the *effective* (bandwidth-degraded) timeline instead of the
+    /// nominal probe, shrinking E_c / alpha_c for clients in degrading
+    /// regions instead of merely watching them miss deadlines. Independent
+    /// of the dissemination model (it reads the same bandwidth signal).
+    pub rebalance: bool,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            model: "free".into(),
+            down_ratio: 0.25,
+            stale_correction: StaleCorrection::None,
+            rebalance: false,
+        }
+    }
+}
+
+impl NetworkConfig {
+    pub fn validate(&self) -> Result<()> {
+        resolve(&self.model)?;
+        anyhow::ensure!(
+            self.down_ratio >= 0.0 && self.down_ratio.is_finite(),
+            "net_down_ratio must be finite and >= 0"
+        );
+        Ok(())
+    }
+
+    /// Build the configured dissemination model.
+    pub fn build(&self) -> Result<Box<dyn NetworkModel>> {
+        Ok((resolve(&self.model)?.build)(self))
+    }
+}
+
+/// Prices the server → client transfer of one global model.
+///
+/// `effective_upload_secs` is the client's bandwidth-degraded unit upload
+/// time (`TimeTruth::t_com` after the engine divides by the availability
+/// model's `bandwidth_factor`), so downlink pricing inherits the
+/// degrade-before-drop coupling for free: the returned duration is monotone
+/// non-increasing in the bandwidth factor by composition.
+pub trait NetworkModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Seconds the global model spends on the wire server → client.
+    /// `free` returns exactly 0.0 — callers gate all dissemination
+    /// bookkeeping on a strictly positive duration, which is what keeps
+    /// the default path byte-identical.
+    fn downlink_secs(&self, effective_upload_secs: f64) -> f64;
+}
+
+/// The historical behaviour: model distribution is free and instantaneous.
+pub struct FreeNetwork;
+
+impl NetworkModel for FreeNetwork {
+    fn name(&self) -> &'static str {
+        "free"
+    }
+
+    fn downlink_secs(&self, _effective_upload_secs: f64) -> f64 {
+        0.0
+    }
+}
+
+/// Downlink costs a configurable fraction of the effective upload time.
+pub struct PricedNetwork {
+    pub down_ratio: f64,
+}
+
+impl NetworkModel for PricedNetwork {
+    fn name(&self) -> &'static str {
+        "priced"
+    }
+
+    fn downlink_secs(&self, effective_upload_secs: f64) -> f64 {
+        effective_upload_secs * self.down_ratio
+    }
+}
+
+/// One registered dissemination model.
+pub struct NetworkInfo {
+    /// Canonical name (what `NetworkConfig::model` carries after parsing).
+    pub name: &'static str,
+    /// Extra accepted spellings (lowercase) for config/CLI lookup; the
+    /// canonical name matches case-insensitively without being listed.
+    pub aliases: &'static [&'static str],
+    /// One-liner for `timelyfl networks`.
+    pub summary: &'static str,
+    /// Build a fresh model instance for one run.
+    pub build: fn(&NetworkConfig) -> Box<dyn NetworkModel>,
+}
+
+/// All registered models. `free` first: it is the default and the
+/// bit-compatibility anchor.
+pub static NETWORKS: &[NetworkInfo] = &[
+    NetworkInfo {
+        name: "free",
+        aliases: &["instant"],
+        summary: "model distribution is free and instantaneous (the historical behaviour; bit-identical default)",
+        build: |_| Box::new(FreeNetwork),
+    },
+    NetworkInfo {
+        name: "priced",
+        aliases: &["downlink", "asym"],
+        summary: "downlink costs net_down_ratio x the effective upload time; mid-transfer version births are stale starts",
+        build: |cfg| Box::new(PricedNetwork { down_ratio: cfg.down_ratio }),
+    },
+];
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static NetworkInfo> {
+    let needle = name.to_ascii_lowercase();
+    NETWORKS
+        .iter()
+        .find(|n| n.name.to_ascii_lowercase() == needle || n.aliases.contains(&needle.as_str()))
+}
+
+/// Like [`find`], but an actionable error listing the known models.
+pub fn resolve(name: &str) -> Result<&'static NetworkInfo> {
+    find(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown network model {name:?} (known: {})",
+            names().join(", ")
+        )
+    })
+}
+
+/// Canonical names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    NETWORKS.iter().map(|n| n.name).collect()
+}
+
+/// Stale-start detection: the newest global version strictly newer than
+/// `base` that was already born when the client's downlink landed at
+/// `arrival` — i.e. the version the server COULD have sent had the
+/// transfer started later. `None` means the start was not stale: a free
+/// (zero-duration) transfer can never be overtaken, and neither can a
+/// transfer during which no newer version was born.
+///
+/// `born` maps each global version to the first simulated time a dispatch
+/// carried it — a lower bound on its true birth (the engine can only
+/// observe versions when they are sent), which makes stale detection
+/// conservative: a version born between dispatches is seen slightly late.
+pub fn overtaken_by(
+    down_secs: f64,
+    base: u64,
+    arrival: SimTime,
+    born: &BTreeMap<u64, SimTime>,
+) -> Option<u64> {
+    if down_secs <= 0.0 {
+        return None;
+    }
+    born.range((Bound::Excluded(base), Bound::Unbounded))
+        .filter(|&(_, &b)| b <= arrival)
+        .map(|(&v, _)| v)
+        .max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_unique_case_insensitive() {
+        let mut seen = std::collections::BTreeSet::new();
+        for n in NETWORKS {
+            assert!(
+                seen.insert(n.name.to_ascii_lowercase()),
+                "duplicate network model name {}",
+                n.name
+            );
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_entry_and_never_collide() {
+        for n in NETWORKS {
+            assert_eq!(find(n.name).unwrap().name, n.name);
+            assert_eq!(find(&n.name.to_ascii_uppercase()).unwrap().name, n.name);
+            for a in n.aliases {
+                assert_eq!(find(a).unwrap().name, n.name, "alias {a} resolves elsewhere");
+            }
+        }
+        let mut keys = std::collections::BTreeSet::new();
+        for n in NETWORKS {
+            assert!(keys.insert(n.name.to_ascii_lowercase()));
+            for a in n.aliases {
+                assert!(keys.insert(a.to_string()), "alias {a} collides");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_error_lists_known_models() {
+        let err = resolve("bogus").unwrap_err().to_string();
+        for n in NETWORKS {
+            assert!(err.contains(n.name), "error should list {}", n.name);
+        }
+        assert!(find("").is_none());
+    }
+
+    #[test]
+    fn registry_order_starts_with_the_free_anchor() {
+        assert_eq!(names()[0], "free", "free must stay the default anchor");
+        assert!(names().contains(&"priced"));
+    }
+
+    #[test]
+    fn default_config_is_the_free_anchor_and_validates() {
+        let cfg = NetworkConfig::default();
+        assert_eq!(cfg.model, "free");
+        assert_eq!(cfg.stale_correction, StaleCorrection::None);
+        assert!(!cfg.rebalance);
+        cfg.validate().unwrap();
+        let model = cfg.build().unwrap();
+        assert_eq!(model.name(), "free");
+        for up in [0.0, 1.0, 3600.0] {
+            assert_eq!(model.downlink_secs(up), 0.0, "free is always 0.0");
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        let mut cfg = NetworkConfig::default();
+        cfg.model = "carrier-pigeon".into();
+        assert!(cfg.validate().is_err());
+        cfg.model = "priced".into();
+        cfg.down_ratio = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.down_ratio = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.down_ratio = 0.0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn priced_downlink_scales_with_the_ratio_and_the_degraded_upload() {
+        let mut cfg = NetworkConfig::default();
+        cfg.model = "priced".into();
+        cfg.down_ratio = 0.5;
+        let model = cfg.build().unwrap();
+        assert_eq!(model.name(), "priced");
+        assert_eq!(model.downlink_secs(10.0), 5.0);
+        // Effective upload = nominal / bandwidth_factor, so a degrading
+        // region monotonically stretches the downlink too.
+        let nominal = 8.0;
+        let mut prev = f64::INFINITY;
+        for i in 1..=10 {
+            let factor = i as f64 / 10.0; // 0.1 ..= 1.0
+            let d = model.downlink_secs(nominal / factor);
+            assert!(d <= prev, "downlink must shrink as the factor recovers");
+            prev = d;
+        }
+        assert_eq!(prev, nominal * 0.5, "factor 1.0 = nominal pricing");
+    }
+
+    #[test]
+    fn stale_correction_parse_round_trips() {
+        for sc in [StaleCorrection::None, StaleCorrection::DeltaReplay] {
+            assert_eq!(StaleCorrection::parse(sc.name()).unwrap(), sc);
+        }
+        assert_eq!(
+            StaleCorrection::parse("delta_replay").unwrap(),
+            StaleCorrection::DeltaReplay
+        );
+        assert_eq!(StaleCorrection::parse("REPLAY").unwrap(), StaleCorrection::DeltaReplay);
+        assert!(StaleCorrection::parse("rewind").is_err());
+        assert_eq!(StaleCorrection::default(), StaleCorrection::None);
+    }
+
+    #[test]
+    fn overtaken_by_gates_on_a_real_transfer() {
+        let mut born = BTreeMap::new();
+        born.insert(0, 0.0);
+        born.insert(1, 100.0);
+        born.insert(2, 200.0);
+        // Zero-duration transfers are never overtaken, whatever was born.
+        assert_eq!(overtaken_by(0.0, 0, 500.0, &born), None);
+        // Version 1 and 2 both landed before arrival: the NEWEST wins.
+        assert_eq!(overtaken_by(5.0, 0, 250.0, &born), Some(2));
+        // Only version 1 had landed by t=150.
+        assert_eq!(overtaken_by(5.0, 0, 150.0, &born), Some(1));
+        // Nothing newer than the base had landed.
+        assert_eq!(overtaken_by(5.0, 0, 50.0, &born), None);
+        assert_eq!(overtaken_by(5.0, 2, 500.0, &born), None);
+        // Raising the arrival time never un-stales a start.
+        let mut last: Option<u64> = None;
+        for arrival in [0.0, 100.0, 150.0, 200.0, 1000.0] {
+            let v = overtaken_by(5.0, 0, arrival, &born);
+            assert!(v >= last, "overtaking version must be monotone in arrival");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn overtaken_by_ignores_versions_at_or_below_the_base() {
+        let mut born = BTreeMap::new();
+        born.insert(7, 10.0);
+        assert_eq!(overtaken_by(1.0, 7, 100.0, &born), None);
+        assert_eq!(overtaken_by(1.0, 6, 100.0, &born), Some(7));
+        // Birth exactly at arrival counts as landed (<=).
+        assert_eq!(overtaken_by(1.0, 6, 10.0, &born), Some(7));
+        assert_eq!(overtaken_by(1.0, 6, 9.999, &born), None);
+    }
+}

@@ -1,0 +1,191 @@
+//! Seeded config fuzz-lite: random-but-valid override sets over the
+//! network × availability × sampler axes, pushed through the real
+//! `config::parse` path.
+//!
+//! Not a coverage-guided fuzzer — a fixed-seed sweep of ~64 generated
+//! configs that must all parse, validate, canonicalize (aliases collapse
+//! to registry names), and re-apply deterministically. A smaller
+//! artifact-gated group actually RUNS a handful of fuzzed configs on tiny
+//! fleets and checks the global invariants no knob combination may break
+//! (free networks price nothing; counters stay finite; repeat runs are
+//! byte-identical). The artifact-free groups are wired into
+//! `scripts/check.sh`.
+
+use timelyfl::config::{parse as cfgparse, RunConfig};
+use timelyfl::coordinator::Simulation;
+use timelyfl::metrics::RunReport;
+use timelyfl::util::rng::Rng;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &[&'a str]) -> &'a str {
+    xs[rng.usize_below(xs.len())]
+}
+
+/// One random-but-valid override set over the axes this fuzz targets.
+/// Every value is drawn from the spellings the parser documents (aliases,
+/// mixed case, bool synonyms) or from numeric ranges `validate()` accepts.
+fn random_overrides(rng: &mut Rng) -> Vec<(String, String)> {
+    let mut o: Vec<(String, String)> = Vec::new();
+    let mut push = |k: &str, v: String| o.push((k.to_string(), v));
+    push(
+        "network",
+        pick(rng, &["free", "priced", "instant", "downlink", "asym", "FREE", "Priced"]).into(),
+    );
+    push("net_down_ratio", format!("{:.3}", rng.f64() * 4.0));
+    push(
+        "net_stale_correction",
+        pick(rng, &["none", "delta-replay", "delta_replay", "replay", "NONE"]).into(),
+    );
+    push("net_rebalance", pick(rng, &["true", "false", "1", "0", "yes", "no"]).into());
+    push(
+        "availability",
+        pick(rng, &["always-on", "always_on", "markov", "correlated", "regional"]).into(),
+    );
+    push("avail_regions", format!("{}", 1 + rng.usize_below(8)));
+    push("avail_region_mtbf_secs", format!("{:.1}", 100.0 + rng.f64() * 2000.0));
+    push("avail_region_outage_secs", format!("{:.1}", 50.0 + rng.f64() * 500.0));
+    push("avail_mean_online_secs", format!("{:.1}", 200.0 + rng.f64() * 2000.0));
+    push("avail_mean_offline_secs", format!("{:.1}", 50.0 + rng.f64() * 800.0));
+    push("avail_degrade_window_secs", format!("{:.1}", rng.f64() * 300.0));
+    push("avail_degrade_floor", format!("{:.2}", 0.05 + rng.f64() * 0.9));
+    push(
+        "sampler",
+        pick(rng, &["uniform", "stay-prob", "drop-aware", "survival", "DROP_AWARE"]).into(),
+    );
+    push("sampler_horizon_secs", format!("{:.1}", 50.0 + rng.f64() * 500.0));
+    push(
+        "strategy",
+        pick(rng, &["TimelyFL", "timelyfl", "fedbuff", "sync", "seafl"]).into(),
+    );
+    push("seed", format!("{}", rng.usize_below(1_000_000)));
+    o
+}
+
+fn apply_all(cfg: &mut RunConfig, overrides: &[(String, String)]) {
+    for (k, v) in overrides {
+        cfgparse::apply_cli(cfg, &format!("{k}={v}"))
+            .unwrap_or_else(|e| panic!("override {k}={v} rejected: {e:#}"));
+    }
+}
+
+#[test]
+fn sixty_four_fuzzed_configs_parse_validate_and_canonicalize() {
+    for seed in 0..64u64 {
+        let mut rng = Rng::seed_from(0xC0F6 ^ (seed * 7919));
+        let overrides = random_overrides(&mut rng);
+        let mut cfg = RunConfig::default();
+        apply_all(&mut cfg, &overrides);
+        cfg.validate()
+            .unwrap_or_else(|e| panic!("seed {seed}: fuzzed config invalid: {e:#}\n{overrides:?}"));
+        // Aliases and case collapse to canonical registry names.
+        assert!(
+            ["free", "priced"].contains(&cfg.network.model.as_str()),
+            "seed {seed}: network not canonical: {}",
+            cfg.network.model
+        );
+        assert!(
+            ["uniform", "stay-prob", "drop-aware"].contains(&cfg.sampler.as_str()),
+            "seed {seed}: sampler not canonical: {}",
+            cfg.sampler
+        );
+        assert!(
+            ["TimelyFL", "FedBuff", "SyncFL", "SemiAsync"].contains(&cfg.strategy.as_str()),
+            "seed {seed}: strategy not canonical: {}",
+            cfg.strategy
+        );
+        assert!(cfg.network.down_ratio.is_finite() && cfg.network.down_ratio >= 0.0);
+        // Re-applying the same overrides to a fresh default is a pure
+        // function of the override list.
+        let mut again = RunConfig::default();
+        apply_all(&mut again, &overrides);
+        assert_eq!(
+            format!("{cfg:?}"),
+            format!("{again:?}"),
+            "seed {seed}: override application not deterministic"
+        );
+    }
+}
+
+#[test]
+fn fuzz_rejects_the_bad_values_it_must() {
+    let mut cfg = RunConfig::default();
+    assert!(cfgparse::apply_cli(&mut cfg, "network=bogus").is_err());
+    assert!(cfgparse::apply_cli(&mut cfg, "net_stale_correction=rewind").is_err());
+    assert!(cfgparse::apply_cli(&mut cfg, "net_rebalance=maybe").is_err());
+    // Values the PARSER accepts but validate() must catch: a negative or
+    // non-finite downlink ratio prices time travel.
+    for bad in ["-1.0", "nan", "inf"] {
+        let mut cfg = RunConfig::default();
+        cfgparse::apply_cli(&mut cfg, &format!("net_down_ratio={bad}")).unwrap();
+        assert!(cfg.validate().is_err(), "net_down_ratio={bad} validated");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: a handful of fuzzed configs actually run.
+// ---------------------------------------------------------------------------
+
+fn semantic_json(r: &RunReport) -> String {
+    let mut r = r.clone();
+    r.wall_secs = 0.0;
+    r.to_json().to_string()
+}
+
+#[test]
+fn fuzzed_tiny_fleets_run_and_hold_global_invariants() {
+    require_artifacts!();
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from(0xF1E1D ^ (seed * 104_729));
+        let overrides = random_overrides(&mut rng);
+        let mut cfg = RunConfig::default();
+        apply_all(&mut cfg, &overrides);
+        // Shrink to a tiny fleet the PJRT path can afford; the fuzzed
+        // network/availability/sampler/strategy axes stay as drawn.
+        cfg.model = "kws_lite".into();
+        cfg.population = 12;
+        cfg.concurrency = 6;
+        cfg.rounds = 4;
+        cfg.eval_every = 2;
+        cfg.eval_batches = 1;
+        cfg.steps_per_epoch = 1;
+        cfg.max_local_epochs = 2;
+        cfg.sim_model_bytes = 3.2e5;
+        cfg.validate().unwrap();
+        let sim = Simulation::new(cfg.clone(), ARTIFACTS)
+            .expect("build simulation (run `make artifacts` first)");
+        let report = sim.run().unwrap_or_else(|e| {
+            panic!("seed {seed}: fuzzed run failed: {e:#}\n{overrides:?}")
+        });
+        assert!(report.downlink_wait_secs.is_finite() && report.downlink_wait_secs >= 0.0);
+        if cfg.network.model == "free" {
+            assert_eq!(report.downlink_wait_secs, 0.0, "seed {seed}: free run paid downlink");
+            assert_eq!(report.stale_starts, 0, "seed {seed}: free run stale-started");
+        }
+        assert!(report.total_rounds <= cfg.rounds, "seed {seed}");
+        assert_eq!(report.participation.len(), cfg.population, "seed {seed}");
+        for p in &report.eval_points {
+            assert!(p.mean_loss.is_finite() && p.metric.is_finite(), "seed {seed}");
+        }
+        // Same config, same bytes.
+        let again = Simulation::new(cfg, ARTIFACTS).unwrap().run().unwrap();
+        assert_eq!(
+            semantic_json(&report),
+            semantic_json(&again),
+            "seed {seed}: fuzzed run not reproducible"
+        );
+    }
+}

@@ -1,0 +1,394 @@
+//! The network subsystem's headline suite.
+//!
+//! Contract under test (`crate::network`): the default `network = free`
+//! model is **byte-identical** to the pre-subsystem behaviour — zero extra
+//! RNG draws, every downlink priced at exactly 0.0, all dissemination
+//! bookkeeping gated on a strictly positive transfer — for every registered
+//! strategy, every sampling policy, and both sim cores. `network = priced`
+//! then makes dissemination a first-class cost: every dispatch pays a
+//! downlink leg, the run-level counters go nonzero under correlated churn,
+//! and the event-driven strategies record stale starts when a newer global
+//! version overtakes an in-flight transfer.
+//!
+//! The byte-identity group needs the AOT artifacts (real PJRT training,
+//! like `fleet_equivalence.rs`); the pure-logic properties at the bottom
+//! run on any checkout and are wired into `scripts/check.sh`.
+
+use timelyfl::availability::AvailabilityKind;
+use timelyfl::config::RunConfig;
+use timelyfl::coordinator::local_time::TimeEstimate;
+use timelyfl::coordinator::scheduler::schedule;
+use timelyfl::coordinator::{registry, sampler, Simulation};
+use timelyfl::fleet::FleetCore;
+use timelyfl::metrics::events::{CollectSink, RunEvent};
+use timelyfl::metrics::RunReport;
+use timelyfl::network::{self, NetworkModel, PricedNetwork, StaleCorrection};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn tiny_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "kws_lite".into();
+    cfg.strategy = strategy.to_string();
+    cfg.sampler = sampler_name.to_string();
+    cfg.population = 12;
+    cfg.concurrency = 6;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.max_local_epochs = 2;
+    cfg.sim_model_bytes = 3.2e5;
+    cfg
+}
+
+fn churn_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = tiny_cfg(strategy, sampler_name);
+    cfg.availability.kind = AvailabilityKind::Correlated;
+    cfg.availability.regions = 3;
+    cfg.availability.region_mtbf_secs = 500.0;
+    cfg.availability.region_outage_secs = 250.0;
+    cfg.availability.mean_online_secs = 600.0;
+    cfg.availability.mean_offline_secs = 200.0;
+    cfg.availability.degrade_window_secs = 120.0;
+    cfg.sampler_horizon_secs = 200.0;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunReport {
+    Simulation::new(cfg, ARTIFACTS)
+        .expect("build simulation (run `make artifacts` first)")
+        .run()
+        .expect("run simulation")
+}
+
+fn run_with_events(cfg: RunConfig) -> (RunReport, Vec<RunEvent>) {
+    let sim = Simulation::new(cfg, ARTIFACTS).expect("build simulation (run `make artifacts` first)");
+    let mut sink = CollectSink::default();
+    let report = sim.run_with_sink(&mut sink).expect("run simulation");
+    (report, sink.events)
+}
+
+/// Report JSON with the only legitimately nondeterministic field zeroed.
+fn semantic_json(r: &RunReport) -> String {
+    let mut r = r.clone();
+    r.wall_secs = 0.0;
+    r.to_json().to_string()
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: byte-identity + priced-counter behaviour end-to-end.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn free_network_is_byte_identical_to_default_everywhere() {
+    require_artifacts!();
+    // The acceptance criterion: explicit `network = free` — even with every
+    // other net knob set to wild values — reproduces the default config
+    // byte-for-byte across 4 strategies × 3 samplers × both sim cores,
+    // under correlated churn. `down_ratio` and `stale_correction` are dead
+    // weight under `free` (no transfer to price, no transfer to overtake).
+    // `net_rebalance` is deliberately NOT flipped here: it is an
+    // independent *scheduling* axis (Alg. 3 against the effective
+    // timeline) that changes behaviour under any network model.
+    for info in registry::STRATEGIES {
+        for policy in ["uniform", "stay-prob", "drop-aware"] {
+            for core in [FleetCore::Lazy, FleetCore::Eager] {
+                let mut baseline = churn_cfg(info.name, policy);
+                baseline.fleet_core = core;
+                let mut explicit = baseline.clone();
+                explicit.network.model = "free".into();
+                explicit.network.down_ratio = 7.5;
+                explicit.network.stale_correction = StaleCorrection::DeltaReplay;
+                assert_eq!(
+                    semantic_json(&run(explicit)),
+                    semantic_json(&run(baseline)),
+                    "{} + {policy} + {core:?}: explicit network=free diverged from default",
+                    info.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn free_runs_record_zero_dissemination_counters() {
+    require_artifacts!();
+    for info in registry::STRATEGIES {
+        let (report, events) = run_with_events(churn_cfg(info.name, "uniform"));
+        assert_eq!(report.downlink_wait_secs, 0.0, "{}", info.name);
+        assert_eq!(report.stale_starts, 0, "{}", info.name);
+        for ev in &events {
+            if let RunEvent::RoundComplete { downlink_wait_secs, stale_starts, .. } = ev {
+                assert_eq!(*downlink_wait_secs, 0.0, "{}", info.name);
+                assert_eq!(*stale_starts, 0, "{}", info.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn priced_network_pays_downlink_and_event_strategies_stale_start() {
+    require_artifacts!();
+    // Long transfers (the model costs 4x its upload time to receive) under
+    // correlated churn: every strategy pays a nonzero downlink, and the
+    // event-driven protocols — whose in-flight transfers newer globals can
+    // overtake — record stale starts between them. Per-round event counters
+    // must never exceed the run totals (the tail fold is run-level only).
+    let mut stale_total = 0u64;
+    for info in registry::STRATEGIES {
+        let mut cfg = churn_cfg(info.name, "uniform");
+        cfg.rounds = 10;
+        cfg.network.model = "priced".into();
+        cfg.network.down_ratio = 4.0;
+        let (report, events) = run_with_events(cfg);
+        assert!(
+            report.downlink_wait_secs > 0.0,
+            "{}: priced run paid no downlink",
+            info.name
+        );
+        let mut event_wait = 0.0;
+        let mut event_stale = 0u64;
+        for ev in &events {
+            if let RunEvent::RoundComplete { downlink_wait_secs, stale_starts, .. } = ev {
+                event_wait += downlink_wait_secs;
+                event_stale += stale_starts;
+            }
+        }
+        assert!(
+            event_wait <= report.downlink_wait_secs + 1e-9,
+            "{}: per-round downlink exceeds the run total",
+            info.name
+        );
+        assert!(event_stale <= report.stale_starts, "{}", info.name);
+        // Round-stepped strategies settle eligibility before training (no
+        // versioned in-flight window), so stale starts are event-only.
+        if matches!(info.name, "TimelyFL" | "SyncFL") {
+            assert_eq!(report.stale_starts, 0, "{}", info.name);
+        }
+        stale_total += report.stale_starts;
+    }
+    assert!(
+        stale_total > 0,
+        "no event-driven strategy recorded a stale start under 4x transfers"
+    );
+}
+
+#[test]
+fn delta_replay_changes_the_model_but_not_the_schedule() {
+    require_artifacts!();
+    // `net_stale_correction = delta-replay` rewrites the *staleness
+    // accounting* of an overtaken dispatch (its contribution is weighted as
+    // if rebased on the version that overtook it) — it must not move the
+    // clock, the cohorts, or the counters, only the learning curve.
+    let mut none = churn_cfg("FedBuff", "uniform");
+    none.rounds = 10;
+    none.network.model = "priced".into();
+    none.network.down_ratio = 4.0;
+    let mut replay = none.clone();
+    replay.network.stale_correction = StaleCorrection::DeltaReplay;
+    let n = run(none);
+    let r = run(replay);
+    assert_eq!(n.total_rounds, r.total_rounds);
+    assert_eq!(n.events_processed, r.events_processed);
+    assert_eq!(n.sim_secs, r.sim_secs);
+    assert_eq!(n.participation, r.participation);
+    assert_eq!(n.stale_starts, r.stale_starts);
+    assert_eq!(n.downlink_wait_secs, r.downlink_wait_secs);
+}
+
+#[test]
+fn rebalancing_never_assigns_more_than_the_nominal_schedule() {
+    require_artifacts!();
+    // TimelyFL + priced + rebalance: Alg. 3 against the degraded timeline.
+    // The bandwidth signal is a cached deterministic read (no RNG draws),
+    // so each round's cohort, probes, and T_k are identical across the two
+    // runs — but WHO lands can differ (shrunk workloads survive deadlines
+    // the nominal schedule misses), and round-stepped workload records
+    // cover only clients that trained. So compare per (round, client) over
+    // the intersection: for any dispatch present in both runs, the
+    // rebalanced assignment must never EXCEED the nominal one
+    // (`degraded()` only stretches the comm term; Alg. 3 is monotone in
+    // the estimate). The strict shrink on degraded clients is demonstrated
+    // by `benches/network_dissemination.rs`.
+    let mut nominal = churn_cfg("TimelyFL", "uniform");
+    nominal.rounds = 10;
+    nominal.max_local_epochs = 4;
+    nominal.network.model = "priced".into();
+    nominal.network.down_ratio = 1.0;
+    let mut rebalanced = nominal.clone();
+    rebalanced.network.rebalance = true;
+    let (_, ev_nom) = run_with_events(nominal);
+    let (_, ev_reb) = run_with_events(rebalanced);
+    let workload_map = |events: &[RunEvent]| {
+        let mut out = std::collections::BTreeMap::new();
+        for ev in events {
+            if let RunEvent::RoundComplete { round, workloads, .. } = ev {
+                for w in workloads {
+                    out.insert((*round, w.client), (w.epochs, w.alpha));
+                }
+            }
+        }
+        out
+    };
+    let nom = workload_map(&ev_nom);
+    let reb = workload_map(&ev_reb);
+    let mut compared = 0usize;
+    for (key, (n_epochs, n_alpha)) in &nom {
+        let Some((r_epochs, r_alpha)) = reb.get(key) else {
+            continue;
+        };
+        compared += 1;
+        assert!(
+            r_epochs <= n_epochs,
+            "round {} client {}: rebalance RAISED epochs {n_epochs} -> {r_epochs}",
+            key.0,
+            key.1
+        );
+        assert!(
+            *r_alpha <= n_alpha + 1e-12,
+            "round {} client {}: rebalance RAISED alpha {n_alpha} -> {r_alpha}",
+            key.0,
+            key.1
+        );
+    }
+    assert!(compared > 0, "no dispatch appeared in both runs");
+}
+
+#[test]
+fn priced_runs_are_seed_deterministic() {
+    require_artifacts!();
+    for info in registry::STRATEGIES {
+        let mut cfg = churn_cfg(info.name, "stay-prob");
+        cfg.network.model = "priced".into();
+        cfg.network.down_ratio = 1.0;
+        cfg.network.rebalance = true;
+        cfg.network.stale_correction = StaleCorrection::DeltaReplay;
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_eq!(
+            semantic_json(&a),
+            semantic_json(&b),
+            "{}: priced run not reproducible",
+            info.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free properties (wired into scripts/check.sh).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn priced_downlink_is_monotone_in_bandwidth_degradation() {
+    // The engine feeds the network model the EFFECTIVE upload time
+    // (nominal / bandwidth_factor), so composing with `degraded()` must
+    // make the downlink monotone non-increasing in the factor.
+    let net = PricedNetwork { down_ratio: 0.25 };
+    let nominal = TimeEstimate { t_cmp: 100.0, t_com: 8.0 };
+    let mut prev = f64::INFINITY;
+    for i in 1..=20 {
+        let factor = i as f64 / 20.0;
+        let down = net.downlink_secs(nominal.degraded(factor).t_com);
+        assert!(down > 0.0 && down.is_finite());
+        assert!(
+            down <= prev,
+            "downlink not monotone: factor {factor} gave {down} > {prev}"
+        );
+        prev = down;
+    }
+    // Anchor the undegraded price itself.
+    assert!((net.downlink_secs(8.0) - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn stale_start_detection_algebra() {
+    use std::collections::BTreeMap;
+    let mut born = BTreeMap::new();
+    born.insert(3u64, 10.0);
+    born.insert(4u64, 20.0);
+    born.insert(5u64, 30.0);
+    // A free transfer (zero seconds on the wire) can never be overtaken.
+    assert_eq!(network::overtaken_by(0.0, 3, 100.0, &born), None);
+    // Overtaken by the NEWEST version born while the bits were in flight.
+    assert_eq!(network::overtaken_by(5.0, 3, 25.0, &born), Some(4));
+    assert_eq!(network::overtaken_by(5.0, 3, 30.0, &born), Some(5));
+    // Versions at or below the dispatch's own base never count.
+    assert_eq!(network::overtaken_by(5.0, 5, 100.0, &born), None);
+    // Nothing newer had been born by arrival.
+    assert_eq!(network::overtaken_by(5.0, 3, 15.0, &born), None);
+}
+
+#[test]
+fn rebalanced_schedule_is_monotone_under_degradation() {
+    // Alg. 3 on the degraded estimate never assigns MORE work than on the
+    // nominal one, for a grid of timelines and factors — the pure-logic
+    // core of the rebalancing acceptance criterion.
+    for (t_cmp, t_com) in [(10.0, 2.0), (40.0, 15.0), (100.0, 8.0), (5.0, 30.0)] {
+        let est = TimeEstimate { t_cmp, t_com };
+        let t_k = 2.0 * est.t_total();
+        let nominal = schedule(t_k, &est, 8);
+        for i in 1..=10 {
+            let factor = i as f64 / 10.0;
+            let w = schedule(t_k, &est.degraded(factor), 8);
+            assert!(
+                w.epochs <= nominal.epochs,
+                "factor {factor}: epochs {} > nominal {}",
+                w.epochs,
+                nominal.epochs
+            );
+            assert!(
+                w.alpha <= nominal.alpha + 1e-12,
+                "factor {factor}: alpha {} > nominal {}",
+                w.alpha,
+                nominal.alpha
+            );
+            assert!(w.epochs >= 1 && w.alpha > 0.0, "workload degenerate");
+        }
+    }
+}
+
+#[test]
+fn default_config_resolves_the_free_model() {
+    let cfg = RunConfig::default();
+    assert_eq!(cfg.network.model, "free");
+    let net = cfg.network.build().unwrap();
+    assert_eq!(net.name(), "free");
+    // And it prices EVERY transfer at exactly 0.0 — the bit-identity hook.
+    for up in [0.0, 1e-9, 1.0, 3600.0, 1e12] {
+        assert_eq!(net.downlink_secs(up), 0.0);
+    }
+}
+
+#[test]
+fn every_registered_model_builds_and_self_reports() {
+    for info in network::NETWORKS {
+        let mut cfg = RunConfig::default();
+        cfg.network.model = info.name.to_string();
+        cfg.network.validate().unwrap();
+        let net = cfg.network.build().unwrap();
+        assert_eq!(net.name(), info.name);
+        for alias in info.aliases {
+            assert_eq!(network::resolve(alias).unwrap().name, info.name);
+        }
+    }
+    // Samplers and strategies resolve too — the three registries share the
+    // resolve idiom, and a network name must never shadow either.
+    for info in network::NETWORKS {
+        assert!(registry::resolve(info.name).is_err());
+        assert!(sampler::resolve(info.name).is_err());
+    }
+}

@@ -81,6 +81,8 @@ fn event_schema_round_trips_through_util_json() {
             participants: 3,
             dropped: 0,
             avail_dropped: 1,
+            downlink_wait_secs: 4.5,
+            stale_starts: 1,
             mean_train_loss: Some(2.5),
             workloads: vec![
                 ClientWorkload { client: 0, epochs: 3, alpha: 1.0, stay_prob: 1.0 },
@@ -93,6 +95,8 @@ fn event_schema_round_trips_through_util_json() {
             participants: 0,
             dropped: 2,
             avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
         },
@@ -137,6 +141,8 @@ fn event_reasons_are_the_documented_set() {
             participants: 0,
             dropped: 0,
             avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
         },

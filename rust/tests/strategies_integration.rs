@@ -589,6 +589,10 @@ fn fingerprint(r: &RunReport) -> String {
     writeln!(s, "total_rounds={}", r.total_rounds).unwrap();
     writeln!(s, "events_processed={}", r.events_processed).unwrap();
     writeln!(s, "sim_secs={:?}", r.sim_secs).unwrap();
+    // Dissemination counters: exactly 0/0 for every `network = free` case,
+    // so the goldens also lock the free path's bit-identity contract.
+    writeln!(s, "downlink_wait_secs={:?}", r.downlink_wait_secs).unwrap();
+    writeln!(s, "stale_starts={}", r.stale_starts).unwrap();
     writeln!(s, "participation={:?}", r.participation).unwrap();
     for p in &r.eval_points {
         writeln!(
@@ -655,7 +659,16 @@ fn golden_reports_bit_identical() {
         a.mean_offline_secs = 200.0;
         a.degrade_window_secs = 120.0;
     }
-    cases.push(("timelyfl_stayprob_correlated".into(), regional));
+    cases.push(("timelyfl_stayprob_correlated".into(), regional.clone()));
+    // And the network subsystem: priced dissemination under the same
+    // correlated churn (uniform sampler isolates the network axis). The
+    // fingerprint's downlink/stale lines make dissemination drift visible
+    // even when the schedule happens to survive.
+    let mut priced = regional;
+    priced.sampler = "uniform".into();
+    priced.network.model = "priced".into();
+    priced.network.down_ratio = 0.25;
+    cases.push(("timelyfl_priced_correlated".into(), priced));
     for (stem, cfg) in cases {
         let r = run(cfg);
         let fp = fingerprint(&r);
