@@ -16,9 +16,22 @@
 //!   - data: synthetic batch materialisation
 //!   - runtime: train chunk (1 vs 8 fused steps), eval batch — the PJRT
 //!     call overhead that motivated the L2 scan fusion
+//!   - batched execution: one stacked `train_chunk_batched` dispatch vs
+//!     `lanes` serial dispatches of the same work (the `batch_exec` win)
+//!   - chunk-parallel aggregation: `average_delta_jobs` at 1/2/4 workers
+//!     (bit-identical by construction; this measures the speedup)
+//!
+//! Plus one END-TO-END A/B on the `fleet_50k` scenario: `batch_exec=off`
+//! vs `on`, recording wall time and the PJRT dispatch count
+//! (`RuntimeStats::train_execs`) into `results/BENCH_hotpath.json` with a
+//! `dispatch_reduction` headline (schema: results/README.md).
+
+use std::time::Instant;
 
 use anyhow::Result;
-use timelyfl::aggregation::{average_delta, Contribution, ServerOpt, ServerOptKind};
+use timelyfl::aggregation::{
+    average_delta, average_delta_jobs, Contribution, ServerOpt, ServerOptKind,
+};
 use timelyfl::benchkit::{self, micro, Bench};
 use timelyfl::coordinator::local_time::TimeEstimate;
 use timelyfl::coordinator::scheduler::{aggregation_interval, schedule};
@@ -26,7 +39,9 @@ use timelyfl::devices::{Fleet, FleetConfig};
 use timelyfl::experiment::{scenario, SweepGrid};
 use timelyfl::metrics::report::Table;
 use timelyfl::model::{ParamVec, Update};
+use timelyfl::runtime::Batch;
 use timelyfl::simtime::EventQueue;
+use timelyfl::util::json::Json;
 use timelyfl::util::rng::Rng;
 
 fn synth_params(meta: &timelyfl::runtime::manifest::ModelMeta, rng: &mut Rng) -> ParamVec {
@@ -75,6 +90,18 @@ fn main() -> Result<()> {
             })
             .row(&format!("average_delta n={cohort} ({} params)", meta.total_params)),
         );
+
+        // Chunk-parallel fold (tensor-index partition; bit-identical to the
+        // serial row above — parallel_agg_properties proves it, this
+        // measures it).
+        for jobs in [2usize, 4] {
+            rows.push(
+                micro::bench(5, iters, || {
+                    std::hint::black_box(average_delta_jobs(&base, &contributions, true, jobs));
+                })
+                .row(&format!("average_delta_jobs n={cohort} jobs={jobs}")),
+            );
+        }
 
         let avg: Update = average_delta(&base, &contributions, false);
         let mut fedavg = ServerOpt::new(ServerOptKind::FedAvg, 1.0);
@@ -189,6 +216,34 @@ fn main() -> Result<()> {
             .row("PJRT eval batch"),
         );
 
+        // Batched execution boundary: one stacked dispatch carrying `lanes`
+        // clients' chunks vs the same work as `lanes` serial dispatches.
+        // Gated on the manifest actually carrying batched graphs (older
+        // artifact sets predate them — the lanes just skip).
+        if rt.meta.lanes >= 1 {
+            let lanes = rt.meta.lanes;
+            let lane_args: Vec<(&ParamVec, &[Batch])> =
+                (0..lanes).map(|_| (&params, &batches[..])).collect();
+            rows.push(
+                micro::bench(3, iters, || {
+                    std::hint::black_box(
+                        rt.train_chunk_batched(full, &lane_args, 0.01).unwrap(),
+                    );
+                })
+                .row(&format!("PJRT batched chunk, {lanes} lanes / 1 dispatch")),
+            );
+            rows.push(
+                micro::bench(3, iters, || {
+                    for _ in 0..lanes {
+                        std::hint::black_box(
+                            rt.train_chunk(full, &params, &batches, 0.01).unwrap(),
+                        );
+                    }
+                })
+                .row(&format!("PJRT serial chunks, {lanes} dispatches")),
+            );
+        }
+
         Ok((rt.meta.chunk, rows))
     })?;
 
@@ -204,5 +259,60 @@ fn main() -> Result<()> {
          (per-execute dispatch + host<->device copies amortised across local steps)."
     );
     benchkit::write_result("hotpath_micro.txt", &rendered);
+
+    // --- end-to-end A/B: fleet_50k, batch_exec off vs on ------------------
+    // Same seed, same semantics (batched_equivalence.rs proves the reports
+    // byte-identical); what changes is the PJRT dispatch count and wall
+    // time. Fast mode downscales to the CI smoke shape.
+    let mut e2e = scenario::resolve("fleet_50k")?.config()?;
+    if bench.scale.fast {
+        e2e.population = 2_000;
+        e2e.concurrency = 16;
+        e2e.rounds = 2;
+        e2e.eval_every = 2;
+    }
+    let mut points = Vec::new();
+    let mut execs = Vec::new();
+    for batched in [false, true] {
+        let mut cfg = e2e.clone();
+        cfg.batch_exec = batched;
+        cfg.agg_jobs = if batched { 2 } else { 1 };
+        let variant = if batched { "batched" } else { "serial" };
+        let sim = bench.simulation(cfg)?;
+        if batched && sim.runtime.meta.lanes == 0 {
+            eprintln!("  fleet_50k / batched: skipped (artifact set has no batched graphs)");
+            continue;
+        }
+        eprintln!("  fleet_50k / {variant} ...");
+        let start = Instant::now();
+        let report = sim.run()?;
+        let wall = start.elapsed().as_secs_f64();
+        let stats = sim.runtime.stats();
+        execs.push(stats.train_execs);
+        points.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("batch_exec", Json::Bool(batched)),
+            ("agg_jobs", Json::num(if batched { 2.0 } else { 1.0 })),
+            ("wall_secs", Json::num(wall)),
+            ("sim_secs", Json::num(report.sim_secs)),
+            ("rounds", Json::num(report.total_rounds as f64)),
+            ("train_steps", Json::num(stats.train_steps as f64)),
+            ("train_execs", Json::num(stats.train_execs as f64)),
+        ]));
+    }
+    // Headline: how many serial PJRT dispatches one batched dispatch
+    // replaced (>1.0 is the win; the logical step count is unchanged).
+    let reduction = match execs.as_slice() {
+        [serial, batched] if *batched > 0 => Json::num(*serial as f64 / *batched as f64),
+        _ => Json::Null,
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("scenario", Json::str("fleet_50k")),
+        ("fast", Json::Bool(bench.scale.fast)),
+        ("dispatch_reduction", reduction),
+        ("points", Json::arr(points)),
+    ]);
+    benchkit::write_result("BENCH_hotpath.json", &json.to_string());
     Ok(())
 }

@@ -58,6 +58,7 @@ def lower_model(m: zoo.ModelDef, out_dir: str, *, quiet: bool = False) -> dict:
         "seq_len": m.seq_len,
         "total_params": m.total_params,
         "chunk": zoo.CHUNK,
+        "lanes": zoo.BATCH_LANES,
         "params": [
             {"name": s.name, "shape": list(s.shape), "size": s.size} for s in m.specs
         ],
@@ -69,6 +70,7 @@ def lower_model(m: zoo.ModelDef, out_dir: str, *, quiet: bool = False) -> dict:
     del x, y, lr  # single-step shapes unused: the train artifact is chunked
     cparams, xs, ys, clr, n_steps = zoo.chunk_example_args(m)
     assert cparams == params
+    bparams, bxs, bys, blr, bn_steps = zoo.chunk_batched_example_args(m)
     for r in zoo.RATIOS:
         t0 = time.time()
         step = zoo.make_train_chunk(m, r)
@@ -76,16 +78,25 @@ def lower_model(m: zoo.ModelDef, out_dir: str, *, quiet: bool = False) -> dict:
         rel = f"{m.name}/train_{ratio_tag(r)}.hlo.txt"
         with open(os.path.join(out_dir, rel), "w") as f:
             f.write(to_hlo_text(lowered))
+        # Batched-execution variant: BATCH_LANES independent clients per
+        # dispatch (rust `batch_exec=on`); optional in the manifest so old
+        # artifact sets keep loading.
+        bstep = zoo.make_train_chunk_batched(m, r)
+        blowered = jax.jit(bstep).lower(*bparams, bxs, bys, blr, bn_steps)
+        brel = f"{m.name}/train_{ratio_tag(r)}_b{zoo.BATCH_LANES}.hlo.txt"
+        with open(os.path.join(out_dir, brel), "w") as f:
+            f.write(to_hlo_text(blowered))
         entry["ratios"].append(
             {
                 "ratio": r,
                 "boundary": m.ratio_boundary(r),
                 "trainable_fraction": m.trainable_fraction(r),
                 "artifact": rel,
+                "batched_artifact": brel,
             }
         )
         if not quiet:
-            print(f"  {rel} ({time.time() - t0:.1f}s)")
+            print(f"  {rel} + {brel} ({time.time() - t0:.1f}s)")
 
     eparams, ex, ey, _ = zoo.example_args(m, for_eval=True)
     lowered = jax.jit(zoo.make_eval_step(m)).lower(*eparams, ex, ey)

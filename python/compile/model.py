@@ -60,6 +60,16 @@ RATIOS = (0.125, 0.25, 0.5, 0.75, 1.0)
 # CPU-PJRT).
 CHUNK = 8
 
+# Client lanes fused into ONE PJRT call (lax.map over per-lane train
+# chunks): the batched-execution artifact stacks BATCH_LANES independent
+# clients' chunks — each with its own params, minibatches and dynamic
+# ``n_steps`` — so the rust engine issues one dispatch per aggregation
+# point instead of one per client (``batch_exec=on``). ``lax.map`` (not
+# ``vmap``) on purpose: every lane runs the *same* scan body the
+# single-lane artifact runs, so per-lane results are independent of which
+# lanes share a dispatch — the bit-identity the equivalence suite locks.
+BATCH_LANES = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelDef:
@@ -395,6 +405,37 @@ def make_train_chunk(model: ModelDef, ratio: float, chunk: int = CHUNK):
     return train_chunk
 
 
+def make_train_chunk_batched(
+    model: ModelDef, ratio: float, lanes: int = BATCH_LANES, chunk: int = CHUNK
+):
+    """Multi-client train graph: ``lanes`` independent chunks, one dispatch.
+
+    Signature::
+
+        (*params[L, ...], xs[L, S, B, ...], ys[L, S, ...], lr, n_steps[L]:i32)
+            -> (*new_params[L, ...], loss_sum[L])
+
+    Lane ``l`` runs exactly ``make_train_chunk`` on its own parameter set and
+    batch stack, masked to its own ``n_steps[l]``; a lane with ``n_steps[l]
+    == 0`` passes its params through untouched (zero loss), which is how the
+    rust trainer pads short lanes. ``lr`` is shared (one global client_lr).
+    """
+    step = make_train_chunk(model, ratio, chunk)
+
+    def train_chunk_batched(*args):
+        n = len(model.specs)
+        params = tuple(args[:n])
+        xs, ys, lr, n_steps = args[n], args[n + 1], args[n + 2], args[n + 3]
+
+        def lane(inp):
+            lane_params, lane_xs, lane_ys, lane_n = inp
+            return step(*lane_params, lane_xs, lane_ys, lr, lane_n)
+
+        return jax.lax.map(lane, (params, xs, ys, n_steps))
+
+    return train_chunk_batched
+
+
 def make_eval_step(model: ModelDef):
     def eval_step(*args):
         n = len(model.specs)
@@ -440,3 +481,13 @@ def chunk_example_args(model: ModelDef, chunk: int = CHUNK):
     ys = jax.ShapeDtypeStruct((chunk, *y.shape), y.dtype)
     n_steps = jax.ShapeDtypeStruct((), jnp.int32)
     return params, xs, ys, lr, n_steps
+
+
+def chunk_batched_example_args(model: ModelDef, lanes: int = BATCH_LANES, chunk: int = CHUNK):
+    """ShapeDtypeStructs for jax.jit(make_train_chunk_batched(...)).lower()."""
+    params, xs, ys, lr, _ = chunk_example_args(model, chunk)
+    bparams = [jax.ShapeDtypeStruct((lanes, *p.shape), p.dtype) for p in params]
+    bxs = jax.ShapeDtypeStruct((lanes, *xs.shape), xs.dtype)
+    bys = jax.ShapeDtypeStruct((lanes, *ys.shape), ys.dtype)
+    n_steps = jax.ShapeDtypeStruct((lanes,), jnp.int32)
+    return bparams, bxs, bys, lr, n_steps

@@ -11,6 +11,9 @@
 
 pub mod server_opt;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 pub use server_opt::{ServerOpt, ServerOptKind};
 
 use crate::model::{ParamVec, Update};
@@ -91,6 +94,124 @@ pub fn average_delta(
         }
     }
 
+    Update {
+        boundary: 0,
+        tensors: sum,
+    }
+}
+
+/// Tensors per work unit in the chunk-parallel fold. Bit-identity is
+/// insensitive to this by construction (each output tensor is reduced
+/// independently, in serial contribution order); the size only trades
+/// scheduling overhead against load balance.
+pub const DEFAULT_AGG_CHUNK: usize = 8;
+
+/// Deterministic fan-out driver for tensor-partitioned work (the
+/// `experiment::runner::run_queue` shape, narrowed to in-process slices):
+/// `jobs` scoped workers claim items off an atomic cursor; each item owns
+/// disjoint `&mut` data, so there is no result ordering to reconcile — the
+/// mutations land in place and the outcome is independent of which worker
+/// ran what.
+pub(crate) fn run_parallel<T: Send>(jobs: usize, items: Vec<T>, work: impl Fn(T) + Sync) {
+    debug_assert!(jobs >= 2, "serial callers take the jobs <= 1 path");
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("each slot claimed once");
+                work(item);
+            });
+        }
+    });
+}
+
+/// Reduce ONE output tensor `j` exactly as [`average_delta`]'s serial loop
+/// does: visit contributions in slice order, apply the same skip rule and
+/// normaliser choice, multiply-accumulate in f32, divide once at the end.
+/// Because the per-tensor addition sequence is identical to the serial
+/// fold's, the chunk-parallel path below is bit-identical to serial no
+/// matter how tensors are partitioned over workers.
+fn reduce_tensor(j: usize, dst: &mut [f32], contributions: &[Contribution], discount: bool) {
+    let mut weight = 0.0f64;
+    for c in contributions {
+        let w = if discount {
+            c.weight * staleness_discount(c.staleness)
+        } else {
+            c.weight
+        };
+        if w <= 0.0 {
+            continue;
+        }
+        if j < c.update.boundary {
+            continue;
+        }
+        let Some(u) = c.update.tensors.get(j - c.update.boundary) else {
+            continue;
+        };
+        weight += if discount { c.weight } else { w };
+        debug_assert_eq!(dst.len(), u.len());
+        let wf = w as f32;
+        for (a, b) in dst.iter_mut().zip(u) {
+            *a += wf * b;
+        }
+    }
+    if weight > 0.0 {
+        let inv = (1.0 / weight) as f32;
+        for v in dst.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Chunk-parallel [`average_delta`] (`agg_jobs=` config key): the output
+/// tensor index space splits into fixed-size chunks and `jobs` worker
+/// threads fold them concurrently, each tensor accumulated in the identical
+/// serial contribution order. `jobs <= 1` IS the serial path — the literal
+/// [`average_delta`] call — which stays the bit-identity anchor; `jobs >= 2`
+/// is bit-identical to it for any thread count (locked by
+/// `rust/tests/parallel_agg_properties.rs`).
+pub fn average_delta_jobs(
+    template: &ParamVec,
+    contributions: &[Contribution],
+    discount_staleness: bool,
+    jobs: usize,
+) -> Update {
+    average_delta_chunked(template, contributions, discount_staleness, jobs, DEFAULT_AGG_CHUNK)
+}
+
+/// [`average_delta_jobs`] with an explicit chunk size (tensors per work
+/// unit) — exposed so the property suite can prove chunk-size insensitivity.
+pub fn average_delta_chunked(
+    template: &ParamVec,
+    contributions: &[Contribution],
+    discount_staleness: bool,
+    jobs: usize,
+    chunk: usize,
+) -> Update {
+    if jobs <= 1 {
+        return average_delta(template, contributions, discount_staleness);
+    }
+    let chunk = chunk.max(1);
+    let mut sum: Vec<Vec<f32>> = template
+        .tensors
+        .iter()
+        .map(|t| vec![0.0f32; t.len()])
+        .collect();
+    let units: Vec<(usize, &mut [Vec<f32>])> = sum
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(ci, slab)| (ci * chunk, slab))
+        .collect();
+    run_parallel(jobs, units, |(j0, slab)| {
+        for (k, dst) in slab.iter_mut().enumerate() {
+            reduce_tensor(j0 + k, dst, contributions, discount_staleness);
+        }
+    });
     Update {
         boundary: 0,
         tensors: sum,
@@ -209,5 +330,50 @@ mod tests {
         ];
         let avg = average_delta(&template, &cs, false);
         assert!((avg.tensors[0][0] - 2.0).abs() < 1e-6);
+    }
+
+    fn assert_bit_identical(a: &Update, b: &Update) {
+        assert_eq!(a.boundary, b.boundary);
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(x.len(), y.len());
+            for (p, q) in x.iter().zip(y) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fold_is_bit_identical_to_serial() {
+        // Mixed boundaries + weights + staleness: the shape the tensor
+        // partition has to get right. Deeper sweeps (random contributions,
+        // -0.0 / denormals) live in rust/tests/parallel_agg_properties.rs.
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0], vec![0.0, 0.0, 0.0]]);
+        let cs = vec![
+            contrib(0, vec![vec![2.0, -1.0], vec![4.0], vec![0.5, 0.5, 0.5]], 1.0, 0),
+            contrib(1, vec![vec![6.0], vec![-1.5, 0.25, 0.75]], 3.0, 2),
+            contrib(2, vec![vec![2.0, 0.0, -3.0]], 2.0, 5),
+        ];
+        for discount in [false, true] {
+            let serial = average_delta(&template, &cs, discount);
+            for jobs in [2, 3, 7] {
+                let par = average_delta_jobs(&template, &cs, discount, jobs);
+                assert_bit_identical(&par, &serial);
+            }
+            // Chunk size must not matter either (1 = one tensor per unit).
+            for chunk in [1, 2, 64] {
+                let par = average_delta_chunked(&template, &cs, discount, 2, chunk);
+                assert_bit_identical(&par, &serial);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fold_jobs_one_is_the_serial_path() {
+        let template = pv(vec![vec![0.0]]);
+        let cs = vec![contrib(0, vec![vec![1.0]], 1.0, 0)];
+        let a = average_delta_jobs(&template, &cs, false, 1);
+        let b = average_delta(&template, &cs, false);
+        assert_bit_identical(&a, &b);
     }
 }

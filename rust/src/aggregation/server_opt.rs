@@ -6,6 +6,7 @@
 //! server lr 1.0). The paper evaluates FedAvg and FedOpt-with-Adam; Yogi
 //! and SGD-with-momentum are included for completeness (same family).
 
+use super::run_parallel;
 use crate::model::{ParamVec, Update};
 
 /// Which server optimizer to run.
@@ -45,6 +46,11 @@ pub struct ServerOpt {
     step: u64,
     m: Option<Vec<Vec<f32>>>,
     v: Option<Vec<Vec<f32>>>,
+    /// Worker threads for the per-tensor update loops (`agg_jobs=`). The
+    /// optimizer arithmetic is element-local, so fanning tensors over
+    /// threads is bit-identical to serial for any count; `1` (the default)
+    /// runs the historical single-thread loops.
+    jobs: usize,
 }
 
 impl ServerOpt {
@@ -58,7 +64,14 @@ impl ServerOpt {
             step: 0,
             m: None,
             v: None,
+            jobs: 1,
         }
+    }
+
+    /// Builder-style worker-thread override (`agg_jobs` config key).
+    pub fn with_jobs(mut self, jobs: usize) -> ServerOpt {
+        self.jobs = jobs.max(1);
+        self
     }
 
     pub fn steps_taken(&self) -> u64 {
@@ -71,7 +84,23 @@ impl ServerOpt {
         assert_eq!(avg_delta.boundary, 0, "server opt needs full-shape delta");
         match self.kind {
             ServerOptKind::FedAvg => {
-                global.apply(avg_delta, 1.0);
+                if self.jobs >= 2 {
+                    // Per-tensor `+=` fanned over workers; scale 1.0 means
+                    // the serial path's `a += 1.0 * b` is literally `a += b`.
+                    let units: Vec<(&mut Vec<f32>, &Vec<f32>)> = global.tensors
+                        [avg_delta.boundary..]
+                        .iter_mut()
+                        .zip(&avg_delta.tensors)
+                        .collect();
+                    run_parallel(self.jobs, units, |(t, u)| {
+                        debug_assert_eq!(t.len(), u.len());
+                        for (a, b) in t.iter_mut().zip(u) {
+                            *a += b;
+                        }
+                    });
+                } else {
+                    global.apply(avg_delta, 1.0);
+                }
                 self.step += 1;
             }
             ServerOptKind::SgdM => self.sgdm(global, avg_delta),
@@ -89,16 +118,27 @@ impl ServerOpt {
     fn sgdm(&mut self, global: &mut ParamVec, delta: &Update) {
         self.ensure_state(delta);
         self.step += 1;
+        let jobs = self.jobs;
         let m = self.m.as_mut().unwrap();
         let beta = self.beta1 as f32;
         let lr = self.lr as f32;
-        for (j, d) in delta.tensors.iter().enumerate() {
-            let mj = &mut m[j];
-            let gj = &mut global.tensors[j];
+        let step_tensor = |mj: &mut Vec<f32>, gj: &mut Vec<f32>, d: &Vec<f32>| {
             for i in 0..d.len() {
                 let g = -d[i]; // pseudo-gradient
                 mj[i] = beta * mj[i] + g;
                 gj[i] -= lr * mj[i];
+            }
+        };
+        if jobs >= 2 {
+            let units: Vec<_> = m
+                .iter_mut()
+                .zip(global.tensors.iter_mut())
+                .zip(&delta.tensors)
+                .collect();
+            run_parallel(jobs, units, |((mj, gj), d)| step_tensor(mj, gj, d));
+        } else {
+            for (j, d) in delta.tensors.iter().enumerate() {
+                step_tensor(&mut m[j], &mut global.tensors[j], d);
             }
         }
     }
@@ -112,13 +152,11 @@ impl ServerOpt {
         let lr = self.lr;
         let eps = self.eps;
         let yogi = self.kind == ServerOptKind::Yogi;
+        let jobs = self.jobs;
         let m = self.m.as_mut().unwrap();
         let v = self.v.as_mut().unwrap();
 
-        for (j, d) in delta.tensors.iter().enumerate() {
-            let mj = &mut m[j];
-            let vj = &mut v[j];
-            let gj = &mut global.tensors[j];
+        let step_tensor = |mj: &mut Vec<f32>, vj: &mut Vec<f32>, gj: &mut Vec<f32>, d: &Vec<f32>| {
             for i in 0..d.len() {
                 let g = -(d[i] as f64); // pseudo-gradient
                 let g2 = g * g;
@@ -132,6 +170,19 @@ impl ServerOpt {
                 let mhat = mj[i] as f64 / bias1;
                 let vhat = (vj[i] as f64 / bias2).max(0.0);
                 gj[i] -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        };
+        if jobs >= 2 {
+            let units: Vec<_> = m
+                .iter_mut()
+                .zip(v.iter_mut())
+                .zip(global.tensors.iter_mut())
+                .zip(&delta.tensors)
+                .collect();
+            run_parallel(jobs, units, |(((mj, vj), gj), d)| step_tensor(mj, vj, gj, d));
+        } else {
+            for (j, d) in delta.tensors.iter().enumerate() {
+                step_tensor(&mut m[j], &mut v[j], &mut global.tensors[j], d);
             }
         }
     }
@@ -212,6 +263,32 @@ mod tests {
         opt.apply(&mut g, &delta(vec![vec![1.0]]));
         let second_step = g.tensors[0][0] - first;
         assert!(second_step > first, "momentum should amplify");
+    }
+
+    #[test]
+    fn jobs_fanout_is_bit_identical_for_every_kind() {
+        for kind in [
+            ServerOptKind::FedAvg,
+            ServerOptKind::SgdM,
+            ServerOptKind::Adam,
+            ServerOptKind::Yogi,
+        ] {
+            let mut serial = ServerOpt::new(kind, 0.05);
+            let mut fanned = ServerOpt::new(kind, 0.05).with_jobs(3);
+            let mut gs = global();
+            let mut gf = global();
+            for i in 0..4 {
+                let d = delta(vec![vec![1.0 + i as f32, -0.25], vec![0.5 * i as f32]]);
+                serial.apply(&mut gs, &d);
+                fanned.apply(&mut gf, &d);
+            }
+            for (a, b) in gs.tensors.iter().zip(&gf.tensors) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} fanout drifted");
+                }
+            }
+            assert_eq!(serial.steps_taken(), fanned.steps_taken());
+        }
     }
 
     #[test]

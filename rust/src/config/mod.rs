@@ -113,6 +113,26 @@ pub struct RunConfig {
     /// `trainings_avoided` is always 0.
     pub eager_train: bool,
 
+    /// Batched plan execution (`batch_exec=`): coalesce the deferred
+    /// `TrainPlan`s that resolve between two aggregation points into
+    /// stacked multi-lane PJRT dispatches (`trainer::execute_plans_batched`
+    /// over the manifest's `lanes`-wide batched artifacts) instead of one
+    /// dispatch per client. Semantically bit-identical to serial execution
+    /// — same RunReport JSON, same golden fingerprints — for every strategy
+    /// (the per-lane scan body is the single-lane body; locked by
+    /// `rust/tests/batched_equivalence.rs`); only the dispatch count and
+    /// wall-clock change. Requires an artifact set recorded with batched
+    /// variants (older sets fail with a re-record hint). Composes with
+    /// `eager_train`, which moves event-strategy execution to dispatch time
+    /// and so leaves nothing for the batch queue on that path.
+    pub batch_exec: bool,
+    /// Worker threads for server-side aggregation (`agg_jobs=`): the flat
+    /// `average_delta` fold and the server-optimizer update loops partition
+    /// over the TENSOR index with serial per-tensor accumulation order, so
+    /// any thread count is bit-identical to `1` (the serial anchor; locked
+    /// by `rust/tests/parallel_agg_properties.rs`).
+    pub agg_jobs: usize,
+
     /// Evaluate every this many aggregation rounds.
     pub eval_every: usize,
     /// Held-out eval batches per evaluation.
@@ -162,6 +182,8 @@ impl Default for RunConfig {
             hierarchy: HierarchyConfig::default(),
             network: NetworkConfig::default(),
             eager_train: false,
+            batch_exec: false,
+            agg_jobs: 1,
             eval_every: 10,
             eval_batches: 4,
             target_metric: None,
@@ -302,6 +324,7 @@ impl RunConfig {
             "dropout_prob in [0, 1)"
         );
         anyhow::ensure!(self.sim_model_bytes > 0.0, "sim_model_bytes > 0");
+        anyhow::ensure!(self.agg_jobs >= 1, "agg_jobs must be >= 1");
         anyhow::ensure!(self.eval_every > 0, "eval_every >= 1");
         self.availability.validate()?;
         self.hierarchy.validate()?;

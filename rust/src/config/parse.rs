@@ -69,6 +69,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "net_stale_correction",
     "net_rebalance",
     "eager_train",
+    "batch_exec",
+    "agg_jobs",
     "eval_every",
     "eval_batches",
     "target_metric",
@@ -168,6 +170,12 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         }
         "net_rebalance" => cfg.network.rebalance = parse_bool(v)?,
         "eager_train" => cfg.eager_train = parse_bool(v)?,
+        "batch_exec" => cfg.batch_exec = parse_bool(v)?,
+        "agg_jobs" => {
+            cfg.agg_jobs = v
+                .parse()
+                .with_context(|| format!("agg_jobs: expected a positive integer, got {v:?}"))?
+        }
         "eval_every" => cfg.eval_every = v.parse()?,
         "eval_batches" => cfg.eval_batches = v.parse()?,
         "target_metric" => {
@@ -246,6 +254,25 @@ mod tests {
         assert!(!deferred.eager_train, "deferred dispatch is the default");
         apply_cli(&mut deferred, "eager_train=no").unwrap();
         assert!(!deferred.eager_train);
+    }
+
+    #[test]
+    fn hotpath_overrides() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.batch_exec, "serial dispatch is the default");
+        assert_eq!(cfg.agg_jobs, 1, "serial aggregation is the default");
+        apply_file(&mut cfg, "batch_exec = true\nagg_jobs = 4\n").unwrap();
+        assert!(cfg.batch_exec);
+        assert_eq!(cfg.agg_jobs, 4);
+        cfg.validate().unwrap();
+        apply_cli(&mut cfg, "batch_exec=no").unwrap();
+        assert!(!cfg.batch_exec);
+        // Bad values fail at parse (not silently), bad counts at validate.
+        assert!(apply_cli(&mut cfg, "batch_exec=maybe").is_err());
+        assert!(apply_cli(&mut cfg, "agg_jobs=x").is_err());
+        assert!(apply_cli(&mut cfg, "agg_jobs=-1").is_err());
+        apply_cli(&mut cfg, "agg_jobs=0").unwrap();
+        assert!(cfg.validate().is_err(), "agg_jobs=0 must be rejected");
     }
 
     #[test]

@@ -45,7 +45,9 @@ use anyhow::Result;
 
 use super::local_time::TimeTruth;
 use super::sampler::{self, ClientSampler, SamplerCtx};
-use super::trainer::{execute_plan, plan_client, train_client, LocalOutcome, TrainPlan};
+use super::trainer::{
+    execute_plan, execute_plans_batched, plan_client, train_client, LocalOutcome, TrainPlan,
+};
 use super::{local_time, Recorder, Simulation};
 use crate::availability::{AvailabilityModel, BandwidthSignal, SEED_SALT};
 use crate::devices::RoundConditions;
@@ -72,6 +74,12 @@ pub struct ClientFinish {
     pub base_version: u64,
     pub update: Update,
     pub mean_loss: f64,
+    /// `Some` under `cfg.batch_exec`: the finish's deferred plan was queued
+    /// on the engine's [`BatchQueue`] instead of executed — `update` is an
+    /// empty placeholder and `mean_loss` is NaN until the strategy drains
+    /// the queue at its next aggregation boundary ([`SimEngine::drain_batch`])
+    /// and patches its buffered entry by this ticket.
+    pub ticket: Option<u64>,
 }
 
 /// Everything that can move the engine's clock. `Finish` is a lightweight
@@ -195,6 +203,57 @@ struct PendingDispatch {
     work: PendingWork,
 }
 
+/// One resolve-ready plan parked on the [`BatchQueue`] awaiting the next
+/// aggregation boundary. Round-stepped strategies queue with `base: None`
+/// (every plan in the round trains against the round's shared global, which
+/// the drain call supplies — zero snapshot clones); event-driven strategies
+/// carry the dispatch's version-keyed snapshot `Arc` plus the version to
+/// release once the plan executes.
+struct QueuedPlan {
+    ticket: u64,
+    client: usize,
+    plan: TrainPlan,
+    base: Option<(Arc<ParamVec>, u64)>,
+}
+
+/// Accumulator for resolve-ready plans under `cfg.batch_exec`: instead of
+/// one PJRT dispatch per client, plans collect here between aggregation
+/// boundaries and drain through `trainer::execute_plans_batched` — waves of
+/// up to `meta.lanes` clients per stacked dispatch. Tickets are handed out
+/// in enqueue order and the drain returns outcomes in the same order, so
+/// strategies can patch buffered placeholders deterministically.
+#[derive(Default)]
+struct BatchQueue {
+    items: Vec<QueuedPlan>,
+    next_ticket: u64,
+}
+
+impl BatchQueue {
+    fn push(&mut self, client: usize, plan: TrainPlan, base: Option<(Arc<ParamVec>, u64)>) -> u64 {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.items.push(QueuedPlan {
+            ticket,
+            client,
+            plan,
+            base,
+        });
+        ticket
+    }
+
+    fn take(&mut self) -> Vec<QueuedPlan> {
+        std::mem::take(&mut self.items)
+    }
+}
+
+/// A drained plan's executed outcome, in enqueue (ticket) order.
+pub struct BatchedOutcome {
+    pub ticket: u64,
+    pub client: usize,
+    pub update: Update,
+    pub mean_loss: f64,
+}
+
 /// Version-keyed store of base-model snapshots for deferred dispatches.
 /// `retain` hands out a shared `Arc` per global version (cloning the
 /// parameters at most once per version, however many clients dispatch on
@@ -260,6 +319,9 @@ pub struct SimEngine<'a> {
     /// rather than fleet size.
     pending: BTreeMap<usize, PendingDispatch>,
     snapshots: SnapshotStore,
+    /// Resolve-ready plans awaiting the next aggregation boundary
+    /// (`cfg.batch_exec`; always empty otherwise).
+    batch: BatchQueue,
     in_flight: usize,
     completed_rounds: usize,
     /// Drop attribution accumulated since the last completed round.
@@ -323,6 +385,7 @@ impl<'a> SimEngine<'a> {
             lazy,
             pending: BTreeMap::new(),
             snapshots: SnapshotStore::default(),
+            batch: BatchQueue::default(),
             in_flight: 0,
             completed_rounds: 0,
             dropped_pending: 0,
@@ -819,14 +882,28 @@ impl<'a> SimEngine<'a> {
                 base_version = newer;
             }
         }
-        let (update, mean_loss) = match pd.work {
-            PendingWork::Trained { update, mean_loss } => (update, mean_loss),
+        let (update, mean_loss, ticket) = match pd.work {
+            PendingWork::Trained { update, mean_loss } => (update, mean_loss, None),
+            PendingWork::Planned { plan, base } if self.sim.cfg.batch_exec => {
+                // Batched execution: park the plan on the queue (snapshot
+                // stays retained, execution ledger untouched until the
+                // drain) and hand the hook a ticketed placeholder.
+                let ticket = self.batch.push(client, plan, Some((base, snapshot_version)));
+                (
+                    Update {
+                        boundary: 0,
+                        tensors: Vec::new(),
+                    },
+                    f64::NAN,
+                    Some(ticket),
+                )
+            }
             PendingWork::Planned { plan, base } => {
                 let outcome =
                     execute_plan(&self.sim.runtime, &plan, &base, self.sim.cfg.client_lr)?;
                 self.snapshots.release(snapshot_version);
                 self.recorder.wasted.on_execute();
-                (outcome.update, outcome.mean_loss)
+                (outcome.update, outcome.mean_loss, None)
             }
         };
         Ok(ClientFinish {
@@ -835,6 +912,7 @@ impl<'a> SimEngine<'a> {
             base_version,
             update,
             mean_loss,
+            ticket,
         })
     }
 
@@ -990,6 +1068,80 @@ impl<'a> SimEngine<'a> {
         )?;
         self.recorder.wasted.on_execute();
         Ok(outcome)
+    }
+
+    /// Round-strategy training entry point with batching: execute
+    /// immediately through [`SimEngine::train_now`] (returning `Some`), or,
+    /// under `cfg.batch_exec`, queue the plan for the next
+    /// [`SimEngine::drain_batch`] and return `None`. The
+    /// dispatch-side bookkeeping (wasted-work ledger, workload telemetry,
+    /// delivery count, the client-RNG plan draws) happens HERE either way,
+    /// in the exact order `train_now` performs it — only the PJRT execution
+    /// moves to the drain, which is why the two modes stay bit-identical.
+    pub fn train_now_or_queue(
+        &mut self,
+        client: usize,
+        base: &ParamVec,
+        ratio: &RatioMeta,
+        epochs: usize,
+    ) -> Result<Option<LocalOutcome>> {
+        if !self.sim.cfg.batch_exec {
+            return Ok(Some(self.train_now(client, base, ratio, epochs)?));
+        }
+        let sim = self.sim;
+        self.recorder.wasted.on_dispatch();
+        self.note_workload(client, epochs, ratio.ratio);
+        self.tables.delivered[client] += 1;
+        let plan = plan_client(
+            &sim.dataset,
+            client,
+            ratio,
+            epochs,
+            sim.cfg.steps_per_epoch,
+            &mut self.client_rngs[client],
+        );
+        self.batch.push(client, plan, None);
+        Ok(None)
+    }
+
+    /// Drain the batch queue: execute every parked plan through the stacked
+    /// PJRT path (`trainer::execute_plans_batched`) and return the outcomes
+    /// in enqueue (ticket) order. `shared_base` supplies the base model for
+    /// plans queued without their own snapshot (round-stepped strategies
+    /// pass the round's global); event-queued plans use their retained
+    /// snapshots, released here once executed. A no-op returning an empty
+    /// vec when nothing is queued — serial runs call through harmlessly.
+    pub fn drain_batch(&mut self, shared_base: Option<&ParamVec>) -> Result<Vec<BatchedOutcome>> {
+        let queued = self.batch.take();
+        if queued.is_empty() {
+            return Ok(Vec::new());
+        }
+        let items: Vec<(&TrainPlan, &ParamVec)> = queued
+            .iter()
+            .map(|q| {
+                let base = match &q.base {
+                    Some((snap, _)) => snap.as_ref(),
+                    None => shared_base.expect("round-queued plan drained without a shared base"),
+                };
+                (&q.plan, base)
+            })
+            .collect();
+        let outcomes = execute_plans_batched(&self.sim.runtime, &items, self.sim.cfg.client_lr)?;
+        drop(items);
+        let mut out = Vec::with_capacity(queued.len());
+        for (q, o) in queued.into_iter().zip(outcomes) {
+            if let Some((_, version)) = q.base {
+                self.snapshots.release(version);
+            }
+            self.recorder.wasted.on_execute();
+            out.push(BatchedOutcome {
+                ticket: q.ticket,
+                client: q.client,
+                update: o.update,
+                mean_loss: o.mean_loss,
+            });
+        }
+        Ok(out)
     }
 
     /// Currently-idle, currently-online clients — the slot-refill pool for

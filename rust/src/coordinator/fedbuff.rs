@@ -35,6 +35,10 @@ pub struct FedBuff {
     server_opt: ServerOpt,
     buffer: Vec<Contribution>,
     buffer_losses: Vec<f64>,
+    /// `batch_exec` bookkeeping: buffered placeholder entries (ticket →
+    /// buffer index) patched with real outcomes when the flush drains the
+    /// engine's batch queue. Always empty under serial execution.
+    pending_tickets: Vec<(u64, usize)>,
     k_goal: usize,
     /// Aggregation topology (`hierarchy = flat` reproduces `average_delta`
     /// verbatim; `two-tier` routes the flush through regional edges).
@@ -48,9 +52,11 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
             version: 0,
             params: sim.runtime.init_params(sim.cfg.init_seed)?,
         },
-        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr)
+            .with_jobs(sim.cfg.agg_jobs),
         buffer: Vec::new(),
         buffer_losses: Vec::new(),
+        pending_tickets: Vec::new(),
         k_goal: sim.cfg.k_target(),
         hierarchy: sim.cfg.hierarchy.clone(),
     }))
@@ -123,6 +129,9 @@ impl EventStrategy for FedBuff {
         if cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost {
             eng.drop_client(fin.client, DropCause::Deadline);
         } else {
+            if let Some(ticket) = fin.ticket {
+                self.pending_tickets.push((ticket, self.buffer.len()));
+            }
             self.buffer.push(Contribution {
                 client_id: fin.client,
                 update: fin.update,
@@ -136,10 +145,30 @@ impl EventStrategy for FedBuff {
         // model (uniform over the online idle pool, which includes it).
         self.refill_slot(eng, now)?;
 
+        // Placeholders count toward the goal, so the flush trigger fires at
+        // exactly the same event as under serial execution.
         if self.buffer.len() >= self.k_goal {
+            // Batched execution: one stacked drain covers every plan that
+            // resolved since the last flush. Outcomes for tickets no longer
+            // buffered (strategy-dropped finishes) still executed — the
+            // serial ledger ran those at their finish events too.
+            for out in eng.drain_batch(None)? {
+                if let Some(&(_, idx)) =
+                    self.pending_tickets.iter().find(|(t, _)| *t == out.ticket)
+                {
+                    self.buffer[idx].update = out.update;
+                    self.buffer_losses[idx] = out.mean_loss;
+                }
+            }
+            self.pending_tickets.clear();
             let participant_ids: Vec<usize> =
                 self.buffer.iter().map(|c| c.client_id).collect();
-            let avg = self.hierarchy.aggregate(&self.global.params, &self.buffer, true);
+            let avg = self.hierarchy.aggregate_jobs(
+                &self.global.params,
+                &self.buffer,
+                true,
+                eng.sim.cfg.agg_jobs,
+            );
             let mut params = self.global.params.clone();
             self.server_opt.apply(&mut params, &avg);
             self.global = VersionedParams {

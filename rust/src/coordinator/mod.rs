@@ -114,6 +114,11 @@ impl Simulation {
         let mut strategy = (info.build)(self)?;
         let mut eng = SimEngine::new(self, Some(sink))?;
         strategy.run(&mut eng)?;
+        // Under `batch_exec` an event-driven run can stop (budget / target
+        // metric) with resolve-ready plans still parked between flushes.
+        // Serial execution ran those at their finish events, so drain them
+        // for wasted-work-ledger parity before the report settles.
+        eng.drain_batch(None)?;
         Ok(eng.finish(strategy.name()))
     }
 

@@ -36,6 +36,10 @@ pub struct SemiAsync {
     server_opt: ServerOpt,
     buffer: Vec<Contribution>,
     buffer_losses: Vec<f64>,
+    /// `batch_exec` bookkeeping: buffered placeholder entries (ticket →
+    /// buffer index) patched with real outcomes when the flush drains the
+    /// engine's batch queue. Always empty under serial execution.
+    pending_tickets: Vec<(u64, usize)>,
     /// Aggregation cadence D (set once in `on_start`).
     deadline_secs: f64,
     /// Per-client expected full-round seconds — the selection horizon.
@@ -51,9 +55,11 @@ pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
             version: 0,
             params: sim.runtime.init_params(sim.cfg.init_seed)?,
         },
-        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr)
+            .with_jobs(sim.cfg.agg_jobs),
         buffer: Vec::new(),
         buffer_losses: Vec::new(),
+        pending_tickets: Vec::new(),
         deadline_secs: 0.0,
         expected_secs: Vec::new(),
         hierarchy: sim.cfg.hierarchy.clone(),
@@ -85,13 +91,30 @@ impl SemiAsync {
 
     /// Flush whatever landed in the closing window.
     fn flush(&mut self, eng: &mut SimEngine, now: SimTime) -> Result<()> {
+        // Batched execution: one stacked drain covers every plan that
+        // resolved in the window; buffered placeholders patch by ticket
+        // (drain order == enqueue order). Unclaimed tickets belong to
+        // strategy-dropped finishes whose plans the serial path executed at
+        // their finish events — the ledger needs them executed here too.
+        for out in eng.drain_batch(None)? {
+            if let Some(&(_, idx)) = self.pending_tickets.iter().find(|(t, _)| *t == out.ticket) {
+                self.buffer[idx].update = out.update;
+                self.buffer_losses[idx] = out.mean_loss;
+            }
+        }
+        self.pending_tickets.clear();
         // A fast client can land more than one update per window; it still
         // participated in the round once (participation = rounds
         // contributed / total rounds stays in [0, 1]).
         let mut participant_ids: Vec<usize> = self.buffer.iter().map(|c| c.client_id).collect();
         participant_ids.sort_unstable();
         participant_ids.dedup();
-        let avg = self.hierarchy.aggregate(&self.global.params, &self.buffer, true);
+        let avg = self.hierarchy.aggregate_jobs(
+            &self.global.params,
+            &self.buffer,
+            true,
+            eng.sim.cfg.agg_jobs,
+        );
         let mut params = self.global.params.clone();
         self.server_opt.apply(&mut params, &avg);
         self.global = VersionedParams {
@@ -167,6 +190,9 @@ impl EventStrategy for SemiAsync {
         if cfg.max_staleness.is_some_and(|cap| staleness > cap) || lost {
             eng.drop_client(fin.client, DropCause::Deadline);
         } else {
+            if let Some(ticket) = fin.ticket {
+                self.pending_tickets.push((ticket, self.buffer.len()));
+            }
             self.buffer.push(Contribution {
                 client_id: fin.client,
                 update: fin.update,

@@ -33,7 +33,8 @@ pub struct SyncFl {
 pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
     Ok(Box::new(SyncFl {
         global: sim.runtime.init_params(sim.cfg.init_seed)?,
-        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr)
+            .with_jobs(sim.cfg.agg_jobs),
         hierarchy: sim.cfg.hierarchy.clone(),
     }))
 }
@@ -96,20 +97,38 @@ impl RoundStrategy for SyncFl {
 
             // Delivery is settled above, so this training is never
             // speculative — train synchronously through the engine (which
-            // also keeps the wasted-work ledger).
-            let outcome = eng.train_now(c, &self.global, full, epochs)?;
-            loss_sum += outcome.mean_loss;
-            participant_ids.push(c);
+            // also keeps the wasted-work ledger). Under `batch_exec` the
+            // plan parks on the engine's queue and executes in the stacked
+            // drain below.
+            if let Some(outcome) = eng.train_now_or_queue(c, &self.global, full, epochs)? {
+                loss_sum += outcome.mean_loss;
+                participant_ids.push(c);
+                contributions.push(Contribution {
+                    client_id: c,
+                    update: outcome.update,
+                    weight: 1.0,
+                    staleness: 0,
+                });
+            }
+        }
+
+        // Batched drain (no-op when nothing queued): enqueue order == the
+        // sampled-loop order, so the contribution list matches serial.
+        for out in eng.drain_batch(Some(&self.global))? {
+            loss_sum += out.mean_loss;
+            participant_ids.push(out.client);
             contributions.push(Contribution {
-                client_id: c,
-                update: outcome.update,
+                client_id: out.client,
+                update: out.update,
                 weight: 1.0,
                 staleness: 0,
             });
         }
 
         if !contributions.is_empty() {
-            let avg = self.hierarchy.aggregate(&self.global, &contributions, false);
+            let avg =
+                self.hierarchy
+                    .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);
             self.server_opt.apply(&mut self.global, &avg);
         }
         let mean_train_loss = if participant_ids.is_empty() {

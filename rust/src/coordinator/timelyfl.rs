@@ -50,7 +50,8 @@ pub struct TimelyFl {
 pub fn build(sim: &Simulation) -> Result<Box<dyn Strategy>> {
     Ok(Box::new(TimelyFl {
         global: sim.runtime.init_params(sim.cfg.init_seed)?,
-        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr),
+        server_opt: ServerOpt::new(sim.cfg.server_opt, sim.cfg.server_lr)
+            .with_jobs(sim.cfg.agg_jobs),
         frozen_tk: None,
         frozen_workload: vec![None; sim.cfg.population],
         hierarchy: sim.cfg.hierarchy.clone(),
@@ -171,21 +172,40 @@ impl RoundStrategy for TimelyFl {
 
             // Eligibility is settled above, so this training is never
             // speculative — train synchronously through the engine (which
-            // also keeps the wasted-work ledger).
-            let outcome = eng.train_now(*c, &self.global, ratio, w.epochs)?;
-            loss_sum += outcome.mean_loss;
-            participant_ids.push(*c);
+            // also keeps the wasted-work ledger). Under `batch_exec` the
+            // plan parks on the engine's queue instead and executes in the
+            // stacked drain below.
+            if let Some(outcome) = eng.train_now_or_queue(*c, &self.global, ratio, w.epochs)? {
+                loss_sum += outcome.mean_loss;
+                participant_ids.push(*c);
+                contributions.push(Contribution {
+                    client_id: *c,
+                    update: outcome.update,
+                    weight: 1.0,
+                    staleness: 0, // by construction: base model is this round's
+                });
+            }
+        }
+
+        // Batched drain (a no-op when nothing queued): outcomes arrive in
+        // enqueue order — exactly the eligibility-loop order above — so the
+        // contribution list is identical to the serial build.
+        for out in eng.drain_batch(Some(&self.global))? {
+            loss_sum += out.mean_loss;
+            participant_ids.push(out.client);
             contributions.push(Contribution {
-                client_id: *c,
-                update: outcome.update,
+                client_id: out.client,
+                update: out.update,
                 weight: 1.0,
-                staleness: 0, // by construction: base model is this round's
+                staleness: 0,
             });
         }
 
         // (6) aggregate; the engine advances the shared clock by T_k
         if !contributions.is_empty() {
-            let avg = self.hierarchy.aggregate(&self.global, &contributions, false);
+            let avg =
+                self.hierarchy
+                    .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);
             self.server_opt.apply(&mut self.global, &avg);
         }
         let mean_train_loss = if participant_ids.is_empty() {

@@ -143,6 +143,94 @@ pub fn execute_plan(
     })
 }
 
+/// Batched phase 2: execute many resolve-ready plans in as few PJRT
+/// dispatches as possible (`batch_exec=on`). Plans are grouped by compiled
+/// ratio (each ratio has its own batched executable), packed into waves of
+/// up to `meta.lanes` lanes, and each wave's chunks run through
+/// `ModelRuntime::train_chunk_batched` — one dispatch covers a chunk of
+/// *every* lane, with per-lane `n_steps` masking so shorter plans pass
+/// through once exhausted. Per lane, the arithmetic (chunk splits, loss
+/// accumulation, delta extraction) mirrors [`execute_plan`] operation for
+/// operation, so outcomes are bit-identical to executing each plan alone.
+///
+/// Outcomes are returned in input order.
+pub fn execute_plans_batched(
+    rt: &ModelRuntime,
+    items: &[(&TrainPlan, &ParamVec)],
+    lr: f32,
+) -> Result<Vec<LocalOutcome>> {
+    anyhow::ensure!(
+        rt.meta.lanes >= 1,
+        "model {} has no batched artifacts — the artifact set predates \
+         batch_exec; re-run `make artifacts`",
+        rt.meta.name
+    );
+    // Group item indices by compiled-ratio index, preserving input order
+    // within each group (BTreeMap keeps the group order deterministic).
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (i, (plan, _)) in items.iter().enumerate() {
+        let idx = rt
+            .meta
+            .ratios
+            .iter()
+            .position(|r| (r.ratio - plan.ratio).abs() < 1e-9)
+            .ok_or_else(|| anyhow::anyhow!("planned ratio {} not compiled", plan.ratio))?;
+        groups.entry(idx).or_default().push(i);
+    }
+
+    let mut outcomes: Vec<Option<LocalOutcome>> = (0..items.len()).map(|_| None).collect();
+    for (ridx, group) in groups {
+        let ratio = &rt.meta.ratios[ridx];
+        for wave in group.chunks(rt.meta.lanes) {
+            let mut params: Vec<ParamVec> =
+                wave.iter().map(|&i| items[i].1.clone()).collect();
+            let sizes: Vec<Vec<usize>> = wave
+                .iter()
+                .map(|&i| chunk_sizes(items[i].0.total_steps(), rt.meta.chunk))
+                .collect();
+            let mut loss_sums = vec![0f64; wave.len()];
+            let mut steps_done = vec![0u64; wave.len()];
+            let mut offsets = vec![0usize; wave.len()];
+            let ncalls = sizes.iter().map(|s| s.len()).max().unwrap_or(0);
+            for k in 0..ncalls {
+                // Lanes whose plans still have a chunk at call k; exhausted
+                // lanes drop out (equivalently n_steps = 0 padding).
+                let active: Vec<usize> = (0..wave.len()).filter(|&w| k < sizes[w].len()).collect();
+                let lane_args: Vec<(&ParamVec, &[Batch])> = active
+                    .iter()
+                    .map(|&w| {
+                        let take = sizes[w][k];
+                        let plan = items[wave[w]].0;
+                        (&params[w], &plan.batches[offsets[w]..offsets[w] + take])
+                    })
+                    .collect();
+                let outs = rt.train_chunk_batched(ratio, &lane_args, lr)?;
+                drop(lane_args);
+                for (j, &w) in active.iter().enumerate() {
+                    let (new_params, mean_loss) = &outs[j];
+                    let take = sizes[w][k];
+                    check_loss_finite(items[wave[w]].0.client_id, *mean_loss, steps_done[w])?;
+                    params[w] = new_params.clone();
+                    loss_sums[w] += *mean_loss as f64 * take as f64;
+                    steps_done[w] += take as u64;
+                    offsets[w] += take;
+                }
+            }
+            for (w, &i) in wave.iter().enumerate() {
+                let (plan, base) = items[i];
+                let update = params[w].delta_from(base, ratio.boundary);
+                outcomes[i] = Some(LocalOutcome {
+                    client_id: plan.client_id,
+                    update,
+                    mean_loss: loss_sums[w] / steps_done[w].max(1) as f64,
+                    steps: steps_done[w],
+                });
+            }
+        }
+    }
+    Ok(outcomes.into_iter().map(|o| o.expect("every item executed")).collect())
+}
+
 /// Train `client` for `epochs` local epochs (each `steps_per_epoch`
 /// minibatches) at the given compiled partial ratio, starting from `base`.
 /// Fused plan + execute — the synchronous path of the round-stepped
@@ -221,6 +309,7 @@ mod tests {
             seq_len: 1,
             total_params: 4,
             chunk: 4,
+            lanes: 0,
             params: vec![ParamMeta {
                 name: "w".into(),
                 shape: vec![4],
@@ -238,6 +327,7 @@ mod tests {
             boundary: 0,
             trainable_fraction: 1.0,
             artifact: String::new(),
+            batched_artifact: None,
         }
     }
 

@@ -207,6 +207,7 @@ mod tests {
             seq_len: 0,
             total_params: 1,
             chunk: 8,
+            lanes: 0,
             params: vec![ParamMeta {
                 name: "w".into(),
                 shape: vec![1],

@@ -27,7 +27,7 @@
 
 use anyhow::Result;
 
-use crate::aggregation::{average_delta, staleness_discount, Contribution};
+use crate::aggregation::{average_delta, average_delta_jobs, staleness_discount, Contribution};
 use crate::model::{ParamVec, Update};
 
 /// Aggregation topology between clients and the root coordinator.
@@ -132,8 +132,23 @@ impl HierarchyConfig {
         contributions: &[Contribution],
         discount_staleness: bool,
     ) -> Update {
+        self.aggregate_jobs(template, contributions, discount_staleness, 1)
+    }
+
+    /// [`HierarchyConfig::aggregate`] with a worker-thread count for the
+    /// flat path (`agg_jobs=` config key; bit-identical for any count —
+    /// see [`average_delta_jobs`]). The two-tier path stays serial: the
+    /// edge/root split is already the parallel structure there, and its
+    /// per-chunk accumulation order is part of the documented semantics.
+    pub fn aggregate_jobs(
+        &self,
+        template: &ParamVec,
+        contributions: &[Contribution],
+        discount_staleness: bool,
+        jobs: usize,
+    ) -> Update {
         if !self.is_tiered() {
-            return average_delta(template, contributions, discount_staleness);
+            return average_delta_jobs(template, contributions, discount_staleness, jobs);
         }
         // Route every contribution to its edge, preserving arrival order
         // within a region (edges see uploads in the order they landed).

@@ -56,6 +56,12 @@ pub struct ModelRuntime {
     /// `e2e_lm`; see EXPERIMENTS.md §Perf).
     train: Vec<once_cell::unsync::OnceCell<PjRtLoadedExecutable>>,
     train_paths: Vec<std::path::PathBuf>,
+    /// Batched-execution variants (`meta.lanes` clients per dispatch),
+    /// parallel to `meta.ratios`; lazy like `train`, `None` path when the
+    /// artifact set predates the batched graphs (`batch_exec=on` then fails
+    /// with a re-record hint on first use).
+    train_batched: Vec<once_cell::unsync::OnceCell<PjRtLoadedExecutable>>,
+    train_batched_paths: Vec<Option<std::path::PathBuf>>,
     eval: PjRtLoadedExecutable,
     init: PjRtLoadedExecutable,
     stats: RefCell<RuntimeStats>,
@@ -101,6 +107,18 @@ impl ModelRuntime {
             .iter()
             .map(|r| manifest.artifact_path(&r.artifact))
             .collect();
+        let train_batched = (0..meta.ratios.len())
+            .map(|_| once_cell::unsync::OnceCell::new())
+            .collect();
+        let train_batched_paths = meta
+            .ratios
+            .iter()
+            .map(|r| {
+                r.batched_artifact
+                    .as_deref()
+                    .map(|rel| manifest.artifact_path(rel))
+            })
+            .collect();
         let eval = compile(client, &manifest.artifact_path(&meta.eval_artifact))?;
         let init = compile(client, &manifest.artifact_path(&meta.init_artifact))?;
         Ok(ModelRuntime {
@@ -108,6 +126,8 @@ impl ModelRuntime {
             client: client.clone(),
             train,
             train_paths,
+            train_batched,
+            train_batched_paths,
             eval,
             init,
             stats: RefCell::new(RuntimeStats::default()),
@@ -123,6 +143,24 @@ impl ModelRuntime {
         let e = compile(&self.client, &self.train_paths[idx])?;
         let _ = self.train[idx].set(e);
         Ok(self.train[idx].get().unwrap())
+    }
+
+    /// The compiled batched-train executable for ratio index `idx`
+    /// (compiling it on first use).
+    fn train_batched_exe(&self, idx: usize) -> Result<&PjRtLoadedExecutable> {
+        if let Some(e) = self.train_batched[idx].get() {
+            return Ok(e);
+        }
+        let path = self.train_batched_paths[idx].as_ref().with_context(|| {
+            format!(
+                "model {} ratio {} has no batched artifact — the artifact set \
+                 predates batch_exec; re-run `make artifacts`",
+                self.meta.name, self.meta.ratios[idx].ratio
+            )
+        })?;
+        let e = compile(&self.client, path)?;
+        let _ = self.train_batched[idx].set(e);
+        Ok(self.train_batched[idx].get().unwrap())
     }
 
     pub fn client(&self) -> &PjRtClient {
@@ -293,6 +331,170 @@ impl ModelRuntime {
         s.train_execs += 1;
         s.train_secs += t0.elapsed().as_secs_f64();
         Ok((ParamVec { tensors }, loss_sum / batches.len() as f32))
+    }
+
+    /// Run up to `meta.lanes` independent clients' train chunks in ONE PJRT
+    /// execution (`batch_exec=on`; the dispatch-count optimisation of
+    /// docs/architecture.md §Batched execution). Each `(params, batches)`
+    /// lane behaves exactly like a [`Self::train_chunk`] call: the batched
+    /// artifact is a `lax.map` over the same scan body, so a lane's result
+    /// is independent of which lanes share the dispatch (locked bitwise by
+    /// `tests/batched_equivalence.rs`). Missing lanes (fewer clients than
+    /// `meta.lanes`) are padded internally with `n_steps = 0` pass-through
+    /// repeats of the last real lane.
+    pub fn train_chunk_batched(
+        &self,
+        ratio: &RatioMeta,
+        lanes: &[(&ParamVec, &[Batch])],
+        lr: f32,
+    ) -> Result<Vec<(ParamVec, f32)>> {
+        let nlanes = self.meta.lanes;
+        anyhow::ensure!(
+            nlanes >= 1,
+            "model {} has no batched artifacts — the artifact set predates \
+             batch_exec; re-run `make artifacts`",
+            self.meta.name
+        );
+        anyhow::ensure!(
+            !lanes.is_empty() && lanes.len() <= nlanes,
+            "got {} lanes for lane count {nlanes}",
+            lanes.len()
+        );
+        let chunk = self.meta.chunk;
+        for (_, b) in lanes {
+            anyhow::ensure!(
+                !b.is_empty() && b.len() <= chunk,
+                "got {} batches for chunk size {chunk}",
+                b.len()
+            );
+        }
+        let idx = self
+            .meta
+            .ratios
+            .iter()
+            .position(|r| (r.ratio - ratio.ratio).abs() < 1e-9)
+            .with_context(|| format!("ratio {} not compiled", ratio.ratio))?;
+        let t0 = Instant::now();
+
+        // Stacked params: one [L, *shape] operand per tensor.
+        let npar = self.meta.params.len();
+        let mut args = Vec::with_capacity(npar + 4);
+        for (pi, pmeta) in self.meta.params.iter().enumerate() {
+            let mut data = Vec::with_capacity(nlanes * pmeta.size);
+            for l in 0..nlanes {
+                data.extend_from_slice(&lanes[l.min(lanes.len() - 1)].0.tensors[pi]);
+            }
+            let mut dims = vec![nlanes];
+            dims.extend_from_slice(&pmeta.shape);
+            args.push(literal_f32(&data, &dims)?);
+        }
+
+        // Stacked minibatches: per lane, the same in-chunk tail padding as
+        // `stacked_batch_literals` (slots past that lane's n_steps repeat
+        // the first batch and are masked in-graph).
+        let x_per = self.meta.batch * self.meta.x_len();
+        let y_per = match self.meta.task {
+            super::manifest::Task::Classify => self.meta.batch,
+            super::manifest::Task::Lm => self.meta.batch * self.meta.seq_len,
+        };
+        let mut ys = Vec::with_capacity(nlanes * chunk * y_per);
+        let mut x_dims = vec![nlanes, chunk, self.meta.batch];
+        x_dims.extend_from_slice(&self.meta.x_shape);
+        let x_lit = match self.meta.x_dtype {
+            XDtype::F32 => {
+                let mut xs = Vec::with_capacity(nlanes * chunk * x_per);
+                for l in 0..nlanes {
+                    let batches = lanes[l.min(lanes.len() - 1)].1;
+                    for i in 0..chunk {
+                        let b = &batches[i.min(batches.len() - 1)];
+                        let Batch::F32 { x, y } = b else {
+                            anyhow::bail!("batch dtype does not match model {}", self.meta.name)
+                        };
+                        anyhow::ensure!(x.len() == x_per && y.len() == y_per, "bad batch shape");
+                        xs.extend_from_slice(x);
+                        ys.extend_from_slice(y);
+                    }
+                }
+                literal_f32(&xs, &x_dims)?
+            }
+            XDtype::I32 => {
+                let mut xs = Vec::with_capacity(nlanes * chunk * x_per);
+                for l in 0..nlanes {
+                    let batches = lanes[l.min(lanes.len() - 1)].1;
+                    for i in 0..chunk {
+                        let b = &batches[i.min(batches.len() - 1)];
+                        let Batch::I32 { x, y } = b else {
+                            anyhow::bail!("batch dtype does not match model {}", self.meta.name)
+                        };
+                        anyhow::ensure!(x.len() == x_per && y.len() == y_per, "bad batch shape");
+                        xs.extend_from_slice(x);
+                        ys.extend_from_slice(y);
+                    }
+                }
+                literal_i32(&xs, &x_dims)?
+            }
+        };
+        let y_dims: Vec<usize> = match self.meta.task {
+            super::manifest::Task::Classify => vec![nlanes, chunk, self.meta.batch],
+            super::manifest::Task::Lm => vec![nlanes, chunk, self.meta.batch, self.meta.seq_len],
+        };
+        args.push(x_lit);
+        args.push(literal_i32(&ys, &y_dims)?);
+        args.push(Literal::scalar(lr));
+        let n_steps: Vec<i32> = (0..nlanes)
+            .map(|l| if l < lanes.len() { lanes[l].1.len() as i32 } else { 0 })
+            .collect();
+        args.push(literal_i32(&n_steps, &[nlanes])?);
+
+        let out = self.train_batched_exe(idx)?
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("train_chunk_batched: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("train fetch: {e:?}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == npar + 1,
+            "batched train returned {} outputs",
+            parts.len()
+        );
+        let loss_lit = parts.pop().unwrap();
+        let losses = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        anyhow::ensure!(losses.len() == nlanes, "batched train returned {} losses", losses.len());
+        let stacked = parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        for (v, p) in stacked.iter().zip(&self.meta.params) {
+            anyhow::ensure!(
+                v.len() == nlanes * p.size,
+                "batched tensor {} has {} elements, want {}",
+                p.name,
+                v.len(),
+                nlanes * p.size
+            );
+        }
+        let outs = lanes
+            .iter()
+            .enumerate()
+            .map(|(l, (_, batches))| {
+                let tensors = stacked
+                    .iter()
+                    .zip(&self.meta.params)
+                    .map(|(v, p)| v[l * p.size..(l + 1) * p.size].to_vec())
+                    .collect();
+                // Same host-side mean as `train_chunk` so per-chunk loss
+                // accumulation stays bit-identical to the serial path.
+                (ParamVec { tensors }, losses[l] / batches.len() as f32)
+            })
+            .collect();
+
+        let mut s = self.stats.borrow_mut();
+        s.train_steps += lanes.iter().map(|(_, b)| b.len() as u64).sum::<u64>();
+        s.train_execs += 1;
+        s.train_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
     }
 
     /// One local SGD step (single-batch convenience wrapper over

@@ -30,6 +30,11 @@ pub struct RatioMeta {
     pub trainable_fraction: f64,
     /// HLO text path relative to the artifacts directory.
     pub artifact: String,
+    /// Batched-execution variant (`lanes` independent clients per dispatch;
+    /// see `ModelMeta::lanes`). `None` on artifact sets recorded before the
+    /// batched path existed — `batch_exec=on` then fails with a re-record
+    /// hint instead of silently falling back.
+    pub batched_artifact: Option<String>,
 }
 
 /// Task type of a model in the zoo.
@@ -63,6 +68,10 @@ pub struct ModelMeta {
     /// the trainer issues ceil(steps / chunk) calls with tail slots masked
     /// via the `n_steps` operand.
     pub chunk: usize,
+    /// Client lanes fused into one batched-train execution (lax.map width);
+    /// 0 when the artifact set predates the batched path (no
+    /// `batched_artifact` entries either).
+    pub lanes: usize,
     pub params: Vec<ParamMeta>,
     pub ratios: Vec<RatioMeta>,
     pub eval_artifact: String,
@@ -191,6 +200,10 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
                 boundary: r.expect("boundary")?.as_usize()?,
                 trainable_fraction: r.expect("trainable_fraction")?.as_f64()?,
                 artifact: r.expect("artifact")?.as_str()?.to_string(),
+                batched_artifact: match r.get("batched_artifact") {
+                    Some(b) => Some(b.as_str()?.to_string()),
+                    None => None,
+                },
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -211,6 +224,10 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
         seq_len: m.expect("seq_len")?.as_usize()?,
         total_params: m.expect("total_params")?.as_usize()?,
         chunk: m.expect("chunk")?.as_usize()?,
+        lanes: match m.get("lanes") {
+            Some(l) => l.as_usize()?,
+            None => 0,
+        },
         params,
         ratios,
         eval_artifact: m.expect("eval_artifact")?.as_str()?.to_string(),
@@ -232,6 +249,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
         anyhow::ensure!(
             r.boundary < meta.params.len(),
             "{name}: ratio {} boundary out of range",
+            r.ratio
+        );
+        anyhow::ensure!(
+            r.batched_artifact.is_none() || meta.lanes >= 1,
+            "{name}: ratio {} has a batched artifact but no lane count",
             r.ratio
         );
     }
@@ -296,5 +318,54 @@ mod tests {
     fn missing_model_is_error() {
         let man = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest_json()).unwrap();
         assert!(man.model("nope").is_err());
+    }
+
+    #[test]
+    fn pre_batched_manifests_parse_with_zero_lanes() {
+        // The tiny fixture has neither `lanes` nor `batched_artifact`: the
+        // optional fields must default instead of failing old artifact sets.
+        let man = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest_json()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.lanes, 0);
+        assert!(m.ratios.iter().all(|r| r.batched_artifact.is_none()));
+    }
+
+    #[test]
+    fn batched_fields_parse_and_require_lanes() {
+        let mut text = r#"{
+          "ratios": [1.0],
+          "models": {
+            "m": {
+              "task": "classify", "batch": 4, "eval_batch": 8,
+              "x_shape": [6], "x_dtype": "f32",
+              "num_classes": 3, "seq_len": 0, "total_params": 10,
+              "chunk": 8, "lanes": 8,
+              "params": [
+                {"name": "a_w", "shape": [2, 3], "size": 6},
+                {"name": "a_b", "shape": [4], "size": 4}
+              ],
+              "ratios": [
+                {"ratio": 1.0, "boundary": 0, "trainable_fraction": 1.0,
+                 "artifact": "m/train_r1000.hlo.txt",
+                 "batched_artifact": "m/train_r1000_b8.hlo.txt"}
+              ],
+              "eval_artifact": "m/eval.hlo.txt",
+              "init_artifact": "m/init.hlo.txt"
+            }
+          }
+        }"#
+        .to_string();
+        let man =
+            Manifest::from_json(PathBuf::from("/tmp"), &Json::parse(&text).unwrap()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.lanes, 8);
+        assert_eq!(
+            m.ratios[0].batched_artifact.as_deref(),
+            Some("m/train_r1000_b8.hlo.txt")
+        );
+        // A batched artifact without a lane count is a malformed manifest.
+        text = text.replace("\"chunk\": 8, \"lanes\": 8,", "\"chunk\": 8,");
+        let err = Manifest::from_json(PathBuf::from("/tmp"), &Json::parse(&text).unwrap());
+        assert!(err.is_err(), "batched artifact without lanes must fail");
     }
 }

@@ -71,6 +71,11 @@ fn random_overrides(rng: &mut Rng) -> Vec<(String, String)> {
         "strategy",
         pick(rng, &["TimelyFL", "timelyfl", "fedbuff", "sync", "seafl"]).into(),
     );
+    // Hot-path execution axes: batching and aggregation workers compose
+    // with every other knob (both are proven semantics-invisible, so any
+    // combination must parse, validate, and run).
+    push("batch_exec", pick(rng, &["true", "false", "1", "0", "yes", "no"]).into());
+    push("agg_jobs", format!("{}", 1 + rng.usize_below(8)));
     push("seed", format!("{}", rng.usize_below(1_000_000)));
     o
 }
@@ -126,6 +131,10 @@ fn fuzz_rejects_the_bad_values_it_must() {
     assert!(cfgparse::apply_cli(&mut cfg, "network=bogus").is_err());
     assert!(cfgparse::apply_cli(&mut cfg, "net_stale_correction=rewind").is_err());
     assert!(cfgparse::apply_cli(&mut cfg, "net_rebalance=maybe").is_err());
+    assert!(cfgparse::apply_cli(&mut cfg, "batch_exec=maybe").is_err());
+    // usize parse rejects signs and garbage outright.
+    assert!(cfgparse::apply_cli(&mut cfg, "agg_jobs=-1").is_err());
+    assert!(cfgparse::apply_cli(&mut cfg, "agg_jobs=x").is_err());
     // Values the PARSER accepts but validate() must catch: a negative or
     // non-finite downlink ratio prices time travel.
     for bad in ["-1.0", "nan", "inf"] {
@@ -133,6 +142,10 @@ fn fuzz_rejects_the_bad_values_it_must() {
         cfgparse::apply_cli(&mut cfg, &format!("net_down_ratio={bad}")).unwrap();
         assert!(cfg.validate().is_err(), "net_down_ratio={bad} validated");
     }
+    // agg_jobs=0 parses (it is a count) but zero workers is nonsense.
+    let mut cfg = RunConfig::default();
+    cfgparse::apply_cli(&mut cfg, "agg_jobs=0").unwrap();
+    assert!(cfg.validate().is_err(), "agg_jobs=0 validated");
 }
 
 // ---------------------------------------------------------------------------
@@ -164,6 +177,13 @@ fn fuzzed_tiny_fleets_run_and_hold_global_invariants() {
         cfg.steps_per_epoch = 1;
         cfg.max_local_epochs = 2;
         cfg.sim_model_bytes = 3.2e5;
+        // A drawn batch_exec=true needs the batched graphs; an artifact set
+        // recorded before them still serves every other axis combination.
+        if !std::fs::read_to_string(std::path::Path::new(ARTIFACTS).join("manifest.json"))
+            .is_ok_and(|m| m.contains("batched_artifact"))
+        {
+            cfg.batch_exec = false;
+        }
         cfg.validate().unwrap();
         let sim = Simulation::new(cfg.clone(), ARTIFACTS)
             .expect("build simulation (run `make artifacts` first)");

@@ -1,0 +1,206 @@
+//! Artifact-free properties of the chunk-parallel aggregation fold
+//! (`agg_jobs=` config key): `aggregation::average_delta_jobs` and the
+//! `ServerOpt` worker fan-out must be **bit-identical** to the serial
+//! paths for every thread count — f32 addition is non-associative, so this
+//! only holds because the parallel fold partitions the OUTPUT tensor index
+//! space and reduces each tensor in the exact serial contribution order.
+//! This suite is the proof; `scripts/check.sh` runs it on artifact-less
+//! checkouts (no PJRT anywhere below).
+//!
+//! Inputs are adversarial on purpose: partial-update boundaries, zero and
+//! fractional weights, staleness discounts, negative zeros and denormals —
+//! the values where "close enough" floating-point refactors drift first.
+
+use timelyfl::aggregation::{
+    average_delta, average_delta_chunked, average_delta_jobs, Contribution, ServerOpt,
+    ServerOptKind,
+};
+use timelyfl::model::{ParamVec, Update};
+use timelyfl::util::rng::Rng;
+
+/// Tensor shapes shared by every random case: mixed sizes, including a
+/// zero-length tensor (legal — a bias-free layer) to hit the degenerate
+/// inner loop.
+const SHAPE: [usize; 6] = [7, 1, 0, 33, 4, 12];
+
+fn template() -> ParamVec {
+    ParamVec {
+        tensors: SHAPE.iter().map(|&n| vec![0.0f32; n]).collect(),
+    }
+}
+
+/// A hostile f32: mostly ordinary values, with -0.0, denormals, and large
+/// magnitudes mixed in (all cases where bitwise equality is strictly
+/// stronger than numeric equality).
+fn hostile_f32(rng: &mut Rng) -> f32 {
+    match rng.below(10) {
+        0 => -0.0,
+        1 => f32::from_bits(rng.below(1 << 23) as u32), // positive denormal
+        2 => -f32::from_bits(1),                        // smallest-magnitude negative
+        3 => rng.range(-1e6, 1e6) as f32,
+        _ => rng.range(-2.0, 2.0) as f32,
+    }
+}
+
+/// Random contribution set: random suffix boundaries (partial updates),
+/// weights including exact zeros (the skip rule), random staleness.
+fn random_contributions(rng: &mut Rng, n: usize) -> Vec<Contribution> {
+    (0..n)
+        .map(|i| {
+            let boundary = rng.usize_below(SHAPE.len());
+            let tensors = SHAPE[boundary..]
+                .iter()
+                .map(|&len| (0..len).map(|_| hostile_f32(rng)).collect())
+                .collect();
+            let weight = match rng.below(8) {
+                0 => 0.0, // must be skipped identically on every path
+                1 => rng.range(2.0, 5.0),
+                _ => rng.range(0.1, 1.5),
+            };
+            Contribution {
+                client_id: i,
+                update: Update { boundary, tensors },
+                weight,
+                staleness: rng.below(9),
+            }
+        })
+        .collect()
+}
+
+fn assert_bit_identical(label: &str, a: &Update, b: &Update) {
+    assert_eq!(a.boundary, b.boundary, "{label}: boundary");
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{label}: tensor count");
+    for (j, (x, y)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(x.len(), y.len(), "{label}: tensor {j} len");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{label}: tensor {j}[{i}]: {p:?} vs {q:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fold_matches_serial_bitwise_on_random_inputs() {
+    let mut rng = Rng::seed_from(0xA66);
+    let template = template();
+    for case in 0..40 {
+        let n = 1 + rng.usize_below(24);
+        let cs = random_contributions(&mut rng, n);
+        for discount in [false, true] {
+            let serial = average_delta(&template, &cs, discount);
+            for jobs in [1usize, 2, 7] {
+                let par = average_delta_jobs(&template, &cs, discount, jobs);
+                assert_bit_identical(
+                    &format!("case {case} n={n} discount={discount} jobs={jobs}"),
+                    &par,
+                    &serial,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_size_is_irrelevant_to_the_result() {
+    // Each output tensor is reduced independently in serial order, so the
+    // unit size can only change scheduling — never bits. 0 is clamped to 1.
+    let mut rng = Rng::seed_from(0xC44);
+    let template = template();
+    let cs = random_contributions(&mut rng, 17);
+    for discount in [false, true] {
+        let serial = average_delta(&template, &cs, discount);
+        for chunk in [0usize, 1, 2, 3, 5, 64, 1024] {
+            let par = average_delta_chunked(&template, &cs, discount, 3, chunk);
+            assert_bit_identical(&format!("chunk={chunk} discount={discount}"), &par, &serial);
+        }
+    }
+}
+
+#[test]
+fn degenerate_sets_are_exact() {
+    let template = template();
+    // Empty: zero delta, on every path.
+    for jobs in [1usize, 2, 7] {
+        let avg = average_delta_jobs(&template, &[], true, jobs);
+        assert_bit_identical(
+            &format!("empty jobs={jobs}"),
+            &avg,
+            &average_delta(&template, &[], true),
+        );
+        for t in &avg.tensors {
+            assert!(t.iter().all(|v| v.to_bits() == 0), "empty set must give +0.0");
+        }
+    }
+    // Single contribution with weight 1 and staleness 0: the mean IS the
+    // update over its covered suffix, bit-for-bit.
+    let mut rng = Rng::seed_from(0x51);
+    let one = random_contributions(&mut rng, 1);
+    let serial = average_delta(&template, &one, false);
+    for jobs in [2usize, 7] {
+        assert_bit_identical(
+            &format!("single jobs={jobs}"),
+            &average_delta_jobs(&template, &one, false, jobs),
+            &serial,
+        );
+    }
+    // All-skipped (every weight exactly 0): identical to empty.
+    let dead: Vec<Contribution> = random_contributions(&mut rng, 5)
+        .into_iter()
+        .map(|mut c| {
+            c.weight = 0.0;
+            c
+        })
+        .collect();
+    for jobs in [1usize, 2, 7] {
+        assert_bit_identical(
+            &format!("all-skipped jobs={jobs}"),
+            &average_delta_jobs(&template, &dead, true, jobs),
+            &average_delta(&template, &[], true),
+        );
+    }
+}
+
+#[test]
+fn server_opt_fanout_matches_serial_bitwise_over_random_trajectories() {
+    // Stateful half of the parallel hot path: every optimizer kind, several
+    // steps deep (moments accumulate, so one drifted bit would compound and
+    // show), workers 2 and 7 against the serial loops.
+    let mut rng = Rng::seed_from(0x0F7);
+    for kind in [
+        ServerOptKind::FedAvg,
+        ServerOptKind::SgdM,
+        ServerOptKind::Adam,
+        ServerOptKind::Yogi,
+    ] {
+        for jobs in [2usize, 7] {
+            let mut serial = ServerOpt::new(kind, 0.05);
+            let mut fanned = ServerOpt::new(kind, 0.05).with_jobs(jobs);
+            let mut gs = template();
+            let mut gf = template();
+            for step in 0..6 {
+                let delta = Update {
+                    boundary: 0,
+                    tensors: SHAPE
+                        .iter()
+                        .map(|&len| (0..len).map(|_| hostile_f32(&mut rng)).collect())
+                        .collect(),
+                };
+                serial.apply(&mut gs, &delta);
+                fanned.apply(&mut gf, &delta);
+                for (j, (a, b)) in gs.tensors.iter().zip(&gf.tensors).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{kind:?} jobs={jobs} step {step}: tensor {j}[{i}]"
+                        );
+                    }
+                }
+            }
+            assert_eq!(serial.steps_taken(), fanned.steps_taken());
+        }
+    }
+}

@@ -669,6 +669,23 @@ fn golden_reports_bit_identical() {
     priced.network.model = "priced".into();
     priced.network.down_ratio = 0.25;
     cases.push(("timelyfl_priced_correlated".into(), priced));
+    // And the hot-path execution config: batched dispatch + chunk-parallel
+    // aggregation must fingerprint IDENTICALLY to the serial `timelyfl`
+    // golden (batched_equivalence.rs proves the full-report equality; this
+    // pins it against the committed bytes too). Recorded as its own stem so
+    // the record/verify cycle exercises the batched code path end to end.
+    let mut batched = tiny_cfg("TimelyFL");
+    batched.batch_exec = true;
+    batched.agg_jobs = 2;
+    // (Skipped on artifact sets recorded before the batched graphs —
+    // everything else in this test still runs there.)
+    if std::fs::read_to_string(std::path::Path::new(ARTIFACTS).join("manifest.json"))
+        .is_ok_and(|m| m.contains("batched_artifact"))
+    {
+        cases.push(("timelyfl_batched".into(), batched));
+    } else {
+        eprintln!("timelyfl_batched golden skipped: artifact set has no batched graphs");
+    }
     for (stem, cfg) in cases {
         let r = run(cfg);
         let fp = fingerprint(&r);

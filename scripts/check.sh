@@ -44,6 +44,7 @@ else
     cargo test -q --test wasted_work_properties
     cargo test -q --test experiment_properties
     cargo test -q --test fleet_properties
+    cargo test -q --test parallel_agg_properties
     # These two carry artifact-gated groups too, but those self-skip with a
     # message when artifacts/manifest.json is absent; the pure-logic
     # network properties and the config fuzz sweep always run.
