@@ -1,0 +1,175 @@
+//! Scheduling-weights bench — what aggregation weighting buys (and costs)
+//! under correlated regional churn.
+//!
+//! Sweeps the weigher registry (`uniform`, `staleness`, `sched-joint`)
+//! across every registered strategy on the `cifar_regional` scenario, 3
+//! seeds per cell. Two observables per cell:
+//!
+//! - **participation Gini** — dispersion of per-client participation
+//!   rates. Weighers don't change who trains (clocks, cohorts, and the
+//!   drop ledger are weigher-invariant, locked by
+//!   `tests/weigher_equivalence.rs`), so the Gini columns must agree
+//!   across weighers row-for-row — a built-in cross-check that the
+//!   learning-curve deltas below come from the weights alone.
+//! - **time-to-accuracy** — simulated hours to the target metric. This is
+//!   where non-uniform weighers may move the needle: discounting stale or
+//!   churn-prone contributions changes the aggregated delta and nothing
+//!   else.
+//!
+//! The same study is one CLI line:
+//! `timelyfl sweep --scenario cifar_regional --axis weigher=uniform,staleness,sched-joint --seeds 3`.
+//!
+//! Output: an aligned table on stdout plus `results/BENCH_scheduling.json`
+//! (schema in `results/README.md`) with one point per (weigher, strategy).
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::experiment::{scenario, MeanStd, SweepGrid};
+use timelyfl::metrics::report::Table;
+use timelyfl::scheduling;
+use timelyfl::util::json::Json;
+
+/// Seed replicates per (weigher, strategy) cell.
+const SEEDS: usize = 3;
+
+/// Time-to-accuracy target — modest on purpose: the scaled-down bench
+/// fleet must be able to reach it within its round budget on at least some
+/// seeds, or every cell degenerates to "> budget".
+const TARGET_METRIC: f64 = 0.2;
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "scheduling_weights",
+        "aggregation weighers (uniform / staleness / sched-joint) under correlated regional churn",
+    );
+    let bench = Bench::new()?;
+
+    let mut base = scenario::resolve("cifar_regional")?.config()?;
+    base.rounds = bench.scale.rounds(40);
+    base.eval_every = 10;
+    base.target_metric = Some(TARGET_METRIC);
+    let weighers = scheduling::names();
+    let grid = SweepGrid::new(base)
+        .axis("weigher", &weighers)
+        .strategy_axis_all();
+    let n_strategies = grid.len() / weighers.len();
+    eprintln!(
+        "  {} cells ({} weighers x full strategy registry) x {SEEDS} seeds ...",
+        grid.len(),
+        weighers.len()
+    );
+    let result = bench.runner().seeds(SEEDS).run(&grid)?;
+
+    let mut t = Table::new(&[
+        "weigher",
+        "strategy",
+        "particip_gini",
+        "mean_particip",
+        "final_metric",
+        "tt_acc_hours",
+        "reached",
+        "rounds",
+    ]);
+    let mut points = Vec::new();
+    // (weigher, strategy) -> (gini MeanStd, time-to-target) for the deltas.
+    let mut stats: Vec<(String, String, MeanStd, Option<MeanStd>)> = Vec::new();
+
+    for (wi, weigher) in weighers.iter().enumerate() {
+        let cells = &result.cells[wi * n_strategies..(wi + 1) * n_strategies];
+        for c in cells {
+            let strategy = c.cell.cfg.strategy.clone();
+            let s = &c.summary;
+            let ginis: Vec<f64> =
+                c.reports.iter().map(|r| r.participation_gini()).collect();
+            let gini = MeanStd::of(&ginis);
+            let tt = s.time_to_target.as_ref().expect("target_metric set on base");
+            t.row(vec![
+                weigher.to_string(),
+                strategy.clone(),
+                gini.fmt(3),
+                s.mean_participation.fmt(3),
+                s.final_metric.map_or("-".into(), |m| m.fmt(4)),
+                tt.hours.map_or("> budget".into(), |h| h.fmt(2)),
+                format!("{}/{SEEDS}", tt.reached),
+                s.rounds.fmt(1),
+            ]);
+            points.push(Json::obj(vec![
+                ("weigher", Json::str(weigher.to_string())),
+                ("strategy", Json::str(strategy.clone())),
+                ("seeds", Json::num(SEEDS as f64)),
+                ("participation_gini", Json::num(gini.mean)),
+                ("participation_gini_std", Json::num(gini.std)),
+                ("mean_participation", Json::num(s.mean_participation.mean)),
+                (
+                    "final_metric",
+                    s.final_metric.map_or(Json::Null, |m| Json::num(m.mean)),
+                ),
+                ("target_metric", Json::num(TARGET_METRIC)),
+                ("target_reached", Json::num(tt.reached as f64)),
+                (
+                    "hours_to_target",
+                    tt.hours.map_or(Json::Null, |h| Json::num(h.mean)),
+                ),
+                (
+                    "hours_to_target_std",
+                    tt.hours.map_or(Json::Null, |h| Json::num(h.std)),
+                ),
+                ("avail_drops", Json::num(s.avail_drops.mean)),
+                ("deadline_drops", Json::num(s.deadline_drops.mean)),
+                ("rounds", Json::num(s.rounds.mean)),
+                ("sim_hours", Json::num(s.sim_hours.mean)),
+            ]));
+            stats.push((weigher.to_string(), strategy, gini, tt.hours));
+        }
+    }
+
+    let rendered = t.render();
+    println!("{rendered}");
+
+    // Per-strategy deltas vs the uniform anchor — and the invariance check.
+    let lookup = |weigher: &str, strategy: &str| {
+        stats
+            .iter()
+            .find(|(w, st, _, _)| w == weigher && st == strategy)
+            .map(|(_, _, g, h)| (*g, *h))
+            .expect("cell missing from stats")
+    };
+    let mut summary = rendered;
+    println!("vs uniform, per strategy (Gini MUST be identical; hours may move):");
+    for c in &result.cells[..n_strategies] {
+        let strategy = c.cell.cfg.strategy.as_str();
+        let (gu, hu) = lookup("uniform", strategy);
+        for weigher in ["staleness", "sched-joint"] {
+            let (gw, hw) = lookup(weigher, strategy);
+            assert_eq!(
+                gu.mean, gw.mean,
+                "{strategy} + {weigher}: participation Gini moved — weighers must \
+                 not touch cohorts (see tests/weigher_equivalence.rs)"
+            );
+            let delta = match (hu, hw) {
+                (Some(a), Some(b)) => format!("{:+.2} hr ({:.2} -> {:.2})", b.mean - a.mean, a.mean, b.mean),
+                _ => "n/a (target not reached on both sides)".into(),
+            };
+            let line = format!("  {strategy:>9} / {weigher:<11}: time-to-accuracy {delta}");
+            println!("{line}");
+            summary.push_str(&line);
+            summary.push('\n');
+        }
+    }
+    println!(
+        "expected shape: Gini columns agree across weighers row-for-row (weights touch\n\
+         only the aggregated delta); staleness/sched-joint may trade time-to-accuracy\n\
+         against stale-update noise on the async strategies."
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("scheduling_weights")),
+        ("scenario", Json::str("cifar_regional")),
+        ("seeds", Json::num(SEEDS as f64)),
+        ("target_metric", Json::num(TARGET_METRIC)),
+        ("points", Json::arr(points)),
+    ]);
+    benchkit::write_result("BENCH_scheduling.json", &json.to_string());
+    benchkit::write_result("scheduling_weights.txt", &summary);
+    Ok(())
+}

@@ -10,6 +10,7 @@ use crate::availability::AvailabilityConfig;
 use crate::devices::FleetConfig;
 use crate::fleet::{FleetCore, HierarchyConfig};
 use crate::network::NetworkConfig;
+use crate::scheduling::SchedulingConfig;
 
 /// Full specification of one simulated FL run.
 #[derive(Clone, Debug)]
@@ -101,6 +102,11 @@ pub struct RunConfig {
     /// `net_stale_correction` / `net_rebalance`). `free` is the historical
     /// path, bit-identical to pre-subsystem runs.
     pub network: NetworkConfig,
+    /// Scheduling subsystem (`weigher = uniform | staleness | sched-joint`
+    /// + `weigher_staleness_exp` / `fair_cap` / `fair_explore` /
+    /// `sampler_horizon = auto`). `uniform` with a fixed horizon is the
+    /// historical path, bit-identical to pre-subsystem runs.
+    pub scheduling: SchedulingConfig,
 
     /// Escape hatch for A/B-measuring the deferred dispatch path: run a
     /// dispatched client's PJRT training at dispatch time (the historical
@@ -181,6 +187,7 @@ impl Default for RunConfig {
             fleet_core: FleetCore::Eager,
             hierarchy: HierarchyConfig::default(),
             network: NetworkConfig::default(),
+            scheduling: SchedulingConfig::default(),
             eager_train: false,
             batch_exec: false,
             agg_jobs: 1,
@@ -329,6 +336,7 @@ impl RunConfig {
         self.availability.validate()?;
         self.hierarchy.validate()?;
         self.network.validate()?;
+        self.scheduling.validate()?;
         Ok(())
     }
 }
@@ -399,6 +407,24 @@ mod tests {
         c.network.model = "priced".into();
         c.network.down_ratio = -1.0;
         assert!(c.validate().is_err(), "negative down ratio must fail");
+    }
+
+    #[test]
+    fn weigher_validated_through_registry() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.scheduling.weigher, "uniform", "uniform must stay the default");
+        for name in crate::scheduling::names() {
+            c.scheduling.weigher = name.to_string();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        c.scheduling.weigher = "x".into();
+        assert!(c.validate().is_err());
+        c.scheduling.weigher = "staleness".into();
+        c.scheduling.staleness_exp = -0.5;
+        assert!(c.validate().is_err(), "negative exponent must fail");
+        c.scheduling.staleness_exp = 1.0;
+        c.scheduling.fair_cap = 0;
+        assert!(c.validate().is_err(), "fair_cap=0 must fail");
     }
 
     #[test]

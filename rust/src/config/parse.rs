@@ -20,6 +20,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "strategy",
     "sampler",
     "sampler_horizon_secs",
+    "sampler_horizon",
     "population",
     "concurrency",
     "k_fraction",
@@ -68,6 +69,10 @@ pub const KNOWN_KEYS: &[&str] = &[
     "net_down_ratio",
     "net_stale_correction",
     "net_rebalance",
+    "weigher",
+    "weigher_staleness_exp",
+    "fair_cap",
+    "fair_explore",
     "eager_train",
     "batch_exec",
     "agg_jobs",
@@ -86,6 +91,20 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "strategy" => cfg.strategy = registry::resolve(v)?.name.to_string(),
         "sampler" => cfg.sampler = sampler::resolve(v)?.name.to_string(),
         "sampler_horizon_secs" => cfg.sampler_horizon_secs = v.parse()?,
+        // Calibrated horizons (one key, two modes): `auto` switches the
+        // sampler horizon to the engine's EWMA estimate of the realized
+        // aggregation interval; a number pins a fixed horizon (and turns
+        // calibration off), subsuming `sampler_horizon_secs`.
+        "sampler_horizon" => {
+            if v.eq_ignore_ascii_case("auto") {
+                cfg.scheduling.horizon_auto = true;
+            } else {
+                cfg.sampler_horizon_secs = v.parse().with_context(|| {
+                    format!("sampler_horizon: expected \"auto\" or seconds, got {v:?}")
+                })?;
+                cfg.scheduling.horizon_auto = false;
+            }
+        }
         "population" => cfg.population = v.parse()?,
         "concurrency" => cfg.concurrency = v.parse()?,
         "k_fraction" => cfg.k_fraction = v.parse()?,
@@ -169,6 +188,10 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
             cfg.network.stale_correction = crate::network::StaleCorrection::parse(v)?
         }
         "net_rebalance" => cfg.network.rebalance = parse_bool(v)?,
+        "weigher" => cfg.scheduling.weigher = crate::scheduling::resolve(v)?.name.to_string(),
+        "weigher_staleness_exp" => cfg.scheduling.staleness_exp = v.parse()?,
+        "fair_cap" => cfg.scheduling.fair_cap = v.parse()?,
+        "fair_explore" => cfg.scheduling.fair_explore = v.parse()?,
         "eager_train" => cfg.eager_train = parse_bool(v)?,
         "batch_exec" => cfg.batch_exec = parse_bool(v)?,
         "agg_jobs" => {
@@ -417,6 +440,46 @@ mod tests {
         assert_eq!(cfg.availability.kind, AvailabilityKind::Correlated);
         let err = apply_cli(&mut cfg, "sampler=bogus").unwrap_err();
         assert!(format!("{err:#}").contains("uniform"), "error lists known samplers");
+    }
+
+    #[test]
+    fn scheduling_overrides() {
+        let mut cfg = RunConfig::default();
+        apply_file(
+            &mut cfg,
+            "weigher = staleness\n\
+             weigher_staleness_exp = 2.0\n\
+             fair_cap = 3\n\
+             fair_explore = 0.25\n\
+             sampler_horizon = auto\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduling.weigher, "staleness");
+        assert_eq!(cfg.scheduling.staleness_exp, 2.0);
+        assert_eq!(cfg.scheduling.fair_cap, 3);
+        assert_eq!(cfg.scheduling.fair_explore, 0.25);
+        assert!(cfg.scheduling.horizon_auto);
+        cfg.validate().unwrap();
+        // Aliases canonicalize like strategies, samplers and networks do.
+        apply_cli(&mut cfg, "weigher=CSMA").unwrap();
+        assert_eq!(cfg.scheduling.weigher, "sched-joint");
+        apply_cli(&mut cfg, "weigher=flat").unwrap();
+        assert_eq!(cfg.scheduling.weigher, "uniform");
+        // A numeric horizon pins the fixed value and turns calibration off.
+        apply_cli(&mut cfg, "sampler_horizon=450").unwrap();
+        assert_eq!(cfg.sampler_horizon_secs, 450.0);
+        assert!(!cfg.scheduling.horizon_auto);
+        apply_cli(&mut cfg, "sampler_horizon=AUTO").unwrap();
+        assert!(cfg.scheduling.horizon_auto);
+        let err = apply_cli(&mut cfg, "weigher=bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("uniform"), "error lists known weighers");
+        assert!(apply_cli(&mut cfg, "sampler_horizon=soonish").is_err());
+        // Bad values fail at validate, not silently.
+        apply_cli(&mut cfg, "weigher_staleness_exp=-1").unwrap();
+        assert!(cfg.validate().is_err(), "negative exponent must be rejected");
+        apply_cli(&mut cfg, "weigher_staleness_exp=1").unwrap();
+        apply_cli(&mut cfg, "fair_cap=0").unwrap();
+        assert!(cfg.validate().is_err(), "fair_cap=0 must be rejected");
     }
 
     #[test]

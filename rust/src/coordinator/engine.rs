@@ -49,10 +49,12 @@ use super::trainer::{
     execute_plan, execute_plans_batched, plan_client, train_client, LocalOutcome, TrainPlan,
 };
 use super::{local_time, Recorder, Simulation};
+use crate::aggregation::Contribution;
 use crate::availability::{AvailabilityModel, BandwidthSignal, SEED_SALT};
 use crate::devices::RoundConditions;
 use crate::fleet::{ClientTables, FleetCore, LazyAvailability};
-use crate::metrics::events::{ClientWorkload, DropCause, EventSink, RunEvent};
+use crate::metrics::events::{AggWeight, ClientWorkload, DropCause, EventSink, RunEvent};
+use crate::scheduling::{AggWeigher, HorizonEstimator, WarmLedger};
 use crate::metrics::RunReport;
 use crate::model::{ParamVec, Update};
 use crate::network::{self, NetworkModel, StaleCorrection};
@@ -332,6 +334,19 @@ pub struct SimEngine<'a> {
     /// `round-complete` event record so sweep JSONL output exposes the
     /// scheduler's per-client decisions.
     workloads_pending: Vec<ClientWorkload>,
+    /// The configured aggregation weigher (`crate::scheduling`, resolved
+    /// from `cfg.scheduling.weigher`). `uniform` scores every update at
+    /// exactly 1.0 — the value strategies historically hardcoded — which is
+    /// what keeps default runs bit-identical.
+    weigher: Box<dyn AggWeigher>,
+    /// Per-update weights assigned since the last completed round (drained
+    /// onto the round-complete record; only bookkept when a sink is
+    /// attached, like `workloads_pending`).
+    agg_weights_pending: Vec<AggWeight>,
+    /// EWMA tracker of the realized aggregation interval. Always observed
+    /// (pure bookkeeping off the round clock); only *consulted* for the
+    /// sampler horizon under `cfg.scheduling.horizon_auto`.
+    horizon_est: HorizonEstimator,
     /// The configured model-dissemination pricer (`crate::network`,
     /// resolved from `cfg.network`). `free` prices every downlink at
     /// exactly 0.0 and keeps all dissemination bookkeeping untouched.
@@ -365,6 +380,7 @@ impl<'a> SimEngine<'a> {
         let mut avail =
             AvailabilityModel::build(&cfg.availability, cfg.population, cfg.seed ^ SEED_SALT)?;
         let sampler = (sampler::resolve(&cfg.sampler)?.build)();
+        let weigher = cfg.scheduling.build()?;
         // The lazy core's seeding pass queries the availability model in
         // client order at t=0 — the same order (and therefore the same
         // markov timeline materialisations) as the eager paths' first scan.
@@ -391,6 +407,9 @@ impl<'a> SimEngine<'a> {
             dropped_pending: 0,
             avail_dropped_pending: 0,
             workloads_pending: Vec::new(),
+            weigher,
+            agg_weights_pending: Vec::new(),
+            horizon_est: HorizonEstimator::default(),
             net,
             version_born: BTreeMap::new(),
             downlink_wait_pending: 0.0,
@@ -430,20 +449,36 @@ impl<'a> SimEngine<'a> {
         }
     }
 
+    /// The sampling horizon for this instant: the fixed
+    /// `sampler_horizon_secs`, or — under `sampler_horizon = auto` — the
+    /// EWMA estimate of the realized aggregation interval (falling back to
+    /// the fixed value until the first interval completes).
+    fn sampler_horizon(&self) -> f64 {
+        let fixed = self.sim.cfg.sampler_horizon_secs;
+        if self.sim.cfg.scheduling.horizon_auto {
+            self.horizon_est.horizon(fixed)
+        } else {
+            fixed
+        }
+    }
+
     /// Draw a cohort of `want` distinct clients from `pool` (the
     /// currently-online candidates) through the configured sampling
     /// policy. Under `sampler = uniform` the RNG draws are exactly the
     /// pre-seam partial Fisher–Yates, so always-on runs stay bit-identical.
     pub fn sample_cohort(&mut self, now: SimTime, pool: &[usize], want: usize) -> Vec<usize> {
+        let horizon = self.sampler_horizon();
         let SimEngine { sim, sampler, rng, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
-            horizon: sim.cfg.sampler_horizon_secs,
+            horizon,
             rng,
             avail,
             delivered: &tables.delivered,
             churned: &tables.churned,
             scores: &mut tables.scores,
+            fair_cap: sim.cfg.scheduling.fair_cap,
+            fair_explore: sim.cfg.scheduling.fair_explore,
         };
         sampler.sample(&mut ctx, pool, want)
     }
@@ -457,16 +492,19 @@ impl<'a> SimEngine<'a> {
         pool: &[usize],
         want: usize,
     ) -> Vec<usize> {
+        let horizon = self.sampler_horizon();
         let mut rng = self.rng.clone();
         let SimEngine { sim, sampler, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
-            horizon: sim.cfg.sampler_horizon_secs,
+            horizon,
             rng: &mut rng,
             avail,
             delivered: &tables.delivered,
             churned: &tables.churned,
             scores: &mut tables.scores,
+            fair_cap: sim.cfg.scheduling.fair_cap,
+            fair_explore: sim.cfg.scheduling.fair_explore,
         };
         sampler.sample(&mut ctx, pool, want)
     }
@@ -476,15 +514,18 @@ impl<'a> SimEngine<'a> {
     /// draws exactly the historical `usize_below`).
     pub fn pick_client(&mut self, now: SimTime, pool: &[usize]) -> usize {
         debug_assert!(!pool.is_empty(), "pick_client from an empty pool");
+        let horizon = self.sampler_horizon();
         let SimEngine { sim, sampler, rng, avail, tables, .. } = self;
         let mut ctx = SamplerCtx {
             now,
-            horizon: sim.cfg.sampler_horizon_secs,
+            horizon,
             rng,
             avail,
             delivered: &tables.delivered,
             churned: &tables.churned,
             scores: &mut tables.scores,
+            fair_cap: sim.cfg.scheduling.fair_cap,
+            fair_explore: sim.cfg.scheduling.fair_explore,
         };
         sampler.pick_one(&mut ctx, pool)
     }
@@ -543,6 +584,44 @@ impl<'a> SimEngine<'a> {
                 stay_prob: self.tables.scores[client],
             });
         }
+    }
+
+    /// Score a batch of delivered updates through the configured weigher,
+    /// REPLACING each contribution's weight, immediately before the
+    /// strategy hands them to aggregation. This is the single seam all
+    /// four strategies call: the weigher reads only settled state (version
+    /// lag + drop-ledger counters), so it can never perturb the schedule —
+    /// `weigher = uniform` writes the literal 1.0 every strategy
+    /// historically hardcoded, and non-uniform weighers move only the
+    /// learning curve. Assigned weights are drained onto the next
+    /// `round-complete` record (sink-gated, like workload telemetry).
+    pub fn weigh(&mut self, contributions: &mut [Contribution]) {
+        let telemetry = self.sink.is_some();
+        for c in contributions.iter_mut() {
+            c.weight = self.weigher.weight(
+                c.staleness,
+                self.tables.delivered[c.client_id],
+                self.tables.churned[c.client_id],
+            );
+            if telemetry {
+                self.agg_weights_pending.push(AggWeight {
+                    client: c.client_id,
+                    weight: c.weight,
+                });
+            }
+        }
+    }
+
+    /// Seed this run's drop ledger from a previous run's harvest
+    /// (`--warm-ledger`). Call before the strategy starts; a fresh ledger
+    /// is a no-op.
+    pub fn seed_ledger(&mut self, ledger: &WarmLedger) {
+        ledger.seed_into(&mut self.tables.delivered, &mut self.tables.churned);
+    }
+
+    /// Harvest this run's drop ledger for the next run in a warm sweep.
+    pub fn harvest_ledger(&self, ledger: &mut WarmLedger) {
+        ledger.harvest(&self.tables.delivered, &self.tables.churned);
     }
 
     /// Attribute one lost client update and emit its `client-dropped`
@@ -608,8 +687,12 @@ impl<'a> SimEngine<'a> {
         let dropped = std::mem::take(&mut self.dropped_pending);
         let avail_dropped = std::mem::take(&mut self.avail_dropped_pending);
         let workloads = std::mem::take(&mut self.workloads_pending);
+        let agg_weights = std::mem::take(&mut self.agg_weights_pending);
         let downlink_wait_secs = std::mem::take(&mut self.downlink_wait_pending);
         let stale_starts = std::mem::take(&mut self.stale_starts_pending);
+        // Pure bookkeeping: observed whether or not `sampler_horizon = auto`
+        // ever reads it, so calibration-off runs stay byte-identical.
+        self.horizon_est.observe(clock);
         self.recorder.note_network(downlink_wait_secs, stale_starts);
         self.recorder.record_round(
             round,
@@ -629,6 +712,7 @@ impl<'a> SimEngine<'a> {
             stale_starts,
             mean_train_loss,
             workloads,
+            agg_weights,
         });
         if let Some(p) = self.recorder.maybe_eval(sim, round, clock, global)? {
             self.emit(RunEvent::EvalPoint {

@@ -163,6 +163,10 @@ impl EventStrategy for FedBuff {
             self.pending_tickets.clear();
             let participant_ids: Vec<usize> =
                 self.buffer.iter().map(|c| c.client_id).collect();
+            // Weigher first (uniform rewrites the 1.0 already there), then
+            // the protocol's own staleness discount applies on top inside
+            // aggregation — the two compose multiplicatively.
+            eng.weigh(&mut self.buffer);
             let avg = self.hierarchy.aggregate_jobs(
                 &self.global.params,
                 &self.buffer,

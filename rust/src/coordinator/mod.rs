@@ -8,7 +8,10 @@
 //! availability model, one `simtime::EventQueue` clock, online-client
 //! sampling (WHO gets dispatched is itself a pluggable policy —
 //! [`sampler::ClientSampler`], resolved through its own registry:
-//! `uniform` | `stay-prob` | `drop-aware`), drop attribution, eval/stop,
+//! `uniform` | `stay-prob` | `drop-aware` | `fair-cap`), per-update
+//! aggregation weighting (WHAT each delivered update counts for —
+//! [`crate::scheduling::AggWeigher`], its own registry:
+//! `uniform` | `staleness` | `sched-joint`), drop attribution, eval/stop,
 //! and the machine-readable run-event stream (`metrics::events`).
 //!
 //! Client *training* is real (PJRT executions of the AOT artifacts); client
@@ -110,15 +113,44 @@ impl Simulation {
     /// Same, streaming machine-readable run events into `sink`
     /// (`metrics::events`; the CLI's `--events FILE`).
     pub fn run_with_sink(&self, sink: &mut dyn EventSink) -> Result<RunReport> {
+        self.run_inner(Some(sink), None)
+    }
+
+    /// Run with a warm drop ledger (`--warm-ledger`): the previous run's
+    /// per-client delivered/churned counters seed this run's tables before
+    /// the strategy starts, and the finished tables are harvested back —
+    /// evidence-based policies (`drop-aware`, `fair-cap`, the `sched-joint`
+    /// weigher) warm-start across the cells of a sweep. An empty ledger
+    /// seeds nothing, so the first run of a warm sweep is identical to a
+    /// cold one.
+    pub fn run_warm(
+        &self,
+        sink: Option<&mut dyn EventSink>,
+        ledger: &mut crate::scheduling::WarmLedger,
+    ) -> Result<RunReport> {
+        self.run_inner(sink, Some(ledger))
+    }
+
+    fn run_inner(
+        &self,
+        sink: Option<&mut dyn EventSink>,
+        ledger: Option<&mut crate::scheduling::WarmLedger>,
+    ) -> Result<RunReport> {
         let info = registry::resolve(&self.cfg.strategy)?;
         let mut strategy = (info.build)(self)?;
-        let mut eng = SimEngine::new(self, Some(sink))?;
+        let mut eng = SimEngine::new(self, sink)?;
+        if let Some(ledger) = &ledger {
+            eng.seed_ledger(ledger);
+        }
         strategy.run(&mut eng)?;
         // Under `batch_exec` an event-driven run can stop (budget / target
         // metric) with resolve-ready plans still parked between flushes.
         // Serial execution ran those at their finish events, so drain them
         // for wasted-work-ledger parity before the report settles.
         eng.drain_batch(None)?;
+        if let Some(ledger) = ledger {
+            eng.harvest_ledger(ledger);
+        }
         Ok(eng.finish(strategy.name()))
     }
 

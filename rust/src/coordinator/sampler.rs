@@ -19,6 +19,15 @@
 //!   from the run's own observed per-client drop ledger:
 //!   `(delivered + 1) / (delivered + churned + 1)` — no process model
 //!   needed, just history.
+//! - **fair-cap** — fairness-aware selection over the same drop ledger:
+//!   a client whose attempt count (delivered + churned) reaches
+//!   `fair_cap × (pool-minimum attempts + 1)` is excluded until the rest
+//!   of the pool catches up, and the remaining candidates weigh their
+//!   availability posterior plus a UCB-style exploration bonus
+//!   `fair_explore · sqrt(ln(total attempts + 1) / (attempts + 1))` —
+//!   caps the fast-device participation skew of Figs. 1/5 instead of
+//!   amplifying it. Knobs live in `SchedulingConfig`
+//!   (`crate::scheduling`).
 //!
 //! **Equivalence contract**: when every candidate's weight is identical
 //! (always-on availability makes every survival exactly 1.0; a drop-free
@@ -50,6 +59,11 @@ pub struct SamplerCtx<'a> {
     /// Per-client dispatches lost to availability churn.
     pub churned: &'a [u32],
     pub scores: &'a mut [f64],
+    /// `fair-cap` selection-cap multiplier (`SchedulingConfig::fair_cap`).
+    pub fair_cap: usize,
+    /// `fair-cap` UCB exploration coefficient
+    /// (`SchedulingConfig::fair_explore`).
+    pub fair_explore: f64,
 }
 
 /// A pluggable client-sampling policy (one instance per run, built by the
@@ -228,6 +242,60 @@ impl ClientSampler for DropAware {
     }
 }
 
+/// `fair-cap` — fairness-aware sampling over the drop ledger: cap
+/// over-selected clients, explore under-tried ones (UCB-style bonus).
+/// A fresh ledger makes every weight exactly 1.0 (posterior 1.0, zero
+/// exploration bonus since ln(0 + 1) = 0), so the first draw of every run
+/// rides the uniform code path; weights diverge only once attempts do.
+struct FairCap;
+
+impl FairCap {
+    fn weights(ctx: &SamplerCtx<'_>, pool: &[usize]) -> Vec<f64> {
+        let attempts: Vec<u64> = pool
+            .iter()
+            .map(|&c| ctx.delivered[c] as u64 + ctx.churned[c] as u64)
+            .collect();
+        let pool_min = attempts.iter().copied().min().unwrap_or(0);
+        let total: u64 = attempts.iter().sum();
+        // The cap is relative to the pool's least-tried member, so it never
+        // deadlocks: at least one candidate is always under it.
+        let cap_limit = ctx.fair_cap as u64 * (pool_min + 1);
+        pool.iter()
+            .zip(&attempts)
+            .map(|(&c, &a)| {
+                if a >= cap_limit {
+                    // Excluded until the pool catches up (the weighted draw
+                    // floors this to an epsilon, never a hard zero).
+                    0.0
+                } else {
+                    let s = ctx.delivered[c] as f64;
+                    let d = ctx.churned[c] as f64;
+                    let posterior = (s + 1.0) / (s + d + 1.0);
+                    let bonus = ctx.fair_explore
+                        * ((total as f64 + 1.0).ln() / (a as f64 + 1.0)).sqrt();
+                    posterior + bonus
+                }
+            })
+            .collect()
+    }
+}
+
+impl ClientSampler for FairCap {
+    fn name(&self) -> &'static str {
+        "fair-cap"
+    }
+
+    fn sample(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize], want: usize) -> Vec<usize> {
+        let w = Self::weights(ctx, pool);
+        sample_by_weight(ctx, pool, want, &w)
+    }
+
+    fn pick_one(&mut self, ctx: &mut SamplerCtx<'_>, pool: &[usize]) -> usize {
+        let w = Self::weights(ctx, pool);
+        pick_by_weight(ctx, pool, &w)
+    }
+}
+
 /// One registered sampling policy (mirrors `registry::StrategyInfo`).
 pub struct SamplerInfo {
     /// Canonical display name (what `RunConfig::sampler` carries).
@@ -260,6 +328,12 @@ pub static SAMPLERS: &[SamplerInfo] = &[
         aliases: &["drop_aware", "dropaware", "posterior"],
         summary: "prefer clients with a good observed delivery record (smoothed posterior from the drop ledger)",
         build: || Box::new(DropAware),
+    },
+    SamplerInfo {
+        name: "fair-cap",
+        aliases: &["fair_cap", "faircap", "fair"],
+        summary: "cap over-selected clients and explore under-tried ones (UCB over the drop ledger; fair_cap / fair_explore)",
+        build: || Box::new(FairCap),
     },
 ];
 
@@ -302,6 +376,8 @@ mod tests {
             delivered,
             churned,
             scores,
+            fair_cap: 4,
+            fair_explore: 0.5,
         }
     }
 
@@ -401,6 +477,50 @@ mod tests {
     }
 
     #[test]
+    fn fair_cap_fresh_ledger_is_degenerate() {
+        // Round one of every run: no attempts anywhere, so the posterior is
+        // 1.0 and the exploration bonus is exactly 0 (ln(0 + 1) = 0) — the
+        // draw must ride the uniform code path.
+        let (delivered, churned) = (vec![0u32; 6], vec![0u32; 6]);
+        let mut rng = Rng::seed_from(11);
+        let mut avail = AvailabilityModel::always_on(6);
+        let mut scores = vec![1.0; 6];
+        let ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+        let w = FairCap::weights(&ctx, &[0, 1, 2, 3, 4, 5]);
+        assert!(w.iter().all(|&x| x == 1.0), "fresh ledger must be degenerate: {w:?}");
+    }
+
+    #[test]
+    fn fair_cap_excludes_overexposed_and_explores_undertried() {
+        // Client 0 has been picked far past the cap relative to the
+        // pool-minimum (client 2, 0 attempts): cap_limit = 4 * (0+1) = 4,
+        // so its 12 attempts zero it out. Client 2 (never tried) gets the
+        // biggest exploration bonus; client 3's churn dents its posterior.
+        let delivered = vec![12u32, 2, 0, 1];
+        let churned = vec![0u32, 0, 0, 2];
+        let mut rng = Rng::seed_from(13);
+        let mut avail = AvailabilityModel::always_on(4);
+        let mut scores = vec![1.0; 4];
+        let ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+        let w = FairCap::weights(&ctx, &[0, 1, 2, 3]);
+        assert_eq!(w[0], 0.0, "over-cap client must be excluded");
+        assert!(w[2] > w[1], "never-tried client outranks a twice-tried one");
+        assert!(w[1] > w[3], "churny client ranks below a clean one at similar attempts");
+        assert!(!degenerate(&w));
+        // The cap is relative to the pool minimum, so it never deadlocks:
+        // with everyone heavily (equally) tried, nobody is excluded.
+        let delivered = vec![50u32; 4];
+        let churned = vec![0u32; 4];
+        let mut rng = Rng::seed_from(13);
+        let mut avail = AvailabilityModel::always_on(4);
+        let mut scores = vec![1.0; 4];
+        let ctx = always_on_ctx(&mut rng, &mut avail, &delivered, &churned, &mut scores);
+        let w = FairCap::weights(&ctx, &[0, 1, 2, 3]);
+        assert!(w.iter().all(|&x| x > 0.0), "equal saturation must not exclude anyone");
+        assert!(degenerate(&w), "equal ledgers stay on the uniform path");
+    }
+
+    #[test]
     fn weighted_draw_prefers_heavy_clients() {
         // Deterministic frequency check: weight 9:1 between two clients.
         let mut rng = Rng::seed_from(5);
@@ -447,6 +567,8 @@ mod tests {
             delivered: &delivered,
             churned: &churned,
             scores: &mut scores,
+            fair_cap: 4,
+            fair_explore: 0.5,
         };
         let mut policy = StayProb;
         let mut zero_picked = 0;

@@ -109,6 +109,9 @@ impl SemiAsync {
         let mut participant_ids: Vec<usize> = self.buffer.iter().map(|c| c.client_id).collect();
         participant_ids.sort_unstable();
         participant_ids.dedup();
+        // Weigher first (uniform rewrites the 1.0 already there), then the
+        // protocol's staleness discount applies on top inside aggregation.
+        eng.weigh(&mut self.buffer);
         let avg = self.hierarchy.aggregate_jobs(
             &self.global.params,
             &self.buffer,

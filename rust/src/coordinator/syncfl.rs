@@ -126,6 +126,7 @@ impl RoundStrategy for SyncFl {
         }
 
         if !contributions.is_empty() {
+            eng.weigh(&mut contributions);
             let avg =
                 self.hierarchy
                     .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);

@@ -201,8 +201,11 @@ impl RoundStrategy for TimelyFl {
             });
         }
 
-        // (6) aggregate; the engine advances the shared clock by T_k
+        // (6) aggregate; the engine advances the shared clock by T_k.
+        // The configured weigher rescores every contribution first
+        // (`weigher = uniform` rewrites the 1.0 already there).
         if !contributions.is_empty() {
+            eng.weigh(&mut contributions);
             let avg =
                 self.hierarchy
                     .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);

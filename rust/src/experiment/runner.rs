@@ -28,6 +28,7 @@ use crate::coordinator::Simulation;
 use crate::metrics::events::JsonlSink;
 use crate::metrics::RunReport;
 use crate::runtime::{Manifest, Task};
+use crate::scheduling::WarmLedger;
 
 /// One unit of work: a grid cell at one replicate seed.
 pub struct CellJob<'g> {
@@ -211,6 +212,7 @@ pub struct ExperimentRunner {
     seeds: usize,
     jobs: usize,
     events_dir: Option<PathBuf>,
+    warm_ledger: bool,
 }
 
 impl ExperimentRunner {
@@ -220,6 +222,7 @@ impl ExperimentRunner {
             seeds: 1,
             jobs: 1,
             events_dir: None,
+            warm_ledger: false,
         }
     }
 
@@ -242,6 +245,18 @@ impl ExperimentRunner {
         self
     }
 
+    /// Carry one drop ledger (per-client delivered/churned counters) across
+    /// the whole cell × seed matrix, in job order, so evidence-based
+    /// policies (`drop-aware`, `fair-cap`, the `sched-joint` weigher)
+    /// warm-start in later cells (`--warm-ledger`). The ledger is shared
+    /// mutable state threaded run-to-run, so the sweep is forced SERIAL —
+    /// `jobs` is ignored while this is on (output order was already
+    /// job-order either way).
+    pub fn warm_ledger(mut self, on: bool) -> Self {
+        self.warm_ledger = on;
+        self
+    }
+
     fn make_worker(&self) -> Result<(Manifest, PjRtClient)> {
         let manifest = Manifest::load(&self.artifacts)?;
         let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
@@ -249,7 +264,10 @@ impl ExperimentRunner {
     }
 
     /// Run the full matrix; each job is one `Simulation::run` (with an
-    /// event sink when an events dir is configured).
+    /// event sink when an events dir is configured). With
+    /// [`warm_ledger`](Self::warm_ledger) on, the jobs run serially in
+    /// order and one drop ledger carries over run-to-run via
+    /// `Simulation::run_warm`.
     pub fn run(&self, grid: &SweepGrid) -> Result<SweepResult> {
         let cells = grid.cells()?;
         let jobs = cell_jobs(&cells, self.seeds);
@@ -258,21 +276,44 @@ impl ExperimentRunner {
                 .with_context(|| format!("creating events dir {}", dir.display()))?;
         }
         let events_dir = self.events_dir.as_deref();
-        let flat = run_queue(
-            self.jobs,
-            &jobs,
-            || self.make_worker(),
-            |worker, job| {
-                let (manifest, client) = &*worker;
-                let mut cfg = job.cell.cfg.clone();
-                cfg.seed = job.seed;
-                let sim = Simulation::with_client(cfg, manifest, client)?;
-                match events_dir {
-                    Some(dir) => run_with_event_file(&sim, dir, job),
-                    None => sim.run(),
-                }
-            },
-        )?;
+        let flat = if self.warm_ledger {
+            // Forced-serial: the ledger is mutable state shared by every
+            // run, so job i+1 cannot start before job i harvests into it.
+            let worker = self.make_worker()?;
+            let (manifest, client) = &worker;
+            let mut ledger = WarmLedger::default();
+            jobs.iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let mut cfg = job.cell.cfg.clone();
+                    cfg.seed = job.seed;
+                    let sim = Simulation::with_client(cfg, manifest, client)?;
+                    match events_dir {
+                        Some(dir) => {
+                            run_with_event_file(&sim, dir, job, Some(&mut ledger))
+                        }
+                        None => sim.run_warm(None, &mut ledger),
+                    }
+                    .with_context(|| format!("sweep job {i} ({})", job.cell.label()))
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            run_queue(
+                self.jobs,
+                &jobs,
+                || self.make_worker(),
+                |worker, job| {
+                    let (manifest, client) = &*worker;
+                    let mut cfg = job.cell.cfg.clone();
+                    cfg.seed = job.seed;
+                    let sim = Simulation::with_client(cfg, manifest, client)?;
+                    match events_dir {
+                        Some(dir) => run_with_event_file(&sim, dir, job, None),
+                        None => sim.run(),
+                    }
+                },
+            )?
+        };
         drop(jobs); // release the borrow of `cells` before moving it
         // Task direction (accuracy vs perplexity) per cell, resolved once
         // against the manifest on the coordinating thread.
@@ -317,7 +358,12 @@ impl ExperimentRunner {
     }
 }
 
-fn run_with_event_file(sim: &Simulation, dir: &Path, job: &CellJob<'_>) -> Result<RunReport> {
+fn run_with_event_file(
+    sim: &Simulation,
+    dir: &Path,
+    job: &CellJob<'_>,
+    ledger: Option<&mut WarmLedger>,
+) -> Result<RunReport> {
     use std::io::Write as _;
     let path = dir.join(format!(
         "cell{:04}_seed{}.events.jsonl",
@@ -326,7 +372,10 @@ fn run_with_event_file(sim: &Simulation, dir: &Path, job: &CellJob<'_>) -> Resul
     let file = std::fs::File::create(&path)
         .with_context(|| format!("creating event stream {}", path.display()))?;
     let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
-    let report = sim.run_with_sink(&mut sink)?;
+    let report = match ledger {
+        Some(ledger) => sim.run_warm(Some(&mut sink), ledger)?,
+        None => sim.run_with_sink(&mut sink)?,
+    };
     anyhow::ensure!(
         sink.errors == 0,
         "{} event-stream writes failed for {}",

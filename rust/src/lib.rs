@@ -17,7 +17,10 @@
 //!   transitions are `simtime` events, with degrade-before-drop bandwidth
 //!   coupling) plus availability-aware client sampling
 //!   (`coordinator::sampler`: uniform / stay-prob / drop-aware policies
-//!   behind a registry) and million-client fleet support (`fleet`: a lazy,
+//!   behind a registry), a scheduling subsystem (`scheduling`: pluggable
+//!   per-update aggregation weighting behind an `AggWeigher` registry,
+//!   fairness-capped sampling, calibrated sampling horizons) and
+//!   million-client fleet support (`fleet`: a lazy,
 //!   indexed sim core plus a hierarchical aggregation tier, both
 //!   byte-identical to the flat/eager paths where they overlap). See
 //!   `docs/architecture.md`. The evaluation surface
@@ -45,5 +48,6 @@ pub mod metrics;
 pub mod model;
 pub mod network;
 pub mod runtime;
+pub mod scheduling;
 pub mod simtime;
 pub mod util;

@@ -8,8 +8,12 @@
 //! timelyfl sweep      --scenario NAME [--axis k=v1,v2]... [--seeds N] [--jobs J]
 //!                     [--out FILE]                   # machine-readable sweep manifest
 //!                     [--events DIR]                 # per-run JSONL event streams
+//!                     [--warm-ledger]                # carry one drop ledger across cells (serial)
+//! timelyfl report     MANIFEST.jsonl [--csv] [--out FILE]
+//!                                                     # render a sweep manifest as a markdown/CSV table
 //! timelyfl strategies                                 # dump the strategy registry
 //! timelyfl samplers                                   # dump the sampler registry
+//! timelyfl weighers                                   # dump the aggregation-weigher registry
 //! timelyfl networks                                   # dump the network-model registry
 //! timelyfl scenarios                                  # dump the scenario registry
 //! timelyfl presets                                    # dump the paper presets
@@ -35,11 +39,12 @@ use anyhow::{Context, Result};
 use timelyfl::availability::{write_trace, AvailabilityModel, TraceEvent, SEED_SALT};
 use timelyfl::config::{self, parse as cfgparse, RunConfig};
 use timelyfl::coordinator::{registry, sampler, Simulation};
-use timelyfl::experiment::{scenario, ExperimentRunner, SweepGrid};
+use timelyfl::experiment::{scenario, summary, ExperimentRunner, MeanStd, SweepGrid};
 use timelyfl::metrics::events::JsonlSink;
 use timelyfl::metrics::report::{fmt_hours, fmt_speedup, participation_table, Table};
 use timelyfl::metrics::RunReport;
 use timelyfl::network;
+use timelyfl::scheduling;
 use timelyfl::runtime::{Manifest, Task};
 use timelyfl::simtime::hours;
 
@@ -69,6 +74,11 @@ struct Args {
     /// `--jobs J`: sweep worker threads (default: available parallelism,
     /// capped at 4 — each worker owns a PJRT client).
     jobs: Option<usize>,
+    /// `--warm-ledger`: carry one drop ledger across the whole sweep
+    /// matrix (forces serial execution).
+    warm_ledger: bool,
+    /// `--csv`: `report` emits CSV instead of a markdown table.
+    csv: bool,
 }
 
 fn parse_args() -> Result<Args> {
@@ -90,6 +100,8 @@ fn parse_args() -> Result<Args> {
         axes: Vec::new(),
         seeds: None,
         jobs: None,
+        warm_ledger: false,
+        csv: false,
     };
     let mut it = std::env::args().skip(1);
     args.command = it.next().unwrap_or_else(|| "help".into());
@@ -113,6 +125,8 @@ fn parse_args() -> Result<Args> {
             "--axis" => args.axes.push(need("--axis")?),
             "--seeds" => args.seeds = Some(need("--seeds")?.parse()?),
             "--jobs" => args.jobs = Some(need("--jobs")?.parse()?),
+            "--warm-ledger" => args.warm_ledger = true,
+            "--csv" => args.csv = true,
             "--help" | "-h" => {
                 args.command = "help".into();
             }
@@ -288,6 +302,19 @@ fn cmd_samplers() -> Result<()> {
     Ok(())
 }
 
+fn cmd_weighers() -> Result<()> {
+    let mut t = Table::new(&["name", "aliases", "summary"]);
+    for info in scheduling::WEIGHERS {
+        t.row(vec![
+            info.name.to_string(),
+            info.aliases.join(", "),
+            info.summary.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_networks() -> Result<()> {
     let mut t = Table::new(&["name", "aliases", "summary"]);
     for info in network::NETWORKS {
@@ -342,7 +369,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let seeds = args.seeds.unwrap_or(1);
     anyhow::ensure!(seeds >= 1, "--seeds must be >= 1");
-    let jobs = match args.jobs {
+    let mut jobs = match args.jobs {
         Some(j) => {
             anyhow::ensure!(j >= 1, "--jobs must be >= 1");
             j
@@ -352,15 +379,24 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // oversubscribes. --jobs overrides for bigger machines.
         None => std::thread::available_parallelism().map_or(1, |n| n.get().min(4)),
     };
+    if args.warm_ledger && jobs > 1 {
+        // The carried ledger is run-to-run mutable state: serial only.
+        eprintln!("sweep: --warm-ledger forces --jobs 1");
+        jobs = 1;
+    }
     eprintln!(
-        "sweep: {} cells x {} seeds over axes [{}] ({} jobs)",
+        "sweep: {} cells x {} seeds over axes [{}] ({} jobs{})",
         grid.len(),
         seeds,
         grid.axis_keys().join(", "),
-        jobs
+        jobs,
+        if args.warm_ledger { ", warm ledger" } else { "" }
     );
 
-    let mut runner = ExperimentRunner::new(&args.artifacts).seeds(seeds).jobs(jobs);
+    let mut runner = ExperimentRunner::new(&args.artifacts)
+        .seeds(seeds)
+        .jobs(jobs)
+        .warm_ledger(args.warm_ledger);
     if let Some(dir) = &args.events {
         runner = runner.events_dir(dir);
     }
@@ -403,6 +439,100 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let manifest = result.manifest(args.scenario.as_deref(), &grid.axis_keys());
         std::fs::write(out, manifest).with_context(|| format!("writing {out}"))?;
         eprintln!("wrote sweep manifest {out}");
+    }
+    Ok(())
+}
+
+/// `timelyfl report MANIFEST.jsonl [--csv] [--out FILE]`: render a sweep
+/// manifest (what `sweep --out` wrote) as an `EXPERIMENTS.md`-style
+/// markdown table, or CSV for spreadsheet tooling — result tables in docs
+/// get regenerated from the manifest, never hand-edited.
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args.subcommand.as_deref().context(
+        "usage: timelyfl report MANIFEST.jsonl [--csv] [--out FILE]",
+    )?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let summaries = summary::parse_sweep_manifest(&text)?;
+    anyhow::ensure!(!summaries.is_empty(), "{path}: no cell records");
+
+    let opt = |m: &Option<MeanStd>, prec: usize| -> String {
+        m.as_ref().map_or("-".into(), |m| m.fmt(prec))
+    };
+    let time_to_target = |s: &summary::CellSummary| -> String {
+        match &s.time_to_target {
+            None => "-".into(),
+            Some(tt) => match &tt.hours {
+                Some(h) => format!("{} hr ({}/{})", h.fmt(2), tt.reached, s.seeds),
+                None => "> budget".into(),
+            },
+        }
+    };
+
+    let rendered = if args.csv {
+        // CSV carries bare means (std is recoverable from the manifest);
+        // the label is quoted — `k=v,k=v` labels contain the separator.
+        let mut out = String::from(
+            "cell,seeds,rounds,final_metric,best_metric,sim_hours,\
+             mean_participation,online_fraction,avail_drops,deadline_drops,\
+             target_reached,hours_to_target\n",
+        );
+        let num = |m: &MeanStd| format!("{}", m.mean);
+        let optnum =
+            |m: &Option<MeanStd>| m.as_ref().map_or(String::new(), |m| format!("{}", m.mean));
+        for s in &summaries {
+            let (reached, tt_hours) = match &s.time_to_target {
+                Some(tt) => (tt.reached.to_string(), optnum(&tt.hours)),
+                None => (String::new(), String::new()),
+            };
+            out.push_str(&format!(
+                "\"{}\",{},{},{},{},{},{},{},{},{},{},{}\n",
+                s.label.replace('"', "\"\""),
+                s.seeds,
+                num(&s.rounds),
+                optnum(&s.final_metric),
+                optnum(&s.best_metric),
+                num(&s.sim_hours),
+                num(&s.mean_participation),
+                num(&s.mean_online_fraction),
+                num(&s.avail_drops),
+                num(&s.deadline_drops),
+                reached,
+                tt_hours,
+            ));
+        }
+        out
+    } else {
+        let mut out = String::from(
+            "| cell | seeds | rounds | final_metric | best_metric | sim_hours \
+             | particip | online | avail_drops | deadline_drops | time_to_target |\n\
+             |---|---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for s in &summaries {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                s.label,
+                s.seeds,
+                s.rounds.fmt(1),
+                opt(&s.final_metric, 4),
+                opt(&s.best_metric, 4),
+                s.sim_hours.fmt(2),
+                s.mean_participation.fmt(3),
+                s.mean_online_fraction.fmt(3),
+                s.avail_drops.fmt(1),
+                s.deadline_drops.fmt(1),
+                time_to_target(s),
+            ));
+        }
+        out
+    };
+
+    match &args.out {
+        Some(out) => {
+            std::fs::write(out, &rendered).with_context(|| format!("writing {out}"))?;
+            eprintln!("wrote {} cells to {out}", summaries.len());
+        }
+        None => print!("{rendered}"),
     }
     Ok(())
 }
@@ -487,16 +617,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn usage() -> String {
     format!(
-        "usage: timelyfl <run|compare|sweep|strategies|samplers|networks|scenarios|presets|trace record|inspect> \
+        "usage: timelyfl <run|compare|sweep|report MANIFEST|strategies|samplers|weighers|networks|scenarios|presets|trace record|inspect> \
          [--preset P] [--scenario S] [--strategy S] [--sampler S] [--config FILE] [--set k=v]... \
-         [--axis k=v1,v2]... [--seeds N] [--jobs J] [--artifacts DIR] [--out FILE] \
-         [--target X] [--events FILE|DIR] [--horizon SECS] [--eager-train]\n\
+         [--axis k=v1,v2]... [--seeds N] [--jobs J] [--warm-ledger] [--artifacts DIR] [--out FILE] \
+         [--target X] [--events FILE|DIR] [--horizon SECS] [--eager-train] [--csv]\n\
          strategies: {}\n\
          samplers:   {}\n\
+         weighers:   {}\n\
          networks:   {}\n\
          scenarios:  {}",
         registry::names().join(", "),
         sampler::names().join(", "),
+        scheduling::names().join(", "),
         network::names().join(", "),
         scenario::names().join(", ")
     )
@@ -504,9 +636,10 @@ fn usage() -> String {
 
 fn main() -> Result<()> {
     let args = parse_args()?;
-    // Only `trace` takes a subcommand word; a stray bare argument anywhere
-    // else is a user error (e.g. a forgotten `--`), not something to skip.
-    let stray = (args.command != "trace")
+    // Only `trace` (subcommand word) and `report` (positional manifest
+    // path) take a bare argument; a stray one anywhere else is a user
+    // error (e.g. a forgotten `--`), not something to skip.
+    let stray = (args.command != "trace" && args.command != "report")
         .then_some(args.subcommand.as_deref())
         .flatten();
     if let Some(word) = stray {
@@ -518,8 +651,10 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
+        "report" => cmd_report(&args),
         "strategies" => cmd_strategies(),
         "samplers" => cmd_samplers(),
+        "weighers" => cmd_weighers(),
         "networks" => cmd_networks(),
         "scenarios" => cmd_scenarios(),
         "presets" => cmd_presets(),

@@ -10,7 +10,8 @@
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
 //!  "dropped":1,"avail_dropped":2,"downlink_wait_secs":37.5,"stale_starts":1,
 //!  "mean_train_loss":1.83,
-//!  "workloads":[{"alpha":0.75,"client":4,"epochs":2,"stay_prob":0.93}]}
+//!  "workloads":[{"alpha":0.75,"client":4,"epochs":2,"stay_prob":0.93}],
+//!  "agg_weights":[{"client":4,"weight":0.5}]}
 //! {"reason":"eval-point","round":3,"sim_secs":412.5,"mean_loss":1.79,"metric":0.41}
 //! {"reason":"client-dropped","client":17,"sim_secs":390.0,"cause":"availability",
 //!  "execution_avoided":true}
@@ -94,6 +95,33 @@ impl ClientWorkload {
     }
 }
 
+/// One delivered update's aggregation weight, as assigned by the
+/// configured weigher (`crate::scheduling`) immediately before the update
+/// entered aggregation. `1.0` for every update under the default
+/// `weigher = uniform`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AggWeight {
+    pub client: usize,
+    /// The weight written onto the contribution, in (0, 1].
+    pub weight: f64,
+}
+
+impl AggWeight {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("client", Json::num(self.client as f64)),
+            ("weight", Json::num(self.weight)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<AggWeight> {
+        Ok(AggWeight {
+            client: v.expect("client")?.as_usize()?,
+            weight: v.expect("weight")?.as_f64()?,
+        })
+    }
+}
+
 /// One record in a run's event stream.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RunEvent {
@@ -120,6 +148,10 @@ pub enum RunEvent {
         stale_starts: u64,
         mean_train_loss: Option<f64>,
         workloads: Vec<ClientWorkload>,
+        /// Per-update aggregation weights assigned since the previous
+        /// round-complete record (`crate::scheduling`), in aggregation
+        /// order. All `1.0` under the default `weigher = uniform`.
+        agg_weights: Vec<AggWeight>,
     },
     /// The global model was evaluated (mirrors `metrics::EvalPoint`).
     EvalPoint {
@@ -173,6 +205,7 @@ impl RunEvent {
                 stale_starts,
                 mean_train_loss,
                 workloads,
+                agg_weights,
             } => {
                 pairs.push(("round", Json::num(*round as f64)));
                 pairs.push(("sim_secs", Json::num(*sim_secs)));
@@ -188,6 +221,10 @@ impl RunEvent {
                 pairs.push((
                     "workloads",
                     Json::arr(workloads.iter().map(|w| w.to_json()).collect()),
+                ));
+                pairs.push((
+                    "agg_weights",
+                    Json::arr(agg_weights.iter().map(|w| w.to_json()).collect()),
                 ));
             }
             RunEvent::EvalPoint {
@@ -245,6 +282,12 @@ impl RunEvent {
                     .as_arr()?
                     .iter()
                     .map(ClientWorkload::from_json)
+                    .collect::<Result<_>>()?,
+                agg_weights: v
+                    .expect("agg_weights")?
+                    .as_arr()?
+                    .iter()
+                    .map(AggWeight::from_json)
                     .collect::<Result<_>>()?,
             },
             "eval-point" => RunEvent::EvalPoint {
@@ -369,6 +412,10 @@ mod tests {
                     ClientWorkload { client: 4, epochs: 2, alpha: 0.75, stay_prob: 0.93 },
                     ClientWorkload { client: 9, epochs: 1, alpha: 1.0, stay_prob: 1.0 },
                 ],
+                agg_weights: vec![
+                    AggWeight { client: 4, weight: 0.5 },
+                    AggWeight { client: 9, weight: 1.0 },
+                ],
             },
             RunEvent::RoundComplete {
                 round: 4,
@@ -380,6 +427,7 @@ mod tests {
                 stale_starts: 0,
                 mean_train_loss: None,
                 workloads: vec![],
+                agg_weights: vec![],
             },
             RunEvent::EvalPoint {
                 round: 3,
@@ -444,10 +492,12 @@ mod tests {
             stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
+            agg_weights: vec![],
         };
         let line = ev.to_json().to_string();
         assert!(line.contains("\"mean_train_loss\":null"));
         assert!(line.contains("\"workloads\":[]"));
+        assert!(line.contains("\"agg_weights\":[]"));
         assert_eq!(RunEvent::parse_line(&line).unwrap(), ev);
     }
 
@@ -466,7 +516,7 @@ mod tests {
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
              \"mean_train_loss\":null,\
-             \"workloads\":[{\"client\":1,\"epochs\":2}]}"
+             \"workloads\":[{\"client\":1,\"epochs\":2}],\"agg_weights\":[]}"
         )
         .is_err());
         // Same for the sampler-decision field.
@@ -474,13 +524,28 @@ mod tests {
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
              \"mean_train_loss\":null,\
-             \"workloads\":[{\"client\":1,\"epochs\":2,\"alpha\":1.0}]}"
+             \"workloads\":[{\"client\":1,\"epochs\":2,\"alpha\":1.0}],\"agg_weights\":[]}"
         )
         .is_err());
         // A round-complete without the dissemination counters is malformed.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
-             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\"workloads\":[]}"
+             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\"workloads\":[],\
+             \"agg_weights\":[]}"
+        )
+        .is_err());
+        // ... and one without the aggregation weights likewise.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
+             \"mean_train_loss\":null,\"workloads\":[]}"
+        )
+        .is_err());
+        // Weight entries missing their weight are malformed too.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
+             \"mean_train_loss\":null,\"workloads\":[],\"agg_weights\":[{\"client\":1}]}"
         )
         .is_err());
     }

@@ -1,0 +1,571 @@
+//! Scheduling subsystem: pluggable aggregation weighting and calibrated
+//! sampling horizons.
+//!
+//! WHO contributes to each aggregation — and with what weight — drives
+//! convergence under heterogeneity. CSMAAFL (Ma et al.) derives client
+//! scheduling and per-update aggregation weights *jointly*, and Papaya
+//! (Huba et al. 2022) reports that staleness-discounted weighting is what
+//! makes buffered-async viable at production scale. This module makes the
+//! per-update weight a first-class, pluggable policy with the same
+//! registry-over-trait shape as strategies, samplers, and networks:
+//!
+//! - **uniform** — every delivered update weighs exactly `1.0`, the value
+//!   the strategies have always hardcoded. Reads no ledger, consumes no
+//!   RNG, and is bit-identical to the pre-subsystem behaviour (locked by
+//!   `rust/tests/weigher_equivalence.rs`).
+//! - **staleness** — polynomial version-lag discount
+//!   `1 / (1 + Δv)^p` (Papaya-style; `p = weigher_staleness_exp`). A
+//!   zero-lag update weighs exactly `1.0`, so the round-stepped strategies
+//!   (whose contributions are always fresh) are invariant under it. Note
+//!   this composes *multiplicatively* with FedBuff's own
+//!   `staleness_discount` (which the event strategies apply inside
+//!   aggregation): the weigher scores the update, the protocol rule still
+//!   applies on top.
+//! - **sched-joint** — staleness discount × the drop-ledger availability
+//!   posterior `(delivered + 1) / (delivered + churned + 1)` (CSMAAFL's
+//!   joint scheduling/weighting idiom on the evidence the engine already
+//!   keeps for the `drop-aware` sampler).
+//!
+//! A weigher only rescales `Contribution::weight` at the aggregation site:
+//! it never touches the clock, the cohorts, the RNG streams, or the drop
+//! counters, so non-uniform weighers move the *learning curve* and nothing
+//! else.
+//!
+//! The module also owns the scheduling half of the run config: the
+//! `fair-cap` sampler's knobs (`fair_cap` / `fair_explore`; the policy
+//! itself lives in `coordinator::sampler` with its siblings) and the
+//! calibrated sampling horizon (`sampler_horizon = auto` replaces the
+//! fixed `sampler_horizon_secs` with an EWMA of the realized aggregation
+//! interval — see [`HorizonEstimator`]).
+
+use anyhow::Result;
+
+/// EWMA smoothing factor for the calibrated horizon: one fifth new
+/// observation, four fifths history — heavy enough to track a drifting
+/// aggregation cadence, smooth enough to ignore one straggler round.
+pub const HORIZON_EWMA_ALPHA: f64 = 0.2;
+
+/// The scheduling half of a [`crate::config::RunConfig`].
+#[derive(Clone, Debug)]
+pub struct SchedulingConfig {
+    /// Aggregation-weighting policy, resolved through this module's
+    /// registry (`uniform` | `staleness` | `sched-joint`, aliases
+    /// accepted; the parser canonicalizes).
+    pub weigher: String,
+    /// Polynomial exponent `p` of the staleness discount
+    /// `1 / (1 + Δv)^p` (read by `staleness` and `sched-joint`).
+    pub staleness_exp: f64,
+    /// `fair-cap` sampler: a client whose attempt count reaches
+    /// `fair_cap × (pool-minimum attempts + 1)` is excluded from selection
+    /// until the rest of the pool catches up. Must be >= 1.
+    pub fair_cap: usize,
+    /// `fair-cap` sampler: UCB exploration coefficient — the weight bonus
+    /// `fair_explore * sqrt(ln(total attempts) / (attempts + 1))` that
+    /// pulls rarely-tried clients into the cohort.
+    pub fair_explore: f64,
+    /// `sampler_horizon = auto`: calibrate the sampling horizon online
+    /// from the realized aggregation interval instead of the fixed
+    /// `sampler_horizon_secs`.
+    pub horizon_auto: bool,
+}
+
+impl Default for SchedulingConfig {
+    fn default() -> Self {
+        SchedulingConfig {
+            weigher: "uniform".into(),
+            staleness_exp: 1.0,
+            fair_cap: 4,
+            fair_explore: 0.5,
+            horizon_auto: false,
+        }
+    }
+}
+
+impl SchedulingConfig {
+    pub fn validate(&self) -> Result<()> {
+        resolve(&self.weigher)?;
+        anyhow::ensure!(
+            self.staleness_exp.is_finite() && self.staleness_exp >= 0.0,
+            "weigher_staleness_exp must be finite and >= 0 (a negative exponent REWARDS lag)"
+        );
+        anyhow::ensure!(
+            self.fair_cap >= 1,
+            "fair_cap must be >= 1 (cap 0 would exclude every client)"
+        );
+        anyhow::ensure!(
+            self.fair_explore.is_finite() && self.fair_explore >= 0.0,
+            "fair_explore must be finite and >= 0"
+        );
+        Ok(())
+    }
+
+    /// Build the configured weigher.
+    pub fn build(&self) -> Result<Box<dyn AggWeigher>> {
+        Ok((resolve(&self.weigher)?.build)(self))
+    }
+}
+
+/// Scores one delivered update at its aggregation site.
+///
+/// Inputs are the update's version lag and the client's drop-ledger
+/// counters — everything is already settled engine state, so a weigher can
+/// never perturb the schedule: no RNG, no clock, no ledger writes. The
+/// returned weight replaces `Contribution::weight` (which every strategy
+/// initializes to 1.0) *before* the protocol's own staleness rule
+/// (`aggregation::staleness_discount`) applies.
+pub trait AggWeigher: Send {
+    fn name(&self) -> &'static str;
+
+    /// Weight for one update: `staleness` = version lag Δv at delivery
+    /// (always 0 for round-stepped strategies), `delivered`/`churned` =
+    /// the client's drop-ledger counters. Must be finite and > 0 (the
+    /// uniform anchor returns exactly 1.0).
+    fn weight(&self, staleness: u64, delivered: u32, churned: u32) -> f64;
+}
+
+/// Sample-count weighting — the bit-identity anchor: exactly the 1.0 every
+/// strategy has always assigned.
+pub struct UniformWeigher;
+
+impl AggWeigher for UniformWeigher {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn weight(&self, _staleness: u64, _delivered: u32, _churned: u32) -> f64 {
+        1.0
+    }
+}
+
+/// Polynomial staleness discount `1 / (1 + Δv)^p` (Papaya-style).
+pub struct StalenessWeigher {
+    pub exp: f64,
+}
+
+/// The discount itself, exposed for the property tests: exactly 1.0 at
+/// zero lag (`powi`/`powf` of 1.0 is 1.0 bit-exactly), strictly
+/// decreasing in `staleness` for `p > 0`, and always in (0, 1].
+pub fn staleness_poly(staleness: u64, exp: f64) -> f64 {
+    1.0 / (1.0 + staleness as f64).powf(exp)
+}
+
+impl AggWeigher for StalenessWeigher {
+    fn name(&self) -> &'static str {
+        "staleness"
+    }
+
+    fn weight(&self, staleness: u64, _delivered: u32, _churned: u32) -> f64 {
+        staleness_poly(staleness, self.exp)
+    }
+}
+
+/// The drop-ledger availability posterior — the same smoothed estimate the
+/// `drop-aware` sampler ranks by, reused here as an aggregation weight:
+/// `(delivered + 1) / (delivered + churned + 1)`, always in (0, 1].
+pub fn availability_posterior(delivered: u32, churned: u32) -> f64 {
+    (delivered as f64 + 1.0) / (delivered as f64 + churned as f64 + 1.0)
+}
+
+/// CSMAAFL-style joint weight: staleness discount × availability
+/// posterior. An update from a flaky, lagging client counts least; a
+/// fresh update from a reliable client counts (almost) fully.
+pub struct SchedJointWeigher {
+    pub exp: f64,
+}
+
+impl AggWeigher for SchedJointWeigher {
+    fn name(&self) -> &'static str {
+        "sched-joint"
+    }
+
+    fn weight(&self, staleness: u64, delivered: u32, churned: u32) -> f64 {
+        staleness_poly(staleness, self.exp) * availability_posterior(delivered, churned)
+    }
+}
+
+/// One registered aggregation weigher.
+pub struct WeigherInfo {
+    /// Canonical name (what `SchedulingConfig::weigher` carries after
+    /// parsing).
+    pub name: &'static str,
+    /// Extra accepted spellings (lowercase) for config/CLI lookup; the
+    /// canonical name matches case-insensitively without being listed.
+    pub aliases: &'static [&'static str],
+    /// One-liner for `timelyfl weighers`.
+    pub summary: &'static str,
+    /// Build a fresh weigher instance for one run.
+    pub build: fn(&SchedulingConfig) -> Box<dyn AggWeigher>,
+}
+
+/// All registered weighers. `uniform` first: it is the default and the
+/// bit-compatibility anchor.
+pub static WEIGHERS: &[WeigherInfo] = &[
+    WeigherInfo {
+        name: "uniform",
+        aliases: &["samples", "flat"],
+        summary: "every delivered update weighs exactly 1.0 (the historical behaviour; bit-identical default)",
+        build: |_| Box::new(UniformWeigher),
+    },
+    WeigherInfo {
+        name: "staleness",
+        aliases: &["stale", "poly"],
+        summary: "polynomial version-lag discount 1/(1+dv)^p (Papaya-style; p = weigher_staleness_exp)",
+        build: |cfg| Box::new(StalenessWeigher { exp: cfg.staleness_exp }),
+    },
+    WeigherInfo {
+        name: "sched-joint",
+        aliases: &["sched_joint", "joint", "csma"],
+        summary: "staleness discount x drop-ledger availability posterior (CSMAAFL-style joint weighting)",
+        build: |cfg| Box::new(SchedJointWeigher { exp: cfg.staleness_exp }),
+    },
+];
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static WeigherInfo> {
+    let needle = name.to_ascii_lowercase();
+    WEIGHERS
+        .iter()
+        .find(|w| w.name.to_ascii_lowercase() == needle || w.aliases.contains(&needle.as_str()))
+}
+
+/// Like [`find`], but an actionable error listing the known weighers.
+pub fn resolve(name: &str) -> Result<&'static WeigherInfo> {
+    find(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown weigher {name:?} (known: {})",
+            names().join(", ")
+        )
+    })
+}
+
+/// Canonical names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    WEIGHERS.iter().map(|w| w.name).collect()
+}
+
+/// Online sampling-horizon calibration (`sampler_horizon = auto`).
+///
+/// The fixed `sampler_horizon_secs` asks "will this client still be online
+/// in N seconds?" for a hand-picked N. But the question the samplers are
+/// actually asking is "will it survive until the NEXT aggregation" — and
+/// the realized aggregation interval varies by strategy (TimelyFL's T_k,
+/// FedBuff's buffer-fill time) and by churn. The estimator observes each
+/// completed aggregation's clock and keeps an EWMA of the interval; until
+/// the first interval completes, callers fall back to the configured
+/// fixed horizon. Observation happens inside `SimEngine::complete_round`,
+/// which runs identically whether or not anyone reads the estimate — so
+/// `auto` off (the default) is byte-identical to the pre-subsystem runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HorizonEstimator {
+    /// Clock of the previous completed aggregation (None before the first).
+    last_clock: Option<f64>,
+    /// EWMA of the realized aggregation interval, seconds.
+    estimate: Option<f64>,
+}
+
+impl HorizonEstimator {
+    /// Fold in one completed aggregation at simulated time `clock`.
+    /// Non-advancing flushes (two aggregations at the same instant) are
+    /// ignored rather than collapsing the estimate to zero.
+    pub fn observe(&mut self, clock: f64) {
+        if let Some(prev) = self.last_clock {
+            let interval = clock - prev;
+            if interval > 0.0 && interval.is_finite() {
+                self.estimate = Some(match self.estimate {
+                    None => interval,
+                    Some(e) => HORIZON_EWMA_ALPHA * interval + (1.0 - HORIZON_EWMA_ALPHA) * e,
+                });
+            }
+        }
+        self.last_clock = Some(clock);
+    }
+
+    /// The calibrated horizon, falling back to `fixed` until the first
+    /// interval has been observed.
+    pub fn horizon(&self, fixed: f64) -> f64 {
+        self.estimate.unwrap_or(fixed)
+    }
+}
+
+/// A drop ledger carried across runs (`--warm-ledger`): the per-client
+/// `delivered` / `churned` counters harvested from one run's engine and
+/// seeded into the next, so evidence-based policies (`drop-aware`,
+/// `fair-cap`, the `sched-joint` weigher) warm-start instead of re-paying
+/// for the same churn evidence in every sweep cell. Populations may differ
+/// between cells: seeding copies the overlapping prefix (region and ledger
+/// assignment are both `client % n`-shaped, so prefixes align).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WarmLedger {
+    pub delivered: Vec<u32>,
+    pub churned: Vec<u32>,
+}
+
+impl WarmLedger {
+    pub fn is_empty(&self) -> bool {
+        self.delivered.is_empty() && self.churned.is_empty()
+    }
+
+    /// Copy this ledger's overlapping prefix onto per-client tables.
+    pub fn seed_into(&self, delivered: &mut [u32], churned: &mut [u32]) {
+        for (dst, &src) in delivered.iter_mut().zip(&self.delivered) {
+            *dst = src;
+        }
+        for (dst, &src) in churned.iter_mut().zip(&self.churned) {
+            *dst = src;
+        }
+    }
+
+    /// Replace this ledger with a finished run's tables (which already
+    /// include whatever this ledger seeded).
+    pub fn harvest(&mut self, delivered: &[u32], churned: &[u32]) {
+        self.delivered = delivered.to_vec();
+        self.churned = churned.to_vec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- registry properties (the network/sampler registry test suite) --
+
+    #[test]
+    fn canonical_names_unique_case_insensitive() {
+        let mut seen = std::collections::BTreeSet::new();
+        for w in WEIGHERS {
+            assert!(
+                seen.insert(w.name.to_ascii_lowercase()),
+                "duplicate weigher name {}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_entry_and_never_collide() {
+        for w in WEIGHERS {
+            assert_eq!(find(w.name).unwrap().name, w.name);
+            assert_eq!(find(&w.name.to_ascii_uppercase()).unwrap().name, w.name);
+            for a in w.aliases {
+                assert_eq!(find(a).unwrap().name, w.name, "alias {a} resolves elsewhere");
+            }
+        }
+        let mut keys = std::collections::BTreeSet::new();
+        for w in WEIGHERS {
+            assert!(keys.insert(w.name.to_ascii_lowercase()));
+            for a in w.aliases {
+                assert!(keys.insert(a.to_string()), "alias {a} collides");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_error_lists_known_weighers() {
+        let err = resolve("bogus").unwrap_err().to_string();
+        for w in WEIGHERS {
+            assert!(err.contains(w.name), "error should list {}", w.name);
+        }
+        assert!(find("").is_none());
+    }
+
+    #[test]
+    fn registry_order_starts_with_the_uniform_anchor() {
+        assert_eq!(names()[0], "uniform", "uniform must stay the default anchor");
+        assert!(names().contains(&"staleness"));
+        assert!(names().contains(&"sched-joint"));
+    }
+
+    #[test]
+    fn default_config_is_the_uniform_anchor_and_validates() {
+        let cfg = SchedulingConfig::default();
+        assert_eq!(cfg.weigher, "uniform");
+        assert!(!cfg.horizon_auto);
+        cfg.validate().unwrap();
+        let w = cfg.build().unwrap();
+        assert_eq!(w.name(), "uniform");
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        let mut cfg = SchedulingConfig::default();
+        cfg.weigher = "carrier-pigeon".into();
+        assert!(cfg.validate().is_err());
+        cfg.weigher = "staleness".into();
+        cfg.staleness_exp = -1.0;
+        assert!(cfg.validate().is_err(), "negative exponent rewards lag");
+        cfg.staleness_exp = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.staleness_exp = 0.0;
+        cfg.validate().unwrap();
+        cfg.fair_cap = 0;
+        assert!(cfg.validate().is_err(), "cap 0 excludes everyone");
+        cfg.fair_cap = 1;
+        cfg.fair_explore = -0.5;
+        assert!(cfg.validate().is_err());
+        cfg.fair_explore = 0.0;
+        cfg.validate().unwrap();
+    }
+
+    // -- weight algebra (the artifact-free properties weigher_equivalence
+    //    re-asserts through the registry; kept here at the unit seam) --
+
+    #[test]
+    fn uniform_weigher_is_exactly_one_for_all_inputs() {
+        let w = UniformWeigher;
+        for s in [0u64, 1, 7, 10_000] {
+            for (d, c) in [(0u32, 0u32), (5, 0), (0, 5), (1000, 1000)] {
+                assert_eq!(w.weight(s, d, c), 1.0, "uniform must be the literal 1.0");
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_poly_is_monotone_bounded_and_exact_at_zero_lag() {
+        for exp in [0.25, 0.5, 1.0, 2.0] {
+            assert_eq!(staleness_poly(0, exp), 1.0, "zero lag must weigh exactly 1.0");
+            let mut prev = 1.0;
+            for s in 1..50u64 {
+                let w = staleness_poly(s, exp);
+                assert!(w > 0.0 && w < prev, "discount must strictly decrease (p={exp}, s={s})");
+                prev = w;
+            }
+        }
+        // p = 0 disables the discount entirely.
+        for s in [0u64, 1, 100] {
+            assert_eq!(staleness_poly(s, 0.0), 1.0);
+        }
+        // Larger exponents discount harder at every positive lag.
+        for s in 1..20u64 {
+            assert!(staleness_poly(s, 2.0) < staleness_poly(s, 0.5));
+        }
+    }
+
+    #[test]
+    fn availability_posterior_is_bounded_and_monotone() {
+        for d in 0..40u32 {
+            for c in 0..40u32 {
+                let p = availability_posterior(d, c);
+                assert!(p > 0.0 && p <= 1.0, "posterior {p} out of (0, 1]");
+            }
+        }
+        assert_eq!(availability_posterior(0, 0), 1.0, "no evidence = benefit of the doubt");
+        // More churn lowers it; more deliveries raise it.
+        for d in [0u32, 3, 10] {
+            for c in 1..20u32 {
+                assert!(availability_posterior(d, c) < availability_posterior(d, c - 1));
+            }
+        }
+        for c in [1u32, 5, 20] {
+            for d in 1..20u32 {
+                assert!(availability_posterior(d, c) > availability_posterior(d - 1, c));
+            }
+        }
+    }
+
+    #[test]
+    fn sched_joint_is_the_product_and_never_exceeds_its_factors() {
+        let w = SchedJointWeigher { exp: 1.0 };
+        for s in [0u64, 1, 5] {
+            for (d, c) in [(0u32, 0u32), (4, 2), (0, 9)] {
+                let got = w.weight(s, d, c);
+                let want = staleness_poly(s, 1.0) * availability_posterior(d, c);
+                assert_eq!(got, want);
+                assert!(got <= staleness_poly(s, 1.0) && got <= availability_posterior(d, c));
+                assert!(got > 0.0);
+            }
+        }
+        // Fresh update, clean ledger: exactly 1.0 — the anchor composes.
+        assert_eq!(w.weight(0, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn registry_weighers_build_and_score_finite_positive() {
+        let mut cfg = SchedulingConfig::default();
+        cfg.staleness_exp = 1.5;
+        for info in WEIGHERS {
+            cfg.weigher = info.name.into();
+            let w = cfg.build().unwrap();
+            assert_eq!(w.name(), info.name);
+            for s in [0u64, 3, 17] {
+                for (d, c) in [(0u32, 0u32), (7, 3), (0, 50)] {
+                    let weight = w.weight(s, d, c);
+                    assert!(
+                        weight.is_finite() && weight > 0.0 && weight <= 1.0,
+                        "{}: weight {weight} out of (0, 1]",
+                        info.name
+                    );
+                }
+            }
+        }
+    }
+
+    // -- horizon calibration --
+
+    #[test]
+    fn horizon_estimator_falls_back_until_the_first_interval() {
+        let mut h = HorizonEstimator::default();
+        assert_eq!(h.horizon(600.0), 600.0);
+        h.observe(100.0);
+        // One observation is a clock, not yet an interval.
+        assert_eq!(h.horizon(600.0), 600.0);
+        h.observe(250.0);
+        assert_eq!(h.horizon(600.0), 150.0, "first interval becomes the estimate");
+    }
+
+    #[test]
+    fn horizon_estimator_ewma_tracks_the_interval() {
+        let mut h = HorizonEstimator::default();
+        h.observe(0.0);
+        h.observe(100.0); // estimate = 100
+        h.observe(300.0); // interval 200: 0.2*200 + 0.8*100 = 120
+        assert!((h.horizon(0.0) - 120.0).abs() < 1e-12);
+        // A long steady cadence converges to it.
+        let mut clock = 300.0;
+        for _ in 0..200 {
+            clock += 50.0;
+            h.observe(clock);
+        }
+        assert!((h.horizon(0.0) - 50.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn horizon_estimator_ignores_non_advancing_flushes() {
+        let mut h = HorizonEstimator::default();
+        h.observe(10.0);
+        h.observe(10.0); // same instant: no interval
+        assert_eq!(h.horizon(42.0), 42.0);
+        h.observe(30.0);
+        assert_eq!(h.horizon(42.0), 20.0);
+    }
+
+    // -- warm ledger --
+
+    #[test]
+    fn warm_ledger_seeds_the_overlapping_prefix() {
+        let mut ledger = WarmLedger::default();
+        assert!(ledger.is_empty());
+        ledger.harvest(&[3, 1, 4], &[0, 2, 0]);
+        // Larger next population: prefix seeded, tail untouched.
+        let mut d = vec![0u32; 5];
+        let mut c = vec![0u32; 5];
+        ledger.seed_into(&mut d, &mut c);
+        assert_eq!(d, vec![3, 1, 4, 0, 0]);
+        assert_eq!(c, vec![0, 2, 0, 0, 0]);
+        // Smaller next population: only what fits.
+        let mut d = vec![0u32; 2];
+        let mut c = vec![0u32; 2];
+        ledger.seed_into(&mut d, &mut c);
+        assert_eq!(d, vec![3, 1]);
+        assert_eq!(c, vec![0, 2]);
+    }
+
+    #[test]
+    fn warm_ledger_harvest_replaces_wholesale() {
+        let mut ledger = WarmLedger::default();
+        ledger.harvest(&[9, 9, 9, 9], &[9, 9, 9, 9]);
+        ledger.harvest(&[1, 2], &[3, 4]);
+        assert_eq!(ledger.delivered, vec![1, 2]);
+        assert_eq!(ledger.churned, vec![3, 4]);
+        assert!(!ledger.is_empty());
+    }
+}

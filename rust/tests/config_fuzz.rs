@@ -1,6 +1,6 @@
 //! Seeded config fuzz-lite: random-but-valid override sets over the
-//! network × availability × sampler axes, pushed through the real
-//! `config::parse` path.
+//! network × availability × sampler × scheduling axes, pushed through the
+//! real `config::parse` path.
 //!
 //! Not a coverage-guided fuzzer — a fixed-seed sweep of ~64 generated
 //! configs that must all parse, validate, canonicalize (aliases collapse
@@ -64,9 +64,30 @@ fn random_overrides(rng: &mut Rng) -> Vec<(String, String)> {
     push("avail_degrade_floor", format!("{:.2}", 0.05 + rng.f64() * 0.9));
     push(
         "sampler",
-        pick(rng, &["uniform", "stay-prob", "drop-aware", "survival", "DROP_AWARE"]).into(),
+        pick(
+            rng,
+            &["uniform", "stay-prob", "drop-aware", "survival", "DROP_AWARE", "fair-cap", "fair_cap", "FAIRCAP"],
+        )
+        .into(),
     );
     push("sampler_horizon_secs", format!("{:.1}", 50.0 + rng.f64() * 500.0));
+    // Scheduling axes: the weigher registry, its knobs, and the calibrated
+    // horizon (`auto` flips EWMA mode; a number pins the fixed horizon).
+    push(
+        "weigher",
+        pick(rng, &["uniform", "staleness", "sched-joint", "flat", "poly", "CSMA", "JOINT"]).into(),
+    );
+    push("weigher_staleness_exp", format!("{:.2}", 0.25 + rng.f64() * 2.5));
+    push("fair_cap", format!("{}", 1 + rng.usize_below(8)));
+    push("fair_explore", format!("{:.2}", rng.f64() * 2.0));
+    push(
+        "sampler_horizon",
+        if rng.usize_below(2) == 0 {
+            "auto".into()
+        } else {
+            format!("{:.1}", 50.0 + rng.f64() * 500.0)
+        },
+    );
     push(
         "strategy",
         pick(rng, &["TimelyFL", "timelyfl", "fedbuff", "sync", "seafl"]).into(),
@@ -103,9 +124,14 @@ fn sixty_four_fuzzed_configs_parse_validate_and_canonicalize() {
             cfg.network.model
         );
         assert!(
-            ["uniform", "stay-prob", "drop-aware"].contains(&cfg.sampler.as_str()),
+            ["uniform", "stay-prob", "drop-aware", "fair-cap"].contains(&cfg.sampler.as_str()),
             "seed {seed}: sampler not canonical: {}",
             cfg.sampler
+        );
+        assert!(
+            ["uniform", "staleness", "sched-joint"].contains(&cfg.scheduling.weigher.as_str()),
+            "seed {seed}: weigher not canonical: {}",
+            cfg.scheduling.weigher
         );
         assert!(
             ["TimelyFL", "FedBuff", "SyncFL", "SemiAsync"].contains(&cfg.strategy.as_str()),
@@ -146,6 +172,18 @@ fn fuzz_rejects_the_bad_values_it_must() {
     let mut cfg = RunConfig::default();
     cfgparse::apply_cli(&mut cfg, "agg_jobs=0").unwrap();
     assert!(cfg.validate().is_err(), "agg_jobs=0 validated");
+    // Scheduling axes: an unknown weigher and a non-numeric, non-`auto`
+    // horizon are parse errors; a negative staleness exponent and a zero
+    // fair-share cap parse but must die in validate().
+    let mut cfg = RunConfig::default();
+    assert!(cfgparse::apply_cli(&mut cfg, "weigher=bogus").is_err());
+    assert!(cfgparse::apply_cli(&mut cfg, "sampler_horizon=soonish").is_err());
+    let mut cfg = RunConfig::default();
+    cfgparse::apply_cli(&mut cfg, "weigher_staleness_exp=-1").unwrap();
+    assert!(cfg.validate().is_err(), "weigher_staleness_exp=-1 validated");
+    let mut cfg = RunConfig::default();
+    cfgparse::apply_cli(&mut cfg, "fair_cap=0").unwrap();
+    assert!(cfg.validate().is_err(), "fair_cap=0 validated");
 }
 
 // ---------------------------------------------------------------------------

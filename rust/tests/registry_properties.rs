@@ -6,7 +6,7 @@
 
 use timelyfl::config::{parse as cfgparse, RunConfig};
 use timelyfl::coordinator::{registry, sampler};
-use timelyfl::metrics::events::{self, ClientWorkload, DropCause, RunEvent};
+use timelyfl::metrics::events::{self, AggWeight, ClientWorkload, DropCause, RunEvent};
 
 #[test]
 fn every_registered_sampler_is_listed_and_canonicalizes_through_config() {
@@ -88,6 +88,7 @@ fn event_schema_round_trips_through_util_json() {
                 ClientWorkload { client: 0, epochs: 3, alpha: 1.0, stay_prob: 1.0 },
                 ClientWorkload { client: 5, epochs: 1, alpha: 0.5, stay_prob: 0.75 },
             ],
+            agg_weights: vec![AggWeight { client: 0, weight: 1.0 }],
         },
         RunEvent::RoundComplete {
             round: 1,
@@ -99,6 +100,7 @@ fn event_schema_round_trips_through_util_json() {
             stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
+            agg_weights: vec![],
         },
         RunEvent::EvalPoint {
             round: 1,
@@ -145,6 +147,7 @@ fn event_reasons_are_the_documented_set() {
             stale_starts: 0,
             mean_train_loss: None,
             workloads: vec![],
+            agg_weights: vec![],
         },
         RunEvent::EvalPoint {
             round: 0,

@@ -664,11 +664,20 @@ fn golden_reports_bit_identical() {
     // correlated churn (uniform sampler isolates the network axis). The
     // fingerprint's downlink/stale lines make dissemination drift visible
     // even when the schedule happens to survive.
-    let mut priced = regional;
+    let mut priced = regional.clone();
     priced.sampler = "uniform".into();
     priced.network.model = "priced".into();
     priced.network.down_ratio = 0.25;
     cases.push(("timelyfl_priced_correlated".into(), priced));
+    // And the scheduling subsystem: the sched-joint aggregation weigher
+    // under the same correlated churn (uniform sampler isolates the weigher
+    // axis). Non-uniform weights bend only the learning curve, so the
+    // fingerprint's eval lines are where drift in the weigher algebra or
+    // the drop-ledger plumbing becomes visible.
+    let mut weighted = regional;
+    weighted.sampler = "uniform".into();
+    weighted.scheduling.weigher = "sched-joint".into();
+    cases.push(("timelyfl_weighted".into(), weighted));
     // And the hot-path execution config: batched dispatch + chunk-parallel
     // aggregation must fingerprint IDENTICALLY to the serial `timelyfl`
     // golden (batched_equivalence.rs proves the full-report equality; this

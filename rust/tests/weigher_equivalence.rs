@@ -1,0 +1,264 @@
+//! The weigher seam's headline suite — the scheduling subsystem's
+//! acceptance anchors:
+//!
+//! - `weigher = uniform` (the default, and every alias spelling) scores
+//!   each delivered update at exactly 1.0, the value the strategies already
+//!   initialise, so a run with the weigher seam engaged MUST be
+//!   byte-identical to the default config — for every registered strategy,
+//!   every sampler, and both sim cores, under real correlated churn. Any
+//!   divergence means the seam leaked into RNG order, the clock, or the
+//!   ledger.
+//! - Round-synchronous strategies (TimelyFL, SyncFL) aggregate with zero
+//!   staleness, so the `staleness` weigher's polynomial discount is exactly
+//!   1.0 there: byte-identity again, by construction (the zero-lag
+//!   invariance of the ISSUE).
+//! - Non-uniform weighers may only bend the learning curve. Clocks,
+//!   cohorts, participation, and the drop ledger are computed before the
+//!   weigher runs and must not move.
+//!
+//! The sim-running groups need the AOT artifacts (real PJRT training) and
+//! self-skip without them; the weight-algebra group at the bottom is
+//! artifact-free and always runs (wired into `scripts/check.sh`).
+
+use timelyfl::availability::AvailabilityKind;
+use timelyfl::config::{parse as cfgparse, RunConfig};
+use timelyfl::coordinator::{registry, Simulation};
+use timelyfl::fleet::FleetCore;
+use timelyfl::metrics::RunReport;
+use timelyfl::scheduling;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn tiny_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "kws_lite".into();
+    cfg.strategy = strategy.to_string();
+    cfg.sampler = sampler_name.to_string();
+    cfg.population = 12;
+    cfg.concurrency = 6;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.max_local_epochs = 2;
+    cfg.sim_model_bytes = 3.2e5;
+    cfg
+}
+
+fn regional_cfg(strategy: &str, sampler_name: &str) -> RunConfig {
+    let mut cfg = tiny_cfg(strategy, sampler_name);
+    cfg.availability.kind = AvailabilityKind::Correlated;
+    cfg.availability.regions = 3;
+    cfg.availability.region_mtbf_secs = 500.0;
+    cfg.availability.region_outage_secs = 250.0;
+    cfg.availability.mean_online_secs = 600.0;
+    cfg.availability.mean_offline_secs = 200.0;
+    cfg.availability.degrade_window_secs = 120.0;
+    cfg.sampler_horizon_secs = 200.0;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunReport {
+    Simulation::new(cfg, ARTIFACTS)
+        .expect("build simulation (run `make artifacts` first)")
+        .run()
+        .expect("run simulation")
+}
+
+/// Report JSON with the only legitimately nondeterministic field zeroed.
+fn semantic_json(r: &RunReport) -> String {
+    let mut r = r.clone();
+    r.wall_secs = 0.0;
+    r.to_json().to_string()
+}
+
+#[test]
+fn uniform_weigher_is_bit_identical_to_default_everywhere() {
+    require_artifacts!();
+    // Every strategy × every sampler × both sim cores, under correlated
+    // churn. The `weigher=flat` spelling goes through the CLI-override
+    // path, so registry canonicalization is exercised end to end.
+    for info in registry::STRATEGIES {
+        for policy in ["uniform", "stay-prob", "drop-aware"] {
+            for core in [FleetCore::Eager, FleetCore::Lazy] {
+                let mut reference = regional_cfg(info.name, policy);
+                reference.fleet_core = core;
+                let mut cfg = reference.clone();
+                cfgparse::apply_cli(&mut cfg, "weigher=flat").unwrap();
+                assert_eq!(cfg.scheduling.weigher, "uniform", "alias canonicalization");
+                assert_eq!(
+                    semantic_json(&run(cfg)),
+                    semantic_json(&run(reference)),
+                    "{} + {policy} + {core:?}: weigher=uniform diverged from the \
+                     default — the weigher seam is not inert",
+                    info.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn staleness_weigher_is_inert_for_round_synchronous_strategies() {
+    require_artifacts!();
+    // TimelyFL and SyncFL aggregate the round they dispatched: staleness is
+    // zero for every contribution, so 1/(1+0)^p == 1.0 exactly and the run
+    // must not move a byte (the zero-lag invariance criterion).
+    for strategy in ["TimelyFL", "SyncFL"] {
+        let reference = semantic_json(&run(regional_cfg(strategy, "uniform")));
+        let mut cfg = regional_cfg(strategy, "uniform");
+        cfg.scheduling.weigher = "staleness".into();
+        assert_eq!(
+            semantic_json(&run(cfg)),
+            reference,
+            "{strategy}: staleness weigher moved a zero-lag run"
+        );
+    }
+}
+
+#[test]
+fn nonuniform_weighers_are_seed_deterministic_under_churn() {
+    require_artifacts!();
+    for weigher in ["staleness", "sched-joint"] {
+        let mut cfg = regional_cfg("FedBuff", "uniform");
+        cfg.scheduling.weigher = weigher.into();
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_eq!(
+            semantic_json(&a),
+            semantic_json(&b),
+            "{weigher}: correlated-churn run not reproducible"
+        );
+    }
+}
+
+#[test]
+fn nonuniform_weighers_change_only_the_learning_curve() {
+    require_artifacts!();
+    // FedBuff under churn has genuinely stale contributions, so sched-joint
+    // produces non-unit weights — but weights touch only the aggregated
+    // delta. Clocks, round schedule, cohorts, participation, and the drop
+    // ledger are all computed before the weigher runs.
+    let reference = run(regional_cfg("FedBuff", "uniform"));
+    let mut cfg = regional_cfg("FedBuff", "uniform");
+    cfg.scheduling.weigher = "sched-joint".into();
+    let weighted = run(cfg);
+    assert_eq!(weighted.total_rounds, reference.total_rounds, "round schedule moved");
+    assert_eq!(weighted.sim_secs, reference.sim_secs, "simulated clock moved");
+    assert_eq!(weighted.participation, reference.participation, "cohorts moved");
+    assert_eq!(weighted.online_fraction, reference.online_fraction);
+    assert_eq!(
+        weighted.total_avail_drops(),
+        reference.total_avail_drops(),
+        "availability drop ledger moved"
+    );
+    assert_eq!(
+        weighted.total_deadline_drops(),
+        reference.total_deadline_drops(),
+        "deadline drop ledger moved"
+    );
+    assert_eq!(weighted.events_processed, reference.events_processed);
+    assert_eq!(weighted.trainings_executed, reference.trainings_executed);
+}
+
+#[test]
+fn fair_cap_sampler_survives_every_strategy_under_churn() {
+    require_artifacts!();
+    for info in registry::STRATEGIES {
+        let cfg = regional_cfg(info.name, "fair-cap");
+        let r = run(cfg.clone());
+        assert!(r.total_rounds > 0, "{} + fair-cap: no rounds", info.name);
+        assert_eq!(r.participation.len(), cfg.population);
+        for &p in &r.participation {
+            assert!((0.0..=1.0).contains(&p));
+        }
+        for p in &r.eval_points {
+            assert!(p.mean_loss.is_finite() && p.metric.is_finite());
+        }
+    }
+}
+
+#[test]
+fn calibrated_horizon_is_seed_deterministic() {
+    require_artifacts!();
+    // `sampler_horizon=auto` replaces the fixed horizon with the EWMA of
+    // realized aggregation intervals — pure arithmetic over the simulated
+    // clock, so the run stays reproducible.
+    let mut cfg = regional_cfg("TimelyFL", "stay-prob");
+    cfg.scheduling.horizon_auto = true;
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert_eq!(semantic_json(&a), semantic_json(&b));
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free weight algebra (always runs; see scripts/check.sh).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn weight_algebra_holds_for_every_registered_weigher() {
+    for info in scheduling::WEIGHERS {
+        let mut cfg = timelyfl::scheduling::SchedulingConfig::default();
+        cfg.weigher = info.name.to_string();
+        let w = cfg.build().unwrap();
+        assert_eq!(w.name(), info.name);
+        for staleness in [0u64, 1, 3, 50] {
+            for (delivered, churned) in [(0u32, 0u32), (5, 0), (0, 5), (7, 3)] {
+                let x = w.weight(staleness, delivered, churned);
+                assert!(
+                    x.is_finite() && x > 0.0 && x <= 1.0 + 1e-12,
+                    "{}: weight({staleness}, {delivered}, {churned}) = {x} out of (0, 1]",
+                    info.name
+                );
+                // Monotone non-increasing in staleness.
+                assert!(
+                    w.weight(staleness + 1, delivered, churned) <= x + 1e-12,
+                    "{}: weight increased with staleness",
+                    info.name
+                );
+            }
+        }
+        // Zero lag, clean ledger: every weigher must sit at exactly 1.0 —
+        // the algebraic root of the byte-identity suite above.
+        assert_eq!(w.weight(0, 0, 0), 1.0, "{}: fresh weight != 1.0", info.name);
+    }
+}
+
+#[test]
+fn uniform_weigher_is_exactly_one_everywhere() {
+    let cfg = timelyfl::scheduling::SchedulingConfig::default();
+    let w = cfg.build().unwrap();
+    for staleness in [0u64, 9, 1_000] {
+        for (d, c) in [(0u32, 0u32), (1_000, 0), (0, 1_000)] {
+            assert_eq!(w.weight(staleness, d, c), 1.0);
+        }
+    }
+}
+
+#[test]
+fn sched_joint_discounts_both_lag_and_flakiness() {
+    let mut cfg = timelyfl::scheduling::SchedulingConfig::default();
+    cfg.weigher = "sched-joint".into();
+    let w = cfg.build().unwrap();
+    // More churn evidence at equal staleness => strictly smaller weight.
+    assert!(w.weight(2, 5, 5) < w.weight(2, 5, 0));
+    // More staleness at an equal ledger => strictly smaller weight.
+    assert!(w.weight(5, 5, 2) < w.weight(1, 5, 2));
+    // And it never beats the pure-staleness weigher (posterior <= 1).
+    cfg.weigher = "staleness".into();
+    let s = cfg.build().unwrap();
+    assert!(w.weight(3, 4, 2) <= s.weight(3, 4, 2));
+}

@@ -45,11 +45,13 @@ else
     cargo test -q --test experiment_properties
     cargo test -q --test fleet_properties
     cargo test -q --test parallel_agg_properties
-    # These two carry artifact-gated groups too, but those self-skip with a
+    # These carry artifact-gated groups too, but those self-skip with a
     # message when artifacts/manifest.json is absent; the pure-logic
-    # network properties and the config fuzz sweep always run.
+    # network properties, the config fuzz sweep, and the weigher algebra
+    # always run.
     cargo test -q --test network_equivalence
     cargo test -q --test config_fuzz
+    cargo test -q --test weigher_equivalence
 fi
 
 echo "check.sh: OK"
