@@ -1,0 +1,167 @@
+//! Fleet edge-clock bench — region-clocked edge aggregators vs the shared
+//! (lockstep) clock at fleet_1m scale, across the sampler registry.
+//!
+//! Two claims being measured:
+//!
+//! 1. *Clock A/B*: with `hier_clock = region`, a positive flush window and
+//!    a priced edge->root uplink, regions hold their partials until the
+//!    flush deadline and the root sees them only after the transfer cost
+//!    elapses — so the run reports nonzero `edge_uplink_wait_secs` and
+//!    STRICTLY fewer root merges than edge flushes (several regions'
+//!    flushes batch into one root drain). The shared clock keeps all three
+//!    counters at exactly zero (the byte-identity anchor).
+//!
+//! 2. *Participation dispersion*: per-sampler participation Gini under
+//!    both clock modes — whether deferred, batched edge uplinks skew who
+//!    gets aggregated compared to lockstep merging, and whether the
+//!    availability-aware samplers flatten that skew.
+//!
+//! Output: an aligned table on stdout plus
+//! `results/BENCH_fleet_clocks.json` recording the full grid for
+//! EXPERIMENTS.md and CI trending.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use timelyfl::benchkit::{self, Bench};
+use timelyfl::config::parse as cfgparse;
+use timelyfl::experiment::scenario;
+use timelyfl::metrics::report::Table;
+use timelyfl::util::json::Json;
+use timelyfl::util::stats;
+
+fn main() -> Result<()> {
+    benchkit::banner(
+        "fleet_clocks",
+        "edge-aggregator clocks (region vs shared) x sampler, participation Gini",
+    );
+    let bench = Bench::new()?;
+
+    // fleet_1m base, downscaled by the bench-scale knob: the fast profile
+    // keeps the same markov churn + tree tier at a CI-sized population.
+    let mut base = scenario::resolve("fleet_1m")?.config()?;
+    if bench.scale.fast {
+        base.population = 20_000;
+        base.concurrency = 64;
+    }
+    base.rounds = bench.scale.rounds(4).min(4);
+    base.eval_every = base.rounds;
+
+    // A fixed, positive flush window (not `auto`): the A/B claim needs
+    // every region's deadline to actually arm, and aligned windows make
+    // several regions flush between two aggregation boundaries — the
+    // batched-arrival regime where root merges < edge flushes.
+    let region_overrides: &[(&str, &str)] = &[
+        ("hier_clock", "region"),
+        ("hier_flush_secs", "60"),
+        ("hier_uplink", "priced"),
+        ("hier_up_ratio", "0.25"),
+    ];
+
+    let samplers = ["uniform", "stay-prob", "drop-aware"];
+    let clocks = ["shared", "region"];
+
+    let mut table = Table::new(&[
+        "sampler",
+        "clock",
+        "particip_gini",
+        "mean_particip",
+        "edge_flushes",
+        "uplink_wait_s",
+        "root_merges",
+        "wall_secs",
+    ]);
+    let mut points = Vec::new();
+
+    for sampler in samplers {
+        for clock in clocks {
+            let mut cfg = base.clone();
+            cfgparse::apply_override(&mut cfg, "sampler", sampler)?;
+            if clock == "region" {
+                for (k, v) in region_overrides {
+                    cfgparse::apply_override(&mut cfg, k, v)?;
+                }
+            }
+            cfg.validate()?;
+            eprintln!("  {sampler} / {clock} ...");
+            let start = Instant::now();
+            let report = bench.run(cfg)?;
+            let wall = start.elapsed().as_secs_f64();
+            let gini = stats::gini(&report.participation);
+            let mean_particip = stats::mean(&report.participation);
+
+            if clock == "shared" {
+                // The lockstep anchor: no region may hold or price anything.
+                anyhow::ensure!(
+                    report.edge_flushes == 0
+                        && report.edge_uplink_wait_secs == 0.0
+                        && report.edge_root_merges == 0,
+                    "{sampler}/shared: edge counters must be exactly zero"
+                );
+            } else {
+                // The clocked regime: deadlines fired, the uplink cost the
+                // root real simulated time, and arrivals batched.
+                anyhow::ensure!(
+                    report.edge_flushes > 0,
+                    "{sampler}/region: no region ever flushed"
+                );
+                anyhow::ensure!(
+                    report.edge_uplink_wait_secs > 0.0,
+                    "{sampler}/region: priced uplink reported zero wait"
+                );
+                anyhow::ensure!(
+                    report.edge_root_merges < report.edge_flushes,
+                    "{sampler}/region: expected batched arrivals \
+                     (root merges {} !< edge flushes {})",
+                    report.edge_root_merges,
+                    report.edge_flushes
+                );
+            }
+
+            table.row(vec![
+                sampler.into(),
+                clock.into(),
+                format!("{gini:.4}"),
+                format!("{mean_particip:.3}"),
+                report.edge_flushes.to_string(),
+                format!("{:.1}", report.edge_uplink_wait_secs),
+                report.edge_root_merges.to_string(),
+                format!("{wall:.2}"),
+            ]);
+            points.push(Json::obj(vec![
+                ("sampler", Json::str(sampler)),
+                ("clock", Json::str(clock)),
+                ("participation_gini", Json::num(gini)),
+                ("mean_participation", Json::num(mean_particip)),
+                ("edge_flushes", Json::num(report.edge_flushes as f64)),
+                (
+                    "edge_uplink_wait_secs",
+                    Json::num(report.edge_uplink_wait_secs),
+                ),
+                ("edge_root_merges", Json::num(report.edge_root_merges as f64)),
+                ("rounds", Json::num(report.total_rounds as f64)),
+                ("sim_secs", Json::num(report.sim_secs)),
+                ("wall_secs", Json::num(wall)),
+            ]));
+        }
+    }
+
+    let rendered = table.render();
+    println!("{rendered}");
+    println!(
+        "shape target: shared-clock edge counters pinned at zero; region clocks\n\
+         show uplink wait > 0 with root merges < edge flushes (batched arrivals);\n\
+         availability-aware samplers should not worsen Gini under region clocks."
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet_clocks")),
+        ("scenario", Json::str("fleet_1m")),
+        ("population", Json::num(base.population as f64)),
+        ("hier_flush_secs", Json::num(60.0)),
+        ("hier_up_ratio", Json::num(0.25)),
+        ("points", Json::arr(points)),
+    ]);
+    benchkit::write_result("BENCH_fleet_clocks.json", &json.to_string());
+    benchkit::write_result("fleet_clocks.txt", &rendered);
+    Ok(())
+}

@@ -94,8 +94,15 @@ pub struct RunConfig {
     /// wall-clock independent of idle fleet size (the 10^6-client switch).
     pub fleet_core: FleetCore,
     /// Aggregation topology between clients and the root coordinator
-    /// (`hierarchy = flat | two-tier` + `hier_regions` / `hier_fan_in` /
-    /// `hier_forward`). Flat is the historical path.
+    /// (`hierarchy = flat | tree` + `hier_regions` / `hier_fan_in` /
+    /// `hier_forward` / `hier_depth`; the historical `two-tier` spelling
+    /// parses as the depth-2 tree). Flat is the historical path. Edge
+    /// aggregators can additionally run on their own clocks
+    /// (`hier_clock = region` + `hier_flush_secs` / `hier_uplink` /
+    /// `hier_up_ratio`): each region holds its partial until a flush
+    /// deadline and the edge->root leg prices through the network
+    /// registry. The default `hier_clock = shared` is byte-identical to
+    /// the pre-clock behaviour.
     pub hierarchy: HierarchyConfig,
     /// Model-dissemination (downlink) pricing + bandwidth-aware workload
     /// rebalancing (`network = free | priced` + `net_down_ratio` /

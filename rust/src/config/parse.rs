@@ -8,7 +8,7 @@ use super::RunConfig;
 use crate::aggregation::ServerOptKind;
 use crate::availability::AvailabilityKind;
 use crate::coordinator::{registry, sampler};
-use crate::fleet::{FleetCore, ForwardPolicy, Topology};
+use crate::fleet::{ClockMode, FleetCore, ForwardPolicy, Topology};
 
 /// Every key `apply_override` accepts, in match-arm order — the single
 /// source for the unknown-key error (same courtesy the preset, strategy
@@ -65,6 +65,11 @@ pub const KNOWN_KEYS: &[&str] = &[
     "hier_regions",
     "hier_fan_in",
     "hier_forward",
+    "hier_depth",
+    "hier_clock",
+    "hier_flush_secs",
+    "hier_uplink",
+    "hier_up_ratio",
     "network",
     "net_down_ratio",
     "net_stale_correction",
@@ -182,6 +187,26 @@ pub fn apply_override(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()>
         "hier_regions" => cfg.hierarchy.regions = v.parse()?,
         "hier_fan_in" => cfg.hierarchy.fan_in = v.parse()?,
         "hier_forward" => cfg.hierarchy.forward = ForwardPolicy::parse(v)?,
+        "hier_depth" => cfg.hierarchy.depth = v.parse()?,
+        "hier_clock" => cfg.hierarchy.clock = ClockMode::parse(v)?,
+        // Per-region flush deadline (one key, two modes, like
+        // `sampler_horizon`): `auto` calibrates each region's window from
+        // its HorizonEstimator EWMA; a number pins a fixed window (and
+        // turns calibration off).
+        "hier_flush_secs" => {
+            if v.eq_ignore_ascii_case("auto") {
+                cfg.hierarchy.flush_auto = true;
+            } else {
+                cfg.hierarchy.flush_secs = v.parse().with_context(|| {
+                    format!("hier_flush_secs: expected \"auto\" or seconds, got {v:?}")
+                })?;
+                cfg.hierarchy.flush_auto = false;
+            }
+        }
+        // The edge->root leg prices through the same NetworkModel registry
+        // as the downlink, so aliases canonicalize identically.
+        "hier_uplink" => cfg.hierarchy.uplink = crate::network::resolve(v)?.name.to_string(),
+        "hier_up_ratio" => cfg.hierarchy.up_ratio = v.parse()?,
         "network" => cfg.network.model = crate::network::resolve(v)?.name.to_string(),
         "net_down_ratio" => cfg.network.down_ratio = v.parse()?,
         "net_stale_correction" => {
@@ -395,7 +420,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.fleet_core, crate::fleet::FleetCore::Lazy);
-        assert_eq!(cfg.hierarchy.topology, crate::fleet::Topology::TwoTier);
+        // The historical "two-tier" spelling parses as the depth-2 tree.
+        assert_eq!(cfg.hierarchy.topology, crate::fleet::Topology::Tree);
+        assert_eq!(cfg.hierarchy.depth, 2);
         assert_eq!(cfg.hierarchy.regions, 32);
         assert_eq!(cfg.hierarchy.fan_in, 64);
         assert_eq!(cfg.hierarchy.forward, crate::fleet::ForwardPolicy::Uniform);
@@ -405,6 +432,46 @@ mod tests {
         assert!(apply_cli(&mut cfg, "fleet_core=turbo").is_err());
         assert!(apply_cli(&mut cfg, "hierarchy=ring").is_err());
         assert!(apply_cli(&mut cfg, "hier_forward=median").is_err());
+    }
+
+    #[test]
+    fn region_clock_overrides() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.hierarchy.clock, crate::fleet::ClockMode::Shared);
+        apply_file(
+            &mut cfg,
+            "hierarchy = tree\n\
+             hier_depth = 3\n\
+             hier_clock = region\n\
+             hier_flush_secs = 120\n\
+             hier_uplink = priced\n\
+             hier_up_ratio = 0.4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.hierarchy.topology, crate::fleet::Topology::Tree);
+        assert_eq!(cfg.hierarchy.depth, 3);
+        assert_eq!(cfg.hierarchy.clock, crate::fleet::ClockMode::Region);
+        assert_eq!(cfg.hierarchy.flush_secs, 120.0);
+        assert!(!cfg.hierarchy.flush_auto);
+        assert_eq!(cfg.hierarchy.uplink, "priced");
+        assert_eq!(cfg.hierarchy.up_ratio, 0.4);
+        cfg.validate().unwrap();
+        // `auto` calibrates per-region windows; a number turns it back off.
+        apply_cli(&mut cfg, "hier_flush_secs=AUTO").unwrap();
+        assert!(cfg.hierarchy.flush_auto);
+        apply_cli(&mut cfg, "hier_flush_secs=45").unwrap();
+        assert!(!cfg.hierarchy.flush_auto);
+        assert_eq!(cfg.hierarchy.flush_secs, 45.0);
+        // Uplink aliases canonicalize through the network registry.
+        apply_cli(&mut cfg, "hier_uplink=INSTANT").unwrap();
+        assert_eq!(cfg.hierarchy.uplink, "free");
+        assert!(apply_cli(&mut cfg, "hier_clock=lockstep").is_err());
+        assert!(apply_cli(&mut cfg, "hier_uplink=bogus").is_err());
+        assert!(apply_cli(&mut cfg, "hier_flush_secs=soonish").is_err());
+        // Region clocks demand a tiered topology: validate, not parse,
+        // rejects the flat combination.
+        apply_cli(&mut cfg, "hierarchy=flat").unwrap();
+        assert!(cfg.validate().is_err(), "region clocks need a tiered topology");
     }
 
     #[test]

@@ -52,7 +52,10 @@ use super::{local_time, Recorder, Simulation};
 use crate::aggregation::Contribution;
 use crate::availability::{AvailabilityModel, BandwidthSignal, SEED_SALT};
 use crate::devices::RoundConditions;
-use crate::fleet::{ClientTables, FleetCore, LazyAvailability};
+use crate::fleet::{
+    root_merge, ClientTables, FleetCore, HierarchyConfig, LazyAvailability, PartialAggregate,
+    RegionClock,
+};
 use crate::metrics::events::{AggWeight, ClientWorkload, DropCause, EventSink, RunEvent};
 use crate::scheduling::{AggWeigher, HorizonEstimator, WarmLedger};
 use crate::metrics::RunReport;
@@ -100,6 +103,12 @@ pub enum EngineEvent {
     /// A strategy-scheduled timer (deadline-gated protocols re-arm it from
     /// [`EventStrategy::on_alarm`]).
     Alarm,
+    /// A region's edge-aggregator flush deadline (`hier_clock = region`,
+    /// event-driven strategies only — round-stepped strategies poll
+    /// deadlines at their aggregation boundaries instead, so their Tick
+    /// discipline never sees this variant). Valid iff `gen` still matches
+    /// the region clock's window generation.
+    EdgeFlush { region: usize, gen: u64 },
 }
 
 /// What a round-stepped strategy hands back for one aggregation round.
@@ -295,6 +304,56 @@ impl SnapshotStore {
     }
 }
 
+/// Engine-side region-clock plumbing (`hier_clock = region` only). The
+/// engine holds `Option<EdgeClocks>` and default runs build `None`, which
+/// is the byte-identity anchor: with no edge state, `hier_aggregate`
+/// reduces to the historical synchronous `aggregate_jobs` call and every
+/// edge counter stays at zero.
+struct EdgeClocks {
+    hierarchy: HierarchyConfig,
+    /// One independent flush clock per region (`client_id % regions`).
+    clocks: Vec<RegionClock>,
+    /// The priced edge→root leg (`hier_uplink`), resolved through the
+    /// `NetworkModel` registry with `hier_up_ratio` as the ratio knob.
+    uplink: Box<dyn NetworkModel>,
+    /// Flushed partials in transit to the root: (arrival time on the
+    /// shared sim clock, partial). Drained in insertion order once ripe.
+    in_transit: Vec<(SimTime, PartialAggregate)>,
+    /// Per-region (sum, count) of the open window's contributors'
+    /// last-known effective upload seconds — the uplink pricing base.
+    /// Reset at flush.
+    window_tcom: Vec<(f64, usize)>,
+    /// Last effective upload seconds observed per client (recorded where
+    /// dispatch timing truth is computed). Deterministic: no extra RNG.
+    last_tcom: Vec<f64>,
+}
+
+impl EdgeClocks {
+    fn new(hierarchy: &HierarchyConfig, population: usize) -> Result<EdgeClocks> {
+        Ok(EdgeClocks {
+            hierarchy: hierarchy.clone(),
+            clocks: (0..hierarchy.regions).map(|_| RegionClock::new()).collect(),
+            uplink: hierarchy.uplink_model()?,
+            in_transit: Vec::new(),
+            window_tcom: vec![(0.0, 0); hierarchy.regions],
+            last_tcom: vec![0.0; population],
+        })
+    }
+
+    /// Flush `region` at `clock` (its deadline): price the uplink from the
+    /// mean effective upload time of the window's contributors and put the
+    /// partial in transit. Returns the priced uplink seconds, or `None` if
+    /// the region held nothing.
+    fn flush_region(&mut self, region: usize, clock: SimTime) -> Option<f64> {
+        let partial = self.clocks[region].flush(clock)?;
+        let (sum, count) = std::mem::take(&mut self.window_tcom[region]);
+        let base = if count == 0 { 0.0 } else { sum / count as f64 };
+        let up = self.uplink.downlink_secs(base);
+        self.in_transit.push((clock + up, partial));
+        Some(up)
+    }
+}
+
 /// Shared per-run state + lifecycle driver. One engine drives one run.
 pub struct SimEngine<'a> {
     pub sim: &'a Simulation,
@@ -362,6 +421,18 @@ pub struct SimEngine<'a> {
     /// the Recorder's run totals).
     downlink_wait_pending: f64,
     stale_starts_pending: u64,
+    /// Region-clock state (`hier_clock = region`); `None` on default runs.
+    edge: Option<EdgeClocks>,
+    /// Edge flushes / priced uplink-wait seconds / root merges accumulated
+    /// since the last completed round (drained like the network counters).
+    edge_flushes_pending: u64,
+    edge_uplink_wait_pending: f64,
+    edge_root_merges_pending: u64,
+    /// True once an event-driven strategy owns the queue (`drive_events`).
+    /// Round-stepped drivers pop their own Ticks with nothing else in the
+    /// queue, so `EdgeFlush` alarms are only ever scheduled when this is
+    /// set; round strategies poll deadlines at aggregation boundaries.
+    event_driven: bool,
     stop: bool,
     sink: Option<&'a mut dyn EventSink>,
 }
@@ -389,6 +460,11 @@ impl<'a> SimEngine<'a> {
             FleetCore::Eager => None,
         };
         let net = cfg.network.build()?;
+        let edge = if cfg.hierarchy.region_clocked() {
+            Some(EdgeClocks::new(&cfg.hierarchy, cfg.population)?)
+        } else {
+            None
+        };
         Ok(SimEngine {
             sim,
             rng,
@@ -414,6 +490,11 @@ impl<'a> SimEngine<'a> {
             version_born: BTreeMap::new(),
             downlink_wait_pending: 0.0,
             stale_starts_pending: 0,
+            edge,
+            edge_flushes_pending: 0,
+            edge_uplink_wait_pending: 0.0,
+            edge_root_merges_pending: 0,
+            event_driven: false,
             stop: false,
             sink,
         })
@@ -612,6 +693,149 @@ impl<'a> SimEngine<'a> {
         }
     }
 
+    /// Aggregate one batch of contributions through the hierarchy — the
+    /// single seam all four strategies call at their aggregation sites.
+    ///
+    /// Under the default `hier_clock = shared` (no edge state) this is
+    /// exactly the historical synchronous call: one
+    /// [`HierarchyConfig::aggregate_jobs`] pass, always `Some`. Under
+    /// `hier_clock = region` the contributions are split into per-region
+    /// partials absorbed by each region's [`RegionClock`]; nothing reaches
+    /// the root until a region's flush deadline passes *and* its priced
+    /// edge→root transfer elapses on the shared sim clock. The return is
+    /// then `Some(update)` only when ripe partials arrived by `now` —
+    /// `None` means "hold the global model this boundary".
+    ///
+    /// `now` is the aggregation boundary's clock (round strategies pass
+    /// the post-advance boundary time, event strategies the flush event
+    /// time). Ripe regions always flush at their *deadline* — not at
+    /// `now` — so a late boundary poll prices and times the uplink
+    /// identically to an exact `EdgeFlush` alarm.
+    pub fn hier_aggregate(
+        &mut self,
+        hierarchy: &HierarchyConfig,
+        template: &ParamVec,
+        contributions: &[Contribution],
+        discount_staleness: bool,
+        now: SimTime,
+    ) -> Option<Update> {
+        if self.edge.is_none() {
+            return Some(hierarchy.aggregate_jobs(
+                template,
+                contributions,
+                discount_staleness,
+                self.sim.cfg.agg_jobs,
+            ));
+        }
+        // 1. Flush every region whose deadline already passed (round
+        //    strategies have no alarms; event strategies can reach a
+        //    boundary between an elapsed deadline and its alarm — the
+        //    alarm then no-ops via the generation guard).
+        self.edge_advance(now);
+        // 2. Absorb this boundary's contributions into their regions,
+        //    arming flush deadlines for newly-opened windows.
+        let event_driven = self.event_driven;
+        {
+            let edge = self.edge.as_mut().expect("checked above");
+            for c in contributions {
+                let region = c.client_id % edge.hierarchy.regions;
+                let cell = &mut edge.window_tcom[region];
+                cell.0 += edge.last_tcom[c.client_id];
+                cell.1 += 1;
+            }
+            let flush_secs = edge.hierarchy.flush_secs;
+            let flush_auto = edge.hierarchy.flush_auto;
+            let partials = edge
+                .hierarchy
+                .region_partials(template, contributions, discount_staleness);
+            for (region, partial) in partials {
+                if let Some(deadline) =
+                    edge.clocks[region].absorb(partial, now, flush_secs, flush_auto)
+                {
+                    if event_driven {
+                        let gen = edge.clocks[region].gen();
+                        self.events
+                            .schedule_at(deadline, EngineEvent::EdgeFlush { region, gen });
+                    }
+                }
+            }
+        }
+        // 3. A zero-length window (uncalibrated `auto` with a 0 fallback)
+        //    ripens at its own boundary — flush it now rather than one
+        //    boundary late.
+        self.edge_advance(now);
+        // 4. Drain in-transit partials that arrived by `now` (insertion
+        //    order) into one root merge.
+        let edge = self.edge.as_mut().expect("checked above");
+        let mut ready = Vec::new();
+        let mut still = Vec::new();
+        for (arrival, partial) in edge.in_transit.drain(..) {
+            if arrival <= now {
+                ready.push(partial);
+            } else {
+                still.push((arrival, partial));
+            }
+        }
+        edge.in_transit = still;
+        if ready.is_empty() {
+            None
+        } else {
+            self.edge_root_merges_pending += 1;
+            Some(root_merge(template, ready))
+        }
+    }
+
+    /// Flush every region whose deadline is at or before `now`, clocked at
+    /// its deadline (see [`Self::hier_aggregate`] for why).
+    fn edge_advance(&mut self, now: SimTime) {
+        let Some(edge) = self.edge.as_mut() else {
+            return;
+        };
+        for region in 0..edge.clocks.len() {
+            if edge.clocks[region].ripe(now) {
+                let deadline = edge.clocks[region]
+                    .deadline()
+                    .expect("ripe region has an armed deadline");
+                if let Some(up) = edge.flush_region(region, deadline) {
+                    self.edge_flushes_pending += 1;
+                    if up > 0.0 {
+                        self.edge_uplink_wait_pending += up;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Handle an `EdgeFlush { region, gen }` alarm (event-driven strategies
+    /// only). Stale alarms — the window already flushed at a boundary poll,
+    /// bumping the generation — no-op via `RegionClock::alarm_matches`.
+    fn on_edge_flush(&mut self, region: usize, gen: u64, now: SimTime) {
+        let Some(edge) = self.edge.as_mut() else {
+            return;
+        };
+        if region >= edge.clocks.len() || !edge.clocks[region].alarm_matches(gen) {
+            return;
+        }
+        // The alarm fires exactly at the armed deadline, so `now` IS the
+        // deadline clock.
+        if let Some(up) = edge.flush_region(region, now) {
+            self.edge_flushes_pending += 1;
+            if up > 0.0 {
+                self.edge_uplink_wait_pending += up;
+            }
+        }
+    }
+
+    /// Record `client`'s effective upload seconds for edge uplink pricing
+    /// (`hier_uplink = priced`). A no-op — zero bookkeeping — outside
+    /// `hier_clock = region`. Called wherever dispatch timing truth is
+    /// computed, so the pricing base is deterministic and costs no RNG.
+    pub fn note_upload_secs(&mut self, client: usize, effective_upload_secs: f64) {
+        if let Some(edge) = self.edge.as_mut() {
+            edge.last_tcom[client] = effective_upload_secs;
+        }
+    }
+
     /// Seed this run's drop ledger from a previous run's harvest
     /// (`--warm-ledger`). Call before the strategy starts; a fresh ledger
     /// is a no-op.
@@ -684,16 +908,28 @@ impl<'a> SimEngine<'a> {
     ) -> Result<()> {
         let sim = self.sim;
         let round = self.completed_rounds;
+        // Placeholder-loss hygiene: a `batch_exec` placeholder finish
+        // carries `mean_loss = NaN` until its ticket is patched at the
+        // flush; if an unpatched one ever leaks into a strategy's round
+        // mean, drop the loss (report `null`) rather than poisoning the
+        // report and every golden fingerprint downstream. Finite losses
+        // pass through bit-identically.
+        let mean_train_loss = mean_train_loss.filter(|l| l.is_finite());
         let dropped = std::mem::take(&mut self.dropped_pending);
         let avail_dropped = std::mem::take(&mut self.avail_dropped_pending);
         let workloads = std::mem::take(&mut self.workloads_pending);
         let agg_weights = std::mem::take(&mut self.agg_weights_pending);
         let downlink_wait_secs = std::mem::take(&mut self.downlink_wait_pending);
         let stale_starts = std::mem::take(&mut self.stale_starts_pending);
+        let edge_flushes = std::mem::take(&mut self.edge_flushes_pending);
+        let edge_uplink_wait_secs = std::mem::take(&mut self.edge_uplink_wait_pending);
+        let edge_root_merges = std::mem::take(&mut self.edge_root_merges_pending);
         // Pure bookkeeping: observed whether or not `sampler_horizon = auto`
         // ever reads it, so calibration-off runs stay byte-identical.
         self.horizon_est.observe(clock);
         self.recorder.note_network(downlink_wait_secs, stale_starts);
+        self.recorder
+            .note_edge(edge_flushes, edge_uplink_wait_secs, edge_root_merges);
         self.recorder.record_round(
             round,
             clock,
@@ -710,6 +946,8 @@ impl<'a> SimEngine<'a> {
             avail_dropped,
             downlink_wait_secs,
             stale_starts,
+            edge_flushes,
+            edge_uplink_wait_secs,
             mean_train_loss,
             workloads,
             agg_weights,
@@ -842,6 +1080,10 @@ impl<'a> SimEngine<'a> {
     pub fn drive_events(&mut self, strat: &mut dyn EventStrategy) -> Result<()> {
         let sim = self.sim;
         let cfg = &sim.cfg;
+        // Event strategies get exact-time edge flushes via EdgeFlush
+        // alarms; round drivers never set this, so their Tick-only queue
+        // discipline is preserved.
+        self.event_driven = true;
         // Seed the queue with each client's first availability transition
         // (the chain re-schedules itself as transitions are processed).
         // Always-on schedules nothing.
@@ -934,6 +1176,14 @@ impl<'a> SimEngine<'a> {
                     if self.stop {
                         break;
                     }
+                }
+                // Engine-internal: flush the region at its deadline (the
+                // partial then rides the priced uplink; the next
+                // aggregation boundary drains arrivals). No strategy hook
+                // — strategies observe region clocks only through
+                // `hier_aggregate`'s return.
+                EngineEvent::EdgeFlush { region, gen } => {
+                    self.on_edge_flush(region, gen, now);
                 }
             }
         }
@@ -1049,6 +1299,7 @@ impl<'a> SimEngine<'a> {
         let now = self.events.now();
         let cond = sim.fleet.round_conditions(&mut self.rng);
         let t = self.truth_at(client, &cond, now);
+        self.note_upload_secs(client, t.t_com);
         // Model dissemination first: the global version rides the downlink
         // before any training starts. 0.0 under `network = free`, so the
         // scheduled finish time is unchanged there bit-for-bit.
@@ -1257,6 +1508,9 @@ impl<'a> SimEngine<'a> {
             avail_dropped_pending,
             downlink_wait_pending,
             stale_starts_pending,
+            edge_flushes_pending,
+            edge_uplink_wait_pending,
+            edge_root_merges_pending,
             ..
         } = self;
         for pd in pending.into_values() {
@@ -1265,9 +1519,16 @@ impl<'a> SimEngine<'a> {
             }
         }
         recorder.absorb_tail_drops(dropped_pending, avail_dropped_pending);
-        // Downlink waits / stale starts accrued after the last completed
-        // round fold into the run totals (no round record to carry them).
+        // Downlink waits / stale starts / edge flushes accrued after the
+        // last completed round fold into the run totals (no round record to
+        // carry them). Partials still held or in transit when the run ends
+        // simply never arrive — like an in-flight client at the deadline.
         recorder.note_network(downlink_wait_pending, stale_starts_pending);
+        recorder.note_edge(
+            edge_flushes_pending,
+            edge_uplink_wait_pending,
+            edge_root_merges_pending,
+        );
         recorder.finish(
             strategy_name,
             sim,

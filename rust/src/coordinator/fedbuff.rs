@@ -167,14 +167,16 @@ impl EventStrategy for FedBuff {
             // the protocol's own staleness discount applies on top inside
             // aggregation — the two compose multiplicatively.
             eng.weigh(&mut self.buffer);
-            let avg = self.hierarchy.aggregate_jobs(
-                &self.global.params,
-                &self.buffer,
-                true,
-                eng.sim.cfg.agg_jobs,
-            );
+            // Under `hier_clock = region` the flush hands the buffer to
+            // the edges and the root may see nothing this round (`None`);
+            // the version still advances — a flush is a flush — so
+            // staleness accounting matches the shared-clock protocol.
             let mut params = self.global.params.clone();
-            self.server_opt.apply(&mut params, &avg);
+            if let Some(avg) =
+                eng.hier_aggregate(&self.hierarchy, &self.global.params, &self.buffer, true, now)
+            {
+                self.server_opt.apply(&mut params, &avg);
+            }
             self.global = VersionedParams {
                 version: self.global.version + 1,
                 params,

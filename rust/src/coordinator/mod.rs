@@ -189,6 +189,14 @@ pub struct Recorder {
     /// stay exactly zero under `network = free`.
     downlink_wait_secs: f64,
     stale_starts: u64,
+    /// Region-clock totals (`crate::fleet::RegionClock`): edge-aggregator
+    /// flushes, simulated seconds partials spent on the priced edge→root
+    /// uplink, and root merges assembled from arrived partials. Drained
+    /// like the network counters; all exactly zero under the default
+    /// `hier_clock = shared`.
+    edge_flushes: u64,
+    edge_uplink_wait_secs: f64,
+    edge_root_merges: u64,
 }
 
 impl Recorder {
@@ -204,6 +212,9 @@ impl Recorder {
             tail_avail_dropped: 0,
             downlink_wait_secs: 0.0,
             stale_starts: 0,
+            edge_flushes: 0,
+            edge_uplink_wait_secs: 0.0,
+            edge_root_merges: 0,
         }
     }
 
@@ -212,6 +223,15 @@ impl Recorder {
     pub fn note_network(&mut self, wait_secs: f64, stale: u64) {
         self.downlink_wait_secs += wait_secs;
         self.stale_starts += stale;
+    }
+
+    /// Accumulate region-clock totals (edge flushes, uplink-wait seconds,
+    /// root merges) into the run-level counters. All-zero calls — every
+    /// call under the default `hier_clock = shared` — change nothing.
+    pub fn note_edge(&mut self, flushes: u64, uplink_wait_secs: f64, root_merges: u64) {
+        self.edge_flushes += flushes;
+        self.edge_uplink_wait_secs += uplink_wait_secs;
+        self.edge_root_merges += root_merges;
     }
 
     /// Record one aggregation round's participants + stats. Deadline /
@@ -227,6 +247,10 @@ impl Recorder {
         avail_dropped: usize,
         mean_train_loss: Option<f64>,
     ) {
+        // Defense in depth behind the engine's own filter: a non-finite
+        // loss (an unpatched batch-exec placeholder's NaN) records as
+        // `None`, never as a poison value in the report.
+        let mean_train_loss = mean_train_loss.filter(|l| l.is_finite());
         self.participation.record_round(participant_ids.iter().copied());
         self.rounds.push(RoundRecord {
             round,
@@ -334,6 +358,9 @@ impl Recorder {
             tail_avail_dropped: self.tail_avail_dropped,
             downlink_wait_secs: self.downlink_wait_secs,
             stale_starts: self.stale_starts,
+            edge_flushes: self.edge_flushes,
+            edge_uplink_wait_secs: self.edge_uplink_wait_secs,
+            edge_root_merges: self.edge_root_merges,
         }
     }
 }
@@ -365,5 +392,31 @@ mod tests {
         assert!(rec.rounds.is_empty());
         assert_eq!(rec.tail_dropped, 1);
         assert_eq!(rec.tail_avail_dropped, 7);
+    }
+
+    #[test]
+    fn non_finite_round_loss_records_as_none() {
+        // An unpatched batch-exec placeholder carries mean_loss = NaN; if
+        // one ever leaks into a round mean the record must say "no loss",
+        // not poison downstream fingerprints.
+        let mut rec = Recorder::new(4);
+        rec.record_round(0, 1.0, &[0], 0, 0, Some(f64::NAN));
+        rec.record_round(1, 2.0, &[1], 0, 0, Some(f64::INFINITY));
+        rec.record_round(2, 3.0, &[2], 0, 0, Some(1.25));
+        assert_eq!(rec.rounds[0].mean_train_loss, None);
+        assert_eq!(rec.rounds[1].mean_train_loss, None);
+        assert_eq!(rec.rounds[2].mean_train_loss, Some(1.25));
+    }
+
+    #[test]
+    fn note_edge_accumulates_into_run_totals() {
+        let mut rec = Recorder::new(4);
+        rec.note_edge(0, 0.0, 0); // the shared-clock no-op
+        assert_eq!(rec.edge_flushes, 0);
+        rec.note_edge(3, 1.5, 1);
+        rec.note_edge(2, 0.5, 1);
+        assert_eq!(rec.edge_flushes, 5);
+        assert!((rec.edge_uplink_wait_secs - 2.0).abs() < 1e-12);
+        assert_eq!(rec.edge_root_merges, 2);
     }
 }

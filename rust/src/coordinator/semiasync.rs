@@ -112,14 +112,16 @@ impl SemiAsync {
         // Weigher first (uniform rewrites the 1.0 already there), then the
         // protocol's staleness discount applies on top inside aggregation.
         eng.weigh(&mut self.buffer);
-        let avg = self.hierarchy.aggregate_jobs(
-            &self.global.params,
-            &self.buffer,
-            true,
-            eng.sim.cfg.agg_jobs,
-        );
+        // Under `hier_clock = region` the window's buffer goes to the
+        // edges and the root may see nothing this flush (`None`); the
+        // version still advances — the cadence defines the round — so
+        // staleness accounting matches the shared-clock protocol.
         let mut params = self.global.params.clone();
-        self.server_opt.apply(&mut params, &avg);
+        if let Some(avg) =
+            eng.hier_aggregate(&self.hierarchy, &self.global.params, &self.buffer, true, now)
+        {
+            self.server_opt.apply(&mut params, &avg);
+        }
         self.global = VersionedParams {
             version: self.global.version + 1,
             params,

@@ -75,6 +75,7 @@ impl RoundStrategy for SyncFl {
             // truth_at folds in the correlated process's
             // degrade-before-drop bandwidth factor (exactly 1.0 elsewhere).
             let t = eng.truth_at(c, &cond, now);
+            eng.note_upload_secs(c, t.t_com);
             // Downlink dissemination leg first (0.0 under `network = free`):
             // the slowest client's wait now includes receiving the model.
             let down = eng.price_downlink(t.t_com);
@@ -125,12 +126,20 @@ impl RoundStrategy for SyncFl {
             });
         }
 
+        // Under `hier_clock = region` the boundary clock is the round's
+        // end (`now + round_secs`) and the engine may hold everything at
+        // the edges (returning `None`).
         if !contributions.is_empty() {
             eng.weigh(&mut contributions);
-            let avg =
-                self.hierarchy
-                    .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);
-            self.server_opt.apply(&mut self.global, &avg);
+            if let Some(avg) = eng.hier_aggregate(
+                &self.hierarchy,
+                &self.global,
+                &contributions,
+                false,
+                now + round_secs,
+            ) {
+                self.server_opt.apply(&mut self.global, &avg);
+            }
         }
         let mean_train_loss = if participant_ids.is_empty() {
             None

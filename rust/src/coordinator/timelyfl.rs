@@ -146,6 +146,7 @@ impl RoundStrategy for TimelyFl {
             // throughput, so a destabilizing region shows up as deadline
             // misses the scheduler could not see coming.
             let t = eng.truth_at(*c, cond, now);
+            eng.note_upload_secs(*c, t.t_com);
             // Model dissemination: the round's global version rides the
             // downlink before training starts (full model even for partial
             // training — partial ratios prune what the CLIENT uploads, not
@@ -203,13 +204,16 @@ impl RoundStrategy for TimelyFl {
 
         // (6) aggregate; the engine advances the shared clock by T_k.
         // The configured weigher rescores every contribution first
-        // (`weigher = uniform` rewrites the 1.0 already there).
+        // (`weigher = uniform` rewrites the 1.0 already there). Under
+        // `hier_clock = region` the boundary clock is `now + t_k` and the
+        // engine may hold everything at the edges (returning `None`).
         if !contributions.is_empty() {
             eng.weigh(&mut contributions);
-            let avg =
-                self.hierarchy
-                    .aggregate_jobs(&self.global, &contributions, false, cfg.agg_jobs);
-            self.server_opt.apply(&mut self.global, &avg);
+            if let Some(avg) =
+                eng.hier_aggregate(&self.hierarchy, &self.global, &contributions, false, now + t_k)
+            {
+                self.server_opt.apply(&mut self.global, &avg);
+            }
         }
         let mean_train_loss = if participant_ids.is_empty() {
             None

@@ -14,6 +14,12 @@
 //! Seed replication: job `k` of a cell runs the cell's config with
 //! `seed = cfg.seed + k` (wrapping). Aggregation to [`CellSummary`] happens
 //! after the queue drains, in cell order.
+//!
+//! Warm-ledger sweeps (`--warm-ledger`) parallelize too: cells run in
+//! order with a barrier between them, every replicate of a cell seeds from
+//! the same cumulative ledger snapshot, and after the cell drains each
+//! job's increment folds back in seed order (`WarmLedger::fold_delta`) —
+//! so `--jobs J` is byte-identical to `--jobs 1` by construction.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -246,12 +252,13 @@ impl ExperimentRunner {
     }
 
     /// Carry one drop ledger (per-client delivered/churned counters) across
-    /// the whole cell × seed matrix, in job order, so evidence-based
-    /// policies (`drop-aware`, `fair-cap`, the `sched-joint` weigher)
-    /// warm-start in later cells (`--warm-ledger`). The ledger is shared
-    /// mutable state threaded run-to-run, so the sweep is forced SERIAL —
-    /// `jobs` is ignored while this is on (output order was already
-    /// job-order either way).
+    /// the cell matrix, cell by cell, so evidence-based policies
+    /// (`drop-aware`, `fair-cap`, the `sched-joint` weigher) warm-start in
+    /// later cells (`--warm-ledger`). Cells are a barrier: every replicate
+    /// of a cell seeds from the snapshot accumulated over the PRIOR cells,
+    /// runs under the normal `jobs` parallelism, and after the cell drains
+    /// the replicates' increments fold into the cumulative ledger in seed
+    /// order (`WarmLedger::fold_delta`) — deterministic for any `jobs`.
     pub fn warm_ledger(mut self, on: bool) -> Self {
         self.warm_ledger = on;
         self
@@ -265,9 +272,9 @@ impl ExperimentRunner {
 
     /// Run the full matrix; each job is one `Simulation::run` (with an
     /// event sink when an events dir is configured). With
-    /// [`warm_ledger`](Self::warm_ledger) on, the jobs run serially in
-    /// order and one drop ledger carries over run-to-run via
-    /// `Simulation::run_warm`.
+    /// [`warm_ledger`](Self::warm_ledger) on, cells run in order with a
+    /// barrier between them and one drop ledger carries cell-to-cell via
+    /// `Simulation::run_warm` + `WarmLedger::fold_delta`.
     pub fn run(&self, grid: &SweepGrid) -> Result<SweepResult> {
         let cells = grid.cells()?;
         let jobs = cell_jobs(&cells, self.seeds);
@@ -277,26 +284,40 @@ impl ExperimentRunner {
         }
         let events_dir = self.events_dir.as_deref();
         let flat = if self.warm_ledger {
-            // Forced-serial: the ledger is mutable state shared by every
-            // run, so job i+1 cannot start before job i harvests into it.
-            let worker = self.make_worker()?;
-            let (manifest, client) = &worker;
-            let mut ledger = WarmLedger::default();
-            jobs.iter()
-                .enumerate()
-                .map(|(i, job)| {
-                    let mut cfg = job.cell.cfg.clone();
-                    cfg.seed = job.seed;
-                    let sim = Simulation::with_client(cfg, manifest, client)?;
-                    match events_dir {
-                        Some(dir) => {
-                            run_with_event_file(&sim, dir, job, Some(&mut ledger))
-                        }
-                        None => sim.run_warm(None, &mut ledger),
-                    }
-                    .with_context(|| format!("sweep job {i} ({})", job.cell.label()))
-                })
-                .collect::<Result<Vec<_>>>()?
+            // Per-cell barrier: every replicate of a cell seeds from the
+            // same cumulative snapshot and runs under the normal `jobs`
+            // parallelism; the replicates' increments then fold back in
+            // seed order, so the cumulative ledger — and therefore every
+            // downstream run — is independent of worker scheduling.
+            let mut cumulative = WarmLedger::default();
+            let mut flat = Vec::with_capacity(jobs.len());
+            for cell_jobs in jobs.chunks(self.seeds) {
+                let snapshot = cumulative.clone();
+                let outcomes = run_queue(
+                    self.jobs,
+                    cell_jobs,
+                    || self.make_worker(),
+                    |worker, job| {
+                        let (manifest, client) = &*worker;
+                        let mut cfg = job.cell.cfg.clone();
+                        cfg.seed = job.seed;
+                        let sim = Simulation::with_client(cfg, manifest, client)?;
+                        let mut local = snapshot.clone();
+                        let report = match events_dir {
+                            Some(dir) => {
+                                run_with_event_file(&sim, dir, job, Some(&mut local))?
+                            }
+                            None => sim.run_warm(None, &mut local)?,
+                        };
+                        Ok((report, local))
+                    },
+                )?;
+                for (report, harvest) in outcomes {
+                    cumulative.fold_delta(&snapshot, &harvest);
+                    flat.push(report);
+                }
+            }
+            flat
         } else {
             run_queue(
                 self.jobs,

@@ -249,6 +249,35 @@ pub static SCENARIOS: &[ScenarioSpec] = &[
             ("hier_regions", "2"),
         ],
     },
+    ScenarioSpec {
+        name: "fleet_tree",
+        aliases: &["tree"],
+        summary: "fleet_50k on a depth-3 tree with region-clocked edge aggregators \
+                  (auto-calibrated flush windows, priced edge->root uplink) — the \
+                  edge-clock testbed; `--set hier_clock=shared` flips back to the \
+                  byte-identical lockstep reference",
+        preset: Some("kws_fedavg"),
+        overrides: &[
+            ("population", "50000"),
+            ("concurrency", "64"),
+            ("rounds", "4"),
+            ("eval_every", "4"),
+            ("eval_batches", "1"),
+            ("steps_per_epoch", "1"),
+            ("max_local_epochs", "2"),
+            ("sim_model_bytes", "3.2e5"),
+            ("availability", "markov"),
+            ("fleet_core", "lazy"),
+            ("hierarchy", "tree"),
+            ("hier_regions", "4"),
+            ("hier_fan_in", "2"),
+            ("hier_depth", "3"),
+            ("hier_clock", "region"),
+            ("hier_flush_secs", "auto"),
+            ("hier_uplink", "priced"),
+            ("hier_up_ratio", "0.25"),
+        ],
+    },
 ];
 
 /// Case-insensitive lookup by canonical name or alias.
@@ -354,13 +383,15 @@ mod tests {
 
     #[test]
     fn fleet_scenarios_select_the_lazy_core_and_the_tier() {
-        use crate::fleet::{FleetCore, Topology};
+        use crate::fleet::{ClockMode, FleetCore, Topology};
         let big = resolve("million").unwrap().config().unwrap();
         assert_eq!(big.population, 1_000_000);
         assert_eq!(big.fleet_core, FleetCore::Lazy);
-        assert_eq!(big.hierarchy.topology, Topology::TwoTier);
+        assert_eq!(big.hierarchy.topology, Topology::Tree);
+        assert_eq!(big.hierarchy.depth, 2, "two-tier spelling is the depth-2 tree");
         assert_eq!(big.hierarchy.regions, 32);
         assert_eq!(big.hierarchy.fan_in, 64);
+        assert_eq!(big.hierarchy.clock, ClockMode::Shared, "lockstep stays the default");
         assert_eq!(big.availability.kind, AvailabilityKind::Markov);
 
         let small = resolve("fleet_50k").unwrap().config().unwrap();
@@ -368,5 +399,17 @@ mod tests {
         assert_eq!(small.fleet_core, FleetCore::Lazy);
         assert_eq!(small.hierarchy.regions, 2);
         assert_eq!(small.hierarchy.fan_in, 0, "unbounded fan-in");
+        assert_eq!(small.hierarchy.clock, ClockMode::Shared);
+
+        let tree = resolve("fleet_tree").unwrap().config().unwrap();
+        assert_eq!(tree.population, 50_000);
+        assert_eq!(tree.hierarchy.topology, Topology::Tree);
+        assert_eq!(tree.hierarchy.depth, 3);
+        assert_eq!(tree.hierarchy.regions, 4);
+        assert_eq!(tree.hierarchy.fan_in, 2);
+        assert_eq!(tree.hierarchy.clock, ClockMode::Region);
+        assert!(tree.hierarchy.flush_auto, "flush windows calibrate per region");
+        assert_eq!(tree.hierarchy.uplink, "priced");
+        assert_eq!(tree.hierarchy.up_ratio, 0.25);
     }
 }

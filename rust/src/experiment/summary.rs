@@ -303,6 +303,11 @@ mod tests {
             trainings_avoided: 2,
             tail_dropped: 0,
             tail_avail_dropped: 0,
+            downlink_wait_secs: 0.0,
+            stale_starts: 0,
+            edge_flushes: 0,
+            edge_uplink_wait_secs: 0.0,
+            edge_root_merges: 0,
         }
     }
 

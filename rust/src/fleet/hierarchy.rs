@@ -5,54 +5,83 @@
 //! keep collecting [`Contribution`]s exactly as before and hand the batch
 //! to [`HierarchyConfig::aggregate`] instead of calling
 //! [`average_delta`] directly. With the default flat topology that call
-//! *is* `average_delta`; with `hierarchy = two-tier` the contributions are
-//! routed through per-region edge aggregators (region = `client_id %
-//! regions`, the same assignment correlated churn uses), each edge buffers
-//! at most `fan_in` updates into a [`PartialAggregate`], and the root
-//! merges the partials. All four registered strategies run unmodified
-//! beneath the tier.
+//! *is* `average_delta`; with `hierarchy = tree` (the spelling `two-tier`
+//! still parses) the contributions are routed through per-region edge
+//! aggregators (region = `client_id % regions`, the same assignment
+//! correlated churn uses), each edge buffers at most `fan_in` updates into
+//! a [`PartialAggregate`], `hier_depth - 2` intermediate levels collapse
+//! sibling partials `fan_in` at a time, and the root merges what is left.
+//! All four registered strategies run unmodified beneath the tier.
 //!
 //! Determinism notes:
 //! - A **single** edge group (`hier_regions = 1`, `hier_fan_in = 0`)
 //!   reduces to flat aggregation **bit-exactly**: the edge accumulation
 //!   loop mirrors `average_delta`'s operation order f32-for-f32, and the
 //!   root merge of one partial is a move, not a re-accumulation.
+//! - `hier_depth = 2` (the default) runs ZERO collapse rounds, so the
+//!   generalized tree is bit-exact to the historical two-tier shape.
 //! - Two or more groups under the `weighted` forward policy compute the
 //!   same per-tensor weighted mean but in a different floating-point
-//!   summation order — equal to a few ulps, not bitwise.
+//!   summation order — equal to a few ulps, not bitwise. Extra depth only
+//!   re-groups the same additions, so it stays within ulps too.
 //! - The `uniform` forward policy is deliberately *different semantics*:
 //!   each edge forwards its normalised partial mean and the root averages
 //!   the partial means per covered tensor, so every edge counts equally
 //!   regardless of how many clients reported through it.
+//!
+//! # Region clocks (`hier_clock = region`)
+//!
+//! Under the default `hier_clock = shared` every edge flushes within the
+//! round/flush that produced its contributions — aggregation is one
+//! synchronous pass and nothing below this paragraph runs (that is the
+//! byte-identity anchor, locked by `rust/tests/fleet_equivalence.rs`).
+//! With `hier_clock = region` each edge aggregator gets its own clock: a
+//! [`RegionClock`] holds the region's merged [`PartialAggregate`] until a
+//! per-region flush deadline (`hier_flush_secs`, or `auto` to calibrate
+//! each region's interval from its own [`HorizonEstimator`] EWMA), then
+//! the flushed partial travels the edge→root leg priced by the
+//! [`NetworkModel`] registry (`hier_uplink = free | priced`, ratio
+//! `hier_up_ratio` — the `net_down_ratio` idiom pointed up), arriving at
+//! the root only after its transfer cost elapses on the shared sim clock.
+//! The deadline algebra lives here (artifact-free, tested in
+//! `rust/tests/fleet_properties.rs`); the event plumbing (the engine's
+//! `EdgeFlush` events and in-transit queue) lives in
+//! `coordinator/engine.rs`.
 
 use anyhow::Result;
 
 use crate::aggregation::{average_delta, average_delta_jobs, staleness_discount, Contribution};
 use crate::model::{ParamVec, Update};
+use crate::network::NetworkModel;
+use crate::scheduling::HorizonEstimator;
+use crate::simtime::SimTime;
 
 /// Aggregation topology between clients and the root coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
     /// Every contribution goes straight to the root (the historical path).
     Flat,
-    /// Contributions buffer in per-region edge aggregators that forward
-    /// partial aggregates to the root.
-    TwoTier,
+    /// Contributions buffer in per-region edge aggregators whose partial
+    /// aggregates climb `hier_depth - 2` intermediate levels (fan-in
+    /// reused per level) before the root merge. Depth 2 — the default —
+    /// is exactly the historical two-tier shape, and the old `two-tier`
+    /// spellings parse to this variant.
+    Tree,
 }
 
 impl Topology {
     pub fn parse(s: &str) -> Result<Topology> {
         match s.to_ascii_lowercase().as_str() {
             "flat" => Ok(Topology::Flat),
-            "two-tier" | "two_tier" | "twotier" => Ok(Topology::TwoTier),
-            other => anyhow::bail!("unknown hierarchy topology {other:?} (known: flat, two-tier)"),
+            "tree" | "two-tier" | "two_tier" | "twotier" => Ok(Topology::Tree),
+            other => anyhow::bail!("unknown hierarchy topology {other:?} (known: flat, tree)"),
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Topology::Flat => "flat",
-            Topology::TwoTier => "two-tier",
+            Topology::Tree => "tree",
         }
     }
 }
@@ -88,8 +117,40 @@ impl ForwardPolicy {
     }
 }
 
+/// Whose clock an edge aggregator flushes on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Edges flush inside the round/flush that produced their
+    /// contributions — the historical synchronous behaviour and the
+    /// byte-identity anchor.
+    #[default]
+    Shared,
+    /// Each edge holds its partial until its own flush deadline and ships
+    /// it up a priced uplink (Papaya-style independently-clocked
+    /// aggregators).
+    Region,
+}
+
+impl ClockMode {
+    pub fn parse(s: &str) -> Result<ClockMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "shared" => Ok(ClockMode::Shared),
+            "region" | "edge" => Ok(ClockMode::Region),
+            other => anyhow::bail!("unknown hierarchy clock {other:?} (known: shared, region)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockMode::Shared => "shared",
+            ClockMode::Region => "region",
+        }
+    }
+}
+
 /// Config surface of the aggregation tier (`hierarchy=`, `hier_regions=`,
-/// `hier_fan_in=`, `hier_forward=` overrides).
+/// `hier_fan_in=`, `hier_forward=`, `hier_depth=`, `hier_clock=`,
+/// `hier_flush_secs=`, `hier_uplink=`, `hier_up_ratio=` overrides).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HierarchyConfig {
     pub topology: Topology,
@@ -97,8 +158,29 @@ pub struct HierarchyConfig {
     pub regions: usize,
     /// Max contributions one edge buffers into a single partial aggregate
     /// before cutting the next one; 0 = unbounded (one partial per edge).
+    /// Intermediate tree levels reuse the same fan-in for partials.
     pub fan_in: usize,
     pub forward: ForwardPolicy,
+    /// Tree depth counting the leaf-edge level and the root; 2 (default)
+    /// is the historical two-tier shape and runs zero collapse rounds.
+    pub depth: usize,
+    /// Whose clock the edges flush on; `Shared` (default) is the
+    /// byte-identity anchor and disables everything region-clocked.
+    pub clock: ClockMode,
+    /// Fixed per-region flush interval, seconds (`hier_clock = region`
+    /// only). Also the fallback interval while `auto` has no estimate.
+    pub flush_secs: f64,
+    /// `hier_flush_secs = auto`: calibrate each region's interval from its
+    /// own realized flush cadence ([`HorizonEstimator`] EWMA).
+    pub flush_auto: bool,
+    /// Edge→root uplink pricing model, resolved through the
+    /// [`crate::network`] registry (`free` | `priced`; canonicalized at
+    /// parse time).
+    pub uplink: String,
+    /// Uplink duration as a fraction of the flushing region's mean
+    /// effective upload time (only the `priced` model reads it — the
+    /// `net_down_ratio` idiom pointed up the tree).
+    pub up_ratio: f64,
 }
 
 impl Default for HierarchyConfig {
@@ -108,6 +190,12 @@ impl Default for HierarchyConfig {
             regions: 4,
             fan_in: 0,
             forward: ForwardPolicy::Weighted,
+            depth: 2,
+            clock: ClockMode::Shared,
+            flush_secs: 0.0,
+            flush_auto: false,
+            uplink: "free".into(),
+            up_ratio: 0.25,
         }
     }
 }
@@ -115,17 +203,56 @@ impl Default for HierarchyConfig {
 impl HierarchyConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.regions >= 1, "hier_regions must be >= 1");
+        anyhow::ensure!(self.depth >= 2, "hier_depth must be >= 2 (leaf edges + root)");
+        anyhow::ensure!(
+            self.flush_secs >= 0.0 && self.flush_secs.is_finite(),
+            "hier_flush_secs must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.up_ratio >= 0.0 && self.up_ratio.is_finite(),
+            "hier_up_ratio must be finite and >= 0"
+        );
+        crate::network::resolve(&self.uplink)?;
+        if self.clock == ClockMode::Region {
+            anyhow::ensure!(
+                self.is_tiered(),
+                "hier_clock = region needs a tiered topology (hierarchy = tree)"
+            );
+            anyhow::ensure!(
+                self.flush_auto || self.flush_secs > 0.0,
+                "hier_clock = region needs hier_flush_secs > 0 or hier_flush_secs = auto"
+            );
+        }
         Ok(())
     }
 
     pub fn is_tiered(&self) -> bool {
-        self.topology == Topology::TwoTier
+        self.topology == Topology::Tree
+    }
+
+    /// True when edges run on their own clocks (the non-default mode; the
+    /// engine gates every region-clock structure on this).
+    pub fn region_clocked(&self) -> bool {
+        self.clock == ClockMode::Region && self.is_tiered()
+    }
+
+    /// Build the edge→root uplink pricing model (`hier_uplink` /
+    /// `hier_up_ratio` through the shared network registry).
+    pub fn uplink_model(&self) -> Result<Box<dyn NetworkModel>> {
+        let info = crate::network::resolve(&self.uplink)?;
+        let net = crate::network::NetworkConfig {
+            model: info.name.into(),
+            down_ratio: self.up_ratio,
+            ..Default::default()
+        };
+        Ok((info.build)(&net))
     }
 
     /// Aggregate a round's contributions through the configured topology.
-    /// Flat delegates to [`average_delta`]; two-tier groups by region,
-    /// chunks by fan-in, edge-aggregates each chunk and root-merges the
-    /// partials. Returns a full-shape `Update` with `boundary = 0`.
+    /// Flat delegates to [`average_delta`]; tree groups by region, chunks
+    /// by fan-in, edge-aggregates each chunk, collapses `depth - 2`
+    /// intermediate levels and root-merges the rest. Returns a full-shape
+    /// `Update` with `boundary = 0`.
     pub fn aggregate(
         &self,
         template: &ParamVec,
@@ -137,7 +264,7 @@ impl HierarchyConfig {
 
     /// [`HierarchyConfig::aggregate`] with a worker-thread count for the
     /// flat path (`agg_jobs=` config key; bit-identical for any count —
-    /// see [`average_delta_jobs`]). The two-tier path stays serial: the
+    /// see [`average_delta_jobs`]). The tiered path stays serial: the
     /// edge/root split is already the parallel structure there, and its
     /// per-chunk accumulation order is part of the documented semantics.
     pub fn aggregate_jobs(
@@ -172,8 +299,71 @@ impl HierarchyConfig {
                 ));
             }
         }
+        // Intermediate tree levels: depth 2 (the default) runs ZERO
+        // collapse rounds, keeping the historical two-tier path bit-exact;
+        // each extra level merges `fan_in` sibling partials into one.
+        for _ in 2..self.depth {
+            partials = collapse_level(partials, self.fan_in);
+        }
         root_merge(template, partials)
     }
+
+    /// One merged partial per contributing region, ascending region order —
+    /// the region-clock absorb path. Each region's chunk partials (same
+    /// chunking as [`HierarchyConfig::aggregate_jobs`]) are summed into a
+    /// single [`PartialAggregate`] the region's [`RegionClock`] can hold
+    /// across rounds.
+    pub fn region_partials(
+        &self,
+        template: &ParamVec,
+        contributions: &[Contribution],
+        discount_staleness: bool,
+    ) -> Vec<(usize, PartialAggregate)> {
+        let regions = self.regions;
+        let mut groups: Vec<Vec<&Contribution>> = vec![Vec::new(); regions];
+        for c in contributions {
+            groups[c.client_id % regions].push(c);
+        }
+        let mut out = Vec::new();
+        for (r, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let chunk_len = if self.fan_in == 0 { group.len() } else { self.fan_in };
+            let mut acc: Option<PartialAggregate> = None;
+            for chunk in group.chunks(chunk_len) {
+                let p = edge_aggregate(template, chunk, discount_staleness, self.forward);
+                match &mut acc {
+                    None => acc = Some(p),
+                    Some(a) => a.merge(&p),
+                }
+            }
+            out.push((r, acc.expect("non-empty region group yields a partial")));
+        }
+        out
+    }
+}
+
+/// One intermediate tree level: merge runs of `fan_in` sibling partials
+/// (0 = unbounded, i.e. everything into one) in order — the same
+/// deterministic left-to-right f32 accumulation the root merge uses.
+fn collapse_level(partials: Vec<PartialAggregate>, fan_in: usize) -> Vec<PartialAggregate> {
+    if partials.len() <= 1 {
+        return partials;
+    }
+    let chunk = if fan_in == 0 { partials.len() } else { fan_in };
+    let mut out = Vec::new();
+    let mut iter = partials.into_iter();
+    while let Some(mut acc) = iter.next() {
+        for _ in 1..chunk {
+            match iter.next() {
+                Some(p) => acc.merge(&p),
+                None => break,
+            }
+        }
+        out.push(acc);
+    }
+    out
 }
 
 /// What one edge forwards to the root: per-tensor f32 accumulators plus a
@@ -186,6 +376,23 @@ impl HierarchyConfig {
 pub struct PartialAggregate {
     pub sums: Vec<Vec<f32>>,
     pub wsums: Vec<f64>,
+}
+
+impl PartialAggregate {
+    /// Fold `other` into this partial: element-wise add of the f32
+    /// accumulators and f64 normalisers — the root merge's accumulation
+    /// step, reused by intermediate tree levels and [`RegionClock`] holds.
+    pub fn merge(&mut self, other: &PartialAggregate) {
+        for (dst, src) in self.sums.iter_mut().zip(&other.sums) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+        for (a, b) in self.wsums.iter_mut().zip(&other.wsums) {
+            *a += b;
+        }
+    }
 }
 
 /// Buffer one edge chunk into a partial aggregate. The accumulation loop
@@ -259,15 +466,7 @@ pub fn root_merge(template: &ParamVec, partials: Vec<PartialAggregate>) -> Updat
         };
     };
     for p in iter {
-        for (dst, src) in acc.sums.iter_mut().zip(&p.sums) {
-            debug_assert_eq!(dst.len(), src.len());
-            for (a, b) in dst.iter_mut().zip(src) {
-                *a += b;
-            }
-        }
-        for (a, b) in acc.wsums.iter_mut().zip(&p.wsums) {
-            *a += b;
-        }
+        acc.merge(&p);
     }
     for (t, &w) in acc.sums.iter_mut().zip(&acc.wsums) {
         if w > 0.0 {
@@ -280,6 +479,110 @@ pub fn root_merge(template: &ParamVec, partials: Vec<PartialAggregate>) -> Updat
     Update {
         boundary: 0,
         tensors: acc.sums,
+    }
+}
+
+/// One edge aggregator's independent clock (`hier_clock = region`): the
+/// pure deadline algebra, kept free of event-queue and network plumbing so
+/// `rust/tests/fleet_properties.rs` can exercise it artifact-free.
+///
+/// Lifecycle: the first [`RegionClock::absorb`] into an idle clock opens a
+/// window and **arms** a deadline `now + interval` (bumping the event
+/// generation — the engine's `EdgeFlush { region, gen }` alarms carry the
+/// generation so a re-armed window invalidates stale alarms). Further
+/// absorbs merge into the held partial without touching the deadline. At
+/// or after the deadline the window is **ripe**; [`RegionClock::flush`]
+/// closes it, feeds the realized flush clock to the per-region
+/// [`HorizonEstimator`] (backing `hier_flush_secs = auto`) and hands the
+/// held partial back for the priced uplink leg.
+#[derive(Debug, Default)]
+pub struct RegionClock {
+    held: Option<PartialAggregate>,
+    deadline: Option<SimTime>,
+    horizon: HorizonEstimator,
+    gen: u64,
+}
+
+impl RegionClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True while a window is open (a partial is held).
+    pub fn holds(&self) -> bool {
+        self.held.is_some()
+    }
+
+    /// The armed flush deadline, if a window is open.
+    pub fn deadline(&self) -> Option<SimTime> {
+        self.deadline
+    }
+
+    /// Current window generation; an `EdgeFlush` alarm is valid only if its
+    /// generation matches AND a deadline is still armed.
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// The flush interval this clock would arm right now: the fixed
+    /// `hier_flush_secs` value, or the region's own EWMA-calibrated cadence
+    /// under `auto` (falling back to the fixed value until the first
+    /// inter-flush interval is observed).
+    pub fn interval(&self, flush_secs: f64, flush_auto: bool) -> f64 {
+        if flush_auto {
+            self.horizon.horizon(flush_secs)
+        } else {
+            flush_secs
+        }
+    }
+
+    /// Merge `partial` into the open window, opening one (and arming its
+    /// deadline) if the clock was idle. Returns `Some(deadline)` exactly
+    /// when a new window was armed — the engine schedules its `EdgeFlush`
+    /// alarm off that.
+    pub fn absorb(
+        &mut self,
+        partial: PartialAggregate,
+        now: SimTime,
+        flush_secs: f64,
+        flush_auto: bool,
+    ) -> Option<SimTime> {
+        match &mut self.held {
+            Some(held) => {
+                held.merge(&partial);
+                None
+            }
+            None => {
+                let deadline = now + self.interval(flush_secs, flush_auto);
+                self.held = Some(partial);
+                self.deadline = Some(deadline);
+                self.gen += 1;
+                Some(deadline)
+            }
+        }
+    }
+
+    /// True when the armed deadline has passed and a partial is held.
+    pub fn ripe(&self, now: SimTime) -> bool {
+        self.holds() && self.deadline.is_some_and(|d| d <= now)
+    }
+
+    /// Valid-alarm check for an `EdgeFlush { gen }` event: the window that
+    /// armed it must still be open.
+    pub fn alarm_matches(&self, gen: u64) -> bool {
+        self.gen == gen && self.deadline.is_some()
+    }
+
+    /// Close the window at `clock`: disarm, feed the realized flush clock
+    /// to the per-region EWMA and hand back the held partial. `None` if no
+    /// window was open. Flushing at the *deadline* clock (not the caller's
+    /// later observation time) makes event-driven and boundary-polled
+    /// flushes equivalent.
+    pub fn flush(&mut self, clock: SimTime) -> Option<PartialAggregate> {
+        let held = self.held.take()?;
+        self.deadline = None;
+        self.horizon.observe(clock);
+        Some(held)
     }
 }
 
@@ -306,12 +609,13 @@ mod tests {
         }
     }
 
-    fn two_tier(regions: usize, fan_in: usize, forward: ForwardPolicy) -> HierarchyConfig {
+    fn tree(regions: usize, fan_in: usize, forward: ForwardPolicy) -> HierarchyConfig {
         HierarchyConfig {
-            topology: Topology::TwoTier,
+            topology: Topology::Tree,
             regions,
             fan_in,
             forward,
+            ..HierarchyConfig::default()
         }
     }
 
@@ -336,15 +640,14 @@ mod tests {
     }
 
     #[test]
-    fn single_group_two_tier_is_bit_exact_to_flat() {
+    fn single_group_tree_is_bit_exact_to_flat() {
         // The acceptance-criterion reduction: regions = 1, unbounded
-        // fan-in. This runs the REAL two-tier code path (edge + root), not
+        // fan-in. This runs the REAL tiered code path (edge + root), not
         // a structural shortcut, and must still match bitwise.
         let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
         let cs = mixed_contributions();
         for discount in [false, true] {
-            let tiered =
-                two_tier(1, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, discount);
+            let tiered = tree(1, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, discount);
             let flat = average_delta(&template, &cs, discount);
             assert_eq!(tiered.boundary, flat.boundary);
             for (a, b) in tiered.tensors.iter().zip(&flat.tensors) {
@@ -362,7 +665,7 @@ mod tests {
         let flat = average_delta(&template, &cs, true);
         for (regions, fan_in) in [(2, 0), (3, 0), (4, 1), (2, 2)] {
             let tiered =
-                two_tier(regions, fan_in, ForwardPolicy::Weighted).aggregate(&template, &cs, true);
+                tree(regions, fan_in, ForwardPolicy::Weighted).aggregate(&template, &cs, true);
             for (a, b) in tiered.tensors.iter().zip(&flat.tensors) {
                 for (x, y) in a.iter().zip(b) {
                     assert!(
@@ -383,7 +686,7 @@ mod tests {
             contrib(0, 0, vec![vec![1.0]], 3.0, 0),
             contrib(2, 0, vec![vec![5.0]], 1.0, 0),
         ];
-        let tiered = two_tier(2, 1, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
+        let tiered = tree(2, 1, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
         assert!((tiered.tensors[0][0] - 2.0).abs() < 1e-6);
     }
 
@@ -397,8 +700,8 @@ mod tests {
             contrib(2, 0, vec![vec![1.0]], 1.0, 0),
             contrib(1, 0, vec![vec![4.0]], 1.0, 0),
         ];
-        let weighted = two_tier(2, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
-        let uniform = two_tier(2, 0, ForwardPolicy::Uniform).aggregate(&template, &cs, false);
+        let weighted = tree(2, 0, ForwardPolicy::Weighted).aggregate(&template, &cs, false);
+        let uniform = tree(2, 0, ForwardPolicy::Uniform).aggregate(&template, &cs, false);
         assert!((weighted.tensors[0][0] - 2.0).abs() < 1e-6);
         assert!((uniform.tensors[0][0] - 2.5).abs() < 1e-6);
     }
@@ -413,7 +716,7 @@ mod tests {
             contrib(1, 1, vec![vec![6.0]], 1.0, 0),
         ];
         for forward in [ForwardPolicy::Weighted, ForwardPolicy::Uniform] {
-            let tiered = two_tier(2, 0, forward).aggregate(&template, &cs, false);
+            let tiered = tree(2, 0, forward).aggregate(&template, &cs, false);
             assert_eq!(tiered.tensors[0], vec![2.0], "{forward:?}");
             assert_eq!(tiered.tensors[1], vec![4.0], "{forward:?}");
         }
@@ -422,23 +725,183 @@ mod tests {
     #[test]
     fn empty_contributions_give_zero_delta() {
         let template = pv(vec![vec![0.0, 0.0]]);
-        let tiered = two_tier(3, 2, ForwardPolicy::Weighted).aggregate(&template, &[], false);
+        let tiered = tree(3, 2, ForwardPolicy::Weighted).aggregate(&template, &[], false);
         assert_eq!(tiered.tensors, vec![vec![0.0, 0.0]]);
         assert_eq!(tiered.boundary, 0);
     }
 
     #[test]
+    fn depth_two_is_bit_exact_to_the_default_and_deeper_trees_stay_close() {
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = mixed_contributions();
+        let mut base = tree(3, 1, ForwardPolicy::Weighted);
+        base.depth = 2;
+        let two = base.aggregate(&template, &cs, true);
+        // depth is defaulted to 2, so the explicit spelling is the same path.
+        let default_depth = tree(3, 1, ForwardPolicy::Weighted).aggregate(&template, &cs, true);
+        for (a, b) in two.tensors.iter().zip(&default_depth.tensors) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "depth 2 must be the two-tier path");
+            }
+        }
+        // Extra levels only re-group the same f32 additions.
+        for depth in [3, 4, 5] {
+            let mut deep = tree(3, 1, ForwardPolicy::Weighted);
+            deep.depth = depth;
+            let got = deep.aggregate(&template, &cs, true);
+            for (a, b) in got.tensors.iter().zip(&two.tensors) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                        "depth {depth} diverged: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collapse_level_merges_fan_in_siblings_in_order() {
+        let one = |v: f32, w: f64| PartialAggregate { sums: vec![vec![v]], wsums: vec![w] };
+        let partials = vec![one(1.0, 1.0), one(2.0, 1.0), one(4.0, 2.0)];
+        let collapsed = collapse_level(partials, 2);
+        assert_eq!(collapsed.len(), 2);
+        assert_eq!(collapsed[0].sums[0][0], 3.0);
+        assert_eq!(collapsed[0].wsums[0], 2.0);
+        assert_eq!(collapsed[1].sums[0][0], 4.0);
+        // fan_in = 0 collapses everything into one partial.
+        let all = collapse_level(vec![one(1.0, 1.0), one(2.0, 1.0), one(4.0, 2.0)], 0);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].sums[0][0], 7.0);
+        assert_eq!(all[0].wsums[0], 4.0);
+    }
+
+    #[test]
+    fn region_partials_root_merge_matches_the_synchronous_tier() {
+        let template = pv(vec![vec![0.0, 0.0], vec![0.0]]);
+        let cs = mixed_contributions();
+        for forward in [ForwardPolicy::Weighted, ForwardPolicy::Uniform] {
+            let cfg = tree(3, 2, forward);
+            let sync = cfg.aggregate(&template, &cs, true);
+            let partials = cfg.region_partials(&template, &cs, true);
+            assert!(partials.len() <= 3);
+            let regions: Vec<usize> = partials.iter().map(|(r, _)| *r).collect();
+            assert!(regions.windows(2).all(|w| w[0] < w[1]), "ascending region order");
+            let merged = root_merge(
+                &template,
+                partials.into_iter().map(|(_, p)| p).collect(),
+            );
+            for (a, b) in merged.tensors.iter().zip(&sync.tensors) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                        "{forward:?}: region partials diverged: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_clock_arms_flushes_and_invalidates_stale_alarms() {
+        let part = || PartialAggregate { sums: vec![vec![1.0]], wsums: vec![1.0] };
+        let mut rc = RegionClock::new();
+        assert!(!rc.holds());
+        assert!(!rc.ripe(1e9));
+        // First absorb opens the window and arms now + interval.
+        let d = rc.absorb(part(), 100.0, 50.0, false);
+        assert_eq!(d, Some(150.0));
+        assert!(rc.alarm_matches(rc.gen()));
+        // Second absorb merges without re-arming.
+        assert_eq!(rc.absorb(part(), 120.0, 50.0, false), None);
+        assert!(!rc.ripe(149.0));
+        assert!(rc.ripe(150.0));
+        let flushed = rc.flush(150.0).expect("held partial");
+        assert_eq!(flushed.sums[0][0], 2.0);
+        assert_eq!(flushed.wsums[0], 2.0);
+        // Flushed: disarmed, and the old alarm generation no longer matches.
+        let gen = rc.gen();
+        assert!(!rc.alarm_matches(gen));
+        assert!(rc.flush(160.0).is_none());
+        // Re-arming bumps the generation (stale alarms stay invalid).
+        rc.absorb(part(), 200.0, 50.0, false);
+        assert_eq!(rc.gen(), gen + 1);
+        assert!(!rc.alarm_matches(gen));
+    }
+
+    #[test]
+    fn region_clock_auto_interval_calibrates_from_its_own_flush_cadence() {
+        let part = || PartialAggregate { sums: vec![vec![1.0]], wsums: vec![1.0] };
+        let mut rc = RegionClock::new();
+        // No estimate yet: auto falls back to the fixed interval.
+        assert_eq!(rc.interval(30.0, true), 30.0);
+        rc.absorb(part(), 0.0, 30.0, true);
+        rc.flush(30.0);
+        // One flush sets the EWMA baseline clock, still no interval.
+        assert_eq!(rc.interval(30.0, true), 30.0);
+        rc.absorb(part(), 40.0, 30.0, true);
+        rc.flush(70.0);
+        // First observed inter-flush interval (70 - 30 = 40) becomes the
+        // estimate; later flushes fold in at the EWMA rate.
+        assert_eq!(rc.interval(30.0, true), 40.0);
+        let d = rc.absorb(part(), 100.0, 30.0, true).unwrap();
+        assert_eq!(d, 140.0);
+    }
+
+    #[test]
     fn parse_round_trips_and_rejects_unknowns() {
-        for t in [Topology::Flat, Topology::TwoTier] {
+        for t in [Topology::Flat, Topology::Tree] {
             assert_eq!(Topology::parse(t.name()).unwrap(), t);
         }
-        assert_eq!(Topology::parse("two_tier").unwrap(), Topology::TwoTier);
+        // The historical two-tier spellings all parse to the tree variant.
+        for s in ["two-tier", "two_tier", "twotier", "TREE"] {
+            assert_eq!(Topology::parse(s).unwrap(), Topology::Tree);
+        }
         assert!(Topology::parse("ring").is_err());
         for f in [ForwardPolicy::Weighted, ForwardPolicy::Uniform] {
             assert_eq!(ForwardPolicy::parse(f.name()).unwrap(), f);
         }
         assert!(ForwardPolicy::parse("median").is_err());
-        assert!(two_tier(0, 0, ForwardPolicy::Weighted).validate().is_err());
+        for c in [ClockMode::Shared, ClockMode::Region] {
+            assert_eq!(ClockMode::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(ClockMode::parse("edge").unwrap(), ClockMode::Region);
+        assert!(ClockMode::parse("lamport").is_err());
+        assert!(tree(0, 0, ForwardPolicy::Weighted).validate().is_err());
         assert!(HierarchyConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_gates_the_region_clock_surface() {
+        let mut cfg = tree(4, 0, ForwardPolicy::Weighted);
+        cfg.validate().unwrap();
+        cfg.depth = 1;
+        assert!(cfg.validate().is_err(), "depth < 2 is not a tree");
+        cfg.depth = 3;
+        cfg.validate().unwrap();
+        // Region clocks need a flush interval (fixed or auto)...
+        cfg.clock = ClockMode::Region;
+        assert!(cfg.validate().is_err(), "region clock needs an interval");
+        cfg.flush_secs = 60.0;
+        cfg.validate().unwrap();
+        cfg.flush_secs = 0.0;
+        cfg.flush_auto = true;
+        cfg.validate().unwrap();
+        // ...and a tiered topology.
+        cfg.topology = Topology::Flat;
+        assert!(cfg.validate().is_err(), "region clock on flat is meaningless");
+        cfg.topology = Topology::Tree;
+        cfg.up_ratio = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.up_ratio = 0.5;
+        cfg.uplink = "carrier-pigeon".into();
+        assert!(cfg.validate().is_err());
+        cfg.uplink = "priced".into();
+        cfg.validate().unwrap();
+        let model = cfg.uplink_model().unwrap();
+        assert_eq!(model.name(), "priced");
+        assert_eq!(model.downlink_secs(10.0), 5.0, "hier_up_ratio prices the leg");
+        cfg.uplink = "free".into();
+        assert_eq!(cfg.uplink_model().unwrap().downlink_secs(10.0), 0.0);
     }
 }

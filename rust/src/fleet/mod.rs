@@ -13,7 +13,10 @@
 //! - **Aggregation tier** — [`HierarchyConfig`] routes round contributions
 //!   through regional edge aggregators ([`PartialAggregate`]) before the
 //!   root merge, composing over the strategy registry: all four strategies
-//!   run unmodified beneath the tier.
+//!   run unmodified beneath the tier. Under `hier_clock = region` each
+//!   edge additionally owns a [`RegionClock`] — an independent flush
+//!   deadline plus a priced edge→root uplink (see
+//!   `docs/architecture.md`, "Region clocks").
 
 mod hierarchy;
 mod index;
@@ -21,7 +24,8 @@ mod lazy;
 mod tables;
 
 pub use hierarchy::{
-    edge_aggregate, root_merge, ForwardPolicy, HierarchyConfig, PartialAggregate, Topology,
+    edge_aggregate, root_merge, ClockMode, ForwardPolicy, HierarchyConfig, PartialAggregate,
+    RegionClock, Topology,
 };
 pub use index::OnlineSetIndex;
 pub use lazy::LazyAvailability;

@@ -8,7 +8,7 @@
 //! timelyfl sweep      --scenario NAME [--axis k=v1,v2]... [--seeds N] [--jobs J]
 //!                     [--out FILE]                   # machine-readable sweep manifest
 //!                     [--events DIR]                 # per-run JSONL event streams
-//!                     [--warm-ledger]                # carry one drop ledger across cells (serial)
+//!                     [--warm-ledger]                # carry one drop ledger across cells
 //! timelyfl report     MANIFEST.jsonl [--csv] [--out FILE]
 //!                                                     # render a sweep manifest as a markdown/CSV table
 //! timelyfl strategies                                 # dump the strategy registry
@@ -74,8 +74,9 @@ struct Args {
     /// `--jobs J`: sweep worker threads (default: available parallelism,
     /// capped at 4 — each worker owns a PJRT client).
     jobs: Option<usize>,
-    /// `--warm-ledger`: carry one drop ledger across the whole sweep
-    /// matrix (forces serial execution).
+    /// `--warm-ledger`: carry one drop ledger across the sweep's cells
+    /// (per-cell barrier; parallel within a cell, byte-identical for any
+    /// `--jobs`).
     warm_ledger: bool,
     /// `--csv`: `report` emits CSV instead of a markdown table.
     csv: bool,
@@ -369,7 +370,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let seeds = args.seeds.unwrap_or(1);
     anyhow::ensure!(seeds >= 1, "--seeds must be >= 1");
-    let mut jobs = match args.jobs {
+    let jobs = match args.jobs {
         Some(j) => {
             anyhow::ensure!(j >= 1, "--jobs must be >= 1");
             j
@@ -379,11 +380,6 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // oversubscribes. --jobs overrides for bigger machines.
         None => std::thread::available_parallelism().map_or(1, |n| n.get().min(4)),
     };
-    if args.warm_ledger && jobs > 1 {
-        // The carried ledger is run-to-run mutable state: serial only.
-        eprintln!("sweep: --warm-ledger forces --jobs 1");
-        jobs = 1;
-    }
     eprintln!(
         "sweep: {} cells x {} seeds over axes [{}] ({} jobs{})",
         grid.len(),

@@ -9,6 +9,7 @@
 //! ```text
 //! {"reason":"round-complete","round":3,"sim_secs":412.5,"participants":14,
 //!  "dropped":1,"avail_dropped":2,"downlink_wait_secs":37.5,"stale_starts":1,
+//!  "edge_flushes":2,"edge_uplink_wait_secs":18.0,
 //!  "mean_train_loss":1.83,
 //!  "workloads":[{"alpha":0.75,"client":4,"epochs":2,"stay_prob":0.93}],
 //!  "agg_weights":[{"client":4,"weight":0.5}]}
@@ -146,6 +147,13 @@ pub enum RunEvent {
         /// overtaken by a newer global version (stale starts); 0 under
         /// `network = free`.
         stale_starts: u64,
+        /// Edge-aggregator flushes since the previous round-complete
+        /// (`crate::fleet::RegionClock`); 0 under the default
+        /// `hier_clock = shared`.
+        edge_flushes: u64,
+        /// Seconds those flushed partials spent on the priced edge→root
+        /// uplink; 0.0 under `hier_clock = shared` / `hier_uplink = free`.
+        edge_uplink_wait_secs: f64,
         mean_train_loss: Option<f64>,
         workloads: Vec<ClientWorkload>,
         /// Per-update aggregation weights assigned since the previous
@@ -203,6 +211,8 @@ impl RunEvent {
                 avail_dropped,
                 downlink_wait_secs,
                 stale_starts,
+                edge_flushes,
+                edge_uplink_wait_secs,
                 mean_train_loss,
                 workloads,
                 agg_weights,
@@ -214,6 +224,8 @@ impl RunEvent {
                 pairs.push(("avail_dropped", Json::num(*avail_dropped as f64)));
                 pairs.push(("downlink_wait_secs", Json::num(*downlink_wait_secs)));
                 pairs.push(("stale_starts", Json::num(*stale_starts as f64)));
+                pairs.push(("edge_flushes", Json::num(*edge_flushes as f64)));
+                pairs.push(("edge_uplink_wait_secs", Json::num(*edge_uplink_wait_secs)));
                 pairs.push((
                     "mean_train_loss",
                     mean_train_loss.map_or(Json::Null, Json::num),
@@ -273,6 +285,8 @@ impl RunEvent {
                 avail_dropped: v.expect("avail_dropped")?.as_usize()?,
                 downlink_wait_secs: v.expect("downlink_wait_secs")?.as_f64()?,
                 stale_starts: v.expect("stale_starts")?.as_usize()? as u64,
+                edge_flushes: v.expect("edge_flushes")?.as_usize()? as u64,
+                edge_uplink_wait_secs: v.expect("edge_uplink_wait_secs")?.as_f64()?,
                 mean_train_loss: match v.expect("mean_train_loss")? {
                     Json::Null => None,
                     other => Some(other.as_f64()?),
@@ -407,6 +421,8 @@ mod tests {
                 avail_dropped: 2,
                 downlink_wait_secs: 37.5,
                 stale_starts: 1,
+                edge_flushes: 2,
+                edge_uplink_wait_secs: 18.0,
                 mean_train_loss: Some(1.83),
                 workloads: vec![
                     ClientWorkload { client: 4, epochs: 2, alpha: 0.75, stay_prob: 0.93 },
@@ -425,6 +441,8 @@ mod tests {
                 avail_dropped: 6,
                 downlink_wait_secs: 0.0,
                 stale_starts: 0,
+                edge_flushes: 0,
+                edge_uplink_wait_secs: 0.0,
                 mean_train_loss: None,
                 workloads: vec![],
                 agg_weights: vec![],
@@ -490,6 +508,8 @@ mod tests {
             avail_dropped: 0,
             downlink_wait_secs: 0.0,
             stale_starts: 0,
+            edge_flushes: 0,
+            edge_uplink_wait_secs: 0.0,
             mean_train_loss: None,
             workloads: vec![],
             agg_weights: vec![],
@@ -515,7 +535,7 @@ mod tests {
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
-             \"mean_train_loss\":null,\
+             \"edge_flushes\":0,\"edge_uplink_wait_secs\":0.0,\"mean_train_loss\":null,\
              \"workloads\":[{\"client\":1,\"epochs\":2}],\"agg_weights\":[]}"
         )
         .is_err());
@@ -523,29 +543,39 @@ mod tests {
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
-             \"mean_train_loss\":null,\
+             \"edge_flushes\":0,\"edge_uplink_wait_secs\":0.0,\"mean_train_loss\":null,\
              \"workloads\":[{\"client\":1,\"epochs\":2,\"alpha\":1.0}],\"agg_weights\":[]}"
         )
         .is_err());
         // A round-complete without the dissemination counters is malformed.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
-             \"dropped\":0,\"avail_dropped\":0,\"mean_train_loss\":null,\"workloads\":[],\
+             \"dropped\":0,\"avail_dropped\":0,\"edge_flushes\":0,\
+             \"edge_uplink_wait_secs\":0.0,\"mean_train_loss\":null,\"workloads\":[],\
              \"agg_weights\":[]}"
+        )
+        .is_err());
+        // ... without the edge-flush counters likewise.
+        assert!(RunEvent::parse_line(
+            "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
+             \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
+             \"mean_train_loss\":null,\"workloads\":[],\"agg_weights\":[]}"
         )
         .is_err());
         // ... and one without the aggregation weights likewise.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
-             \"mean_train_loss\":null,\"workloads\":[]}"
+             \"edge_flushes\":0,\"edge_uplink_wait_secs\":0.0,\"mean_train_loss\":null,\
+             \"workloads\":[]}"
         )
         .is_err());
         // Weight entries missing their weight are malformed too.
         assert!(RunEvent::parse_line(
             "{\"reason\":\"round-complete\",\"round\":0,\"sim_secs\":1.0,\"participants\":0,\
              \"dropped\":0,\"avail_dropped\":0,\"downlink_wait_secs\":0.0,\"stale_starts\":0,\
-             \"mean_train_loss\":null,\"workloads\":[],\"agg_weights\":[{\"client\":1}]}"
+             \"edge_flushes\":0,\"edge_uplink_wait_secs\":0.0,\"mean_train_loss\":null,\
+             \"workloads\":[],\"agg_weights\":[{\"client\":1}]}"
         )
         .is_err());
     }

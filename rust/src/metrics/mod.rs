@@ -186,6 +186,18 @@ pub struct RunReport {
     /// stale model (whether that is corrected is `net_stale_correction`'s
     /// call). Exactly 0 under `network = free`.
     pub stale_starts: u64,
+    /// Edge-aggregator flushes (`crate::fleet::RegionClock`): windows of
+    /// held partials released at their per-region deadlines. Exactly 0
+    /// under the default `hier_clock = shared`.
+    pub edge_flushes: u64,
+    /// Total simulated seconds flushed partials spent on the priced
+    /// edge→root uplink (`hier_uplink = priced`). Exactly 0.0 under the
+    /// default `hier_clock = shared` (and under `hier_uplink = free`).
+    pub edge_uplink_wait_secs: f64,
+    /// Root merges assembled from arrived region partials. At most one per
+    /// aggregation boundary, so always ≤ `edge_flushes` once windows batch
+    /// more than one region. Exactly 0 under `hier_clock = shared`.
+    pub edge_root_merges: u64,
 }
 
 impl RunReport {
@@ -311,6 +323,9 @@ mod tests {
             tail_avail_dropped: 0,
             downlink_wait_secs: 0.0,
             stale_starts: 0,
+            edge_flushes: 0,
+            edge_uplink_wait_secs: 0.0,
+            edge_root_merges: 0,
         }
     }
 

@@ -57,6 +57,12 @@ impl RunReport {
             ),
             ("downlink_wait_secs", Json::num(self.downlink_wait_secs)),
             ("stale_starts", Json::num(self.stale_starts as f64)),
+            ("edge_flushes", Json::num(self.edge_flushes as f64)),
+            (
+                "edge_uplink_wait_secs",
+                Json::num(self.edge_uplink_wait_secs),
+            ),
+            ("edge_root_merges", Json::num(self.edge_root_merges as f64)),
             (
                 "eval_points",
                 Json::arr(
@@ -292,6 +298,9 @@ mod tests {
             tail_avail_dropped: 1,
             downlink_wait_secs: 12.5,
             stale_starts: 2,
+            edge_flushes: 6,
+            edge_uplink_wait_secs: 3.5,
+            edge_root_merges: 4,
         }
     }
 
@@ -323,6 +332,12 @@ mod tests {
             12.5
         );
         assert_eq!(parsed.get("stale_starts").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(parsed.get("edge_flushes").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(
+            parsed.get("edge_uplink_wait_secs").unwrap().as_f64().unwrap(),
+            3.5
+        );
+        assert_eq!(parsed.get("edge_root_merges").unwrap().as_f64().unwrap(), 4.0);
         assert!(
             (parsed.get("mean_online_fraction").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
         );

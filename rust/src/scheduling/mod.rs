@@ -321,6 +321,28 @@ impl WarmLedger {
         self.delivered = delivered.to_vec();
         self.churned = churned.to_vec();
     }
+
+    /// Fold one run's *increment* into this ledger: `harvested` is a full
+    /// post-run harvest and `base` is the snapshot that run was seeded
+    /// from, so the increment per client is `harvested - base` (saturating
+    /// — populations may shrink a counter's prefix view, never its value).
+    /// This is what lets parallel sweep jobs share a warm ledger
+    /// deterministically: every job in a cell seeds from the same `base`,
+    /// and the jobs' deltas fold here in a fixed order, so the result is
+    /// independent of which job finished first.
+    pub fn fold_delta(&mut self, base: &WarmLedger, harvested: &WarmLedger) {
+        fn fold(acc: &mut Vec<u32>, base: &[u32], harvested: &[u32]) {
+            if acc.len() < harvested.len() {
+                acc.resize(harvested.len(), 0);
+            }
+            for (i, &h) in harvested.iter().enumerate() {
+                let b = base.get(i).copied().unwrap_or(0);
+                acc[i] = acc[i].saturating_add(h.saturating_sub(b));
+            }
+        }
+        fold(&mut self.delivered, &base.delivered, &harvested.delivered);
+        fold(&mut self.churned, &base.churned, &harvested.churned);
+    }
 }
 
 #[cfg(test)]
@@ -567,5 +589,42 @@ mod tests {
         assert_eq!(ledger.delivered, vec![1, 2]);
         assert_eq!(ledger.churned, vec![3, 4]);
         assert!(!ledger.is_empty());
+    }
+
+    #[test]
+    fn warm_ledger_fold_delta_adds_increments_in_any_order() {
+        // Two jobs seeded from the same base harvest different increments;
+        // folding both must equal base + sum of increments regardless of
+        // fold order (the parallel-sweep determinism contract).
+        let mut base = WarmLedger::default();
+        base.harvest(&[2, 2], &[1, 0]);
+        let mut job_a = WarmLedger::default();
+        job_a.harvest(&[3, 2], &[1, 2]); // +1 delivered[0], +2 churned[1]
+        let mut job_b = WarmLedger::default();
+        job_b.harvest(&[2, 5, 7], &[4, 0, 1]); // grew the population too
+
+        let mut ab = base.clone();
+        ab.fold_delta(&base, &job_a);
+        ab.fold_delta(&base, &job_b);
+        let mut ba = base.clone();
+        ba.fold_delta(&base, &job_b);
+        ba.fold_delta(&base, &job_a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.delivered, vec![3, 5, 7]);
+        assert_eq!(ab.churned, vec![4, 2, 1]);
+    }
+
+    #[test]
+    fn warm_ledger_fold_delta_saturates_instead_of_underflowing() {
+        // A smaller-population run's harvest can sit below the base in the
+        // tail the run never saw; the delta clamps at zero.
+        let mut base = WarmLedger::default();
+        base.harvest(&[5, 5], &[5, 5]);
+        let mut small = WarmLedger::default();
+        small.harvest(&[6], &[7]);
+        let mut acc = base.clone();
+        acc.fold_delta(&base, &small);
+        assert_eq!(acc.delivered, vec![6, 5]);
+        assert_eq!(acc.churned, vec![7, 5]);
     }
 }

@@ -53,16 +53,21 @@ pub fn median(xs: &[f64]) -> f64 {
 /// metric (0 = perfectly even shares, → 1 = concentrated on few). Computed
 /// on a sorted copy via the rank formula
 /// `G = (2 Σ_i i·x_(i)) / (n Σ x) - (n + 1) / n` with 1-based ranks.
-/// 0.0 for an empty slice or a non-positive total (the dispersion of
-/// "nobody participated" is defined as none).
+/// 0.0 for an empty slice, a non-positive total (the dispersion of
+/// "nobody participated" is defined as none), or any non-finite input —
+/// a NaN count must degrade to the neutral value, never panic the sort
+/// or propagate into a report.
 pub fn gini(xs: &[f64]) -> f64 {
     let n = xs.len();
+    if n == 0 || xs.iter().any(|x| !x.is_finite()) {
+        return 0.0;
+    }
     let total: f64 = xs.iter().sum();
-    if n == 0 || total <= 0.0 {
+    if total <= 0.0 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let weighted: f64 = v.iter().enumerate().map(|(i, x)| (i + 1) as f64 * x).sum();
     (2.0 * weighted) / (n as f64 * total) - (n as f64 + 1.0) / n as f64
 }
@@ -129,6 +134,20 @@ mod tests {
         assert!(gini(&[1.0, 1.0, 8.0]) > gini(&[2.0, 3.0, 5.0]));
         // Scale invariance.
         assert!((gini(&[1.0, 2.0, 3.0]) - gini(&[10.0, 20.0, 30.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_is_nan_safe() {
+        // Non-finite inputs degrade to the neutral 0.0 — no panic, no NaN
+        // in the output, wherever the poison sits in the vector.
+        assert_eq!(gini(&[f64::NAN]), 0.0);
+        assert_eq!(gini(&[1.0, f64::NAN, 3.0]), 0.0);
+        assert_eq!(gini(&[f64::NAN, f64::NAN]), 0.0);
+        assert_eq!(gini(&[2.0, f64::INFINITY]), 0.0);
+        assert_eq!(gini(&[f64::NEG_INFINITY, 1.0]), 0.0);
+        assert_eq!(gini(&[1.0, f64::NAN, f64::INFINITY]), 0.0);
+        // Finite inputs are untouched by the guard.
+        assert!((gini(&[0.0, 0.0, 0.0, 5.0]) - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -174,6 +174,54 @@ fn batched_matches_eager_semantics_under_churn() {
 }
 
 #[test]
+fn cancelled_tickets_never_poison_round_losses() {
+    // Placeholder-loss hygiene regression: a ticketed `ClientFinish` from
+    // the batched queue carries `mean_loss = NaN` until the flush patches
+    // it. A client cancelled by churn BETWEEN enqueue and drain leaves its
+    // placeholder unpatched forever; before the `complete_round` /
+    // `Recorder` guards, one such leak turned a round's `mean_train_loss`
+    // (and every downstream golden) into NaN. Under this churn-heavy fleet
+    // the avoided counter proves such cancellations happened, so every
+    // recorded loss must still be finite-or-null — and identical to the
+    // serial run, which never mints placeholders at all.
+    require_batched_artifacts!();
+    for &(churn_name, churn) in CHURNS[1..].iter() {
+        for info in registry::STRATEGIES {
+            let batched = run(base_cfg(info.name, churn), true, 2);
+            assert!(
+                batched.trainings_avoided > 0,
+                "{} / {churn_name}: no ticket was cancelled between enqueue and drain",
+                info.name
+            );
+            for r in &batched.rounds {
+                assert!(
+                    r.mean_train_loss.map_or(true, |l| l.is_finite()),
+                    "{} / {churn_name}: round {} carries a non-finite loss {:?}",
+                    info.name,
+                    r.round,
+                    r.mean_train_loss
+                );
+            }
+            assert!(
+                !full_json(&batched).contains("NaN"),
+                "{} / {churn_name}: NaN leaked into the serialized report",
+                info.name
+            );
+            let serial = run(base_cfg(info.name, churn), false, 1);
+            let losses = |r: &RunReport| -> Vec<Option<f64>> {
+                r.rounds.iter().map(|rr| rr.mean_train_loss).collect()
+            };
+            assert_eq!(
+                losses(&serial),
+                losses(&batched),
+                "{} / {churn_name}: placeholder handling changed the loss series",
+                info.name
+            );
+        }
+    }
+}
+
+#[test]
 fn batched_never_executes_cancelled_plans() {
     // The ledger half: under churn the batched queue must avoid exactly
     // what serial deferral avoids — cancelled plans never reach a stacked

@@ -187,6 +187,11 @@ fn fake_report(cfg: &RunConfig) -> RunReport {
         trainings_avoided: 1,
         tail_dropped: 0,
         tail_avail_dropped: 0,
+        downlink_wait_secs: 0.0,
+        stale_starts: 0,
+        edge_flushes: 0,
+        edge_uplink_wait_secs: 0.0,
+        edge_root_merges: 0,
     }
 }
 
@@ -241,6 +246,74 @@ fn parallel_and_serial_runs_produce_identical_summaries_and_manifest() {
     }
     // Manifest parses back to the same summaries (downstream tooling).
     assert_eq!(parse_sweep_manifest(&serial_manifest).unwrap(), serial_sums);
+}
+
+#[test]
+fn warm_ledger_parallel_sweep_is_byte_identical_to_serial() {
+    // Mirrors `ExperimentRunner::run`'s warm-ledger path with a synthetic
+    // executor: cells are a barrier, every replicate of a cell seeds from
+    // the same cumulative snapshot, the replicates run under REAL thread
+    // parallelism through `run_queue`, and their increments fold back in
+    // seed order via `WarmLedger::fold_delta`. The resulting summaries and
+    // manifest must be byte-identical for any worker count — the contract
+    // that let `timelyfl sweep --warm-ledger` drop its forced `--jobs 1`.
+    use timelyfl::scheduling::WarmLedger;
+    let seeds = 3;
+    let run_at = |jobs: usize| -> (Vec<CellSummary>, String) {
+        let grid = SweepGrid::new(RunConfig::default())
+            .axis("avail_frac", &["1.0", "0.5"])
+            .axis("strategy", &["TimelyFL", "FedBuff"]);
+        let cells = grid.cells().unwrap();
+        let job_list = cell_jobs(&cells, seeds);
+        let mut cumulative = WarmLedger::default();
+        let mut flat: Vec<RunReport> = Vec::with_capacity(job_list.len());
+        for chunk in job_list.chunks(seeds) {
+            let snapshot = cumulative.clone();
+            let outcomes = run_queue(jobs, chunk, || Ok(()), |_, job| {
+                let mut cfg = job.cell.cfg.clone();
+                cfg.seed = job.seed;
+                // Synthetic warm run: seed the tables from the snapshot,
+                // make seed-dependent deliveries, harvest — and surface the
+                // warm totals in the report, so any fold nondeterminism
+                // would corrupt the manifest bytes.
+                let mut delivered = vec![0u32; 4];
+                let mut churned = vec![0u32; 4];
+                snapshot.seed_into(&mut delivered, &mut churned);
+                delivered[(cfg.seed as usize) % 4] += 1 + (cfg.seed % 3) as u32;
+                churned[(cfg.seed as usize + 1) % 4] += 1;
+                let mut local = WarmLedger::default();
+                local.harvest(&delivered, &churned);
+                let mut report = fake_report(&cfg);
+                report.participation = delivered.iter().map(|&d| d as f64).collect();
+                Ok((report, local))
+            })
+            .unwrap();
+            for (report, harvest) in outcomes {
+                cumulative.fold_delta(&snapshot, &harvest);
+                flat.push(report);
+            }
+        }
+        let result = assemble(cells, flat, seeds, &|_| true);
+        let manifest = result.manifest(Some("warm"), &grid.axis_keys());
+        (result.summaries(), manifest)
+    };
+    let (serial_sums, serial_manifest) = run_at(1);
+    for jobs in [2, 4] {
+        let (par_sums, par_manifest) = run_at(jobs);
+        assert_eq!(serial_sums, par_sums, "--jobs {jobs}: summaries diverged");
+        assert_eq!(
+            serial_manifest, par_manifest,
+            "--jobs {jobs}: warm-ledger manifest must be byte-identical to serial"
+        );
+    }
+    // The ledger really carried: a later cell's replicates see deliveries
+    // accumulated by earlier cells, so mean participation grows cell over
+    // cell — proof this is a warm sweep, not four cold ones.
+    assert!(
+        serial_sums.last().unwrap().mean_participation.mean
+            > serial_sums.first().unwrap().mean_participation.mean,
+        "warm ledger failed to carry across cells"
+    );
 }
 
 #[test]

@@ -8,11 +8,19 @@
 //! touches the main event queue), so any divergence is a determinism bug
 //! in the fleet seam, not an accuracy trade-off.
 //!
-//! A second group anchors the aggregation tier end-to-end: `two-tier` with
+//! A second group anchors the aggregation tier end-to-end: a tree with
 //! one region and unbounded fan-in routes every contribution through a
 //! single edge whose partial the root *moves* (never re-accumulates), so
 //! the run is bit-exact to flat; and a genuinely regional tier (2 regions)
 //! stays seed-deterministic while producing finite learning curves.
+//!
+//! A third group anchors the edge-aggregator clocks: under the default
+//! `hier_clock = shared` the region-clock machinery must be completely
+//! inert (edge counters exactly zero, lazy ≡ eager byte-for-byte on the
+//! tree, the historical `two-tier` spelling ≡ the depth-2 tree), while
+//! `hier_clock = region` stays core-independent and seed-deterministic
+//! with a free uplink waiting zero seconds and a priced one paying real
+//! simulated time.
 //!
 //! Needs the AOT artifacts (real PJRT training), like
 //! `strategies_integration.rs`.
@@ -106,7 +114,7 @@ fn single_region_two_tier_is_bit_exact_to_flat_for_every_strategy() {
         let mut flat = churn_cfg(info.name, "uniform", AvailabilityKind::Markov);
         flat.hierarchy.topology = Topology::Flat;
         let mut tiered = flat.clone();
-        tiered.hierarchy.topology = Topology::TwoTier;
+        tiered.hierarchy.topology = Topology::Tree;
         tiered.hierarchy.regions = 1;
         tiered.hierarchy.fan_in = 0;
         tiered.hierarchy.forward = ForwardPolicy::Weighted;
@@ -126,7 +134,7 @@ fn regional_two_tier_runs_are_seed_deterministic_and_finite() {
     for info in registry::STRATEGIES {
         let mut cfg = churn_cfg(info.name, "uniform", AvailabilityKind::Correlated);
         cfg.fleet_core = FleetCore::Lazy;
-        cfg.hierarchy.topology = Topology::TwoTier;
+        cfg.hierarchy.topology = Topology::Tree;
         cfg.hierarchy.regions = 2;
         cfg.hierarchy.fan_in = 3;
         let a = run(cfg.clone());
@@ -155,7 +163,7 @@ fn uniform_forward_policy_changes_the_model_but_not_the_schedule() {
     // semantics. The event schedule (clock, participants, drops) must stay
     // identical; only the learning curve may move.
     let mut weighted = churn_cfg("TimelyFL", "uniform", AvailabilityKind::Markov);
-    weighted.hierarchy.topology = Topology::TwoTier;
+    weighted.hierarchy.topology = Topology::Tree;
     weighted.hierarchy.regions = 2;
     weighted.hierarchy.forward = ForwardPolicy::Weighted;
     let mut uniform = weighted.clone();
@@ -166,4 +174,128 @@ fn uniform_forward_policy_changes_the_model_but_not_the_schedule() {
     assert_eq!(w.events_processed, u.events_processed);
     assert_eq!(w.participation, u.participation);
     assert_eq!(w.sim_secs, u.sim_secs);
+}
+
+/// A regional tree config under churn, `hier_clock = shared` (the
+/// default): the region-clock machinery must be dead code on this path.
+fn tree_cfg(strategy: &str, depth: usize) -> RunConfig {
+    let mut cfg = churn_cfg(strategy, "uniform", AvailabilityKind::Markov);
+    cfg.hierarchy.topology = Topology::Tree;
+    cfg.hierarchy.regions = 2;
+    cfg.hierarchy.fan_in = 3;
+    cfg.hierarchy.depth = depth;
+    cfg
+}
+
+#[test]
+fn shared_clock_tree_is_byte_identical_across_cores_for_every_strategy() {
+    // The lockstep anchor at both depths: lazy ≡ eager byte-for-byte on
+    // the tree, and the edge-clock counters are exactly zero — the
+    // RegionClock layer must be completely inert under the default
+    // `hier_clock = shared`.
+    for info in registry::STRATEGIES {
+        for depth in [2, 3] {
+            let mut eager = tree_cfg(info.name, depth);
+            eager.fleet_core = FleetCore::Eager;
+            let mut lazy = eager.clone();
+            lazy.fleet_core = FleetCore::Lazy;
+            let e = run(eager);
+            let l = run(lazy);
+            assert_eq!(
+                semantic_json(&l),
+                semantic_json(&e),
+                "{} depth {depth}: lazy diverged from eager on the shared-clock tree",
+                info.name
+            );
+            assert_eq!(e.edge_flushes, 0, "{}: shared clock flushed", info.name);
+            assert_eq!(e.edge_uplink_wait_secs, 0.0, "{}", info.name);
+            assert_eq!(e.edge_root_merges, 0, "{}", info.name);
+        }
+    }
+}
+
+#[test]
+fn depth_two_tree_is_byte_identical_to_the_historical_two_tier_spelling() {
+    // `hierarchy = two-tier` parses as the depth-2 tree; the configs must
+    // be identical and so must the runs (zero `collapse_level` passes).
+    use timelyfl::config::parse::apply_override;
+    for info in registry::STRATEGIES {
+        let mut spelled = churn_cfg(info.name, "uniform", AvailabilityKind::Markov);
+        apply_override(&mut spelled, "hierarchy", "two-tier").unwrap();
+        spelled.hierarchy.regions = 2;
+        spelled.hierarchy.fan_in = 3;
+        let mut tree = churn_cfg(info.name, "uniform", AvailabilityKind::Markov);
+        apply_override(&mut tree, "hierarchy", "tree").unwrap();
+        apply_override(&mut tree, "hier_depth", "2").unwrap();
+        tree.hierarchy.regions = 2;
+        tree.hierarchy.fan_in = 3;
+        assert_eq!(spelled.hierarchy.topology, tree.hierarchy.topology);
+        assert_eq!(spelled.hierarchy.depth, tree.hierarchy.depth);
+        assert_eq!(
+            semantic_json(&run(tree)),
+            semantic_json(&run(spelled)),
+            "{}: depth-2 tree diverged from the two-tier spelling",
+            info.name
+        );
+    }
+}
+
+#[test]
+fn region_clocks_are_core_independent_and_price_only_the_priced_uplink() {
+    // `hier_clock = region` with a positive flush window: the run holds
+    // partials at the edges and (a) stays byte-identical across sim cores
+    // — the clock layer lives in the shared engine, not in either core —
+    // (b) reports flushes, and (c) waits on the uplink ONLY when the
+    // edge->root leg is priced.
+    for info in registry::STRATEGIES {
+        let mut cfg = tree_cfg(info.name, 2);
+        cfg.hierarchy.clock = timelyfl::fleet::ClockMode::Region;
+        cfg.hierarchy.flush_secs = 50.0;
+        cfg.hierarchy.uplink = "free".into();
+        cfg.validate().expect("region-clock config validates");
+
+        let mut eager = cfg.clone();
+        eager.fleet_core = FleetCore::Eager;
+        let mut lazy = cfg.clone();
+        lazy.fleet_core = FleetCore::Lazy;
+        let free = run(eager);
+        assert_eq!(
+            semantic_json(&run(lazy)),
+            semantic_json(&free),
+            "{}: region clocks diverged across sim cores",
+            info.name
+        );
+        assert!(free.edge_flushes > 0, "{}: no region ever flushed", info.name);
+        // Free uplink: arrivals are instantaneous — zero priced wait.
+        assert_eq!(
+            free.edge_uplink_wait_secs, 0.0,
+            "{}: free uplink charged wait time",
+            info.name
+        );
+        assert!(
+            free.edge_root_merges <= free.edge_flushes,
+            "{}: more root merges than flushes",
+            info.name
+        );
+
+        let mut priced = cfg.clone();
+        priced.hierarchy.uplink = "priced".into();
+        priced.hierarchy.up_ratio = 0.25;
+        let p = run(priced.clone());
+        assert_eq!(
+            semantic_json(&p),
+            semantic_json(&run(priced)),
+            "{}: priced region-clock run not reproducible",
+            info.name
+        );
+        assert!(p.edge_flushes > 0, "{}", info.name);
+        assert!(
+            p.edge_uplink_wait_secs > 0.0,
+            "{}: priced uplink reported zero wait",
+            info.name
+        );
+        for pt in &p.eval_points {
+            assert!(pt.mean_loss.is_finite() && pt.metric.is_finite(), "{}", info.name);
+        }
+    }
 }

@@ -20,7 +20,8 @@ use timelyfl::availability::{AvailabilityConfig, AvailabilityKind, AvailabilityM
 use timelyfl::config::parse::{apply_cli, KNOWN_KEYS};
 use timelyfl::config::RunConfig;
 use timelyfl::fleet::{
-    FleetCore, ForwardPolicy, HierarchyConfig, LazyAvailability, OnlineSetIndex, Topology,
+    ClockMode, FleetCore, ForwardPolicy, HierarchyConfig, LazyAvailability, OnlineSetIndex,
+    RegionClock, Topology,
 };
 use timelyfl::util::rng::Rng;
 use timelyfl::util::stats::gini;
@@ -187,6 +188,11 @@ fn hierarchy_config_surface_round_trips_through_overrides() {
         ("hier_regions", "16"),
         ("hier_fan_in", "8"),
         ("hier_forward", "uniform"),
+        ("hier_depth", "3"),
+        ("hier_clock", "region"),
+        ("hier_flush_secs", "90"),
+        ("hier_uplink", "priced"),
+        ("hier_up_ratio", "0.5"),
     ] {
         assert!(KNOWN_KEYS.contains(&k), "{k} missing from KNOWN_KEYS");
         apply_cli(&mut cfg, &format!("{k}={v}")).unwrap();
@@ -195,17 +201,39 @@ fn hierarchy_config_surface_round_trips_through_overrides() {
     assert_eq!(
         cfg.hierarchy,
         HierarchyConfig {
-            topology: Topology::TwoTier,
+            topology: Topology::Tree,
             regions: 16,
             fan_in: 8,
             forward: ForwardPolicy::Uniform,
+            depth: 3,
+            clock: ClockMode::Region,
+            flush_secs: 90.0,
+            flush_auto: false,
+            uplink: "priced".into(),
+            up_ratio: 0.5,
         }
     );
+    cfg.validate().unwrap();
+    // `auto` flips the calibration flag without clobbering the number.
+    apply_cli(&mut cfg, "hier_flush_secs=auto").unwrap();
+    assert!(cfg.hierarchy.flush_auto);
+    assert_eq!(cfg.hierarchy.flush_secs, 90.0);
     cfg.validate().unwrap();
 
     let err = format!("{:#}", apply_cli(&mut cfg, "fleet_kore=lazy").unwrap_err());
     assert!(err.contains("fleet_core"), "unknown-key error lists fleet_core: {err}");
     assert!(err.contains("hier_fan_in"), "unknown-key error lists hier_fan_in: {err}");
+    assert!(err.contains("hier_clock"), "unknown-key error lists hier_clock: {err}");
+
+    // Region clocks without a tier — or without any flush window — are
+    // contradictions caught at validate, not at parse.
+    let mut bad = RunConfig::default();
+    apply_cli(&mut bad, "hier_clock=region").unwrap();
+    assert!(bad.validate().is_err(), "region clocks on a flat topology must fail");
+    apply_cli(&mut bad, "hierarchy=tree").unwrap();
+    assert!(bad.validate().is_err(), "region clocks without a flush window must fail");
+    apply_cli(&mut bad, "hier_flush_secs=30").unwrap();
+    bad.validate().unwrap();
 }
 
 #[test]
@@ -214,13 +242,62 @@ fn scale_scenarios_resolve_and_validate() {
     // resolving + validating exercises the whole config surface at the
     // million-client setting.
     use timelyfl::experiment::scenario;
-    for (name, population) in [("fleet_1m", 1_000_000), ("fleet_50k", 50_000)] {
+    for (name, population) in [
+        ("fleet_1m", 1_000_000),
+        ("fleet_50k", 50_000),
+        ("fleet_tree", 50_000),
+    ] {
         let spec = scenario::resolve(name).unwrap();
         let cfg = spec.config().unwrap();
         assert_eq!(cfg.population, population, "{name}");
         assert_eq!(cfg.fleet_core, FleetCore::Lazy, "{name}");
         assert!(cfg.hierarchy.is_tiered(), "{name}");
     }
+    // Only the edge-clock testbed runs region-clocked; the scale scenarios
+    // keep the lockstep (byte-identity) default.
+    assert!(!scenario::resolve("fleet_1m").unwrap().config().unwrap().hierarchy.region_clocked());
+    let tree = scenario::resolve("fleet_tree").unwrap().config().unwrap();
+    assert!(tree.hierarchy.region_clocked());
+    assert_eq!(tree.hierarchy.depth, 3);
+}
+
+#[test]
+fn region_clock_deadline_algebra_from_the_public_api() {
+    // The engine-facing lifecycle, artifact-free: absorb opens + arms once
+    // per window, ripeness is deadline-gated, flush disarms + hands back
+    // the merged partial, stale alarm generations stop matching, and the
+    // `auto` interval calibrates from the region's own flush cadence.
+    use timelyfl::fleet::PartialAggregate;
+    let part = |v: f32| PartialAggregate { sums: vec![vec![v]], wsums: vec![1.0] };
+
+    let mut rc = RegionClock::new();
+    assert!(!rc.holds());
+    assert_eq!(rc.deadline(), None);
+    let armed = rc.absorb(part(1.0), 1000.0, 120.0, false);
+    assert_eq!(armed, Some(1120.0), "first absorb arms now + interval");
+    let gen = rc.gen();
+    assert!(rc.alarm_matches(gen));
+    assert_eq!(rc.absorb(part(2.0), 1100.0, 120.0, false), None, "merge, no re-arm");
+    assert_eq!(rc.deadline(), Some(1120.0), "deadline untouched by later absorbs");
+    assert!(!rc.ripe(1119.9));
+    assert!(rc.ripe(1120.0));
+    let flushed = rc.flush(1120.0).expect("held partial");
+    assert_eq!(flushed.sums[0][0], 3.0);
+    assert_eq!(flushed.wsums[0], 2.0);
+    assert!(!rc.holds());
+    assert!(!rc.alarm_matches(gen), "flushed window invalidates its alarm");
+    assert!(rc.flush(1200.0).is_none(), "double flush is a no-op");
+
+    // Auto calibration: intervals derive from realized flush-to-flush
+    // spacing, per region, falling back to the fixed value until observed.
+    let mut auto = RegionClock::new();
+    assert_eq!(auto.interval(60.0, true), 60.0, "no estimate yet: fallback");
+    auto.absorb(part(1.0), 0.0, 60.0, true);
+    auto.flush(60.0);
+    auto.absorb(part(1.0), 80.0, 60.0, true);
+    auto.flush(140.0);
+    assert_eq!(auto.interval(60.0, true), 80.0, "first inter-flush interval");
+    assert_eq!(auto.absorb(part(1.0), 200.0, 60.0, true), Some(280.0));
 }
 
 #[test]
@@ -241,4 +318,13 @@ fn gini_is_a_sane_dispersion_measure_for_participation_vectors() {
     let before = vec![0.2, 0.4, 0.9];
     let after = vec![0.1, 0.4, 1.0];
     assert!(gini(&after) > gini(&before));
+    // Poisoned vectors degrade to the neutral 0.0 — never a panic from the
+    // sort, never NaN in a report (the NaN-safety satellite).
+    for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let mut xs = vec![0.2, 0.4, 0.9];
+        xs.push(poison);
+        assert_eq!(gini(&xs), 0.0, "{poison:?}");
+        assert_eq!(gini(&[poison]), 0.0, "{poison:?}");
+    }
+    assert_eq!(gini(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]), 0.0);
 }

@@ -185,6 +185,11 @@ fn counters_render_into_report_json() {
         trainings_avoided: 4,
         tail_dropped: 0,
         tail_avail_dropped: 0,
+        downlink_wait_secs: 0.0,
+        stale_starts: 0,
+        edge_flushes: 0,
+        edge_uplink_wait_secs: 0.0,
+        edge_root_merges: 0,
     };
     assert_eq!(report.total_train_dispatches(), 15);
     assert!((report.trainings_avoided_ratio() - 4.0 / 15.0).abs() < 1e-12);
